@@ -1,0 +1,72 @@
+//! §D modular adaptation demo: integrate a NEW candidate LLM
+//! (claude-3.5-haiku) into a frozen 3-candidate router via lightweight
+//! adapters — no full retraining — and show (a) old predictions preserved,
+//! (b) the new candidate immediately participating in routing decisions.
+//!
+//! ```sh
+//! cargo run --release --example add_model
+//! ```
+
+use std::sync::Arc;
+
+use ipr::coordinator::gating::{route_decision, GatingStrategy};
+use ipr::eval::dataset;
+use ipr::registry::Registry;
+use ipr::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let reg = Arc::new(Registry::load("artifacts")?);
+    let engine = Engine::new()?;
+
+    let base_e = reg.model("qe_claude3_stella_sim_base")?.clone();
+    let ada_e = reg.model("qe_claude_adapter_stella_sim")?.clone();
+    println!("base router candidates   : {:?}", base_e.candidate_names);
+    println!("adapter router candidates: {:?}", ada_e.candidate_names);
+
+    let base = engine.load_model(&reg, &base_e, &["xla"])?;
+    let adapted = engine.load_model(&reg, &ada_e, &["xla"])?;
+    println!(
+        "\nadapter integration cost: {} extra weight tensors, {:.0} ms load",
+        ada_e.param_names.len() - base_e.param_names.len(),
+        adapted.load_ms
+    );
+
+    let rows = dataset::load(&reg, "test", 200)?;
+    let costs_base: Vec<f64> =
+        base_e.candidates.iter().map(|&i| reg.candidates[i].unit_cost()).collect();
+    let costs_ada: Vec<f64> =
+        ada_e.candidates.iter().map(|&i| reg.candidates[i].unit_cost()).collect();
+
+    let mut drift = 0.0f64;
+    let mut n = 0usize;
+    let mut switched = 0usize;
+    let mut new_routed = 0usize;
+    let tau = 0.25;
+    for r in &rows {
+        let b = base.predict(&[r.tokens.clone()], "xla")?.scores.remove(0);
+        let a = adapted.predict(&[r.tokens.clone()], "xla")?.scores.remove(0);
+        for j in 0..b.len() {
+            drift += (b[j] - a[j]).abs() as f64;
+            n += 1;
+        }
+        let db = route_decision(&b, &costs_base, tau, GatingStrategy::DynamicMax, 0.0);
+        let da = route_decision(&a, &costs_ada, tau, GatingStrategy::DynamicMax, 0.0);
+        if ada_e.candidates[da.chosen] != base_e.candidates[db.chosen] {
+            switched += 1;
+        }
+        if da.chosen == a.len() - 1 {
+            new_routed += 1;
+        }
+    }
+    println!("\nover {} prompts at τ={tau}:", rows.len());
+    println!("  old-candidate mean |drift| : {:.5} (§D claim: ~0, ≥98% preserved)", drift / n as f64);
+    println!("  routing decisions changed  : {switched}");
+    println!("  routed to NEW candidate    : {new_routed}");
+
+    // The paper's claimed benefit: adapter training is hours, not days.
+    println!(
+        "\n(build-time: adapter training = {} steps vs {} steps full retrain — see aot.py)",
+        300, 450
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load the registry + a family router and route a handful of
+//! prompts under different user tolerances.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use ipr::coordinator::{Router, RouterConfig};
+use ipr::registry::Registry;
+use ipr::synth::SynthWorld;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The Model Registry: candidates, prices, deployable QE artifacts.
+    let reg = Arc::new(Registry::load("artifacts")?);
+    println!("registry: {} candidates, {} QE models", reg.candidates.len(), reg.models.len());
+
+    // 2. A router for the Claude family with the production defaults
+    //    (stella backbone, DynamicMax gating). This spawns the PJRT engine
+    //    thread, uploads the weights and compiles the (batch, seq) buckets.
+    let router = Router::new(reg.clone(), RouterConfig::default())?;
+    println!(
+        "loaded {} in {:.0} ms; buckets: {:?}",
+        router.qe.entry().id,
+        router.qe.info().load_ms,
+        router.qe.info().buckets,
+    );
+
+    // 3. Route synthetic traffic at three tolerance levels.
+    let world = SynthWorld::new(reg.world_seed);
+    for i in 0..5u64 {
+        let prompt = world.live_prompt(i);
+        println!(
+            "\nprompt {i}: domain={} difficulty={:.2} ({} tokens)",
+            prompt.domain,
+            prompt.difficulty,
+            prompt.tokens.len()
+        );
+        for tau in [0.0, 0.3, 1.0] {
+            let out = router.handle_tokens(&prompt.tokens, Some(tau), true, Some(&prompt))?;
+            let inv = out.invoke.as_ref().unwrap();
+            println!(
+                "  τ={tau:<4} -> {:22}  r̂={:?}  realized={:.3}  cost=${:.6}  ({} µs route)",
+                out.model_name,
+                out.scores.iter().map(|s| (s * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+                inv.reward.unwrap_or(f64::NAN),
+                inv.cost_usd,
+                out.total_us,
+            );
+        }
+    }
+
+    // 4. Metrics accumulated along the way.
+    println!("\n--- /metrics ---\n{}", router.metrics.render());
+    router.qe.shutdown();
+    Ok(())
+}

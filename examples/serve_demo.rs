@@ -1,0 +1,113 @@
+//! END-TO-END DRIVER (DESIGN.md §5, EXPERIMENTS.md §E2E): start the full
+//! IPR server with real compiled artifacts, drive it with concurrent
+//! synthetic client load, and report latency / throughput / route mix /
+//! realized quality / cost savings.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo -- [n_requests] [clients] [tau]
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ipr::coordinator::{Router, RouterConfig};
+use ipr::registry::Registry;
+use ipr::server::{HttpClient, Server};
+use ipr::synth::{SynthWorld, SPLIT_LIVE};
+use ipr::util::hist::Histogram;
+use ipr::util::json::parse;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let n_clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let tau: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.1);
+
+    let reg = Arc::new(Registry::load("artifacts")?);
+    let router = Arc::new(Router::new(reg.clone(), RouterConfig::default())?);
+    let server = Server::start(router.clone(), "127.0.0.1:0", n_clients.max(2))?;
+    println!(
+        "serving {} on http://{} — {} requests x {} clients, τ={tau}",
+        router.qe.entry().id,
+        server.addr,
+        n_requests,
+        n_clients
+    );
+
+    let world = SynthWorld::new(reg.world_seed);
+    let hist = Arc::new(Mutex::new(Histogram::new()));
+    let quality = Arc::new(Mutex::new(Vec::<f64>::new()));
+    let addr = server.addr.clone();
+
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let hist = hist.clone();
+        let quality = quality.clone();
+        let world = world;
+        handles.push(std::thread::spawn(move || {
+            let client = HttpClient::new(&addr);
+            let mut i = c as u64;
+            while (i as usize) < n_requests {
+                let p = world.sample_prompt(SPLIT_LIVE, i);
+                let body = format!(
+                    "{{\"prompt\": \"{}\", \"tau\": {tau}, \"split\": {SPLIT_LIVE}, \"index\": {i}}}",
+                    p.text()
+                );
+                let t0 = Instant::now();
+                let (st, resp) = client.post("/v1/invoke", &body).expect("request");
+                let dt = t0.elapsed();
+                assert_eq!(st, 200, "{resp}");
+                hist.lock().unwrap().record(dt);
+                let j = parse(&resp).unwrap();
+                if let Some(r) = j
+                    .get("invoke")
+                    .and_then(|inv| inv.get("reward"))
+                    .and_then(|r| r.as_f64().ok())
+                {
+                    quality.lock().unwrap().push(r);
+                }
+                i += n_clients as u64;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+
+    let h = hist.lock().unwrap();
+    let q = quality.lock().unwrap();
+    let mean_q: f64 = q.iter().sum::<f64>() / q.len().max(1) as f64;
+    // always-strongest counterfactual quality
+    let mut best_q = 0.0;
+    for i in 0..n_requests as u64 {
+        let p = world.sample_prompt(SPLIT_LIVE, i);
+        best_q += world.reward(&p, 3); // claude-3.5-sonnet-v2
+    }
+    best_q /= n_requests as f64;
+
+    println!("\n=== serve_demo results (record in EXPERIMENTS.md §E2E) ===");
+    println!("requests          : {} over {:.2}s", h.count(), wall);
+    println!("throughput        : {:.1} req/s", h.count() as f64 / wall);
+    println!(
+        "client latency    : p50={:.1}ms p90={:.1}ms p99={:.1}ms max={:.1}ms",
+        h.p50_ms(),
+        h.p90_ms(),
+        h.p99_ms(),
+        h.max_ms()
+    );
+    println!("realized quality  : {:.4} (always-strongest: {:.4})", mean_q, best_q);
+    println!("live CSR          : {:.3}", router.metrics.live_csr());
+    let sizes = router.qe.batch_sizes.lock().unwrap();
+    let avg_batch: f64 = sizes.iter().sum::<usize>() as f64 / sizes.len().max(1) as f64;
+    println!("avg QE batch size : {avg_batch:.2} over {} forwards", sizes.len());
+    drop(sizes);
+    println!("\n--- server /metrics ---");
+    let client = HttpClient::new(&server.addr);
+    println!("{}", client.get("/metrics")?.1);
+    server.stop();
+    router.qe.shutdown();
+    Ok(())
+}

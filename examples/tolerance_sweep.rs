@@ -1,0 +1,62 @@
+//! Figure 3/4/5 reproduction: sweep the user tolerance τ and print the
+//! quality / cost trade-off curves for IPR vs oracle vs random, plus the
+//! per-backbone curves. CSV series land in `artifacts/results/`.
+//!
+//! ```sh
+//! cargo run --release --example tolerance_sweep -- [family] [limit]
+//! ```
+
+use ipr::coordinator::gating::GatingStrategy;
+use ipr::eval::arqgc::{bounded_arqgc, tau_sweep};
+use ipr::eval::baselines;
+use ipr::eval::dataset::{self, FamilyView};
+use ipr::eval::scores::predicted_scores;
+use ipr::eval::tables::EvalCtx;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let family = args.first().cloned().unwrap_or_else(|| "claude".into());
+    let limit: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1500);
+
+    let ctx = EvalCtx::new("artifacts", limit)?;
+    let rows = dataset::load(&ctx.reg, "test", limit)?;
+    let view = FamilyView::new(&ctx.reg, &rows, ctx.reg.family_indices(&family));
+
+    println!("family={family}, {} test prompts\n", rows.len());
+    println!("{:>6} | {:>22} | {:>22} | {:>10}", "τ", "IPR (quality, α-cost)", "oracle", "random-q");
+
+    let pred = predicted_scores(&ctx.engine, &ctx.reg, &format!("qe_{family}_stella_sim"), "test", &rows)?;
+    let ipr = tau_sweep(&view, &ctx.reg, &pred, GatingStrategy::DynamicMax, 0.0, 20);
+    let oracle = tau_sweep(&view, &ctx.reg, &view.true_scores(), GatingStrategy::DynamicMax, 0.0, 20);
+    let rand = baselines::random_curve(&view, &ctx.reg, 42, 20);
+    for i in 0..ipr.len() {
+        println!(
+            "{:>6.2} | q={:.4} α={:.3}       | q={:.4} α={:.3}       | {:>10.4}",
+            ipr[i].tau, ipr[i].quality, ipr[i].alpha, oracle[i].quality, oracle[i].alpha, rand[i].quality,
+        );
+    }
+    println!(
+        "\nBounded-ARQGC: IPR={:.3}  oracle={:.3}  random={:.3}",
+        bounded_arqgc(&ipr),
+        bounded_arqgc(&oracle),
+        bounded_arqgc(&rand)
+    );
+
+    // per-backbone curves (Figures 4/5)
+    println!("\nper-backbone quality at τ∈{{0, 0.5, 1}} (Fig 4) and α-cost (Fig 5):");
+    for bb in ["roberta_sim", "stella_sim", "qwen_sim", "qwen_emb_sim"] {
+        let pred = predicted_scores(&ctx.engine, &ctx.reg, &format!("qe_{family}_{bb}"), "test", &rows)?;
+        let pts = tau_sweep(&view, &ctx.reg, &pred, GatingStrategy::DynamicMax, 0.0, 20);
+        println!(
+            "  {bb:13} q: {:.4} / {:.4} / {:.4}   α: {:.3} / {:.3} / {:.3}   B-ARQGC={:.3}",
+            pts[0].quality,
+            pts[10].quality,
+            pts[20].quality,
+            pts[0].alpha,
+            pts[10].alpha,
+            pts[20].alpha,
+            bounded_arqgc(&pts)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: fused masked multi-head attention (flash-style).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch*heads, query blocks); each program stages a Q tile plus streamed K/V
+tiles through VMEM and keeps the online-softmax running statistics (m, l)
+and the output accumulator in registers/VMEM scratch — the Pallas analogue
+of flash-attention's threadblock tiling + warp-level reductions on GPU.
+
+VMEM budget at the default tile sizes (BQ=BK=32, Dh=32, f32):
+  Q tile 4KB + K tile 4KB + V tile 4KB + acc 4KB + scores 4KB ≈ 20KB
+per program — far below the ~16MB VMEM of a TPU core, leaving headroom for
+double buffering of the K/V stream.
+
+On this CPU testbed the kernel must run with interpret=True (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute);
+numerics are asserted against kernels.ref.attention_ref by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, block_k: int):
+    """One program: one (batch*head, q-block) tile."""
+    q = q_ref[0]                      # [BQ, Dh]
+    s_len = k_ref.shape[1]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    n_kb = s_len // block_k
+
+    m0 = jnp.full((q.shape[0],), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((q.shape[0],), dtype=jnp.float32)
+    acc0 = jnp.zeros(q.shape, dtype=jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(i * block_k, block_k), slice(None)))
+        b = pl.load(bias_ref, (0, pl.dslice(i * block_k, block_k)))
+        s = (q @ k.T) * scale + b[None, :]          # [BQ, BK]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def attention(q, k, v, bias, *, block_q: int = DEFAULT_BLOCK_Q,
+              block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """Fused attention over folded heads.
+
+    q, k, v: [BH, S, Dh]; bias: [B, S] additive key mask. Returns [BH, S, Dh].
+    S must be divisible by block_q and block_k.
+    """
+    bh, s, dh = q.shape
+    b = bias.shape[0]
+    h = bh // b
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+
+    kernel = functools.partial(_attn_kernel, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda i, j: (i, j, 0)),   # Q tile
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),    # K rows (streamed in-kernel)
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),    # V rows
+            pl.BlockSpec((1, s), lambda i, j: (i // h, 0)),      # bias row of the batch
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, bias)

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: fused LayerNorm + GELU FFN block.
+
+Fuses LN -> GEMM -> GELU -> GEMM so the [BR, F] intermediate activation
+never leaves VMEM (the CUDA equivalent keeps it in registers/shared
+memory). Grid is over row blocks of the folded [batch*seq, D] activation;
+the weight matrices are small enough (D,F <= 192,768) to sit resident in
+VMEM across the whole grid: f32 weights are D*F*2*4B ≈ 1.2MB worst case.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _ffn_kernel(x_ref, gamma_ref, beta_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + 1e-6) * gamma_ref[...] + beta_ref[...]
+    h = jax.nn.gelu(xn @ w1_ref[...] + b1_ref[...])
+    o_ref[...] = (h @ w2_ref[...] + b2_ref[...]).astype(o_ref.dtype)
+
+
+def ffn(x, gamma, beta, w1, b1, w2, b2, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+        interpret: bool = True):
+    """Fused LN+FFN over x: [N, D] (residual added by the caller)."""
+    n, d = x.shape
+    f = w1.shape[1]
+    br = min(block_rows, n)
+    assert n % br == 0, (n, br)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta, w1, b1, w2, b2)

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: fused per-candidate Quality Predictor heads.
+
+This is the serving-unique hot spot of IPR: for each prompt the router
+evaluates |C| small MLP heads (one per candidate LLM), i.e. B x |C| tiny
+GEMMs. A naive implementation launches |C| separate matmuls; here the
+candidate axis IS the kernel grid, so the whole fan-out is one fused
+kernel — on TPU this maps to back-to-back MXU matmuls over (8,128)-aligned
+tiles, on GPU the paper's baseline would have used one stream per head.
+
+concat(p, e_c) @ W1[c] is algebraically split as p @ W1p[c] + e_c @ W1e[c]
+so no concatenated buffer is ever materialized.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qp_kernel(p_ref, e_ref, w1p_ref, w1e_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    p = p_ref[...]                                   # [B, D]
+    e = e_ref[0]                                     # [De]
+    h = p @ w1p_ref[0] + e @ w1e_ref[0] + b1_ref[0]  # [B, Hh]
+    h = jax.nn.relu(h)
+    logits = h @ w2_ref[0] + b2_ref[0]               # [B]
+    o_ref[..., 0] = jax.nn.sigmoid(logits).astype(o_ref.dtype)
+
+
+def qp_heads(p, e, w1p, w1e, b1, w2, b2, *, interpret: bool = True):
+    """All candidate heads fused; returns r_hat [B, C] in (0,1).
+
+    Shapes: p [B,D], e [C,De], w1p [C,D,Hh], w1e [C,De,Hh], b1 [C,Hh],
+    w2 [C,Hh], b2 [C].
+    """
+    bsz, d = p.shape
+    c, de = e.shape
+    hh = w1p.shape[2]
+    return pl.pallas_call(
+        _qp_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((bsz, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, de), lambda i: (i, 0)),
+            pl.BlockSpec((1, d, hh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, de, hh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hh), lambda i: (i, 0)),
+            pl.BlockSpec((1, hh), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bsz, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c), p.dtype),
+        interpret=interpret,
+    )(p, e, w1p, w1e, b1, w2, b2)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the "_xla" serving variant: numerically identical to the
+kernels, but lowered as plain XLA ops (the fast path on the CPU PJRT
+backend, where Pallas must run through the interpreter).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, bias):
+    """Masked multi-head scaled dot-product attention.
+
+    q, k, v: [BH, S, Dh] (batch*heads folded), bias: [B, S] additive key
+    mask (0 for real tokens, large negative for padding). BH = B * H.
+    """
+    bh, s, dh = q.shape
+    b = bias.shape[0]
+    h = bh // b
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    scores = scores + jnp.repeat(bias, h, axis=0)[:, None, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v)
+
+
+def ffn_ref(x, gamma, beta, w1, b1, w2, b2):
+    """LayerNorm -> Linear -> GELU -> Linear (residual added by caller).
+
+    x: [N, D] (batch*seq folded).
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + 1e-6) * gamma + beta
+    h = jax.nn.gelu(xn @ w1 + b1)
+    return h @ w2 + b2
+
+
+def qp_heads_ref(p, e, w1p, w1e, b1, w2, b2):
+    """Fused per-candidate Quality Predictor heads (paper Eq. 7-9).
+
+    p:   [B, D]      pooled prompt embeddings (Prompt Encoder output)
+    e:   [C, De]     LLM Identity Encoder embeddings
+    w1p: [C, D, Hh]  first-layer weight, prompt part of the concat
+    w1e: [C, De, Hh] first-layer weight, identity part of the concat
+    b1:  [C, Hh]; w2: [C, Hh]; b2: [C]
+    returns r_hat: [B, C] in (0, 1).
+    """
+    # h[b,c,:] = relu(p[b] @ w1p[c] + e[c] @ w1e[c] + b1[c])
+    hp = jnp.einsum("bd,cdh->bch", p, w1p)
+    he = jnp.einsum("cd,cdh->ch", e, w1e)
+    h = jax.nn.relu(hp + he[None, :, :] + b1[None, :, :])
+    logits = jnp.einsum("bch,ch->bc", h, w2) + b2[None, :]
+    return jax.nn.sigmoid(logits)

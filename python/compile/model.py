@@ -1,0 +1,246 @@
+"""L2: the IPR Quality Estimator in JAX (paper §3.2, Fig. 2).
+
+Three components, exactly as in the paper:
+  * Prompt Encoder (PE): a small pre-LN transformer encoder over the prompt
+    tokens, masked-mean-pooled into p = PE(x) ∈ R^d.  Family-specific — one
+    trained instance per model family (App. C.2).
+  * LLM Identity Encoder (LIE): a learnable embedding e_c ∈ R^{d'} per
+    candidate model.
+  * Quality Predictor (QP): per-candidate 2-layer MLP over concat(p, e_c)
+    with sigmoid output (Eq. 7-9), fused across candidates by the
+    kernels.qp_heads Pallas kernel.
+
+`use_pallas=True` routes the three hot blocks through the L1 Pallas kernels
+(attention, ffn, qp_heads); `use_pallas=False` uses the pure-jnp oracles —
+both lower to HLO and are emitted as the `_pallas` / `_xla` artifact
+variants.
+
+Backbones are scaled-down proxies of the paper's Table 2 backbones (see
+DESIGN.md §2 for the substitution argument).
+
+Parameter naming: flat dict with zero-padded layer indices; the canonical
+parameter order everywhere (AOT lowering, .npz export, rust loading) is
+`sorted(params.keys())` (plain byte-wise ASCII sort).
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as k_attn
+from .kernels import ffn as k_ffn
+from .kernels import qp_heads as k_qp
+from .kernels import ref as k_ref
+
+MASK_NEG = -1e30
+
+
+@dataclass(frozen=True)
+class BackboneConfig:
+    """Prompt-encoder hyper-parameters (a scaled proxy of a paper backbone)."""
+
+    name: str
+    d: int          # model width
+    layers: int
+    heads: int      # head_dim = d // heads (32 everywhere)
+    ffn_mult: int = 4
+    vocab: int = 2048
+    max_pos: int = 256
+    d_id: int = 32  # LIE dimension d'
+    qp_hidden: int = 64
+
+
+# The four backbones of Table 2, scaled for a single-core CPU testbed
+# (head_dim = 16 everywhere). Ordering by capacity matches the paper:
+# roberta < stella < qwen3-0.6b < qwen3-emb-4b.
+BACKBONES = {
+    "roberta_sim": BackboneConfig("roberta_sim", d=32, layers=1, heads=2),
+    "stella_sim": BackboneConfig("stella_sim", d=48, layers=1, heads=3),
+    "qwen_sim": BackboneConfig("qwen_sim", d=64, layers=2, heads=4),
+    "qwen_emb_sim": BackboneConfig("qwen_emb_sim", d=96, layers=2, heads=6),
+}
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(rng, shape, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jnp.asarray(rng.normal(size=shape) * s, jnp.float32)
+
+
+def init_encoder_params(rng: np.random.Generator, cfg: BackboneConfig) -> Dict[str, jnp.ndarray]:
+    """Prompt Encoder parameters only (shared by QE and adapter variants)."""
+    p = {
+        "tok_emb": _dense_init(rng, (cfg.vocab, cfg.d), scale=0.02),
+        "pos_emb": _dense_init(rng, (cfg.max_pos, cfg.d), scale=0.02),
+        "lnf_g": jnp.ones((cfg.d,), jnp.float32),
+        "lnf_b": jnp.zeros((cfg.d,), jnp.float32),
+    }
+    f = cfg.d * cfg.ffn_mult
+    for i in range(cfg.layers):
+        pre = f"l{i:02d}_"
+        p[pre + "ln1_g"] = jnp.ones((cfg.d,), jnp.float32)
+        p[pre + "ln1_b"] = jnp.zeros((cfg.d,), jnp.float32)
+        p[pre + "wqkv"] = _dense_init(rng, (cfg.d, 3 * cfg.d))
+        p[pre + "wo"] = _dense_init(rng, (cfg.d, cfg.d))
+        p[pre + "ln2_g"] = jnp.ones((cfg.d,), jnp.float32)
+        p[pre + "ln2_b"] = jnp.zeros((cfg.d,), jnp.float32)
+        p[pre + "w1"] = _dense_init(rng, (cfg.d, f))
+        p[pre + "b1"] = jnp.zeros((f,), jnp.float32)
+        p[pre + "w2"] = _dense_init(rng, (f, cfg.d))
+        p[pre + "b2"] = jnp.zeros((cfg.d,), jnp.float32)
+    return p
+
+
+def init_head_params(rng: np.random.Generator, cfg: BackboneConfig, n_cand: int) -> Dict[str, jnp.ndarray]:
+    """LIE + QP parameters for a candidate set of size n_cand."""
+    # Conservative output-scale init: keeps the sigmoid in its linear
+    # region at step 0 (large init scales intermittently saturated heads
+    # and trapped training — observed as dev MAE ~0.2 on some seeds).
+    return {
+        "lie_emb": _dense_init(rng, (n_cand, cfg.d_id), scale=0.2),
+        "qp_w1p": _dense_init(rng, (n_cand, cfg.d, cfg.qp_hidden)),
+        "qp_w1e": _dense_init(rng, (n_cand, cfg.d_id, cfg.qp_hidden)),
+        "qp_b1": jnp.zeros((n_cand, cfg.qp_hidden), jnp.float32),
+        "qp_w2": _dense_init(rng, (n_cand, cfg.qp_hidden), scale=0.05),
+        "qp_b2": jnp.zeros((n_cand,), jnp.float32),
+    }
+
+
+def init_qe_params(seed: int, cfg: BackboneConfig, n_cand: int) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    p = init_encoder_params(rng, cfg)
+    p.update(init_head_params(rng, cfg, n_cand))
+    return p
+
+
+def init_adapter_params(seed: int, cfg: BackboneConfig) -> Dict[str, jnp.ndarray]:
+    """§D adapters for ONE new candidate on a frozen encoder.
+
+    PE Adapter: 2-layer FFN with residual, identity-initialized (zeros on
+    the out projection). LIE Adapter: the new candidate's identity row plus
+    a linear transform. New QP head: trained from scratch.
+    """
+    rng = np.random.default_rng(seed)
+    return {
+        "ada_pe_w1": _dense_init(rng, (cfg.d, cfg.d), scale=0.05),
+        "ada_pe_b1": jnp.zeros((cfg.d,), jnp.float32),
+        "ada_pe_w2": jnp.zeros((cfg.d, cfg.d), jnp.float32),  # identity at init
+        "ada_pe_b2": jnp.zeros((cfg.d,), jnp.float32),
+        "ada_lie_emb": _dense_init(rng, (1, cfg.d_id), scale=0.5),
+        "ada_lie_w": jnp.eye(cfg.d_id, dtype=jnp.float32),
+        "ada_qp_w1p": _dense_init(rng, (1, cfg.d, cfg.qp_hidden)),
+        "ada_qp_w1e": _dense_init(rng, (1, cfg.d_id, cfg.qp_hidden)),
+        "ada_qp_b1": jnp.zeros((1, cfg.qp_hidden), jnp.float32),
+        "ada_qp_w2": _dense_init(rng, (1, cfg.qp_hidden), scale=0.05),
+        "ada_qp_b2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * g + b
+
+
+def encode(params, ids, mask, cfg: BackboneConfig, use_pallas: bool):
+    """Prompt Encoder: token ids [B,S] + mask [B,S] -> pooled p [B,d]."""
+    bsz, s = ids.shape
+    x = params["tok_emb"][ids] + params["pos_emb"][None, :s, :]
+    bias = jnp.where(mask > 0.5, 0.0, MASK_NEG).astype(jnp.float32)  # [B,S]
+
+    for i in range(cfg.layers):
+        pre = f"l{i:02d}_"
+        h = _layer_norm(x, params[pre + "ln1_g"], params[pre + "ln1_b"])
+        qkv = h @ params[pre + "wqkv"]                 # [B,S,3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        dh = cfg.d // cfg.heads
+
+        def fold(t):
+            t = t.reshape(bsz, s, cfg.heads, dh).transpose(0, 2, 1, 3)
+            return t.reshape(bsz * cfg.heads, s, dh)
+
+        attn_fn = k_attn.attention if use_pallas else k_ref.attention_ref
+        o = attn_fn(fold(q), fold(k), fold(v), bias)
+        o = o.reshape(bsz, cfg.heads, s, dh).transpose(0, 2, 1, 3).reshape(bsz, s, cfg.d)
+        x = x + o @ params[pre + "wo"]
+
+        flat = x.reshape(bsz * s, cfg.d)
+        if use_pallas:
+            y = k_ffn.ffn(flat, params[pre + "ln2_g"], params[pre + "ln2_b"],
+                          params[pre + "w1"], params[pre + "b1"],
+                          params[pre + "w2"], params[pre + "b2"])
+        else:
+            y = k_ref.ffn_ref(flat, params[pre + "ln2_g"], params[pre + "ln2_b"],
+                              params[pre + "w1"], params[pre + "b1"],
+                              params[pre + "w2"], params[pre + "b2"])
+        x = x + y.reshape(bsz, s, cfg.d)
+
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    m = mask[:, :, None]
+    pooled = jnp.sum(x * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return pooled
+
+
+def qp_predict(params, pooled, use_pallas: bool, prefix: str = "qp_", lie_key: str = "lie_emb"):
+    fn = k_qp.qp_heads if use_pallas else k_ref.qp_heads_ref
+    return fn(pooled, params[lie_key], params[prefix + "w1p"], params[prefix + "w1e"],
+              params[prefix + "b1"], params[prefix + "w2"], params[prefix + "b2"])
+
+
+def qe_apply(params, ids, mask, cfg: BackboneConfig, use_pallas: bool = False):
+    """Full Quality Estimator: ids, mask -> r_hat [B, C]."""
+    pooled = encode(params, ids, mask, cfg, use_pallas)
+    return qp_predict(params, pooled, use_pallas)
+
+
+def qe_apply_with_adapter(base_params, ada_params, ids, mask, cfg: BackboneConfig,
+                          use_pallas: bool = False):
+    """§D extension path: frozen base QE + adapters for one new candidate.
+
+    The PE adapter specializes the shared pooled representation (residual,
+    identity-initialized, so drift starts at exactly 0); ALL candidates are
+    scored from the adapted representation, and the Eq. 10 consistency loss
+    keeps old-candidate predictions within 2% of the frozen model during
+    adapter training. Returns [B, C_base + 1] with the new candidate LAST.
+    """
+    pooled = encode(base_params, ids, mask, cfg, use_pallas)
+    h = jax.nn.relu(pooled @ ada_params["ada_pe_w1"] + ada_params["ada_pe_b1"])
+    pooled_new = pooled + h @ ada_params["ada_pe_w2"] + ada_params["ada_pe_b2"]
+    old = qp_predict(base_params, pooled_new, use_pallas)
+
+    e_new = ada_params["ada_lie_emb"] @ ada_params["ada_lie_w"]
+    fn = k_qp.qp_heads if use_pallas else k_ref.qp_heads_ref
+    new = fn(pooled_new, e_new, ada_params["ada_qp_w1p"], ada_params["ada_qp_w1e"],
+             ada_params["ada_qp_b1"], ada_params["ada_qp_w2"], ada_params["ada_qp_b2"])
+    return jnp.concatenate([old, new], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Canonical flattening (shared contract with rust/src/runtime)
+# ---------------------------------------------------------------------------
+
+
+def param_order(params: Dict[str, jnp.ndarray]) -> List[str]:
+    """THE canonical order: byte-wise ascending sort of parameter names."""
+    return sorted(params.keys())
+
+
+def flatten_params(params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[k] for k in param_order(params)]
+
+
+def unflatten_params(names: List[str], flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return dict(zip(names, flat))

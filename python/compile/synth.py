@@ -1,0 +1,316 @@
+"""SynthWorld: the deterministic synthetic substitute for the IPR dataset.
+
+The paper trains on 1.5M prompts drawn from LMSYS-Chat-1M / ShareGPT /
+MixInstruct / ... (Table 9), with per-response quality labels from the
+Skywork reward model and per-model costs from the Bedrock price list
+(Table 8).  None of those assets are available here, so this module defines
+a *generative world* with the same statistical roles:
+
+  * a latent per-prompt state z = (domain, difficulty u, reasoning g, length)
+    drawn from a domain mixture mirroring Table 9's proportions;
+  * a token sequence whose block structure encodes z (domain-keyword blocks,
+    difficulty-band blocks, reasoning-band blocks, filler) — so response
+    quality is predictable from the prompt text alone, which is exactly the
+    premise of the paper's Quality Estimator;
+  * a reward oracle r(z, c) per candidate model c, calibrated so model
+    orderings, score separations (~0.1-0.2 between adjacent models, paper
+    App. B) and tie rates (Table 7) match the paper;
+  * an output-length model driving the Eq. 11 cost computation with the
+    paper's real Table 8 prices.
+
+CROSS-LANGUAGE PARITY: this file is ported 1:1 to rust/src/synth/.  All
+arithmetic is f64 with a fixed operation order and the only nonlinearity is
+the algebraic squash(t) = 0.5*(1 + t/(1+|t|)) — no libm transcendentals —
+so python and rust produce bit-identical labels.  tests/test_synth.py dumps
+a golden file that the rust side re-derives and compares exactly.
+"""
+
+from dataclasses import dataclass
+from typing import List
+
+MASK64 = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# SplitMix64 — the shared RNG. Port of the reference implementation.
+# ---------------------------------------------------------------------------
+
+GOLDEN = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+STREAM_SALT = 0xD1B54A32D192ED03
+
+
+def mix64(z: int) -> int:
+    """SplitMix64 finalizer: scramble a 64-bit value."""
+    z &= MASK64
+    z = ((z ^ (z >> 30)) * MIX1) & MASK64
+    z = ((z ^ (z >> 27)) * MIX2) & MASK64
+    return z ^ (z >> 31)
+
+
+class Rng:
+    """SplitMix64 sequence generator."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GOLDEN) & MASK64
+        return mix64(self.state)
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of precision."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_range(self, n: int) -> int:
+        """Uniform integer in [0, n). n must be small (mod bias ~ n/2^64)."""
+        return self.next_u64() % n
+
+
+def substream(seed: int, stream: int, index: int) -> int:
+    """Derive an independent seed for (stream, index) under a world seed."""
+    x = (seed + GOLDEN * ((stream + 1) & MASK64)) & MASK64
+    x ^= (index * STREAM_SALT) & MASK64
+    return mix64(x)
+
+
+def squash(t: float) -> float:
+    """Algebraic sigmoid onto (0, 1): 0.5*(1 + t/(1+|t|)). Exact in f64."""
+    return 0.5 * (1.0 + t / (1.0 + abs(t)))
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (shared constant with rust/src/tokenizer).
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 2048
+PAD_ID = 0
+DOMAIN_BASE = 1          # 10 domains x 32 keyword tokens -> ids [1, 321)
+DOMAIN_BLOCK = 32
+DIFF_BASE = 321          # 16 difficulty bands x 32 tokens -> ids [321, 833)
+DIFF_BANDS = 16
+DIFF_BLOCK = 32
+REASON_BASE = 833        # 8 reasoning bands x 16 tokens  -> ids [833, 961)
+REASON_BANDS = 8
+REASON_BLOCK = 16
+FILLER_BASE = 961        # ids [961, 2048)
+FILLER_COUNT = VOCAB_SIZE - FILLER_BASE
+
+# Token-class emission probabilities (cumulative thresholds).
+P_DOMAIN = 0.28
+P_DIFF = 0.50
+P_REASON = 0.62
+
+# ---------------------------------------------------------------------------
+# Domain mixture — proportions mirror paper Table 9.
+#   (name, weight, diff_mean, diff_spread, reason_max, len_min, len_max)
+# ---------------------------------------------------------------------------
+
+DOMAINS = [
+    ("lmsys_chat", 0.6126, 0.35, 0.30, 0.30, 12, 96),
+    ("sharegpt_vicuna", 0.1337, 0.40, 0.30, 0.40, 16, 110),
+    ("mixinstruct", 0.0652, 0.45, 0.25, 0.40, 12, 80),
+    ("nectar", 0.0650, 0.50, 0.25, 0.50, 12, 90),
+    ("answersumm", 0.0281, 0.55, 0.20, 0.30, 40, 120),
+    ("hellaswag", 0.0277, 0.45, 0.20, 0.20, 24, 64),
+    ("strategyqa", 0.0261, 0.65, 0.20, 0.80, 12, 48),
+    ("commonsenseqa", 0.0259, 0.50, 0.20, 0.60, 10, 40),
+    ("banking77", 0.0093, 0.25, 0.15, 0.10, 8, 32),
+    ("gsm8k", 0.0065, 0.75, 0.15, 0.90, 24, 80),
+]
+N_DOMAINS = len(DOMAINS)
+
+# Split / stream identifiers. OOD splits use a different domain mixture and
+# a difficulty offset — the distribution shift behind Table 11's OOD columns.
+SPLIT_TRAIN = 0
+SPLIT_DEV = 1
+SPLIT_TEST = 2
+SPLIT_OOD_MSMARCO = 3
+SPLIT_OOD_NVCHAT = 4
+
+# OOD mixtures: retrieval-augmented QA flavours (MS Marco / Nvidia ChatQA).
+OOD_MIXTURES = {
+    SPLIT_OOD_MSMARCO: [0.02, 0.02, 0.05, 0.40, 0.05, 0.02, 0.14, 0.20, 0.08, 0.02],
+    SPLIT_OOD_NVCHAT: [0.25, 0.10, 0.10, 0.25, 0.10, 0.02, 0.08, 0.05, 0.02, 0.03],
+}
+OOD_DIFF_OFFSET = 0.10
+
+# ---------------------------------------------------------------------------
+# Candidate models: the 11 LLMs of the paper (Table 8 real prices, USD/1k
+# tokens). Capability parameters are calibrated so orderings and overlap
+# match the paper's human study (App. E).
+#   (name, family, cap, slope, reason_pen, verbosity, noise, p_in, p_out)
+# ---------------------------------------------------------------------------
+
+CANDIDATES = [
+    ("claude-3-haiku", "claude", 0.62, 0.55, 0.35, 0.75, 0.03, 0.00025, 0.00125),
+    ("claude-3.5-haiku", "claude", 0.74, 0.42, 0.25, 0.90, 0.03, 0.0008, 0.004),
+    ("claude-3.5-sonnet-v1", "claude", 0.80, 0.30, 0.16, 1.00, 0.03, 0.003, 0.015),
+    ("claude-3.5-sonnet-v2", "claude", 0.86, 0.22, 0.10, 1.05, 0.03, 0.003, 0.015),
+    ("llama-3.1-8b", "llama", 0.58, 0.58, 0.40, 0.80, 0.036, 0.00022, 0.00022),
+    ("llama-3.2-11b", "llama", 0.66, 0.48, 0.32, 0.85, 0.036, 0.00016, 0.00016),
+    ("llama-3.1-70b", "llama", 0.76, 0.32, 0.18, 1.00, 0.036, 0.00099, 0.00099),
+    ("llama-3.2-90b", "llama", 0.80, 0.28, 0.15, 1.00, 0.036, 0.00072, 0.00072),
+    ("llama-3.3-70b", "llama", 0.83, 0.25, 0.12, 1.00, 0.036, 0.00072, 0.00072),
+    ("nova-lite", "nova", 0.64, 0.50, 0.30, 0.85, 0.03, 0.00006, 0.00024),
+    ("nova-pro", "nova", 0.80, 0.28, 0.14, 1.00, 0.03, 0.0008, 0.0032),
+]
+N_CANDIDATES = len(CANDIDATES)
+FAMILIES = ["claude", "llama", "nova"]
+
+# Reward surface: quality deficit only when task demand exceeds model
+# capability. Easy prompts saturate at the same ceiling for every model —
+# the effect behind the paper's headline claim that ~60% of prompts do not
+# need the most expensive model (Table 4).
+DEMAND_REASON_W = 0.5
+REWARD_BASE_T = 2.0
+DEFICIT_SLOPE = 5.0
+AFFINITY_AMPL = 0.08
+
+# RNG stream ids.
+STREAM_PROMPT = 1
+STREAM_REWARD = 2
+STREAM_AFFINITY = 3
+
+
+def family_candidate_indices(family: str) -> List[int]:
+    return [i for i, c in enumerate(CANDIDATES) if c[1] == family]
+
+
+def domain_affinity(world_seed: int, cand_idx: int, domain: int) -> float:
+    """Deterministic per-(candidate, domain) affinity in [-A, A]."""
+    s = substream(world_seed, STREAM_AFFINITY, cand_idx * 64 + domain)
+    r = Rng(s)
+    return AFFINITY_AMPL * (2.0 * r.next_f64() - 1.0)
+
+
+@dataclass
+class Prompt:
+    """A synthetic prompt with its generative latent state."""
+
+    split: int
+    index: int
+    domain: int
+    difficulty: float
+    reasoning: float
+    tokens: List[int]
+
+    @property
+    def text(self) -> str:
+        return " ".join(f"w{t}" for t in self.tokens)
+
+
+class SynthWorld:
+    """Deterministic prompt/reward generator under a single world seed."""
+
+    def __init__(self, seed: int = 20250710):
+        self.seed = seed
+
+    # -- prompt generation --------------------------------------------------
+
+    def _mixture(self, split: int):
+        if split in OOD_MIXTURES:
+            return OOD_MIXTURES[split]
+        return [d[1] for d in DOMAINS]
+
+    def sample_prompt(self, split: int, index: int) -> Prompt:
+        rng = Rng(substream(self.seed, STREAM_PROMPT, split * 0x100000000 + index))
+        # Domain from the split's mixture.
+        weights = self._mixture(split)
+        r = rng.next_f64()
+        domain = N_DOMAINS - 1
+        acc = 0.0
+        for i, w in enumerate(weights):
+            acc += w
+            if r < acc:
+                domain = i
+                break
+        name, _w, dmean, dspread, rmax, lmin, lmax = DOMAINS[domain]
+        u = dmean + dspread * (2.0 * rng.next_f64() - 1.0)
+        if split in OOD_MIXTURES:
+            u += OOD_DIFF_OFFSET
+        u = min(1.0, max(0.0, u))
+        g = rmax * rng.next_f64()
+        length = lmin + rng.next_range(lmax - lmin + 1)
+
+        diff_band = min(DIFF_BANDS - 1, int(u * DIFF_BANDS))
+        reason_band = min(REASON_BANDS - 1, int(g * REASON_BANDS))
+
+        tokens = []
+        # Position 0 is always a domain keyword (a cheap "task marker").
+        tokens.append(DOMAIN_BASE + domain * DOMAIN_BLOCK + rng.next_range(DOMAIN_BLOCK))
+        for _ in range(length - 1):
+            cls = rng.next_f64()
+            if cls < P_DOMAIN:
+                t = DOMAIN_BASE + domain * DOMAIN_BLOCK + rng.next_range(DOMAIN_BLOCK)
+            elif cls < P_DIFF:
+                t = DIFF_BASE + diff_band * DIFF_BLOCK + rng.next_range(DIFF_BLOCK)
+            elif cls < P_REASON:
+                t = REASON_BASE + reason_band * REASON_BLOCK + rng.next_range(REASON_BLOCK)
+            else:
+                t = FILLER_BASE + rng.next_range(FILLER_COUNT)
+            tokens.append(t)
+        return Prompt(split, index, domain, u, g, tokens)
+
+    # -- reward oracle -------------------------------------------------------
+
+    def true_reward_mean(self, prompt: Prompt, cand_idx: int) -> float:
+        """Noise-free reward surface (used by tests and calibration).
+
+        demand = difficulty + w*reasoning; a model only loses quality when
+        demand exceeds its capability (cap + domain affinity); below that
+        every model sits at the same squash(BASE_T) ceiling. The per-model
+        `slope` scales how fast quality degrades past the capability point
+        (weaker models also degrade faster).
+        """
+        name, fam, cap, slope, rp, verb, noise, pi, po = CANDIDATES[cand_idx]
+        aff = domain_affinity(self.seed, cand_idx, prompt.domain)
+        demand = prompt.difficulty + DEMAND_REASON_W * prompt.reasoning
+        deficit = demand - cap
+        if deficit < 0.0:
+            deficit = 0.0
+        t = REWARD_BASE_T - DEFICIT_SLOPE * (1.0 + slope) * deficit
+        # Affinity is a *style* preference of the reward model (additive at
+        # the quality level, domain-predictable): on easy prompts the
+        # best-matching — often cheaper — model genuinely wins top-1, which
+        # is what makes both Table 2's top-1 accuracy and Table 4's
+        # cost-free routing of most prompts possible simultaneously.
+        return squash(t) + aff
+
+    def reward(self, prompt: Prompt, cand_idx: int) -> float:
+        """Observed reward = surface + per-(prompt,candidate) uniform noise.
+
+        Plays the role of the Skywork RM score: continuous, in [0,1], noisy.
+        """
+        base = self.true_reward_mean(prompt, cand_idx)
+        rng = Rng(
+            substream(
+                self.seed,
+                STREAM_REWARD,
+                (prompt.split * 0x100000000 + prompt.index) * 16 + cand_idx,
+            )
+        )
+        noise = CANDIDATES[cand_idx][6]
+        r = base + noise * (2.0 * rng.next_f64() - 1.0)
+        return min(1.0, max(0.0, r))
+
+    def output_length(self, prompt: Prompt, cand_idx: int) -> int:
+        """Simulated response length in tokens (drives Eq. 11 output cost)."""
+        verb = CANDIDATES[cand_idx][5]
+        rng = Rng(
+            substream(
+                self.seed,
+                STREAM_REWARD,
+                (prompt.split * 0x100000000 + prompt.index) * 16 + cand_idx,
+            )
+        )
+        _ = rng.next_f64()  # skip the reward-noise draw (same stream)
+        jitter = 0.8 + 0.4 * rng.next_f64()
+        o = verb * (30.0 + 100.0 * prompt.difficulty + 50.0 * prompt.reasoning) * jitter
+        return max(4, int(o))
+
+    def rewards(self, prompt: Prompt, cand_indices: List[int]) -> List[float]:
+        return [self.reward(prompt, c) for c in cand_indices]
+
+    def out_lens(self, prompt: Prompt, cand_indices: List[int]) -> List[int]:
+        return [self.output_length(prompt, c) for c in cand_indices]

@@ -1,0 +1,257 @@
+"""Build-time training of the Quality Estimator (paper §3.2, App. B-D, H).
+
+Hand-rolled Adam (the offline image has no optax), three loss functions
+(Table 10 ablation), adapter training with the Eq. 10 consistency loss, and
+dataset construction from the SynthWorld oracle. Runs ONLY under
+`make artifacts`; nothing here is on the serving path.
+"""
+
+import os
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import synth as S
+
+SEQ_LEN = 128
+
+
+# ---------------------------------------------------------------------------
+# Dataset construction (cached as .npz under artifacts/params/)
+# ---------------------------------------------------------------------------
+
+
+def build_split(world: S.SynthWorld, split: int, n: int, seq_len: int = SEQ_LEN):
+    """Materialize a split: ids [N,S] i32, mask [N,S] f32, labels [N,11] f32,
+    plus latent metadata for eval exports."""
+    ids = np.zeros((n, seq_len), np.int32)
+    mask = np.zeros((n, seq_len), np.float32)
+    labels = np.zeros((n, S.N_CANDIDATES), np.float32)
+    out_lens = np.zeros((n, S.N_CANDIDATES), np.int32)
+    in_lens = np.zeros((n,), np.int32)
+    domains = np.zeros((n,), np.int32)
+    diffs = np.zeros((n,), np.float64)
+    reasons = np.zeros((n,), np.float64)
+    for i in range(n):
+        pr = world.sample_prompt(split, i)
+        l = min(len(pr.tokens), seq_len)
+        ids[i, :l] = pr.tokens[:l]
+        mask[i, :l] = 1.0
+        in_lens[i] = len(pr.tokens)
+        domains[i] = pr.domain
+        diffs[i] = pr.difficulty
+        reasons[i] = pr.reasoning
+        for c in range(S.N_CANDIDATES):
+            labels[i, c] = world.reward(pr, c)
+            out_lens[i, c] = world.output_length(pr, c)
+    return dict(ids=ids, mask=mask, labels=labels, out_lens=out_lens,
+                in_lens=in_lens, domains=domains, diffs=diffs, reasons=reasons)
+
+
+def cached_split(cache_dir: str, world: S.SynthWorld, split: int, n: int):
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, f"data_seed{world.seed}_split{split}_n{n}.npz")
+    if os.path.exists(path):
+        return dict(np.load(path))
+    data = build_split(world, split, n)
+    np.savez_compressed(path, **data)
+    return data
+
+
+# ---------------------------------------------------------------------------
+# Losses (Table 10: MSE / hinge / ListNet)
+# ---------------------------------------------------------------------------
+
+
+def loss_mse(pred, y):
+    return jnp.mean(jnp.square(pred - y))
+
+
+def loss_hinge(pred, y, margin: float = 0.05):
+    """Pairwise ranking hinge over all candidate pairs."""
+    c = pred.shape[1]
+    ii, jj = np.triu_indices(c, k=1)
+    d_true = y[:, ii] - y[:, jj]
+    d_pred = pred[:, ii] - pred[:, jj]
+    sgn = jnp.sign(d_true)
+    return jnp.mean(jax.nn.relu(margin - sgn * d_pred))
+
+
+def loss_listnet(pred, y, temp: float = 0.15):
+    """ListNet: cross-entropy between softmax-ed true and predicted scores."""
+    p = jax.nn.softmax(y / temp, axis=1)
+    logq = jax.nn.log_softmax(pred / temp, axis=1)
+    return -jnp.mean(jnp.sum(p * logq, axis=1))
+
+
+LOSSES = {"mse": loss_mse, "hinge": loss_hinge, "listnet": loss_listnet}
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def clip_global_norm(grads, max_norm: float = 1.0):
+    """Global-norm gradient clipping (training-stability insurance)."""
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    def upd(p, m_, v_):
+        mh = m_ / (1 - b1 ** tf)
+        vh = v_ / (1 - b2 ** tf)
+        return p - lr * mh / (jnp.sqrt(vh) + eps)
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# QE training
+# ---------------------------------------------------------------------------
+
+
+def train_qe(cfg: M.BackboneConfig, data: Dict[str, np.ndarray],
+             cand_indices: List[int], *, steps: int = 1000, batch: int = 32,
+             lr: float = 2e-3, loss: str = "mse", seed: int = 0,
+             log_every: int = 200, tag: str = "") -> Dict[str, jnp.ndarray]:
+    """Train a family (or unified) Quality Estimator from scratch."""
+    n_cand = len(cand_indices)
+    params = M.init_qe_params(seed, cfg, n_cand)
+    loss_fn = LOSSES[loss]
+    ids_all = jnp.asarray(data["ids"])
+    mask_all = jnp.asarray(data["mask"])
+    y_all = jnp.asarray(data["labels"][:, cand_indices])
+    n = ids_all.shape[0]
+
+    @jax.jit
+    def step(params, opt, key):
+        idx = jax.random.randint(key, (batch,), 0, n)
+        ids, mask, y = ids_all[idx], mask_all[idx], y_all[idx]
+        def obj(p):
+            pred = M.qe_apply(p, ids, mask, cfg, use_pallas=False)
+            return loss_fn(pred, y)
+        l, g = jax.value_and_grad(obj)(params)
+        params, opt = adam_update(params, clip_global_norm(g), opt, lr=lr)
+        return params, opt, l
+
+    opt = adam_init(params)
+    key = jax.random.PRNGKey(seed)
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt, l = step(params, opt, sub)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"    [{tag}] step {i+1}/{steps} loss={float(l):.5f}", flush=True)
+    return params
+
+
+def train_routellm(cfg: M.BackboneConfig, data: Dict[str, np.ndarray],
+                   weak_idx: int, strong_idx: int, *, eps: float = 0.02,
+                   steps: int = 600, batch: int = 32, lr: float = 2e-3,
+                   seed: int = 7, tag: str = "") -> Dict[str, jnp.ndarray]:
+    """RouteLLM-style baseline: binary 'weak model suffices' classifier.
+
+    Same encoder, a single head; the label is 1 iff the weak model's reward
+    is within eps of the strong model's (the paper's BERT-classifier
+    baseline supports only this binary strong/weak decision).
+    """
+    params = M.init_qe_params(seed, cfg, 1)
+    y_bin = (data["labels"][:, weak_idx] >= data["labels"][:, strong_idx] - eps)
+    y_all = jnp.asarray(y_bin.astype(np.float32)[:, None])
+    ids_all = jnp.asarray(data["ids"])
+    mask_all = jnp.asarray(data["mask"])
+    n = ids_all.shape[0]
+
+    @jax.jit
+    def step(params, opt, key):
+        idx = jax.random.randint(key, (batch,), 0, n)
+        ids, mask, y = ids_all[idx], mask_all[idx], y_all[idx]
+        def obj(p):
+            pred = M.qe_apply(p, ids, mask, cfg, use_pallas=False)
+            # BCE on the single head.
+            pred = jnp.clip(pred, 1e-6, 1 - 1e-6)
+            return -jnp.mean(y * jnp.log(pred) + (1 - y) * jnp.log(1 - pred))
+        l, g = jax.value_and_grad(obj)(params)
+        params, opt = adam_update(params, clip_global_norm(g), opt, lr=lr)
+        return params, opt, l
+
+    opt = adam_init(params)
+    key = jax.random.PRNGKey(seed)
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt, l = step(params, opt, sub)
+        if (i + 1) % 200 == 0:
+            print(f"    [{tag}] step {i+1}/{steps} bce={float(l):.5f}", flush=True)
+    return params
+
+
+def train_adapter(base_params: Dict[str, jnp.ndarray], cfg: M.BackboneConfig,
+                  data: Dict[str, np.ndarray], old_indices: List[int],
+                  new_index: int, *, lam: float = 1.0, steps: int = 500,
+                  batch: int = 64, lr: float = 2e-3, seed: int = 11,
+                  tag: str = "") -> Dict[str, jnp.ndarray]:
+    """§D modular adaptation: train adapters + new head on a frozen base.
+
+    Loss = MSE(new candidate) + λ * mean||r_old - r_old_frozen||²  (Eq. 10).
+    The data mixture is implicit: every batch supervises the new candidate
+    (70/30 mixing in the paper balances label availability, which the
+    synthetic oracle does not lack).
+    """
+    ada = M.init_adapter_params(seed, cfg)
+    ids_all = jnp.asarray(data["ids"])
+    mask_all = jnp.asarray(data["mask"])
+    y_new = jnp.asarray(data["labels"][:, [new_index]])
+    n = ids_all.shape[0]
+
+    @jax.jit
+    def step(ada, opt, key):
+        idx = jax.random.randint(key, (batch,), 0, n)
+        ids, mask, y = ids_all[idx], mask_all[idx], y_new[idx]
+        frozen = M.qe_apply(base_params, ids, mask, cfg, use_pallas=False)
+        def obj(a):
+            pred = M.qe_apply_with_adapter(base_params, a, ids, mask, cfg, use_pallas=False)
+            l_new = jnp.mean(jnp.square(pred[:, -1:] - y))
+            l_cons = jnp.mean(jnp.square(pred[:, :-1] - frozen))
+            return l_new + lam * l_cons
+        l, g = jax.value_and_grad(obj)(ada)
+        ada, opt = adam_update(ada, clip_global_norm(g), opt, lr=lr)
+        return ada, opt, l
+
+    opt = adam_init(ada)
+    key = jax.random.PRNGKey(seed)
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        ada, opt, l = step(ada, opt, sub)
+        if (i + 1) % 200 == 0:
+            print(f"    [{tag}] adapter step {i+1}/{steps} loss={float(l):.5f}", flush=True)
+    return ada
+
+
+def eval_mae(params, cfg, data, cand_indices, batch: int = 256,
+             apply_fn=None) -> float:
+    """Dev-set MAE (the Table 2 headline metric), batched."""
+    ids_all, mask_all = data["ids"], data["mask"]
+    y = data["labels"][:, cand_indices]
+    n = ids_all.shape[0]
+    fn = apply_fn or (lambda i_, m_: M.qe_apply(params, i_, m_, cfg, use_pallas=False))
+    fn = jax.jit(fn)
+    errs = []
+    for s in range(0, n - n % batch, batch):
+        pred = fn(jnp.asarray(ids_all[s:s + batch]), jnp.asarray(mask_all[s:s + batch]))
+        errs.append(np.abs(np.asarray(pred) - y[s:s + batch]))
+    return float(np.mean(np.concatenate(errs)))

@@ -1,0 +1,87 @@
+"""AOT lowering contract: HLO text interchange, parameter ordering, and
+(when artifacts exist) manifest integrity."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot as A, model as M
+
+CFG = M.BackboneConfig("tiny", d=32, layers=1, heads=2)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_qe_emits_hlo_text_with_params():
+    params = M.init_qe_params(0, CFG, 3)
+    text = A.lower_qe(params, CFG, 1, 64, use_pallas=False)
+    assert text.startswith("HloModule")
+    # params + ids + mask HLO parameters in the ENTRY computation (fusion
+    # sub-computations re-declare their own parameters, so scope the count)
+    entry = text[text.index("ENTRY "):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(params) + 2, n_params
+    # output must be a tuple (return_tuple=True contract with rust)
+    assert "ROOT" in text
+
+
+def test_lower_qe_pallas_variant_also_lowers():
+    params = M.init_qe_params(0, CFG, 2)
+    text = A.lower_qe(params, CFG, 1, 64, use_pallas=True)
+    assert text.startswith("HloModule")
+
+
+def test_param_order_contract_with_npz():
+    """npz keys sorted == manifest param order == HLO parameter order."""
+    params = M.init_qe_params(0, CFG, 3)
+    order = M.param_order(params)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.npz")
+        A.save_npz(path, params)
+        loaded = np.load(path)
+        assert sorted(loaded.keys()) == order
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_integrity():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["vocab_size"] == 2048
+    assert len(man["candidates"]) == 11
+    ids = [m["id"] for m in man["models"]]
+    assert len(ids) == len(set(ids)), "duplicate model ids"
+    for m in man["models"]:
+        assert os.path.exists(os.path.join(ARTIFACTS, m["weights"])), m["id"]
+        for v in m["variants"]:
+            assert os.path.exists(os.path.join(ARTIFACTS, v["path"])), v["path"]
+        assert m["param_names"] == sorted(m["param_names"])
+        # golden predictions exist for qe models
+        if m["kind"] == "qe":
+            assert len(m["golden_pred"]) == 4
+            assert all(len(r) == len(m["candidates"]) for r in m["golden_pred"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_main_grid_complete():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    ids = {m["id"] for m in man["models"]}
+    for bb in ["roberta_sim", "stella_sim", "qwen_sim", "qwen_emb_sim"]:
+        for fam in ["claude", "llama", "nova"]:
+            assert f"qe_{fam}_{bb}" in ids
+    assert "qe_unified_stella_sim" in ids
+    assert "qe_claude_adapter_stella_sim" in ids
+    for fam in ["claude", "llama", "nova"]:
+        assert f"routellm_{fam}_stella_sim" in ids
+        assert f"qe_{fam}_stella_sim_hinge" in ids
+        assert f"qe_{fam}_stella_sim_listnet" in ids

@@ -1,0 +1,82 @@
+"""L2 model invariants: shapes, ranges, masking, adapters, param order."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+CFG = M.BACKBONES["stella_sim"]
+
+
+def make_batch(rng, b, s, max_len=None):
+    max_len = max_len or s
+    ids = np.zeros((b, s), np.int32)
+    mask = np.zeros((b, s), np.float32)
+    for i in range(b):
+        l = rng.integers(4, max_len)
+        ids[i, :l] = rng.integers(1, 2048, size=l)
+        mask[i, :l] = 1.0
+    return jnp.asarray(ids), jnp.asarray(mask)
+
+
+def test_output_shape_and_range():
+    rng = np.random.default_rng(0)
+    for n_cand in [1, 4, 11]:
+        params = M.init_qe_params(0, CFG, n_cand)
+        ids, mask = make_batch(rng, 3, 64)
+        out = np.asarray(M.qe_apply(params, ids, mask, CFG))
+        assert out.shape == (3, n_cand)
+        assert (out > 0).all() and (out < 1).all()
+
+
+def test_padding_invariance():
+    """Extending the pad region must not change predictions."""
+    rng = np.random.default_rng(1)
+    params = M.init_qe_params(0, CFG, 4)
+    ids, mask = make_batch(rng, 2, 64, max_len=40)
+    out64 = np.asarray(M.qe_apply(params, ids, mask, CFG))
+    ids128 = jnp.pad(ids, ((0, 0), (0, 64)))
+    mask128 = jnp.pad(mask, ((0, 0), (0, 64)))
+    out128 = np.asarray(M.qe_apply(params, ids128, mask128, CFG))
+    np.testing.assert_allclose(out64, out128, atol=2e-5, rtol=1e-4)
+
+
+def test_pallas_and_ref_paths_agree():
+    rng = np.random.default_rng(2)
+    params = M.init_qe_params(3, CFG, 4)
+    ids, mask = make_batch(rng, 2, 64)
+    a = np.asarray(M.qe_apply(params, ids, mask, CFG, use_pallas=False))
+    b = np.asarray(M.qe_apply(params, ids, mask, CFG, use_pallas=True))
+    np.testing.assert_allclose(a, b, atol=5e-5, rtol=1e-4)
+
+
+def test_adapter_identity_at_init():
+    """Identity-initialized adapters must not perturb old candidates."""
+    rng = np.random.default_rng(3)
+    base = M.init_qe_params(0, CFG, 3)
+    ada = M.init_adapter_params(7, CFG)
+    ids, mask = make_batch(rng, 2, 64)
+    frozen = np.asarray(M.qe_apply(base, ids, mask, CFG))
+    with_ada = np.asarray(M.qe_apply_with_adapter(base, ada, ids, mask, CFG))
+    assert with_ada.shape == (2, 4)
+    np.testing.assert_allclose(with_ada[:, :3], frozen, atol=1e-6)
+
+
+def test_param_order_is_sorted_and_stable():
+    params = M.init_qe_params(0, CFG, 4)
+    order = M.param_order(params)
+    assert order == sorted(order)
+    flat = M.flatten_params(params)
+    rebuilt = M.unflatten_params(order, flat)
+    assert set(rebuilt) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(rebuilt[k]), np.asarray(params[k]))
+
+
+def test_backbone_capacity_ordering():
+    sizes = []
+    for name in ["roberta_sim", "stella_sim", "qwen_sim", "qwen_emb_sim"]:
+        cfg = M.BACKBONES[name]
+        p = M.init_qe_params(0, cfg, 4)
+        sizes.append(sum(int(np.prod(v.shape)) for v in p.values()))
+    assert sizes == sorted(sizes), f"param counts must grow: {sizes}"

@@ -1,0 +1,86 @@
+"""SynthWorld invariants + the python half of the cross-language parity
+contract (the rust half re-derives the golden file bit-exactly)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import synth as S
+
+
+def test_splitmix_reference_vector():
+    r = S.Rng(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    assert r.next_u64() == 0x06C45D188009454F
+
+
+def test_prompt_deterministic_and_in_vocab():
+    w = S.SynthWorld()
+    a = w.sample_prompt(S.SPLIT_TEST, 5)
+    b = w.sample_prompt(S.SPLIT_TEST, 5)
+    assert a.tokens == b.tokens and a.difficulty == b.difficulty
+    for t in a.tokens:
+        assert 0 < t < S.VOCAB_SIZE
+
+
+@settings(max_examples=30, deadline=None)
+@given(split=st.sampled_from([0, 1, 2, 3, 4]), idx=st.integers(0, 10**6))
+def test_rewards_bounded_any_prompt(split, idx):
+    w = S.SynthWorld()
+    p = w.sample_prompt(split, idx)
+    for c in range(S.N_CANDIDATES):
+        r = w.reward(p, c)
+        assert 0.0 <= r <= 1.0
+        assert w.output_length(p, c) >= 4
+
+
+def test_domain_mixture_matches_table9():
+    w = S.SynthWorld()
+    counts = np.zeros(S.N_DOMAINS)
+    n = 5000
+    for i in range(n):
+        counts[w.sample_prompt(S.SPLIT_TRAIN, i).domain] += 1
+    props = counts / n
+    for i, d in enumerate(S.DOMAINS):
+        assert abs(props[i] - d[1]) < 0.03, (d[0], props[i], d[1])
+
+
+def test_stronger_models_win_on_hard_prompts():
+    w = S.SynthWorld()
+    hard_gap, n_hard = 0.0, 0
+    for i in range(3000):
+        p = w.sample_prompt(S.SPLIT_TEST, i)
+        if p.difficulty > 0.7:
+            hard_gap += w.true_reward_mean(p, 3) - w.true_reward_mean(p, 0)
+            n_hard += 1
+    assert n_hard > 20
+    assert hard_gap / n_hard > 0.1
+
+
+def test_score_separation_band():
+    """Paper App. B: adjacent-model score separation ~0.1-0.2 on hard
+    prompts, much smaller on easy ones."""
+    w = S.SynthWorld()
+    meds = {c: [] for c in range(4)}
+    for i in range(2000):
+        p = w.sample_prompt(S.SPLIT_TEST, i)
+        for c in range(4):
+            meds[c].append(w.reward(p, c))
+    means = [float(np.mean(meds[c])) for c in range(4)]
+    # monotone in capability up to ceiling ties (sonnet v1/v2 nearly tie on
+    # mean because both clear the demand ceiling on most prompts)
+    for a, b in zip(means, means[1:]):
+        assert b > a - 0.002, means
+    assert 0.01 < means[3] - means[0] < 0.4
+
+
+def test_text_tokenize_roundtrip():
+    w = S.SynthWorld()
+    p = w.sample_prompt(S.SPLIT_TEST, 0)
+    ids = [int(word[1:]) for word in p.text.split()]
+    assert ids == p.tokens
+
+
+def test_squash_matches_definition():
+    for t in [-5.0, -0.3, 0.0, 0.7, 12.0]:
+        assert S.squash(t) == 0.5 * (1.0 + t / (1.0 + abs(t)))

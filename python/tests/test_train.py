@@ -1,0 +1,75 @@
+"""Training-path smoke + loss-function properties (small and fast)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M, synth as S, train as T
+
+CFG = M.BackboneConfig("tiny", d=32, layers=1, heads=2)
+
+
+def small_data(n=256):
+    w = S.SynthWorld()
+    return T.build_split(w, S.SPLIT_DEV, n, seq_len=64)
+
+
+def test_losses_finite_and_ordered():
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.uniform(0.2, 0.9, size=(16, 4)), jnp.float32)
+    good = y + 0.01 * jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    bad = jnp.asarray(rng.uniform(0, 1, size=(16, 4)), jnp.float32)
+    for name, fn in T.LOSSES.items():
+        lg, lb = float(fn(good, y)), float(fn(bad, y))
+        assert np.isfinite(lg) and np.isfinite(lb)
+        assert lg < lb, f"{name}: good {lg} !< bad {lb}"
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.full((10,), 100.0), "b": jnp.full((5,), -100.0)}
+    c = T.clip_global_norm(g, 1.0)
+    norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in c.values())))
+    assert abs(norm - 1.0) < 1e-4
+    small = {"a": jnp.full((3,), 0.01)}
+    c2 = T.clip_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.01, rtol=1e-5)
+
+
+def test_adam_step_moves_params():
+    p = {"w": jnp.ones((4,))}
+    st = T.adam_init(p)
+    g = {"w": jnp.ones((4,))}
+    p2, st2 = T.adam_update(p, g, st, lr=0.1)
+    assert float(p2["w"][0]) < 1.0
+    assert int(st2["t"]) == 1
+
+
+def test_train_qe_reduces_loss():
+    data = small_data()
+    # loss at init vs after a few steps
+    params0 = M.init_qe_params(0, CFG, 4)
+    ids = jnp.asarray(data["ids"][:64])
+    mask = jnp.asarray(data["mask"][:64])
+    y = jnp.asarray(data["labels"][:64, :4])
+    l0 = float(T.loss_mse(M.qe_apply(params0, ids, mask, CFG), y))
+    params = T.train_qe(CFG, data, [0, 1, 2, 3], steps=60, batch=16, seed=0,
+                        log_every=0, tag="t")
+    l1 = float(T.loss_mse(M.qe_apply(params, ids, mask, CFG), y))
+    assert l1 < l0, f"{l1} !< {l0}"
+
+
+def test_adapter_training_fits_new_candidate_without_drift():
+    data = small_data()
+    base = T.train_qe(CFG, data, [0, 2, 3], steps=50, batch=16, seed=1,
+                      log_every=0, tag="base")
+    ada = T.train_adapter(base, CFG, data, [0, 2, 3], 1, steps=50, batch=16,
+                          seed=2, tag="ada")
+    ids = jnp.asarray(data["ids"][:64])
+    mask = jnp.asarray(data["mask"][:64])
+    frozen = np.asarray(M.qe_apply(base, ids, mask, CFG))
+    adapted = np.asarray(M.qe_apply_with_adapter(base, ada, ids, mask, CFG))
+    drift = np.abs(adapted[:, :3] - frozen).mean()
+    assert drift < 0.05, f"consistency loss failed: drift {drift}"
+    # new head should beat an untrained head on MAE
+    y_new = data["labels"][:64, 1]
+    mae_new = np.abs(adapted[:, 3] - y_new).mean()
+    assert mae_new < 0.25, mae_new

@@ -1,0 +1,85 @@
+//! End-to-end throughput + batching-policy ablation (§3.1 latency claim):
+//! offered concurrent load through the full HTTP server, sweeping the
+//! dynamic batcher's max_batch. Shape claim: batching raises throughput
+//! at bounded P99 cost.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use ipr::coordinator::{Router, RouterConfig};
+use ipr::qe::BatcherConfig;
+use ipr::registry::Registry;
+use ipr::server::{HttpClient, Server};
+use ipr::synth::{SynthWorld, SPLIT_LIVE};
+use ipr::util::bench::Table;
+use ipr::util::hist::Histogram;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP e2e_throughput: run `make artifacts` first");
+        return;
+    }
+    let n_requests: usize = if std::env::var("IPR_BENCH_FAST").is_ok() { 120 } else { 400 };
+    let n_clients = 8;
+    let reg = Arc::new(Registry::load("artifacts").unwrap());
+    let world = SynthWorld::new(reg.world_seed);
+
+    let mut t = Table::new(
+        "E2E throughput — dynamic-batching ablation (8 concurrent clients, τ=0.1)",
+        &["max_batch", "max_wait", "req/s", "P50 (ms)", "P99 (ms)", "avg batch"],
+    );
+
+    for (max_batch, wait_us) in [(1usize, 0u64), (4, 300), (8, 500), (8, 2000)] {
+        let cfg = RouterConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: std::time::Duration::from_micros(wait_us),
+                kind: "xla".into(),
+                cache_cap: 0, // isolate batching effect from caching
+            },
+            ..RouterConfig::default()
+        };
+        let router = Arc::new(Router::new(reg.clone(), cfg).unwrap());
+        let server = Server::start(router.clone(), "127.0.0.1:0", n_clients).unwrap();
+        let hist = Arc::new(Mutex::new(Histogram::new()));
+
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let addr = server.addr.clone();
+            let hist = hist.clone();
+            handles.push(std::thread::spawn(move || {
+                let client = HttpClient::new(&addr);
+                let mut i = c as u64;
+                while (i as usize) < n_requests {
+                    let p = world.sample_prompt(SPLIT_LIVE, i);
+                    let body = format!("{{\"prompt\": \"{}\", \"tau\": 0.1}}", p.text());
+                    let q0 = Instant::now();
+                    let (st, _) = client.post("/v1/route", &body).unwrap();
+                    hist.lock().unwrap().record(q0.elapsed());
+                    assert_eq!(st, 200);
+                    i += n_clients as u64;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let h = hist.lock().unwrap();
+        let sizes = router.qe.batch_sizes.lock().unwrap();
+        let avg: f64 = sizes.iter().sum::<usize>() as f64 / sizes.len().max(1) as f64;
+        t.row(vec![
+            max_batch.to_string(),
+            format!("{wait_us}µs"),
+            format!("{:.1}", h.count() as f64 / wall),
+            format!("{:.1}", h.p50_ms()),
+            format!("{:.1}", h.p99_ms()),
+            format!("{avg:.2}"),
+        ]);
+        drop(sizes);
+        server.stop();
+        router.qe.shutdown();
+    }
+    t.print();
+}

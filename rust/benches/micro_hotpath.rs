@@ -1,0 +1,95 @@
+//! Hot-path microbenchmarks (§Perf): per-stage cost of the routing
+//! decision path, isolating the L3 coordinator overhead from the QE
+//! forward. Targets (DESIGN.md §9): decide < 50µs P99; tokenize+DO far
+//! below the QE forward.
+
+use std::sync::Arc;
+
+use ipr::coordinator::gating::{route_decision, GatingStrategy};
+use ipr::registry::Registry;
+use ipr::runtime::Engine;
+use ipr::synth::SynthWorld;
+use ipr::tokenizer;
+use ipr::util::bench::{time_it, Table};
+use ipr::util::json::parse;
+use ipr::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("IPR_BENCH_FAST").is_ok();
+    let iters = if fast { 2_000 } else { 20_000 };
+    let mut t = Table::new(
+        "Hot-path microbenchmarks",
+        &["op", "P50", "P99", "mean"],
+    );
+    let fmt = |ns: f64| {
+        if ns < 1000.0 {
+            format!("{ns:.0}ns")
+        } else if ns < 1e6 {
+            format!("{:.1}µs", ns / 1e3)
+        } else {
+            format!("{:.2}ms", ns / 1e6)
+        }
+    };
+
+    let world = SynthWorld::default();
+    let prompts: Vec<_> = (0..64u64).map(|i| world.live_prompt(i)).collect();
+    let texts: Vec<String> = prompts.iter().map(|p| p.text()).collect();
+
+    // 1. route_decision (Algorithm 1 lines 6-13)
+    let mut rng = Rng::new(5);
+    let scores: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..11).map(|_| rng.next_f64() as f32).collect()).collect();
+    let costs: Vec<f64> = (0..11).map(|_| 0.001 + rng.next_f64() * 0.02).collect();
+    let mut i = 0;
+    let h = time_it(1000, iters, || {
+        let s = &scores[i % 64];
+        i += 1;
+        std::hint::black_box(route_decision(s, &costs, 0.3, GatingStrategy::DynamicMax, 0.0));
+    });
+    t.row(vec!["route_decision (11 cands)".into(), fmt(h.quantile_ns(0.5) as f64), fmt(h.quantile_ns(0.99) as f64), fmt(h.mean_ns())]);
+
+    // 2. tokenizer
+    let mut i = 0;
+    let h = time_it(1000, iters, || {
+        std::hint::black_box(tokenizer::tokenize(&texts[i % 64]));
+        i += 1;
+    });
+    t.row(vec!["tokenize (~60 tok)".into(), fmt(h.quantile_ns(0.5) as f64), fmt(h.quantile_ns(0.99) as f64), fmt(h.mean_ns())]);
+
+    // 3. JSON request parse (server dispatch path)
+    let body = format!("{{\"prompt\": \"{}\", \"tau\": 0.25, \"split\": 9, \"index\": 4}}", texts[0]);
+    let h = time_it(1000, iters, || {
+        std::hint::black_box(parse(&body).unwrap());
+    });
+    t.row(vec!["json parse request".into(), fmt(h.quantile_ns(0.5) as f64), fmt(h.quantile_ns(0.99) as f64), fmt(h.mean_ns())]);
+
+    // 4. synth reward oracle (eval-side cost)
+    let mut i = 0;
+    let h = time_it(1000, iters, || {
+        let p = &prompts[i % 64];
+        i += 1;
+        std::hint::black_box(world.reward(p, 3));
+    });
+    t.row(vec!["reward oracle".into(), fmt(h.quantile_ns(0.5) as f64), fmt(h.quantile_ns(0.99) as f64), fmt(h.mean_ns())]);
+
+    // 5. QE forward (the dominant stage) — b1 and b8 buckets, per seq.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let reg = Arc::new(Registry::load("artifacts").unwrap());
+        let engine = Engine::new().unwrap();
+        let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+        let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
+        let one = vec![prompts[0].tokens.clone()];
+        let eight: Vec<Vec<u32>> = prompts[..8].iter().map(|p| p.tokens.clone()).collect();
+        let qiters = if fast { 100 } else { 500 };
+        let h = time_it(50, qiters, || {
+            std::hint::black_box(model.predict(&one, "xla").unwrap());
+        });
+        t.row(vec!["QE forward b=1 (stella)".into(), fmt(h.quantile_ns(0.5) as f64), fmt(h.quantile_ns(0.99) as f64), fmt(h.mean_ns())]);
+        let h = time_it(50, qiters, || {
+            std::hint::black_box(model.predict(&eight, "xla").unwrap());
+        });
+        t.row(vec!["QE forward b=8 (stella)".into(), fmt(h.quantile_ns(0.5) as f64), fmt(h.quantile_ns(0.99) as f64), fmt(h.mean_ns())]);
+    }
+
+    t.print();
+}

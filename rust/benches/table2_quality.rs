@@ -1,0 +1,16 @@
+//! Table 2 reproduction: quality-estimation metrics (MAE / Top-1 /
+//! F1-macro) for every backbone x family on the IPR test set.
+
+use ipr::eval::tables::{table2, EvalCtx};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP table2_quality: run `make artifacts` first");
+        return;
+    }
+    let limit = std::env::var("IPR_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let ctx = EvalCtx::new("artifacts", limit).unwrap();
+    table2(&ctx).unwrap().print();
+    println!("\n[table2 wall time: {:.1}s over {limit} rows/family]", t0.elapsed().as_secs_f64());
+}

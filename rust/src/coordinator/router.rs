@@ -1,0 +1,203 @@
+//! The router: the top of the request path.
+//!
+//! Per request (paper Fig. 1): tokenize → QE service (batched PJRT
+//! forward) → Decision Optimization (Algorithm 1) → simulated endpoint
+//! invoke → metering. Everything below the HTTP layer lives here.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::backends::{Backend, InvokeResult};
+use crate::coordinator::gating::{route_decision, GatingStrategy, RouteDecision};
+use crate::coordinator::metrics::Metrics;
+use crate::qe::{BatcherConfig, QeService};
+use crate::registry::Registry;
+use crate::synth::{Prompt, SynthWorld};
+use crate::tokenizer;
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Model family to route within ("claude" | "llama" | "nova").
+    pub family: String,
+    /// QE backbone ("stella_sim" is the production default).
+    pub backbone: String,
+    /// Default tolerance when a request does not specify one.
+    pub tau_default: f64,
+    pub strategy: GatingStrategy,
+    /// Safety margin δ subtracted from the threshold (Algorithm 1 input).
+    pub delta: f64,
+    pub batcher: BatcherConfig,
+    /// Backend latency simulation factor (0 = meter only).
+    pub time_scale: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            family: "claude".into(),
+            backbone: "stella_sim".into(),
+            tau_default: 0.0,
+            strategy: GatingStrategy::DynamicMax,
+            delta: 0.0,
+            batcher: BatcherConfig::default(),
+            time_scale: 0.0,
+        }
+    }
+}
+
+/// Full outcome of one routed request.
+#[derive(Clone, Debug)]
+pub struct RouteOutcome {
+    pub decision: RouteDecision,
+    /// Local-head scores in the model's candidate order.
+    pub scores: Vec<f32>,
+    /// Global candidate index routed to.
+    pub candidate_global: usize,
+    pub model_name: String,
+    pub tau: f64,
+    pub tokenize_us: u64,
+    pub qe_us: u64,
+    pub decide_us: u64,
+    pub total_us: u64,
+    /// Present when the request asked for endpoint invocation.
+    pub invoke: Option<InvokeResult>,
+}
+
+/// One router instance = one family QE + DO + endpoint fleet.
+pub struct Router {
+    pub registry: Arc<Registry>,
+    pub qe: Arc<QeService>,
+    pub backend: Backend,
+    pub metrics: Arc<Metrics>,
+    pub cfg: RouterConfig,
+    /// Global candidate indices in local-head order.
+    pub cand_global: Vec<usize>,
+    /// Unit costs aligned with local heads.
+    pub costs: Vec<f64>,
+    pub names: Vec<String>,
+    /// Local index of the most expensive (reference "strongest") model.
+    pub strongest_local: usize,
+}
+
+impl Router {
+    /// Build a router for one family: spawns the QE engine thread and
+    /// loads the family's QE artifact.
+    pub fn new(registry: Arc<Registry>, cfg: RouterConfig) -> Result<Router> {
+        let entry = registry.family_qe(&cfg.family, &cfg.backbone)?.clone();
+        let qe = QeService::start(registry.clone(), &entry.id, cfg.batcher.clone())?;
+
+        let cand_global = entry.candidates.clone();
+        let costs: Vec<f64> = cand_global
+            .iter()
+            .map(|&i| registry.candidates[i].unit_cost())
+            .collect();
+        let names: Vec<String> = cand_global
+            .iter()
+            .map(|&i| registry.candidates[i].name.clone())
+            .collect();
+        let strongest_local = (0..costs.len())
+            .max_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap())
+            .unwrap_or(0);
+        let world = SynthWorld::new(registry.world_seed);
+        Ok(Router {
+            registry,
+            qe,
+            backend: Backend::new(world, cfg.time_scale),
+            metrics: Arc::new(Metrics::default()),
+            cfg,
+            cand_global,
+            costs,
+            names,
+            strongest_local,
+        })
+    }
+
+    /// Route (and optionally invoke) a raw-text prompt.
+    pub fn handle_text(
+        &self,
+        text: &str,
+        tau: Option<f64>,
+        invoke: bool,
+        identity: Option<&Prompt>,
+    ) -> Result<RouteOutcome> {
+        let t_start = Instant::now();
+        let t0 = Instant::now();
+        let tokens = tokenizer::tokenize(text);
+        let tokenize_us = t0.elapsed().as_micros() as u64;
+        self.handle_tokens_timed(&tokens, tau, invoke, identity, tokenize_us, t_start)
+    }
+
+    /// Route an already-tokenized prompt (server fast path / eval).
+    pub fn handle_tokens(
+        &self,
+        tokens: &[u32],
+        tau: Option<f64>,
+        invoke: bool,
+        identity: Option<&Prompt>,
+    ) -> Result<RouteOutcome> {
+        self.handle_tokens_timed(tokens, tau, invoke, identity, 0, Instant::now())
+    }
+
+    fn handle_tokens_timed(
+        &self,
+        tokens: &[u32],
+        tau: Option<f64>,
+        invoke: bool,
+        identity: Option<&Prompt>,
+        tokenize_us: u64,
+        t_start: Instant,
+    ) -> Result<RouteOutcome> {
+        let tau = tau.unwrap_or(self.cfg.tau_default);
+
+        let t1 = Instant::now();
+        let scores = self.qe.score(tokens)?;
+        let qe_us = t1.elapsed().as_micros() as u64;
+
+        let t2 = Instant::now();
+        let decision = route_decision(&scores, &self.costs, tau, self.cfg.strategy, self.cfg.delta);
+        let decide_us = t2.elapsed().as_micros() as u64;
+
+        let local = decision.chosen;
+        let global = self.cand_global[local];
+        let inv = if invoke {
+            Some(self.backend.invoke(global, tokens, identity))
+        } else {
+            None
+        };
+
+        // Metering.
+        let m = &self.metrics;
+        m.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if decision.fallback {
+            m.fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        m.record_route(&self.names[local]);
+        m.tokenize.lock().unwrap().record(Duration::from_micros(tokenize_us));
+        m.qe.lock().unwrap().record(Duration::from_micros(qe_us));
+        m.decide.lock().unwrap().record(Duration::from_micros(decide_us));
+        let total_us = t_start.elapsed().as_micros() as u64;
+        m.total.lock().unwrap().record(Duration::from_micros(total_us));
+        if let Some(inv) = &inv {
+            // live CSR: compare against always-strongest on this prompt
+            // (cost-only counterfactual, no latency simulation).
+            let best_cost =
+                self.backend.cost_of(self.cand_global[self.strongest_local], tokens, identity);
+            m.add_spend(inv.cost_usd, best_cost);
+        }
+
+        Ok(RouteOutcome {
+            decision,
+            scores,
+            candidate_global: global,
+            model_name: self.names[local].clone(),
+            tau,
+            tokenize_us,
+            qe_us,
+            decide_us,
+            total_us,
+            invoke: inv,
+        })
+    }
+}

@@ -1,0 +1,195 @@
+//! Routing-performance metrics (paper App. A.2): Bounded-ARQGC (Eq. 5),
+//! Relative-ARQGC, Cost Save Ratio (Eq. 6), and the Eq. 11 normalized
+//! cost model they are computed over.
+
+use crate::coordinator::gating::{route_decision, GatingStrategy};
+use crate::eval::dataset::FamilyView;
+
+/// Eq. 11 normalized cost of an assignment (local candidate per row):
+/// length-weighted mean input price + length-weighted mean output price.
+pub fn normalized_cost(view: &FamilyView, assign: &[usize], prices: &[(f64, f64)]) -> f64 {
+    let mut in_tok = 0.0;
+    let mut in_cost = 0.0;
+    let mut out_tok = 0.0;
+    let mut out_cost = 0.0;
+    for (row, &c) in view.rows.iter().zip(assign) {
+        let l = row.in_len as f64;
+        let o = view.out_len(row, c) as f64;
+        let (pi, po) = prices[c];
+        in_tok += l;
+        in_cost += l * pi;
+        out_tok += o;
+        out_cost += o * po;
+    }
+    in_cost / in_tok.max(1.0) + out_cost / out_tok.max(1.0)
+}
+
+/// Mean realized (oracle) quality of an assignment.
+pub fn mean_quality(view: &FamilyView, assign: &[usize]) -> f64 {
+    let s: f64 = view
+        .rows
+        .iter()
+        .zip(assign)
+        .map(|(row, &c)| view.reward(row, c))
+        .sum();
+    s / view.rows.len().max(1) as f64
+}
+
+/// One point on the quality-cost trade-off curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub tau: f64,
+    /// Cost ratio α = C(τ) / C(always strongest).
+    pub alpha: f64,
+    /// Raw mean quality.
+    pub quality: f64,
+    /// Quality normalized to [Qmin, Qmax] -> [0, 1].
+    pub q_norm: f64,
+}
+
+/// Per-candidate (price_in, price_out) aligned with local heads.
+pub fn local_prices(view: &FamilyView, reg: &crate::registry::Registry) -> Vec<(f64, f64)> {
+    view.cand
+        .iter()
+        .map(|&i| (reg.candidates[i].price_in, reg.candidates[i].price_out))
+        .collect()
+}
+
+/// Sweep τ over a grid routing with `scores` (predicted or oracle), and
+/// produce the quality-cost curve (Fig. 3-6 raw data).
+pub fn tau_sweep(
+    view: &FamilyView,
+    reg: &crate::registry::Registry,
+    scores: &[Vec<f32>],
+    strategy: GatingStrategy,
+    delta: f64,
+    grid: usize,
+) -> Vec<CurvePoint> {
+    let prices = local_prices(view, reg);
+    let n = view.rows.len();
+    let all_best: Vec<usize> = vec![view.strongest(); n];
+    let all_cheap: Vec<usize> = vec![view.cheapest(); n];
+    let c_max = normalized_cost(view, &all_best, &prices);
+    let q_max = mean_quality(view, &all_best);
+    let q_min = mean_quality(view, &all_cheap);
+
+    (0..=grid)
+        .map(|i| {
+            let tau = i as f64 / grid as f64;
+            let assign: Vec<usize> = scores
+                .iter()
+                .map(|s| route_decision(s, &view.costs, tau, strategy, delta).chosen)
+                .collect();
+            let cost = normalized_cost(view, &assign, &prices);
+            let quality = mean_quality(view, &assign);
+            CurvePoint {
+                tau,
+                alpha: cost / c_max,
+                quality,
+                q_norm: (quality - q_min) / (q_max - q_min).max(1e-12),
+            }
+        })
+        .collect()
+}
+
+/// Bounded-ARQGC (Eq. 5): area under the normalized quality vs cost-ratio
+/// curve over α ∈ [α_min, 1], extended flat on the left (the router cannot
+/// spend less than the all-cheapest assignment) and integrated by
+/// trapezoid. Random routing ≈ 0.5, oracle → 1.0.
+pub fn bounded_arqgc(points: &[CurvePoint]) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points.iter().map(|p| (p.alpha, p.q_norm)).collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // Collapse duplicate alphas keeping the best quality (the router's
+    // achievable frontier at that budget).
+    let mut frontier: Vec<(f64, f64)> = Vec::new();
+    for (a, q) in pts {
+        match frontier.last_mut() {
+            Some((la, lq)) if (*la - a).abs() < 1e-9 => *lq = lq.max(q),
+            _ => frontier.push((a, q)),
+        }
+    }
+    // Enforce monotone frontier: more budget can't hurt (can always route up)
+    for i in 1..frontier.len() {
+        frontier[i].1 = frontier[i].1.max(frontier[i - 1].1);
+    }
+    if frontier.is_empty() {
+        return 0.0;
+    }
+    let (a0, q0) = frontier[0];
+    let mut area = a0.min(1.0) * q0; // flat extension on [0, α_min]
+    for w in frontier.windows(2) {
+        let (a1, q1) = w[0];
+        let (a2, q2) = w[1];
+        let (a1c, a2c) = (a1.min(1.0), a2.min(1.0));
+        if a2c > a1c {
+            area += (a2c - a1c) * 0.5 * (q1 + q2);
+        }
+    }
+    // extend to α=1 flat if the curve ends early
+    if let Some(&(alast, qlast)) = frontier.last() {
+        if alast < 1.0 {
+            area += (1.0 - alast) * qlast;
+        }
+    }
+    area.clamp(0.0, 1.0)
+}
+
+/// Cost Save Ratio at a quality target (Eq. 6): scan the τ grid for the
+/// cheapest operating point whose mean quality ≥ `quality_frac` × Q(best);
+/// returns (CSR, the achieving point) or None if unreachable.
+pub fn csr_at_quality(
+    view: &FamilyView,
+    reg: &crate::registry::Registry,
+    points: &[CurvePoint],
+    quality_frac: f64,
+) -> Option<(f64, CurvePoint)> {
+    let prices = local_prices(view, reg);
+    let all_best: Vec<usize> = vec![view.strongest(); view.rows.len()];
+    let c_best = normalized_cost(view, &all_best, &prices);
+    let q_best = mean_quality(view, &all_best);
+    let target = quality_frac * q_best;
+    points
+        .iter()
+        .filter(|p| p.quality >= target)
+        .min_by(|a, b| a.alpha.partial_cmp(&b.alpha).unwrap())
+        .map(|p| ((c_best - p.alpha * c_best) / c_best, *p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mkpoints(v: &[(f64, f64)]) -> Vec<CurvePoint> {
+        v.iter()
+            .map(|&(alpha, q_norm)| CurvePoint { tau: 0.0, alpha, quality: q_norm, q_norm })
+            .collect()
+    }
+
+    #[test]
+    fn diagonal_is_half() {
+        let pts = mkpoints(&[(0.0, 0.0), (0.5, 0.5), (1.0, 1.0)]);
+        assert!((bounded_arqgc(&pts) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_router_is_one() {
+        let pts = mkpoints(&[(0.05, 1.0), (1.0, 1.0)]);
+        let v = bounded_arqgc(&pts);
+        assert!(v > 0.99, "{v}");
+    }
+
+    #[test]
+    fn early_flat_curve_counts_left_extension() {
+        let pts = mkpoints(&[(0.3, 0.8)]);
+        let v = bounded_arqgc(&pts);
+        assert!((v - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_frontier_enforced() {
+        // a dip at higher budget must not reduce the area below the flat line
+        let pts = mkpoints(&[(0.2, 0.9), (0.6, 0.4), (1.0, 0.95)]);
+        let v = bounded_arqgc(&pts);
+        assert!(v >= 0.9 - 1e-9, "{v}");
+    }
+}

@@ -1,0 +1,243 @@
+//! Baseline routing policies (paper §4.2): Static strongest/weakest,
+//! Random, Oracle, Budget-Aware Random, and the RouteLLM-style binary
+//! classifier.
+//!
+//! All baselines produce per-τ assignments over the same FamilyView so the
+//! ARQGC/CSR machinery is shared with IPR.
+
+use crate::coordinator::gating::{route_decision, GatingStrategy};
+use crate::eval::arqgc::{local_prices, mean_quality, normalized_cost, CurvePoint};
+use crate::eval::dataset::FamilyView;
+use crate::registry::Registry;
+use crate::util::rng::Rng;
+
+/// Random uniform assignment, swept over "strong-model probability" to
+/// trace its full quality-cost curve (the τ axis for a random router).
+pub fn random_curve(
+    view: &FamilyView,
+    reg: &Registry,
+    seed: u64,
+    grid: usize,
+) -> Vec<CurvePoint> {
+    let prices = local_prices(view, reg);
+    let n = view.rows.len();
+    let c = view.n_cand();
+    let all_best = vec![view.strongest(); n];
+    let all_cheap = vec![view.cheapest(); n];
+    let c_max = normalized_cost(view, &all_best, &prices);
+    let q_max = mean_quality(view, &all_best);
+    let q_min = mean_quality(view, &all_cheap);
+
+    // order candidates by cost so "budget" maps to a mixture of cheap/dear
+    let mut order: Vec<usize> = (0..c).collect();
+    order.sort_by(|&a, &b| view.costs[a].partial_cmp(&view.costs[b]).unwrap());
+
+    (0..=grid)
+        .map(|gi| {
+            let p_strong = gi as f64 / grid as f64;
+            let mut rng = Rng::new(seed ^ (gi as u64) << 32);
+            // mixture: with prob p_strong uniform over upper half, else lower
+            let assign: Vec<usize> = (0..n)
+                .map(|_| {
+                    let upper = rng.next_f64() < p_strong;
+                    let half = c.div_ceil(2);
+                    let pick = if upper {
+                        order[c - half + rng.next_range(half as u64) as usize]
+                    } else {
+                        order[rng.next_range(half as u64) as usize]
+                    };
+                    pick
+                })
+                .collect();
+            let cost = normalized_cost(view, &assign, &prices);
+            let quality = mean_quality(view, &assign);
+            CurvePoint {
+                tau: p_strong,
+                alpha: cost / c_max,
+                quality,
+                q_norm: (quality - q_min) / (q_max - q_min).max(1e-12),
+            }
+        })
+        .collect()
+}
+
+/// Budget-Aware Random: keeps IPR's per-candidate routing *proportions* at
+/// each τ but permutes the assignment randomly across prompts.
+pub fn budget_aware_random_curve(
+    view: &FamilyView,
+    reg: &Registry,
+    ipr_scores: &[Vec<f32>],
+    strategy: GatingStrategy,
+    delta: f64,
+    seed: u64,
+    grid: usize,
+) -> Vec<CurvePoint> {
+    let prices = local_prices(view, reg);
+    let n = view.rows.len();
+    let all_best = vec![view.strongest(); n];
+    let all_cheap = vec![view.cheapest(); n];
+    let c_max = normalized_cost(view, &all_best, &prices);
+    let q_max = mean_quality(view, &all_best);
+    let q_min = mean_quality(view, &all_cheap);
+
+    (0..=grid)
+        .map(|gi| {
+            let tau = gi as f64 / grid as f64;
+            let mut assign: Vec<usize> = ipr_scores
+                .iter()
+                .map(|s| route_decision(s, &view.costs, tau, strategy, delta).chosen)
+                .collect();
+            let mut rng = Rng::new(seed.wrapping_add(gi as u64));
+            rng.shuffle(&mut assign); // same proportions, random prompts
+            let cost = normalized_cost(view, &assign, &prices);
+            let quality = mean_quality(view, &assign);
+            CurvePoint {
+                tau,
+                alpha: cost / c_max,
+                quality,
+                q_norm: (quality - q_min) / (q_max - q_min).max(1e-12),
+            }
+        })
+        .collect()
+}
+
+/// RouteLLM-style binary router: `p_weak_ok[i]` is the classifier's
+/// probability that the weak model suffices for prompt i; the curve sweeps
+/// the decision threshold. `weak`/`strong` are local head indices.
+pub fn routellm_curve(
+    view: &FamilyView,
+    reg: &Registry,
+    p_weak_ok: &[f32],
+    weak: usize,
+    strong: usize,
+    grid: usize,
+) -> Vec<CurvePoint> {
+    let prices = local_prices(view, reg);
+    let n = view.rows.len();
+    let all_best = vec![view.strongest(); n];
+    let all_cheap = vec![view.cheapest(); n];
+    let c_max = normalized_cost(view, &all_best, &prices);
+    let q_max = mean_quality(view, &all_best);
+    let q_min = mean_quality(view, &all_cheap);
+
+    (0..=grid)
+        .map(|gi| {
+            // threshold 1 -> everything strong; 0 -> everything weak
+            let thr = 1.0 - gi as f64 / grid as f64;
+            let assign: Vec<usize> = p_weak_ok
+                .iter()
+                .map(|&p| if (p as f64) >= thr { weak } else { strong })
+                .collect();
+            let cost = normalized_cost(view, &assign, &prices);
+            let quality = mean_quality(view, &assign);
+            CurvePoint {
+                tau: 1.0 - thr,
+                alpha: cost / c_max,
+                quality,
+                q_norm: (quality - q_min) / (q_max - q_min).max(1e-12),
+            }
+        })
+        .collect()
+}
+
+/// Static policy point (always one candidate).
+pub fn static_point(view: &FamilyView, reg: &Registry, local: usize) -> CurvePoint {
+    let prices = local_prices(view, reg);
+    let n = view.rows.len();
+    let assign = vec![local; n];
+    let all_best = vec![view.strongest(); n];
+    let all_cheap = vec![view.cheapest(); n];
+    let c_max = normalized_cost(view, &all_best, &prices);
+    let q_max = mean_quality(view, &all_best);
+    let q_min = mean_quality(view, &all_cheap);
+    let cost = normalized_cost(view, &assign, &prices);
+    let quality = mean_quality(view, &assign);
+    CurvePoint {
+        tau: 0.0,
+        alpha: cost / c_max,
+        quality,
+        q_norm: (quality - q_min) / (q_max - q_min).max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::dataset::Row;
+
+    fn dummy_registry() -> Registry {
+        // Build a registry by hand (claude-only subset).
+        use crate::registry::*;
+        Registry {
+            root: std::path::PathBuf::from("/tmp"),
+            world_seed: 1,
+            vocab_size: 2048,
+            candidates: crate::synth::CANDIDATES
+                .iter()
+                .map(|c| CandidateMeta {
+                    name: c.name.into(),
+                    family: c.family.into(),
+                    price_in: c.price_in,
+                    price_out: c.price_out,
+                })
+                .collect(),
+            families: vec!["claude".into()],
+            models: vec![],
+            datasets: vec![],
+            domain_mixture: vec![],
+            train_count: 0,
+        }
+    }
+
+    fn rows() -> Vec<Row> {
+        let w = crate::synth::SynthWorld::default();
+        (0..200)
+            .map(|i| {
+                let p = w.sample_prompt(crate::synth::SPLIT_TEST, i);
+                Row {
+                    id: i as usize,
+                    in_len: p.tokens.len(),
+                    tokens: p.tokens.clone(),
+                    domain: p.domain,
+                    difficulty: p.difficulty,
+                    reasoning: p.reasoning,
+                    rewards: (0..11).map(|c| w.reward(&p, c)).collect(),
+                    out_lens: (0..11).map(|c| w.output_length(&p, c) as usize).collect(),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn oracle_beats_random() {
+        let reg = dummy_registry();
+        let rows = rows();
+        let view = FamilyView::new(&reg, &rows, vec![0, 1, 2, 3]);
+        let oracle_pts = crate::eval::arqgc::tau_sweep(
+            &view,
+            &reg,
+            &view.true_scores(),
+            GatingStrategy::DynamicMax,
+            0.0,
+            20,
+        );
+        let rand_pts = random_curve(&view, &reg, 7, 20);
+        let o = crate::eval::arqgc::bounded_arqgc(&oracle_pts);
+        let r = crate::eval::arqgc::bounded_arqgc(&rand_pts);
+        assert!(o > r + 0.1, "oracle {o} vs random {r}");
+        assert!(r > 0.2 && r < 0.8, "random should be near the diagonal: {r}");
+    }
+
+    #[test]
+    fn static_points_bracket_costs() {
+        let reg = dummy_registry();
+        let rows = rows();
+        let view = FamilyView::new(&reg, &rows, vec![0, 1, 2, 3]);
+        let cheap = static_point(&view, &reg, view.cheapest());
+        let dear = static_point(&view, &reg, view.strongest());
+        assert!(cheap.alpha < dear.alpha);
+        assert!((dear.alpha - 1.0).abs() < 1e-9);
+        assert!((dear.q_norm - 1.0).abs() < 1e-9);
+        assert!(cheap.q_norm.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,109 @@
+//! Evaluation dataset loader: the JSONL splits exported by the python
+//! build side (`artifacts/data/*.jsonl`), one row per prompt with labels
+//! for all 11 candidates.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::registry::Registry;
+use crate::util::json::parse;
+
+/// One evaluation prompt with its oracle labels.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub id: usize,
+    pub tokens: Vec<u32>,
+    /// Original (untruncated) prompt length in tokens.
+    pub in_len: usize,
+    pub domain: usize,
+    pub difficulty: f64,
+    pub reasoning: f64,
+    /// Reward-oracle score per global candidate (the "Skywork" labels).
+    pub rewards: Vec<f64>,
+    /// Simulated response length per global candidate.
+    pub out_lens: Vec<usize>,
+}
+
+pub fn load_jsonl(path: &Path, limit: usize) -> Result<Vec<Row>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let mut rows = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if limit > 0 && rows.len() >= limit {
+            break;
+        }
+        let j = parse(line).with_context(|| format!("{path:?}:{}", ln + 1))?;
+        rows.push(Row {
+            id: j.req("id")?.as_usize()?,
+            tokens: j.req("tokens")?.usizes()?.into_iter().map(|x| x as u32).collect(),
+            in_len: j.req("in_len")?.as_usize()?,
+            domain: j.req("domain")?.as_usize()?,
+            difficulty: j.req("difficulty")?.as_f64()?,
+            reasoning: j.req("reasoning")?.as_f64()?,
+            rewards: j.req("rewards")?.f64s()?,
+            out_lens: j.req("out_lens")?.usizes()?,
+        });
+    }
+    Ok(rows)
+}
+
+/// Load a named manifest dataset ("test", "dev", "ood_msmarco", "ood_nvchat").
+pub fn load(reg: &Registry, name: &str, limit: usize) -> Result<Vec<Row>> {
+    let entry = reg.dataset(name)?;
+    load_jsonl(&reg.abs(&entry.path), limit)
+}
+
+/// Project rows onto a family: rewards/out_lens restricted to the given
+/// global candidate indices (local head order).
+pub struct FamilyView<'a> {
+    pub rows: &'a [Row],
+    pub cand: Vec<usize>,
+    pub costs: Vec<f64>,
+}
+
+impl<'a> FamilyView<'a> {
+    pub fn new(reg: &Registry, rows: &'a [Row], cand: Vec<usize>) -> FamilyView<'a> {
+        let costs = cand.iter().map(|&i| reg.candidates[i].unit_cost()).collect();
+        FamilyView { rows, cand, costs }
+    }
+
+    #[inline]
+    pub fn reward(&self, row: &Row, local: usize) -> f64 {
+        row.rewards[self.cand[local]]
+    }
+
+    #[inline]
+    pub fn out_len(&self, row: &Row, local: usize) -> usize {
+        row.out_lens[self.cand[local]]
+    }
+
+    pub fn n_cand(&self) -> usize {
+        self.cand.len()
+    }
+
+    /// Local index of the most expensive ("strongest") candidate.
+    pub fn strongest(&self) -> usize {
+        (0..self.costs.len())
+            .max_by(|&a, &b| self.costs[a].partial_cmp(&self.costs[b]).unwrap())
+            .unwrap()
+    }
+
+    /// Local index of the cheapest candidate.
+    pub fn cheapest(&self) -> usize {
+        (0..self.costs.len())
+            .min_by(|&a, &b| self.costs[a].partial_cmp(&self.costs[b]).unwrap())
+            .unwrap()
+    }
+
+    /// True (oracle) reward matrix restricted to the family, as f32 — the
+    /// same shape the QE produces, so baselines can share routing code.
+    pub fn true_scores(&self) -> Vec<Vec<f32>> {
+        self.rows
+            .iter()
+            .map(|r| self.cand.iter().map(|&c| r.rewards[c] as f32).collect())
+            .collect()
+    }
+}

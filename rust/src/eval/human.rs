@@ -1,0 +1,144 @@
+//! Human-annotation study simulator (paper App. E, Tables 6-7).
+//!
+//! Protocol reproduction: 895 prompts, responses from the Claude + Llama
+//! families, **three blind annotation passes** per response with majority
+//! voting, then (a) average overall-satisfaction per model and (b)
+//! pairwise win/tie/lose for the priority pairs.
+//!
+//! Each pass is a noisy ordinal reading of the true reward: the annotator
+//! rates satisfaction on {0, 0.5, 1} with thresholds perturbed per pass.
+//! Noise is calibrated so tie rates land in the paper's 50-62% band.
+
+use crate::synth::{SynthWorld, N_CANDIDATES, SPLIT_TEST};
+use crate::util::rng::{substream, Rng};
+
+const N_PROMPTS: usize = 895;
+const PASSES: usize = 3;
+const ANNOT_STREAM: u64 = 7;
+/// Satisfaction thresholds: reward >= hi -> 1.0, >= lo -> 0.5, else 0.
+/// Calibrated so mean satisfaction lands in the paper's 0.79-0.88 band
+/// (Table 6) and pairwise ties in the 50-62% band (Table 7).
+const TH_HI: f64 = 0.81;
+const TH_LO: f64 = 0.50;
+/// Per-pass threshold jitter (annotator disagreement).
+const JITTER: f64 = 0.05;
+
+/// One model's annotation outcome.
+#[derive(Clone, Debug)]
+pub struct Satisfaction {
+    pub candidate: usize,
+    pub mean_score: f64,
+}
+
+/// Annotator reading noise on the perceived response quality.
+const READ_NOISE: f64 = 0.08;
+
+fn pass_rating(reward: f64, rng: &mut Rng) -> f64 {
+    let hi = TH_HI + JITTER * (2.0 * rng.next_f64() - 1.0);
+    let lo = TH_LO + JITTER * (2.0 * rng.next_f64() - 1.0);
+    let perceived = reward + READ_NOISE * (2.0 * rng.next_f64() - 1.0);
+    if perceived >= hi {
+        1.0
+    } else if perceived >= lo {
+        0.5
+    } else {
+        0.0
+    }
+}
+
+/// Majority vote over three ordinal passes (median).
+fn majority(mut votes: [f64; PASSES]) -> f64 {
+    votes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    votes[PASSES / 2]
+}
+
+/// Run the full study: per-candidate mean satisfaction (Table 6).
+pub fn satisfaction_study(world: &SynthWorld, candidates: &[usize]) -> Vec<Satisfaction> {
+    let mut sums = vec![0.0; candidates.len()];
+    for i in 0..N_PROMPTS {
+        let p = world.sample_prompt(SPLIT_TEST, 20_000 + i as u64);
+        for (j, &c) in candidates.iter().enumerate() {
+            let r = world.reward(&p, c);
+            let mut votes = [0.0; PASSES];
+            for (k, v) in votes.iter_mut().enumerate() {
+                let mut rng = Rng::new(substream(
+                    world.seed,
+                    ANNOT_STREAM,
+                    ((i * N_CANDIDATES + c) * PASSES + k) as u64,
+                ));
+                *v = pass_rating(r, &mut rng);
+            }
+            sums[j] += majority(votes);
+        }
+    }
+    candidates
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| Satisfaction { candidate: c, mean_score: sums[j] / N_PROMPTS as f64 })
+        .collect()
+}
+
+/// Pairwise comparison (Table 7): win/tie/lose percentages of a vs b,
+/// judged on the majority-voted satisfaction scores.
+pub fn pairwise(world: &SynthWorld, a: usize, b: usize) -> (f64, f64, f64) {
+    let (mut win, mut tie, mut lose) = (0usize, 0usize, 0usize);
+    for i in 0..N_PROMPTS {
+        let p = world.sample_prompt(SPLIT_TEST, 20_000 + i as u64);
+        let score = |c: usize| {
+            let r = world.reward(&p, c);
+            let mut votes = [0.0; PASSES];
+            for (k, v) in votes.iter_mut().enumerate() {
+                let mut rng = Rng::new(substream(
+                    world.seed,
+                    ANNOT_STREAM,
+                    ((i * N_CANDIDATES + c) * PASSES + k) as u64,
+                ));
+                *v = pass_rating(r, &mut rng);
+            }
+            majority(votes)
+        };
+        let (sa, sb) = (score(a), score(b));
+        if sa > sb {
+            win += 1;
+        } else if sa < sb {
+            lose += 1;
+        } else {
+            tie += 1;
+        }
+    }
+    let n = N_PROMPTS as f64;
+    (win as f64 / n * 100.0, tie as f64 / n * 100.0, lose as f64 / n * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let w = SynthWorld::default();
+        let a = satisfaction_study(&w, &[0, 3]);
+        let b = satisfaction_study(&w, &[0, 3]);
+        assert_eq!(a[0].mean_score, b[0].mean_score);
+        assert_eq!(a[1].mean_score, b[1].mean_score);
+    }
+
+    #[test]
+    fn stronger_model_more_satisfying() {
+        let w = SynthWorld::default();
+        let s = satisfaction_study(&w, &[0, 3]); // claude-3-haiku vs 3.5-sonnet-v2
+        assert!(s[1].mean_score > s[0].mean_score);
+        assert!(s[0].mean_score > 0.4 && s[1].mean_score < 1.0);
+    }
+
+    #[test]
+    fn pairwise_sums_to_100_and_ties_dominate() {
+        let w = SynthWorld::default();
+        let (win, tie, lose) = pairwise(&w, 0, 3);
+        assert!((win + tie + lose - 100.0).abs() < 1e-9);
+        // paper: ties between 50-62%; our calibration should be in a
+        // generous band around that
+        assert!(tie > 30.0, "tie rate {tie}");
+        assert!(lose > win, "strong model should win more");
+    }
+}

@@ -1,0 +1,135 @@
+//! Quality-prediction metrics (paper §2.3, App. A.1): MAE, Top-K
+//! accuracy (exact-order match) and Top-K F1 (set overlap, macro-averaged
+//! over the candidate "classes" for K=1).
+
+/// Mean absolute error between predicted and true score matrices.
+pub fn mae(pred: &[Vec<f32>], truth: &[Vec<f32>]) -> f64 {
+    let mut s = 0.0;
+    let mut n = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        for (a, b) in p.iter().zip(t) {
+            s += (*a as f64 - *b as f64).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f64
+    }
+}
+
+/// Indices sorted by descending score (ties by lower index, stable).
+pub fn ranking(scores: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    idx
+}
+
+/// Top-K accuracy: predicted top-k must match the true top-k *in order*.
+pub fn topk_accuracy(pred: &[Vec<f32>], truth: &[Vec<f32>], k: usize) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred
+        .iter()
+        .zip(truth)
+        .filter(|(p, t)| ranking(p)[..k] == ranking(t)[..k])
+        .count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Macro-F1 over candidates for the top-1 prediction task: each candidate
+/// is a class; per-class F1 from (top1_pred == c) vs (top1_true == c).
+pub fn top1_f1_macro(pred: &[Vec<f32>], truth: &[Vec<f32>]) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let c = pred[0].len();
+    let mut tp = vec![0usize; c];
+    let mut fp = vec![0usize; c];
+    let mut fnk = vec![0usize; c];
+    for (p, t) in pred.iter().zip(truth) {
+        let pc = ranking(p)[0];
+        let tc = ranking(t)[0];
+        if pc == tc {
+            tp[pc] += 1;
+        } else {
+            fp[pc] += 1;
+            fnk[tc] += 1;
+        }
+    }
+    let mut f1s = Vec::new();
+    for i in 0..c {
+        let denom = 2 * tp[i] + fp[i] + fnk[i];
+        if tp[i] + fp[i] + fnk[i] == 0 {
+            continue; // class never appears; skip from macro avg
+        }
+        f1s.push(if denom == 0 { 0.0 } else { 2.0 * tp[i] as f64 / denom as f64 });
+    }
+    if f1s.is_empty() {
+        0.0
+    } else {
+        f1s.iter().sum::<f64>() / f1s.len() as f64
+    }
+}
+
+/// Top-K F1 (set overlap, order-free) averaged over rows — App. A.1's
+/// "more forgiving assessment of ranking quality".
+pub fn topk_set_f1(pred: &[Vec<f32>], truth: &[Vec<f32>], k: usize) -> f64 {
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mut s = 0.0;
+    for (p, t) in pred.iter().zip(truth) {
+        let ps: Vec<usize> = ranking(p)[..k].to_vec();
+        let ts: Vec<usize> = ranking(t)[..k].to_vec();
+        let inter = ps.iter().filter(|x| ts.contains(x)).count();
+        s += 2.0 * inter as f64 / (ps.len() + ts.len()) as f64;
+    }
+    s / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mae_basic() {
+        let p = vec![vec![0.5f32, 0.7]];
+        let t = vec![vec![0.6f32, 0.6]];
+        assert!((mae(&p, &t) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ranking_desc_with_ties() {
+        assert_eq!(ranking(&[0.1, 0.9, 0.9, 0.5]), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn topk_exact_order() {
+        let p = vec![vec![0.9f32, 0.8, 0.1], vec![0.1, 0.9, 0.8]];
+        let t = vec![vec![0.8f32, 0.9, 0.1], vec![0.2, 0.9, 0.3]];
+        assert_eq!(topk_accuracy(&p, &t, 1), 0.5);
+        // row 0: pred top2 [0,1] vs true [1,0] (order differs) -> miss;
+        // row 1: pred [1,2] == true [1,2] -> hit
+        assert_eq!(topk_accuracy(&p, &t, 2), 0.5);
+    }
+
+    #[test]
+    fn perfect_prediction_perfect_scores() {
+        let t = vec![vec![0.3f32, 0.9, 0.5], vec![0.9, 0.1, 0.4]];
+        assert_eq!(topk_accuracy(&t, &t, 2), 1.0);
+        assert_eq!(top1_f1_macro(&t, &t), 1.0);
+        assert_eq!(topk_set_f1(&t, &t, 2), 1.0);
+    }
+
+    #[test]
+    fn f1_macro_penalizes_class_bias() {
+        // Predictor always says class 0; truth is split 50/50.
+        let p = vec![vec![0.9f32, 0.1], vec![0.9, 0.1]];
+        let t = vec![vec![0.9f32, 0.1], vec![0.1, 0.9]];
+        let f1 = top1_f1_macro(&p, &t);
+        assert!(f1 < 0.5, "{f1}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness: reproduces every table and figure of the paper's
+//! evaluation section (see DESIGN.md §5 for the experiment index).
+
+pub mod arqgc;
+pub mod baselines;
+pub mod dataset;
+pub mod human;
+pub mod metrics;
+pub mod scores;
+pub mod tables;

@@ -1,0 +1,122 @@
+//! Predicted-score matrices: run a loaded QE over a dataset in batched
+//! PJRT forwards, with a binary disk cache (recomputing 5k x 11 forward
+//! passes for every table would dominate bench time).
+//!
+//! Cache format: `artifacts/results/scores_<model>_<dataset>_<n>.bin` =
+//! little-endian u32 (rows) + u32 (cols) + rows*cols f32.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::dataset::Row;
+use crate::registry::Registry;
+use crate::runtime::{Engine, QeModel};
+
+pub fn results_dir(reg: &Registry) -> PathBuf {
+    let d = reg.root.join("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+fn cache_path(reg: &Registry, model_id: &str, dataset: &str, n: usize) -> PathBuf {
+    results_dir(reg).join(format!("scores_{model_id}_{dataset}_{n}.bin"))
+}
+
+pub fn write_matrix(path: &PathBuf, m: &[Vec<f32>]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let rows = m.len() as u32;
+    let cols = if m.is_empty() { 0 } else { m[0].len() } as u32;
+    f.write_all(&rows.to_le_bytes())?;
+    f.write_all(&cols.to_le_bytes())?;
+    for row in m {
+        for &x in row {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn read_matrix(path: &PathBuf) -> Result<Vec<Vec<f32>>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut hdr = [0u8; 8];
+    f.read_exact(&mut hdr)?;
+    let rows = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; rows * cols * 4];
+    f.read_exact(&mut buf)?;
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut row = Vec::with_capacity(cols);
+        for c in 0..cols {
+            let off = (r * cols + c) * 4;
+            row.push(f32::from_le_bytes(buf[off..off + 4].try_into().unwrap()));
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Predict scores for all rows with the largest loaded batch bucket,
+/// reading/writing the disk cache keyed by (model, dataset, n).
+pub fn predicted_scores(
+    engine: &Engine,
+    reg: &Registry,
+    model_id: &str,
+    dataset_name: &str,
+    rows: &[Row],
+) -> Result<Vec<Vec<f32>>> {
+    let path = cache_path(reg, model_id, dataset_name, rows.len());
+    if path.exists() {
+        let m = read_matrix(&path)?;
+        if m.len() == rows.len() {
+            return Ok(m);
+        }
+    }
+    let entry = reg.model(model_id)?.clone();
+    let model = engine.load_model(reg, &entry, &["xla"])?;
+    let m = score_rows(&model, rows)?;
+    write_matrix(&path, &m).context("writing score cache")?;
+    Ok(m)
+}
+
+/// Batched forward over rows (no cache).
+pub fn score_rows(model: &QeModel, rows: &[Row]) -> Result<Vec<Vec<f32>>> {
+    // find the largest xla batch bucket
+    let b = model
+        .available_buckets()
+        .into_iter()
+        .filter(|(_, _, k)| k == "xla")
+        .map(|(b, _, _)| b)
+        .max()
+        .unwrap_or(1);
+    if b == 0 {
+        bail!("no xla buckets loaded");
+    }
+    let mut out = Vec::with_capacity(rows.len());
+    let mut i = 0;
+    while i < rows.len() {
+        let chunk = &rows[i..(i + b).min(rows.len())];
+        let toks: Vec<Vec<u32>> = chunk.iter().map(|r| r.tokens.clone()).collect();
+        let scores = model.predict(&toks, "xla")?;
+        out.extend(scores.scores);
+        i += b;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![-0.5, 0.25]];
+        let p = std::env::temp_dir().join(format!("ipr_scores_test_{}.bin", std::process::id()));
+        write_matrix(&p, &m).unwrap();
+        let r = read_matrix(&p).unwrap();
+        assert_eq!(m, r);
+        let _ = std::fs::remove_file(&p);
+    }
+}

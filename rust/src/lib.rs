@@ -1,0 +1,45 @@
+//! # IPR — Intelligent Prompt Routing
+//!
+//! Production-shaped reproduction of *"IPR: Intelligent Prompt Routing with
+//! User-Controlled Quality-Cost Trade-offs"* (EMNLP 2025 Industry Track).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//! the Quality Estimator model (Layer 2, JAX) with its Pallas kernels
+//! (Layer 1) is AOT-compiled at build time (`make artifacts`) to HLO text +
+//! `.npz` weights, and this crate loads and serves it through the PJRT C
+//! API — python is never on the request path.
+//!
+//! Module map (see DESIGN.md §3 for the full inventory):
+//!
+//! * [`util`] — substrates: RNG, JSON, CLI, thread pool, histograms,
+//!   bench/property-test harnesses (the offline registry has no
+//!   tokio/serde/criterion/proptest).
+//! * [`tokenizer`] — prompt text → token ids (bit-identical to python).
+//! * [`synth`] — the SynthWorld parity port: workload generator + reward
+//!   oracle + cost model (the stand-in for Bedrock traffic and the Skywork
+//!   reward model; see DESIGN.md §2).
+//! * [`registry`] — the paper's Model Registry: candidates, prices,
+//!   artifact manifest.
+//! * [`runtime`] — PJRT engine: HLO text → executable, resident weight
+//!   buffers, `execute_b` hot path.
+//! * [`qe`] — Quality Estimator service: tokenize → bucket → dynamic
+//!   batcher → engine → per-candidate scores (+ multi-turn score cache).
+//! * [`coordinator`] — Decision Optimization: Algorithm 1, gating
+//!   strategies, feasible-set routing.
+//! * [`backends`] — simulated candidate LLM endpoints (latency, output
+//!   length, realized quality, Eq. 11 cost metering).
+//! * [`server`] — minimal HTTP/1.1 front end (`/v1/route`, `/v1/invoke`,
+//!   `/metrics`).
+//! * [`eval`] — metrics (MAE, Top-K, Bounded-ARQGC, CSR), baselines and
+//!   the per-table/figure reproduction harness.
+
+pub mod backends;
+pub mod coordinator;
+pub mod eval;
+pub mod qe;
+pub mod registry;
+pub mod runtime;
+pub mod server;
+pub mod synth;
+pub mod tokenizer;
+pub mod util;

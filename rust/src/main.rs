@@ -1,0 +1,240 @@
+//! `ipr` — the IPR coordinator CLI.
+//!
+//! Subcommands:
+//! * `serve`         — start the routing server (HTTP/1.1).
+//! * `route`         — one-shot route of a prompt from the command line.
+//! * `eval`          — regenerate a paper table/figure (`--table 3`, `all`).
+//! * `registry`      — show candidates, prices and deployable QE models.
+//! * `parity`        — golden-file + pallas-vs-xla numerical parity checks.
+//! * `gen-workload`  — print synthetic traffic (text + identity fields).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use ipr::coordinator::{GatingStrategy, Router, RouterConfig};
+use ipr::eval::tables::{run_table, EvalCtx};
+use ipr::qe::BatcherConfig;
+use ipr::registry::Registry;
+use ipr::runtime::Engine;
+use ipr::server::Server;
+use ipr::synth::SynthWorld;
+use ipr::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+ipr — Intelligent Prompt Routing (EMNLP 2025 industry-track reproduction)
+
+USAGE:
+  ipr serve   [--artifacts DIR] [--family claude] [--backbone stella_sim]
+              [--bind 127.0.0.1:8080] [--workers 4] [--tau 0.0]
+              [--strategy dynamic_max] [--kind xla] [--time-scale 0]
+  ipr route   --prompt \"...\" [--tau 0.3] [--family claude] [--invoke]
+  ipr eval    --table {1..12|D|fig3|fig45|all} [--limit N] [--artifacts DIR]
+  ipr registry [--artifacts DIR]
+  ipr parity  [--artifacts DIR]
+  ipr gen-workload [--n 10]
+";
+
+fn run() -> Result<()> {
+    let args = Args::parse(&["invoke", "help"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
+        "eval" => cmd_eval(&args),
+        "registry" => cmd_registry(&args),
+        "parity" => cmd_parity(&args),
+        "gen-workload" => cmd_gen_workload(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn strategy_of(name: &str) -> Result<GatingStrategy> {
+    Ok(match name {
+        "dynamic_max" => GatingStrategy::DynamicMax,
+        "dynamic_minmax" => GatingStrategy::DynamicMinMax,
+        "static_dynamic" => GatingStrategy::StaticDynamic { static_min: 0.55 },
+        "static" => GatingStrategy::Static { static_min: 0.55, static_max: 0.85 },
+        other => bail!("unknown strategy '{other}'"),
+    })
+}
+
+fn build_router(args: &Args) -> Result<Arc<Router>> {
+    let registry = Arc::new(Registry::load(artifacts_dir(args))?);
+    let cfg = RouterConfig {
+        family: args.get_or("family", "claude").to_string(),
+        backbone: args.get_or("backbone", "stella_sim").to_string(),
+        tau_default: args.f64_or("tau", 0.0)?,
+        strategy: strategy_of(args.get_or("strategy", "dynamic_max"))?,
+        delta: args.f64_or("delta", 0.0)?,
+        batcher: BatcherConfig {
+            max_batch: args.usize_or("max-batch", 8)?,
+            max_wait: std::time::Duration::from_micros(args.usize_or("max-wait-us", 500)? as u64),
+            kind: args.get_or("kind", "xla").to_string(),
+            cache_cap: args.usize_or("cache-cap", 4096)?,
+        },
+        time_scale: args.f64_or("time-scale", 0.0)?,
+    };
+    println!(
+        "loading router: family={} backbone={} strategy={} kind={}",
+        cfg.family,
+        cfg.backbone,
+        cfg.strategy.name(),
+        cfg.batcher.kind
+    );
+    Ok(Arc::new(Router::new(registry, cfg)?))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let router = build_router(args)?;
+    let bind = args.get_or("bind", "127.0.0.1:8080");
+    let workers = args.usize_or("workers", 4)?;
+    let server = Server::start(router, bind, workers)?;
+    println!("ipr serving on http://{}  (Ctrl-C to stop)", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    let prompt = args
+        .get("prompt")
+        .context("--prompt required (try: ipr gen-workload)")?
+        .to_string();
+    let router = build_router(args)?;
+    let tau = args.get("tau").map(|t| t.parse::<f64>()).transpose()?;
+    let out = router.handle_text(&prompt, tau, args.flag("invoke"), None)?;
+    println!("routed to : {}", out.model_name);
+    println!("tau       : {}", out.tau);
+    println!("threshold : {:.4}", out.decision.threshold);
+    println!("scores    : {:?}", out.scores);
+    println!("feasible  : {:?}", out.decision.feasible);
+    println!("fallback  : {}", out.decision.fallback);
+    println!(
+        "latency   : tokenize {}us + qe {}us + decide {}us = total {}us",
+        out.tokenize_us, out.qe_us, out.decide_us, out.total_us
+    );
+    if let Some(inv) = out.invoke {
+        println!(
+            "invoke    : {} -> {} out tokens, {:.0}ms simulated, ${:.6}",
+            inv.model, inv.out_tokens, inv.latency_ms, inv.cost_usd
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let which = args.get_or("table", "all").to_string();
+    let limit = args.usize_or("limit", 2000)?;
+    let ctx = EvalCtx::new(&artifacts_dir(args), limit)?;
+    for t in run_table(&ctx, &which)? {
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_registry(args: &Args) -> Result<()> {
+    let reg = Registry::load(artifacts_dir(args))?;
+    println!("world seed: {}  vocab: {}", reg.world_seed, reg.vocab_size);
+    println!("\ncandidates (Table 8 prices):");
+    for c in &reg.candidates {
+        println!(
+            "  {:24} {:7} in ${:<8} out ${:<8}",
+            c.name, c.family, c.price_in, c.price_out
+        );
+    }
+    println!("\ndeployable QE models:");
+    for m in &reg.models {
+        println!(
+            "  {:36} kind={:9} backbone={:13} d={:3} L={} heads={} cands={} variants={} dev_mae={}",
+            m.id,
+            m.kind,
+            m.backbone,
+            m.d,
+            m.layers,
+            m.heads,
+            m.candidates.len(),
+            m.variants.len(),
+            m.dev_mae.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_parity(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let reg = Registry::load(&dir)?;
+    // 1. golden-file parity (python synth == rust synth, bit-exact)
+    let golden = std::fs::read_to_string(reg.abs("data/golden_parity.json"))?;
+    let j = ipr::util::json::parse(&golden)?;
+    let world = SynthWorld::new(j.req("seed")?.as_i64()? as u64);
+    let mut checked = 0;
+    for row in j.req("rows")?.as_arr()? {
+        let split = row.req("split")?.as_i64()? as u64;
+        let index = row.req("index")?.as_i64()? as u64;
+        let p = world.sample_prompt(split, index);
+        let tokens: Vec<u32> = row.req("tokens")?.usizes()?.iter().map(|&x| x as u32).collect();
+        if p.tokens != tokens {
+            bail!("token mismatch at index {index}");
+        }
+        if p.difficulty != row.req("difficulty")?.as_f64()? {
+            bail!("difficulty mismatch at index {index}");
+        }
+        for (c, want) in row.req("rewards")?.f64s()?.iter().enumerate() {
+            let got = world.reward(&p, c);
+            if got != *want {
+                bail!("reward mismatch index {index} cand {c}: {got} vs {want}");
+            }
+        }
+        checked += 1;
+    }
+    println!("golden parity OK: {checked} prompts, bit-exact rewards/tokens");
+
+    // 2. pallas vs xla artifact parity on a real model
+    let engine = Engine::new()?;
+    let entry = reg.family_qe("claude", "stella_sim")?.clone();
+    let model = engine.load_model(&reg, &entry, &["xla", "pallas"])?;
+    let mut worst = 0f32;
+    for i in 0..8u64 {
+        let p = world.sample_prompt(ipr::synth::SPLIT_TEST, 777 + i);
+        let a = model.predict(&[p.tokens.clone()], "xla")?;
+        let b = model.predict(&[p.tokens.clone()], "pallas")?;
+        for (x, y) in a.scores[0].iter().zip(&b.scores[0]) {
+            worst = worst.max((x - y).abs());
+        }
+    }
+    println!("pallas-vs-xla parity OK: max |Δ| = {worst:.2e} over 8 prompts");
+    if worst > 1e-4 {
+        bail!("pallas/xla divergence too large");
+    }
+    Ok(())
+}
+
+fn cmd_gen_workload(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 10)?;
+    let world = SynthWorld::default();
+    for i in 0..n as u64 {
+        let p = world.live_prompt(i);
+        println!(
+            "{{\"prompt\": \"{}\", \"split\": {}, \"index\": {}}}",
+            p.text(),
+            p.split,
+            p.index
+        );
+    }
+    Ok(())
+}

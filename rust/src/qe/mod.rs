@@ -1,0 +1,351 @@
+//! Quality Estimator service: the serving wrapper around a loaded QE
+//! artifact (paper §3.1 "Quality Estimator" box).
+//!
+//! Pipeline per request: tokenize → score-cache lookup → dynamic batcher →
+//! PJRT forward (`runtime::QeModel::predict`) → per-candidate scores.
+//!
+//! * **Thread confinement**: the `xla` crate's PJRT handles are `Rc`-based
+//!   and neither `Send` nor `Sync`, so the service owns a dedicated
+//!   engine thread that creates the PJRT client, uploads the weights, and
+//!   runs every forward; callers talk to it over channels. This is also
+//!   the natural home for the batcher.
+//! * **Dynamic batcher**: concurrent requests are coalesced up to
+//!   `max_batch` or `max_wait` (whichever first) and served by one padded
+//!   forward pass (ablated in `benches/e2e_throughput.rs`).
+//! * **Score cache**: Algorithm 1 line 1 notes the prompt embedding is
+//!   "cached across turns if multi-turn"; we cache the per-candidate score
+//!   vector keyed by the token-sequence hash, which subsumes the embedding
+//!   cache for identical turn prefixes.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::registry::{ModelEntry, Registry};
+use crate::runtime::Engine;
+use crate::util::hist::Histogram;
+use crate::util::rng::mix64;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Max prompts coalesced into one forward (bounded by the largest
+    /// lowered batch bucket).
+    pub max_batch: usize,
+    /// Max time the first request in a batch waits for company.
+    pub max_wait: Duration,
+    /// Artifact kind to run: "xla" (CPU-fast) or "pallas".
+    pub kind: String,
+    /// Score-cache capacity (entries); 0 disables caching.
+    pub cache_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            kind: "xla".to_string(),
+            cache_cap: 4096,
+        }
+    }
+}
+
+struct Pending {
+    tokens: Vec<u32>,
+    tx: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+struct Queue {
+    q: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// FIFO-ish score cache with arbitrary eviction; the hit path is O(1).
+struct ScoreCache {
+    map: Mutex<HashMap<u64, Vec<f32>>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScoreCache {
+    fn key(tokens: &[u32]) -> u64 {
+        let mut h = 0x100_0193u64;
+        for &t in tokens {
+            h = mix64(h ^ t as u64);
+        }
+        h
+    }
+
+    fn get(&self, tokens: &[u32]) -> Option<Vec<f32>> {
+        if self.cap == 0 {
+            return None;
+        }
+        let m = self.map.lock().unwrap();
+        let r = m.get(&Self::key(tokens)).cloned();
+        if r.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    fn put(&self, tokens: &[u32], scores: Vec<f32>) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut m = self.map.lock().unwrap();
+        if m.len() >= self.cap {
+            if let Some(&k) = m.keys().next() {
+                m.remove(&k);
+            }
+        }
+        m.insert(Self::key(tokens), scores);
+    }
+}
+
+/// Model metadata surfaced from the engine thread at load time.
+#[derive(Clone, Debug)]
+pub struct LoadedInfo {
+    pub entry: ModelEntry,
+    pub load_ms: f64,
+    pub buckets: Vec<(usize, usize, String)>,
+}
+
+/// The Quality Estimator service. Cheap to share (`Arc`); `score` blocks
+/// the calling thread until its batch completes on the engine thread.
+pub struct QeService {
+    pub cfg: BatcherConfig,
+    queue: Arc<Queue>,
+    cache: Arc<ScoreCache>,
+    info: LoadedInfo,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Forward-pass latency (per batch) and realized batch sizes.
+    pub batch_hist: Arc<Mutex<Histogram>>,
+    pub batch_sizes: Arc<Mutex<Vec<usize>>>,
+}
+
+impl QeService {
+    /// Spawn the engine thread, load `model_id` from the registry, and
+    /// start serving. Blocks until the model is loaded (or failed).
+    pub fn start(reg: Arc<Registry>, model_id: &str, cfg: BatcherConfig) -> Result<Arc<QeService>> {
+        let queue = Arc::new(Queue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let cache = Arc::new(ScoreCache {
+            map: Mutex::new(HashMap::new()),
+            cap: cfg.cache_cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        });
+        let batch_hist = Arc::new(Mutex::new(Histogram::new()));
+        let batch_sizes = Arc::new(Mutex::new(Vec::new()));
+
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<LoadedInfo>>();
+        let worker = {
+            let queue = queue.clone();
+            let cfg = cfg.clone();
+            let model_id = model_id.to_string();
+            let batch_hist = batch_hist.clone();
+            let batch_sizes = batch_sizes.clone();
+            std::thread::Builder::new()
+                .name(format!("ipr-qe-{model_id}"))
+                .spawn(move || {
+                    engine_thread(reg, model_id, cfg, queue, ready_tx, batch_hist, batch_sizes)
+                })?
+        };
+        let info = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during load"))??;
+        Ok(Arc::new(QeService {
+            cfg,
+            queue,
+            cache,
+            info,
+            worker: Mutex::new(Some(worker)),
+            batch_hist,
+            batch_sizes,
+        }))
+    }
+
+    pub fn info(&self) -> &LoadedInfo {
+        &self.info
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.info.entry
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits.load(Ordering::Relaxed), self.cache.misses.load(Ordering::Relaxed))
+    }
+
+    /// Score one prompt (blocking). Returns one score per local head, in
+    /// the model's candidate order.
+    pub fn score(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        if let Some(hit) = self.cache.get(tokens) {
+            return Ok(hit);
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.queue.q.lock().unwrap();
+            q.push_back(Pending { tokens: tokens.to_vec(), tx });
+        }
+        self.queue.cv.notify_one();
+        let scores = rx.recv().map_err(|_| anyhow!("QE engine dropped request"))??;
+        self.cache.put(tokens, scores.clone());
+        Ok(scores)
+    }
+
+    /// Score many prompts through the batcher (saturates batching without
+    /// extra client threads).
+    pub fn score_many(&self, prompts: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        let mut rxs = Vec::with_capacity(prompts.len());
+        {
+            let mut q = self.queue.q.lock().unwrap();
+            for p in prompts {
+                if let Some(hit) = self.cache.get(p) {
+                    rxs.push(Err(hit)); // pre-resolved
+                    continue;
+                }
+                let (tx, rx) = mpsc::channel();
+                q.push_back(Pending { tokens: p.clone(), tx });
+                rxs.push(Ok(rx));
+            }
+        }
+        self.queue.cv.notify_all();
+        rxs.into_iter()
+            .map(|r| match r {
+                Err(hit) => Ok(hit),
+                Ok(rx) => rx.recv().map_err(|_| anyhow!("QE engine dropped request"))?,
+            })
+            .collect()
+    }
+
+    pub fn shutdown(&self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.cv.notify_all();
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for QeService {
+    fn drop(&mut self) {
+        self.queue.shutdown.store(true, Ordering::SeqCst);
+        self.queue.cv.notify_all();
+    }
+}
+
+/// The engine thread: owns the PJRT client, the resident weights and the
+/// compiled executables; drains the queue in dynamic batches.
+fn engine_thread(
+    reg: Arc<Registry>,
+    model_id: String,
+    cfg: BatcherConfig,
+    queue: Arc<Queue>,
+    ready_tx: mpsc::Sender<Result<LoadedInfo>>,
+    batch_hist: Arc<Mutex<Histogram>>,
+    batch_sizes: Arc<Mutex<Vec<usize>>>,
+) {
+    let load = (|| -> Result<_> {
+        let engine = Engine::new()?;
+        let entry = reg.model(&model_id)?.clone();
+        let kinds: Vec<&str> = vec![cfg.kind.as_str()];
+        let model = engine.load_model(&reg, &entry, &kinds)?;
+        Ok(model)
+    })();
+    let model = match load {
+        Ok(m) => {
+            let _ = ready_tx.send(Ok(LoadedInfo {
+                entry: m.entry.clone(),
+                load_ms: m.load_ms,
+                buckets: m.available_buckets(),
+            }));
+            m
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+
+    // Adaptive grace: only wait for stragglers when the previous batch
+    // actually coalesced >1 request. Under light load this removes the
+    // full max_wait from every request's latency; under heavy load the
+    // window re-engages after the first multi-request batch
+    // (§Perf iteration 2).
+    let mut prev_batch_len = 0usize;
+    loop {
+        // Phase 1: wait for the first request.
+        let mut batch: Vec<Pending> = Vec::with_capacity(cfg.max_batch);
+        {
+            let mut q = queue.q.lock().unwrap();
+            loop {
+                if let Some(p) = q.pop_front() {
+                    batch.push(p);
+                    break;
+                }
+                if queue.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = queue.cv.wait(q).unwrap();
+            }
+            // Phase 2: take whatever is already queued.
+            while batch.len() < cfg.max_batch {
+                match q.pop_front() {
+                    Some(p) => batch.push(p),
+                    None => break,
+                }
+            }
+        }
+        // Phase 3: brief grace window for stragglers.
+        let engage_grace = batch.len() > 1 || prev_batch_len > 1;
+        if engage_grace && batch.len() < cfg.max_batch && !cfg.max_wait.is_zero() {
+            let deadline = Instant::now() + cfg.max_wait;
+            loop {
+                let now = Instant::now();
+                if now >= deadline || batch.len() >= cfg.max_batch {
+                    break;
+                }
+                let mut q = queue.q.lock().unwrap();
+                if let Some(p) = q.pop_front() {
+                    batch.push(p);
+                    continue;
+                }
+                let (qq, _) = queue.cv.wait_timeout(q, deadline - now).unwrap();
+                q = qq;
+                if let Some(p) = q.pop_front() {
+                    batch.push(p);
+                }
+            }
+        }
+
+        prev_batch_len = batch.len();
+        let tokens: Vec<Vec<u32>> = batch.iter().map(|p| p.tokens.clone()).collect();
+        let t0 = Instant::now();
+        let result = model.predict(&tokens, &cfg.kind);
+        batch_hist.lock().unwrap().record(t0.elapsed());
+        batch_sizes.lock().unwrap().push(batch.len());
+        match result {
+            Ok(scores) => {
+                for (p, s) in batch.into_iter().zip(scores.scores) {
+                    let _ = p.tx.send(Ok(s));
+                }
+            }
+            Err(e) => {
+                for p in batch {
+                    let _ = p.tx.send(Err(anyhow!("QE forward failed: {e}")));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Model Registry (paper §3.1): candidate metadata, Table 8 prices, and
+//! the AOT artifact manifest written by `python -m compile.aot`.
+//!
+//! The registry is the single source of truth the coordinator consults for
+//! (a) which candidate LLMs exist, their families and prices, and (b) which
+//! Quality Estimator artifacts (HLO variants + weights) are deployable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One candidate LLM as registered on the platform.
+#[derive(Clone, Debug)]
+pub struct CandidateMeta {
+    pub name: String,
+    pub family: String,
+    /// USD per 1k input tokens (paper Table 8).
+    pub price_in: f64,
+    /// USD per 1k output tokens.
+    pub price_out: f64,
+}
+
+impl CandidateMeta {
+    /// Scalar routing cost: combined per-1k-token price. Used by the DO
+    /// module for arg-min cost selection (Eq. 1); the full Eq. 11
+    /// normalized cost is computed by the eval harness from realized
+    /// token counts.
+    pub fn unit_cost(&self) -> f64 {
+        self.price_in + self.price_out
+    }
+}
+
+/// A lowered HLO variant of one model: fixed (batch, seq) bucket.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub path: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// "xla" (pure-jnp lowering, CPU-fast) or "pallas" (L1 kernels through
+    /// the interpreter — the composition-proof variant).
+    pub kind: String,
+}
+
+/// One deployable Quality Estimator artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub id: String,
+    /// "qe" | "routellm"
+    pub kind: String,
+    pub backbone: String,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub loss: String,
+    /// Global candidate indices this model scores, in head order.
+    pub candidates: Vec<usize>,
+    pub candidate_names: Vec<String>,
+    pub weights: String,
+    /// Canonical parameter order (sorted names) — the HLO parameter order.
+    pub param_names: Vec<String>,
+    pub variants: Vec<Variant>,
+    pub dev_mae: Option<f64>,
+    /// Python-side predictions on the first 4 test prompts; the rust
+    /// runtime must reproduce these through the HLO+npz path.
+    pub golden_pred: Vec<Vec<f64>>,
+    pub unified: bool,
+    pub adapter: bool,
+    /// For routellm baselines: global candidate indices.
+    pub weak: Option<usize>,
+    pub strong: Option<usize>,
+}
+
+impl ModelEntry {
+    /// Pick the best variant for (n prompts, prompt length): the smallest
+    /// bucket that fits, preferring `kind`.
+    pub fn select_variant(&self, n: usize, len: usize, kind: &str) -> Option<&Variant> {
+        let mut fits: Vec<&Variant> = self
+            .variants
+            .iter()
+            .filter(|v| v.kind == kind && v.batch >= n && v.seq >= len)
+            .collect();
+        fits.sort_by_key(|v| (v.seq, v.batch));
+        if fits.is_empty() {
+            // fall back: largest seq bucket of the right kind (truncation)
+            let mut all: Vec<&Variant> =
+                self.variants.iter().filter(|v| v.kind == kind && v.batch >= n).collect();
+            all.sort_by_key(|v| std::cmp::Reverse(v.seq));
+            return all.into_iter().next();
+        }
+        fits.into_iter().next()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub name: String,
+    pub path: String,
+    pub count: usize,
+    pub split_id: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DomainStat {
+    pub name: String,
+    pub weight: f64,
+    pub train_count: usize,
+}
+
+/// The full registry, loaded from `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub root: PathBuf,
+    pub world_seed: u64,
+    pub vocab_size: usize,
+    pub candidates: Vec<CandidateMeta>,
+    pub families: Vec<String>,
+    pub models: Vec<ModelEntry>,
+    pub datasets: Vec<DatasetEntry>,
+    pub domain_mixture: Vec<DomainStat>,
+    pub train_count: usize,
+}
+
+impl Registry {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Registry> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let j = parse(&text).context("parsing manifest.json")?;
+
+        let candidates = j
+            .req("candidates")?
+            .as_arr()?
+            .iter()
+            .map(|c| {
+                Ok(CandidateMeta {
+                    name: c.req("name")?.as_str()?.to_string(),
+                    family: c.req("family")?.as_str()?.to_string(),
+                    price_in: c.req("price_in")?.as_f64()?,
+                    price_out: c.req("price_out")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let models = j
+            .req("models")?
+            .as_arr()?
+            .iter()
+            .map(parse_model)
+            .collect::<Result<Vec<_>>>()?;
+
+        let datasets = j
+            .req("datasets")?
+            .as_obj()?
+            .iter()
+            .map(|(name, d)| {
+                Ok(DatasetEntry {
+                    name: name.clone(),
+                    path: d.req("path")?.as_str()?.to_string(),
+                    count: d.req("count")?.as_usize()?,
+                    split_id: d.req("split_id")?.as_i64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let domain_mixture = j
+            .req("domain_mixture")?
+            .as_arr()?
+            .iter()
+            .map(|d| {
+                Ok(DomainStat {
+                    name: d.req("name")?.as_str()?.to_string(),
+                    weight: d.req("weight")?.as_f64()?,
+                    train_count: d.req("train_count")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Registry {
+            root,
+            world_seed: j.req("world_seed")?.as_i64()? as u64,
+            vocab_size: j.req("vocab_size")?.as_usize()?,
+            candidates,
+            families: j
+                .req("families")?
+                .as_arr()?
+                .iter()
+                .map(|f| Ok(f.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            models,
+            datasets,
+            domain_mixture,
+            train_count: j.req("train_count")?.as_usize()?,
+        })
+    }
+
+    pub fn model(&self, id: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.id == id)
+            .ok_or_else(|| anyhow!("model '{id}' not in registry"))
+    }
+
+    /// The family QE for (family, backbone) trained with MSE (main grid).
+    pub fn family_qe(&self, family: &str, backbone: &str) -> Result<&ModelEntry> {
+        let id = format!("qe_{family}_{backbone}");
+        self.model(&id)
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetEntry> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| anyhow!("dataset '{name}' not in manifest"))
+    }
+
+    pub fn abs(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Family members as (local_head_index -> global candidate index).
+    pub fn family_indices(&self, family: &str) -> Vec<usize> {
+        self.candidates
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.family == family)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+fn parse_model(m: &Json) -> Result<ModelEntry> {
+    let variants = m
+        .req("variants")?
+        .as_arr()?
+        .iter()
+        .map(|v| {
+            Ok(Variant {
+                path: v.req("path")?.as_str()?.to_string(),
+                batch: v.req("batch")?.as_usize()?,
+                seq: v.req("seq")?.as_usize()?,
+                kind: v.req("kind")?.as_str()?.to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if variants.is_empty() {
+        bail!("model without variants");
+    }
+    let opt_usize = |k: &str| -> Option<usize> { m.get(k).and_then(|v| v.as_usize().ok()) };
+    Ok(ModelEntry {
+        id: m.req("id")?.as_str()?.to_string(),
+        kind: m.req("kind")?.as_str()?.to_string(),
+        backbone: m.req("backbone")?.as_str()?.to_string(),
+        d: m.req("d")?.as_usize()?,
+        layers: m.req("layers")?.as_usize()?,
+        heads: m.req("heads")?.as_usize()?,
+        loss: m.req("loss")?.as_str()?.to_string(),
+        candidates: m.req("candidates")?.usizes()?,
+        candidate_names: m
+            .req("candidate_names")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+        weights: m.req("weights")?.as_str()?.to_string(),
+        param_names: m
+            .req("param_names")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+        variants,
+        dev_mae: m.get("dev_mae").and_then(|v| v.as_f64().ok()),
+        golden_pred: m
+            .get("golden_pred")
+            .and_then(|v| v.as_arr().ok())
+            .map(|rows| rows.iter().filter_map(|r| r.f64s().ok()).collect())
+            .unwrap_or_default(),
+        unified: m.get("unified").map(|v| v == &Json::Bool(true)).unwrap_or(false),
+        adapter: m.get("adapter").map(|v| v == &Json::Bool(true)).unwrap_or(false),
+        weak: opt_usize("weak"),
+        strong: opt_usize("strong"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_variant_prefers_smallest_fit() {
+        let m = ModelEntry {
+            id: "m".into(),
+            kind: "qe".into(),
+            backbone: "b".into(),
+            d: 48,
+            layers: 1,
+            heads: 3,
+            loss: "mse".into(),
+            candidates: vec![0],
+            candidate_names: vec!["c".into()],
+            weights: "w".into(),
+            param_names: vec![],
+            variants: vec![
+                Variant { path: "a".into(), batch: 1, seq: 64, kind: "xla".into() },
+                Variant { path: "b".into(), batch: 1, seq: 128, kind: "xla".into() },
+                Variant { path: "c".into(), batch: 8, seq: 128, kind: "xla".into() },
+                Variant { path: "d".into(), batch: 1, seq: 128, kind: "pallas".into() },
+            ],
+            dev_mae: None,
+            golden_pred: vec![],
+            unified: false,
+            adapter: false,
+            weak: None,
+            strong: None,
+        };
+        assert_eq!(m.select_variant(1, 50, "xla").unwrap().path, "a");
+        assert_eq!(m.select_variant(1, 100, "xla").unwrap().path, "b");
+        assert_eq!(m.select_variant(4, 100, "xla").unwrap().path, "c");
+        assert_eq!(m.select_variant(1, 100, "pallas").unwrap().path, "d");
+        // too long: falls back to the largest seq bucket (truncation)
+        assert_eq!(m.select_variant(1, 999, "xla").unwrap().path, "b");
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT runtime: loads AOT artifacts (HLO text + .npz weights) and runs
+//! them on the request path.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → execute.
+//! Two deliberate hot-path choices:
+//!
+//! * **Resident weights**: the .npz is read once at load time, each tensor
+//!   uploaded once as a `PjRtBuffer` in the canonical (sorted-name) order;
+//!   requests call `execute_b(&[...weights, ids, mask])` so only the
+//!   (batch, seq) token tensors cross the host/device boundary per call.
+//! * **Bucketed executables**: one compiled executable per lowered
+//!   (batch, seq, kind) variant; `select_variant` picks the smallest
+//!   bucket that fits a request, trading a bounded amount of padding for
+//!   a tiny, fully-warm executable set.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::registry::{ModelEntry, Registry, Variant};
+
+/// Shared PJRT client (CPU plugin).
+pub struct Engine {
+    pub client: PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        Ok(Engine { client: PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one model: weights become resident buffers, every requested
+    /// variant is compiled eagerly (so first-request latency is flat).
+    pub fn load_model(&self, reg: &Registry, entry: &ModelEntry, kinds: &[&str]) -> Result<QeModel> {
+        let t0 = Instant::now();
+        let npz_path = reg.abs(&entry.weights);
+        let mut named = Literal::read_npz(&npz_path, &())
+            .with_context(|| format!("reading weights {npz_path:?}"))?;
+        named.sort_by(|a, b| a.0.cmp(&b.0)); // canonical order = sorted names
+        let names: Vec<&str> = named.iter().map(|(n, _)| n.as_str()).collect();
+        let expect: Vec<&str> = entry.param_names.iter().map(|s| s.as_str()).collect();
+        if names != expect {
+            bail!("weight names mismatch for {}: npz {:?} vs manifest {:?}", entry.id, names, expect);
+        }
+        let weights = named
+            .iter()
+            .map(|(_, lit)| self.client.buffer_from_host_literal(None, lit))
+            .collect::<Result<Vec<_>, _>>()
+            .context("uploading weights")?;
+
+        let mut exes = HashMap::new();
+        for v in &entry.variants {
+            if !kinds.contains(&v.kind.as_str()) {
+                continue;
+            }
+            let exe = self.compile_variant(&reg.abs(&v.path))?;
+            // Warm up: the first execution of a PJRT executable pays
+            // one-time initialization (thread-pool setup, allocation of
+            // output buffers) that otherwise lands on the first real
+            // request as a multi-ms P99 outlier (§Perf iteration 1).
+            let ids = vec![0i32; v.batch * v.seq];
+            let mask = vec![0f32; v.batch * v.seq];
+            let ids_b = self.client.buffer_from_host_buffer(&ids, &[v.batch, v.seq], None)?;
+            let mask_b = self.client.buffer_from_host_buffer(&mask, &[v.batch, v.seq], None)?;
+            let mut args: Vec<&PjRtBuffer> = weights.iter().collect();
+            args.push(&ids_b);
+            args.push(&mask_b);
+            let _ = exe.execute_b(&args)?;
+            exes.insert((v.batch, v.seq, v.kind.clone()), exe);
+        }
+        if exes.is_empty() {
+            bail!("no variants of kinds {kinds:?} for model {}", entry.id);
+        }
+        Ok(QeModel {
+            entry: entry.clone(),
+            weights,
+            exes,
+            load_ms: t0.elapsed().as_secs_f64() * 1e3,
+            calls: Mutex::new(0),
+        })
+    }
+
+    fn compile_variant(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+    }
+}
+
+/// A loaded Quality Estimator: resident weights + per-bucket executables.
+pub struct QeModel {
+    pub entry: ModelEntry,
+    weights: Vec<PjRtBuffer>,
+    exes: HashMap<(usize, usize, String), PjRtLoadedExecutable>,
+    pub load_ms: f64,
+    calls: Mutex<u64>,
+}
+
+/// Result of one QE forward: per-prompt, per-candidate scores.
+#[derive(Clone, Debug)]
+pub struct Scores {
+    /// scores[i][j] = predicted quality of prompt i under local head j.
+    pub scores: Vec<Vec<f32>>,
+    pub bucket: (usize, usize),
+    pub kind: String,
+}
+
+impl QeModel {
+    pub fn n_heads(&self) -> usize {
+        self.entry.candidates.len()
+    }
+
+    pub fn call_count(&self) -> u64 {
+        *self.calls.lock().unwrap()
+    }
+
+    pub fn available_buckets(&self) -> Vec<(usize, usize, String)> {
+        let mut v: Vec<_> = self.exes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Predict scores for a batch of token sequences (already tokenized).
+    /// Picks the smallest loaded (batch, seq) bucket that fits; pads with
+    /// zero rows / truncates overlong prompts to the largest bucket.
+    pub fn predict(&self, prompts: &[Vec<u32>], kind: &str) -> Result<Scores> {
+        let n = prompts.len();
+        if n == 0 {
+            bail!("empty batch");
+        }
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
+        let (b, s) = self.pick_bucket(n, max_len, kind)?;
+        let exe = self
+            .exes
+            .get(&(b, s, kind.to_string()))
+            .ok_or_else(|| anyhow!("bucket ({b},{s},{kind}) not loaded"))?;
+
+        // Pack ids + mask for the bucket.
+        let mut ids = vec![0i32; b * s];
+        let mut mask = vec![0f32; b * s];
+        for (i, p) in prompts.iter().enumerate() {
+            let l = p.len().min(s);
+            for (j, &t) in p[..l].iter().enumerate() {
+                ids[i * s + j] = t as i32;
+                mask[i * s + j] = 1.0;
+            }
+        }
+        let ids_buf = exe.client().buffer_from_host_buffer(&ids, &[b, s], None)?;
+        let mask_buf = exe.client().buffer_from_host_buffer(&mask, &[b, s], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.weights.len() + 2);
+        args.extend(self.weights.iter());
+        args.push(&ids_buf);
+        args.push(&mask_buf);
+
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?; // lowered with return_tuple=True
+        let flat: Vec<f32> = out.to_vec()?;
+        let c = self.n_heads();
+        if flat.len() != b * c {
+            bail!("unexpected output size {} (want {}x{})", flat.len(), b, c);
+        }
+        *self.calls.lock().unwrap() += 1;
+        Ok(Scores {
+            scores: (0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect(),
+            bucket: (b, s),
+            kind: kind.to_string(),
+        })
+    }
+
+    fn pick_bucket(&self, n: usize, len: usize, kind: &str) -> Result<(usize, usize)> {
+        let mut fits: Vec<(usize, usize)> = self
+            .exes
+            .keys()
+            .filter(|(b, s, k)| k == kind && *b >= n && *s >= len)
+            .map(|(b, s, _)| (*b, *s))
+            .collect();
+        fits.sort_by_key(|&(b, s)| (s, b));
+        if let Some(&x) = fits.first() {
+            return Ok(x);
+        }
+        // overlong prompt: largest seq bucket with enough batch (truncate)
+        let mut all: Vec<(usize, usize)> = self
+            .exes
+            .keys()
+            .filter(|(b, _, k)| k == kind && *b >= n)
+            .map(|(b, s, _)| (*b, *s))
+            .collect();
+        all.sort_by_key(|&(b, s)| (std::cmp::Reverse(s), b));
+        all.first()
+            .copied()
+            .ok_or_else(|| anyhow!("no bucket fits batch={n} kind={kind} for {}", self.entry.id))
+    }
+
+    #[allow(unused)]
+    fn variant_for(&self, v: &Variant) -> Option<&PjRtLoadedExecutable> {
+        self.exes.get(&(v.batch, v.seq, v.kind.clone()))
+    }
+}
+
+/// Peak-RSS proxy for Table 5's memory column (CPU testbed: process RSS).
+pub fn current_rss_mb() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/statm") {
+        if let Some(rss_pages) = s.split_whitespace().nth(1).and_then(|x| x.parse::<f64>().ok()) {
+            return rss_pages * 4096.0 / 1e6;
+        }
+    }
+    0.0
+}

@@ -1,0 +1,293 @@
+//! Minimal HTTP/1.1 front end on `std::net` + the in-repo thread pool
+//! (the offline registry has no tokio/hyper).
+//!
+//! Endpoints:
+//! * `POST /v1/route`  — body `{"prompt": "...", "tau": 0.3, "invoke": false,
+//!   "split": 2, "index": 17}` (split/index optional: the SynthWorld
+//!   identity of generated traffic, enabling realized-quality metering).
+//! * `POST /v1/invoke` — same, but always invokes the routed endpoint.
+//! * `GET  /metrics`   — text metrics (stage latencies, route mix, CSR).
+//! * `GET  /v1/registry` — candidates + loaded model info.
+//! * `GET  /health`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::Router;
+use crate::util::json::{parse, Json};
+use crate::util::threadpool::ThreadPool;
+
+pub struct Server {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve in background threads; returns once listening.
+    pub fn start(router: Arc<Router>, bind: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?.to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("ipr-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                listener
+                    .set_nonblocking(false)
+                    .expect("listener blocking mode");
+                // Use a short accept timeout via nonblocking + poll so the
+                // stop flag is honored promptly.
+                listener.set_nonblocking(true).expect("nonblocking");
+                loop {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let r = router.clone();
+                            pool.execute(move || {
+                                let _ = handle_conn(stream, &r);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+        if method.is_empty() {
+            return Ok(());
+        }
+
+        // headers
+        let mut content_len = 0usize;
+        let mut keep_alive = true;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                return Ok(());
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+            if lower.starts_with("connection:") && lower.contains("close") {
+                keep_alive = false;
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body)?;
+        let body = String::from_utf8_lossy(&body).to_string();
+
+        let (status, ctype, resp) = dispatch(router, &method, &path, &body);
+        let mut out = stream.try_clone()?;
+        write!(
+            out,
+            "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            resp.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        out.write_all(resp.as_bytes())?;
+        out.flush()?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn dispatch(router: &Router, method: &str, path: &str, body: &str) -> (&'static str, &'static str, String) {
+    match (method, path) {
+        ("GET", "/health") => ("200 OK", "text/plain", "ok\n".into()),
+        ("GET", "/metrics") => ("200 OK", "text/plain", router.metrics.render()),
+        ("GET", "/v1/registry") => ("200 OK", "application/json", registry_json(router)),
+        ("POST", "/v1/route") | ("POST", "/v1/invoke") => {
+            let force_invoke = path == "/v1/invoke";
+            match handle_route(router, body, force_invoke) {
+                Ok(j) => ("200 OK", "application/json", j),
+                Err(e) => (
+                    "400 Bad Request",
+                    "application/json",
+                    Json::obj(vec![("error", Json::str(&e.to_string()))]).to_string(),
+                ),
+            }
+        }
+        _ => ("404 Not Found", "text/plain", "not found\n".into()),
+    }
+}
+
+fn handle_route(router: &Router, body: &str, force_invoke: bool) -> Result<String> {
+    let j = parse(body).context("request body must be JSON")?;
+    let prompt = j.req("prompt")?.as_str()?.to_string();
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    let tau = j.get("tau").map(|v| v.as_f64()).transpose()?;
+    let invoke = force_invoke
+        || j.get("invoke").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+    let identity = match (j.get("split"), j.get("index")) {
+        (Some(s), Some(i)) => Some(
+            router
+                .backend
+                .world()
+                .sample_prompt(s.as_i64()? as u64, i.as_i64()? as u64),
+        ),
+        _ => None,
+    };
+    let out = router.handle_text(&prompt, tau, invoke, identity.as_ref())?;
+
+    let mut fields = vec![
+        ("model", Json::str(&out.model_name)),
+        ("candidate", Json::Num(out.candidate_global as f64)),
+        ("tau", Json::Num(out.tau)),
+        ("threshold", Json::Num(out.decision.threshold)),
+        ("fallback", Json::Bool(out.decision.fallback)),
+        (
+            "scores",
+            Json::arr_f64(&out.scores.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+        ),
+        (
+            "feasible",
+            Json::Arr(out.decision.feasible.iter().map(|&i| Json::Num(i as f64)).collect()),
+        ),
+        ("tokenize_us", Json::Num(out.tokenize_us as f64)),
+        ("qe_us", Json::Num(out.qe_us as f64)),
+        ("decide_us", Json::Num(out.decide_us as f64)),
+        ("total_us", Json::Num(out.total_us as f64)),
+    ];
+    if let Some(inv) = out.invoke {
+        fields.push((
+            "invoke",
+            Json::obj(vec![
+                ("model", Json::str(inv.model)),
+                ("out_tokens", Json::Num(inv.out_tokens as f64)),
+                ("latency_ms", Json::Num(inv.latency_ms)),
+                ("cost_usd", Json::Num(inv.cost_usd)),
+                (
+                    "reward",
+                    inv.reward.map(Json::Num).unwrap_or(Json::Null),
+                ),
+            ]),
+        ));
+    }
+    Ok(Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()).to_string())
+}
+
+fn registry_json(router: &Router) -> String {
+    let cands: Vec<Json> = router
+        .cand_global
+        .iter()
+        .map(|&i| {
+            let c = &router.registry.candidates[i];
+            Json::obj(vec![
+                ("name", Json::str(&c.name)),
+                ("family", Json::str(&c.family)),
+                ("price_in", Json::Num(c.price_in)),
+                ("price_out", Json::Num(c.price_out)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("family", Json::str(&router.cfg.family)),
+        ("backbone", Json::str(&router.cfg.backbone)),
+        ("model_id", Json::str(&router.qe.entry().id)),
+        ("candidates", Json::Arr(cands)),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Tiny HTTP client (examples / integration tests / load generators)
+// ---------------------------------------------------------------------------
+
+pub struct HttpClient {
+    addr: String,
+}
+
+impl HttpClient {
+    pub fn new(addr: &str) -> HttpClient {
+        HttpClient { addr: addr.to_string() }
+    }
+
+    pub fn post(&self, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request("POST", path, body)
+    }
+
+    pub fn get(&self, path: &str) -> Result<(u16, String)> {
+        self.request("GET", path, "")
+    }
+
+    fn request(&self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let mut stream = TcpStream::connect(&self.addr)?;
+        stream.set_nodelay(true).ok();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            self.addr,
+            body.len()
+        )?;
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line: {status_line:?}"))?;
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                break;
+            }
+            let t = h.trim_end();
+            if t.is_empty() {
+                break;
+            }
+            if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body)?;
+        Ok((status, String::from_utf8_lossy(&body).to_string()))
+    }
+}

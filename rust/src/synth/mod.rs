@@ -1,0 +1,371 @@
+//! SynthWorld — bit-exact rust port of `python/compile/synth.py`.
+//!
+//! This is the serving/eval side of the synthetic substitute for the IPR
+//! dataset (DESIGN.md §2): the workload generator that drives the server,
+//! the reward oracle that plays the Skywork reward model during
+//! evaluation, and the output-length model behind Eq. 11 costs.
+//!
+//! Every constant and every RNG draw order matches the python module; the
+//! golden-parity test (`rust/tests/parity.rs`) checks real artifacts
+//! produced by the python side, field by field, bit for bit.
+
+use crate::util::rng::{squash, substream, Rng};
+
+pub const VOCAB_SIZE: usize = 2048;
+pub const PAD_ID: u32 = 0;
+pub const DOMAIN_BASE: u32 = 1;
+pub const DOMAIN_BLOCK: u32 = 32;
+pub const DIFF_BASE: u32 = 321;
+pub const DIFF_BANDS: u32 = 16;
+pub const DIFF_BLOCK: u32 = 32;
+pub const REASON_BASE: u32 = 833;
+pub const REASON_BANDS: u32 = 8;
+pub const REASON_BLOCK: u32 = 16;
+pub const FILLER_BASE: u32 = 961;
+pub const FILLER_COUNT: u32 = VOCAB_SIZE as u32 - FILLER_BASE;
+
+const P_DOMAIN: f64 = 0.28;
+const P_DIFF: f64 = 0.50;
+const P_REASON: f64 = 0.62;
+
+/// (name, weight, diff_mean, diff_spread, reason_max, len_min, len_max)
+pub const DOMAINS: [(&str, f64, f64, f64, f64, u64, u64); 10] = [
+    ("lmsys_chat", 0.6126, 0.35, 0.30, 0.30, 12, 96),
+    ("sharegpt_vicuna", 0.1337, 0.40, 0.30, 0.40, 16, 110),
+    ("mixinstruct", 0.0652, 0.45, 0.25, 0.40, 12, 80),
+    ("nectar", 0.0650, 0.50, 0.25, 0.50, 12, 90),
+    ("answersumm", 0.0281, 0.55, 0.20, 0.30, 40, 120),
+    ("hellaswag", 0.0277, 0.45, 0.20, 0.20, 24, 64),
+    ("strategyqa", 0.0261, 0.65, 0.20, 0.80, 12, 48),
+    ("commonsenseqa", 0.0259, 0.50, 0.20, 0.60, 10, 40),
+    ("banking77", 0.0093, 0.25, 0.15, 0.10, 8, 32),
+    ("gsm8k", 0.0065, 0.75, 0.15, 0.90, 24, 80),
+];
+pub const N_DOMAINS: usize = DOMAINS.len();
+
+pub const SPLIT_TRAIN: u64 = 0;
+pub const SPLIT_DEV: u64 = 1;
+pub const SPLIT_TEST: u64 = 2;
+pub const SPLIT_OOD_MSMARCO: u64 = 3;
+pub const SPLIT_OOD_NVCHAT: u64 = 4;
+/// Rust-only stream for live workload generation (never used in training).
+pub const SPLIT_LIVE: u64 = 9;
+
+const OOD_MIX_MSMARCO: [f64; 10] = [0.02, 0.02, 0.05, 0.40, 0.05, 0.02, 0.14, 0.20, 0.08, 0.02];
+const OOD_MIX_NVCHAT: [f64; 10] = [0.25, 0.10, 0.10, 0.25, 0.10, 0.02, 0.08, 0.05, 0.02, 0.03];
+const OOD_DIFF_OFFSET: f64 = 0.10;
+
+/// Candidate LLM description: capability surface parameters + the paper's
+/// real Table 8 prices (USD per 1k tokens).
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub cap: f64,
+    pub slope: f64,
+    pub reason_pen: f64,
+    pub verbosity: f64,
+    pub noise: f64,
+    pub price_in: f64,
+    pub price_out: f64,
+}
+
+pub const CANDIDATES: [Candidate; 11] = [
+    Candidate { name: "claude-3-haiku", family: "claude", cap: 0.62, slope: 0.55, reason_pen: 0.35, verbosity: 0.75, noise: 0.03, price_in: 0.00025, price_out: 0.00125 },
+    Candidate { name: "claude-3.5-haiku", family: "claude", cap: 0.74, slope: 0.42, reason_pen: 0.25, verbosity: 0.90, noise: 0.03, price_in: 0.0008, price_out: 0.004 },
+    Candidate { name: "claude-3.5-sonnet-v1", family: "claude", cap: 0.80, slope: 0.30, reason_pen: 0.16, verbosity: 1.00, noise: 0.03, price_in: 0.003, price_out: 0.015 },
+    Candidate { name: "claude-3.5-sonnet-v2", family: "claude", cap: 0.86, slope: 0.22, reason_pen: 0.10, verbosity: 1.05, noise: 0.03, price_in: 0.003, price_out: 0.015 },
+    Candidate { name: "llama-3.1-8b", family: "llama", cap: 0.58, slope: 0.58, reason_pen: 0.40, verbosity: 0.80, noise: 0.036, price_in: 0.00022, price_out: 0.00022 },
+    Candidate { name: "llama-3.2-11b", family: "llama", cap: 0.66, slope: 0.48, reason_pen: 0.32, verbosity: 0.85, noise: 0.036, price_in: 0.00016, price_out: 0.00016 },
+    Candidate { name: "llama-3.1-70b", family: "llama", cap: 0.76, slope: 0.32, reason_pen: 0.18, verbosity: 1.00, noise: 0.036, price_in: 0.00099, price_out: 0.00099 },
+    Candidate { name: "llama-3.2-90b", family: "llama", cap: 0.80, slope: 0.28, reason_pen: 0.15, verbosity: 1.00, noise: 0.036, price_in: 0.00072, price_out: 0.00072 },
+    Candidate { name: "llama-3.3-70b", family: "llama", cap: 0.83, slope: 0.25, reason_pen: 0.12, verbosity: 1.00, noise: 0.036, price_in: 0.00072, price_out: 0.00072 },
+    Candidate { name: "nova-lite", family: "nova", cap: 0.64, slope: 0.50, reason_pen: 0.30, verbosity: 0.85, noise: 0.03, price_in: 0.00006, price_out: 0.00024 },
+    Candidate { name: "nova-pro", family: "nova", cap: 0.80, slope: 0.28, reason_pen: 0.14, verbosity: 1.00, noise: 0.03, price_in: 0.0008, price_out: 0.0032 },
+];
+pub const N_CANDIDATES: usize = CANDIDATES.len();
+pub const FAMILIES: [&str; 3] = ["claude", "llama", "nova"];
+
+// Reward surface: quality deficit only when task demand exceeds model
+// capability (see python/compile/synth.py for the rationale).
+const DEMAND_REASON_W: f64 = 0.5;
+const REWARD_BASE_T: f64 = 2.0;
+const DEFICIT_SLOPE: f64 = 5.0;
+const AFFINITY_AMPL: f64 = 0.08;
+
+const STREAM_PROMPT: u64 = 1;
+const STREAM_REWARD: u64 = 2;
+const STREAM_AFFINITY: u64 = 3;
+
+pub fn family_candidate_indices(family: &str) -> Vec<usize> {
+    CANDIDATES
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.family == family)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// A synthetic prompt with its generative latent state.
+#[derive(Clone, Debug)]
+pub struct Prompt {
+    pub split: u64,
+    pub index: u64,
+    pub domain: usize,
+    pub difficulty: f64,
+    pub reasoning: f64,
+    pub tokens: Vec<u32>,
+}
+
+impl Prompt {
+    pub fn text(&self) -> String {
+        let words: Vec<String> = self.tokens.iter().map(|t| format!("w{t}")).collect();
+        words.join(" ")
+    }
+}
+
+/// Deterministic prompt/reward generator under a single world seed.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthWorld {
+    pub seed: u64,
+}
+
+impl Default for SynthWorld {
+    fn default() -> Self {
+        SynthWorld { seed: 20_250_710 }
+    }
+}
+
+impl SynthWorld {
+    pub fn new(seed: u64) -> Self {
+        SynthWorld { seed }
+    }
+
+    fn mixture(&self, split: u64) -> [f64; 10] {
+        match split {
+            SPLIT_OOD_MSMARCO => OOD_MIX_MSMARCO,
+            SPLIT_OOD_NVCHAT => OOD_MIX_NVCHAT,
+            _ => {
+                let mut w = [0.0; 10];
+                for (i, d) in DOMAINS.iter().enumerate() {
+                    w[i] = d.1;
+                }
+                w
+            }
+        }
+    }
+
+    pub fn sample_prompt(&self, split: u64, index: u64) -> Prompt {
+        let mut rng = Rng::new(substream(
+            self.seed,
+            STREAM_PROMPT,
+            split.wrapping_mul(0x1_0000_0000).wrapping_add(index),
+        ));
+        let weights = self.mixture(split);
+        let r = rng.next_f64();
+        let mut domain = N_DOMAINS - 1;
+        let mut acc = 0.0;
+        for (i, w) in weights.iter().enumerate() {
+            acc += w;
+            if r < acc {
+                domain = i;
+                break;
+            }
+        }
+        let (_, _, dmean, dspread, rmax, lmin, lmax) = DOMAINS[domain];
+        let mut u = dmean + dspread * (2.0 * rng.next_f64() - 1.0);
+        if split == SPLIT_OOD_MSMARCO || split == SPLIT_OOD_NVCHAT {
+            u += OOD_DIFF_OFFSET;
+        }
+        u = u.clamp(0.0, 1.0);
+        let g = rmax * rng.next_f64();
+        let length = lmin + rng.next_range(lmax - lmin + 1);
+
+        let diff_band = ((u * DIFF_BANDS as f64) as u32).min(DIFF_BANDS - 1);
+        let reason_band = ((g * REASON_BANDS as f64) as u32).min(REASON_BANDS - 1);
+
+        let mut tokens = Vec::with_capacity(length as usize);
+        tokens.push(DOMAIN_BASE + domain as u32 * DOMAIN_BLOCK + rng.next_range(DOMAIN_BLOCK as u64) as u32);
+        for _ in 0..length - 1 {
+            let cls = rng.next_f64();
+            let t = if cls < P_DOMAIN {
+                DOMAIN_BASE + domain as u32 * DOMAIN_BLOCK + rng.next_range(DOMAIN_BLOCK as u64) as u32
+            } else if cls < P_DIFF {
+                DIFF_BASE + diff_band * DIFF_BLOCK + rng.next_range(DIFF_BLOCK as u64) as u32
+            } else if cls < P_REASON {
+                REASON_BASE + reason_band * REASON_BLOCK + rng.next_range(REASON_BLOCK as u64) as u32
+            } else {
+                FILLER_BASE + rng.next_range(FILLER_COUNT as u64) as u32
+            };
+            tokens.push(t);
+        }
+        Prompt { split, index, domain, difficulty: u, reasoning: g, tokens }
+    }
+
+    /// Deterministic per-(candidate, domain) affinity in [-A, A].
+    pub fn domain_affinity(&self, cand_idx: usize, domain: usize) -> f64 {
+        let s = substream(self.seed, STREAM_AFFINITY, (cand_idx * 64 + domain) as u64);
+        let mut r = Rng::new(s);
+        AFFINITY_AMPL * (2.0 * r.next_f64() - 1.0)
+    }
+
+    /// Noise-free reward surface: all models share a quality ceiling; a
+    /// model only loses quality once task demand exceeds its capability.
+    /// Bit-exact port of python `true_reward_mean`.
+    pub fn true_reward_mean(&self, prompt: &Prompt, cand_idx: usize) -> f64 {
+        let c = &CANDIDATES[cand_idx];
+        let aff = self.domain_affinity(cand_idx, prompt.domain);
+        let demand = prompt.difficulty + DEMAND_REASON_W * prompt.reasoning;
+        let mut deficit = demand - c.cap;
+        if deficit < 0.0 {
+            deficit = 0.0;
+        }
+        let t = REWARD_BASE_T - DEFICIT_SLOPE * (1.0 + c.slope) * deficit;
+        // Affinity = domain-predictable style preference of the reward
+        // model, additive at the quality level (see python synth.py).
+        squash(t) + aff
+    }
+
+    fn reward_stream(&self, prompt: &Prompt, cand_idx: usize) -> Rng {
+        Rng::new(substream(
+            self.seed,
+            STREAM_REWARD,
+            prompt
+                .split
+                .wrapping_mul(0x1_0000_0000)
+                .wrapping_add(prompt.index)
+                .wrapping_mul(16)
+                .wrapping_add(cand_idx as u64),
+        ))
+    }
+
+    /// Observed reward: surface + per-(prompt, candidate) uniform noise —
+    /// the role of the Skywork RM score.
+    pub fn reward(&self, prompt: &Prompt, cand_idx: usize) -> f64 {
+        let base = self.true_reward_mean(prompt, cand_idx);
+        let mut rng = self.reward_stream(prompt, cand_idx);
+        let noise = CANDIDATES[cand_idx].noise;
+        (base + noise * (2.0 * rng.next_f64() - 1.0)).clamp(0.0, 1.0)
+    }
+
+    /// Simulated response length in tokens (drives Eq. 11 output cost).
+    pub fn output_length(&self, prompt: &Prompt, cand_idx: usize) -> u32 {
+        let c = &CANDIDATES[cand_idx];
+        let mut rng = self.reward_stream(prompt, cand_idx);
+        let _ = rng.next_f64(); // skip the reward-noise draw (same stream)
+        let jitter = 0.8 + 0.4 * rng.next_f64();
+        let o = c.verbosity * (30.0 + 100.0 * prompt.difficulty + 50.0 * prompt.reasoning) * jitter;
+        (o as i64).max(4) as u32
+    }
+
+    /// Live-traffic prompt (rust-only stream; used by server benches).
+    pub fn live_prompt(&self, index: u64) -> Prompt {
+        self.sample_prompt(SPLIT_LIVE, index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> SynthWorld {
+        SynthWorld::default()
+    }
+
+    #[test]
+    fn prompt_deterministic() {
+        let a = world().sample_prompt(SPLIT_TEST, 42);
+        let b = world().sample_prompt(SPLIT_TEST, 42);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.difficulty, b.difficulty);
+        let c = world().sample_prompt(SPLIT_TEST, 43);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab_and_length_in_domain_range() {
+        let w = world();
+        for i in 0..500 {
+            let p = w.sample_prompt(SPLIT_TEST, i);
+            let (_, _, _, _, _, lmin, lmax) = DOMAINS[p.domain];
+            assert!((p.tokens.len() as u64) >= lmin && (p.tokens.len() as u64) <= lmax);
+            for &t in &p.tokens {
+                assert!((t as usize) < VOCAB_SIZE && t != PAD_ID);
+            }
+        }
+    }
+
+    #[test]
+    fn rewards_bounded_and_ordered_on_average() {
+        let w = world();
+        // claude-3.5-sonnet-v2 should beat claude-3-haiku on average.
+        let (mut strong, mut weak) = (0.0, 0.0);
+        for i in 0..500 {
+            let p = w.sample_prompt(SPLIT_TEST, i);
+            for c in 0..N_CANDIDATES {
+                let r = w.reward(&p, c);
+                assert!((0.0..=1.0).contains(&r));
+            }
+            strong += w.reward(&p, 3);
+            weak += w.reward(&p, 0);
+        }
+        assert!(strong > weak, "sonnet {strong} vs haiku {weak}");
+    }
+
+    #[test]
+    fn easy_prompts_tie_hard_prompts_separate() {
+        let w = world();
+        let mut easy_gap = 0.0;
+        let mut hard_gap = 0.0;
+        let (mut n_easy, mut n_hard) = (0, 0);
+        for i in 0..2000 {
+            let p = w.sample_prompt(SPLIT_TEST, i);
+            let gap = w.true_reward_mean(&p, 3) - w.true_reward_mean(&p, 0);
+            if p.difficulty < 0.2 {
+                easy_gap += gap;
+                n_easy += 1;
+            } else if p.difficulty > 0.7 {
+                hard_gap += gap;
+                n_hard += 1;
+            }
+        }
+        assert!(n_easy > 10 && n_hard > 10);
+        assert!(hard_gap / n_hard as f64 > 2.0 * (easy_gap / n_easy as f64));
+    }
+
+    #[test]
+    fn output_length_scales_with_difficulty() {
+        let w = world();
+        let mut lens: Vec<(f64, u32)> = (0..300)
+            .map(|i| {
+                let p = w.sample_prompt(SPLIT_TEST, i);
+                (p.difficulty, w.output_length(&p, 3))
+            })
+            .collect();
+        lens.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let lo: f64 = lens[..50].iter().map(|x| x.1 as f64).sum::<f64>() / 50.0;
+        let hi: f64 = lens[lens.len() - 50..].iter().map(|x| x.1 as f64).sum::<f64>() / 50.0;
+        assert!(hi > lo, "output length should grow with difficulty");
+    }
+
+    #[test]
+    fn family_indices() {
+        assert_eq!(family_candidate_indices("claude"), vec![0, 1, 2, 3]);
+        assert_eq!(family_candidate_indices("llama"), vec![4, 5, 6, 7, 8]);
+        assert_eq!(family_candidate_indices("nova"), vec![9, 10]);
+    }
+
+    #[test]
+    fn ood_harder_than_id() {
+        let w = world();
+        let id_mean: f64 = (0..500)
+            .map(|i| w.sample_prompt(SPLIT_TEST, i).difficulty)
+            .sum::<f64>()
+            / 500.0;
+        let ood_mean: f64 = (0..500)
+            .map(|i| w.sample_prompt(SPLIT_OOD_MSMARCO, i).difficulty)
+            .sum::<f64>()
+            / 500.0;
+        assert!(ood_mean > id_mean);
+    }
+}

@@ -1,0 +1,84 @@
+//! Prompt tokenizer — bit-identical to the python build side.
+//!
+//! The synthetic vocabulary is `w{id}` words (id < VOCAB_SIZE); anything
+//! else (real-world text hitting the server) is hashed into the filler
+//! band so the router still produces a deterministic, meaningful
+//! embedding for out-of-vocabulary traffic.
+
+use crate::synth::{FILLER_BASE, FILLER_COUNT, VOCAB_SIZE};
+use crate::util::rng::mix64;
+
+/// Tokenize prompt text into vocabulary ids (no padding/truncation).
+pub fn tokenize(text: &str) -> Vec<u32> {
+    text.split_whitespace().map(token_of).collect()
+}
+
+fn token_of(word: &str) -> u32 {
+    if let Some(num) = word.strip_prefix('w') {
+        if !num.is_empty() && num.bytes().all(|b| b.is_ascii_digit()) && num.len() <= 6 {
+            if let Ok(id) = num.parse::<u32>() {
+                if (id as usize) < VOCAB_SIZE && id != 0 {
+                    return id;
+                }
+            }
+        }
+    }
+    // OOV: stable hash into the filler band.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in word.bytes() {
+        h = mix64(h ^ b as u64);
+    }
+    FILLER_BASE + (h % FILLER_COUNT as u64) as u32
+}
+
+/// Pad/truncate ids to `seq` and build the f32 attention mask the QE
+/// artifacts expect.
+pub fn pad_to(ids: &[u32], seq: usize) -> (Vec<i32>, Vec<f32>) {
+    let n = ids.len().min(seq);
+    let mut out = vec![0i32; seq];
+    let mut mask = vec![0f32; seq];
+    for i in 0..n {
+        out[i] = ids[i] as i32;
+        mask[i] = 1.0;
+    }
+    (out, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::{SynthWorld, SPLIT_TEST};
+
+    #[test]
+    fn roundtrip_with_synth_text() {
+        let w = SynthWorld::default();
+        for i in 0..200 {
+            let p = w.sample_prompt(SPLIT_TEST, i);
+            assert_eq!(tokenize(&p.text()), p.tokens, "prompt {i}");
+        }
+    }
+
+    #[test]
+    fn oov_is_deterministic_and_in_filler_band() {
+        let a = tokenize("hello world hello");
+        assert_eq!(a[0], a[2]);
+        for &t in &a {
+            assert!(t >= FILLER_BASE && (t as usize) < VOCAB_SIZE);
+        }
+        // w-form with out-of-range id is OOV, not a panic
+        let b = tokenize("w99999 w2048 w0 wabc");
+        for &t in &b {
+            assert!(t >= FILLER_BASE);
+        }
+    }
+
+    #[test]
+    fn pad_and_mask() {
+        let (ids, mask) = pad_to(&[5, 6, 7], 6);
+        assert_eq!(ids, vec![5, 6, 7, 0, 0, 0]);
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        let (ids, mask) = pad_to(&[5, 6, 7], 2);
+        assert_eq!(ids, vec![5, 6]);
+        assert_eq!(mask, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,98 @@
+//! In-repo bench harness (criterion is not in the offline registry).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use this
+//! module: warmup iterations, timed iterations into a [`Histogram`], and
+//! markdown-style table printing so each bench reproduces one paper table.
+
+use std::time::Instant;
+
+use super::hist::Histogram;
+
+/// Run `f` with `warmup` untimed and `iters` timed iterations.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Histogram {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed());
+    }
+    h
+}
+
+/// Markdown table printer: every paper-table bench reports through this so
+/// output is uniform and easy to diff against EXPERIMENTS.md.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n## {}", self.title);
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cols.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts() {
+        let h = time_it(2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(h.count(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

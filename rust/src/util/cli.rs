@@ -1,0 +1,102 @@
+//! Tiny CLI argument parser (no clap in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list; `flag_names` are options that do
+    /// not consume a value.
+    pub fn parse_from(tokens: &[String], flag_names: &[&str]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    a.flags.push(rest.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    a.options.insert(rest.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn parse(flag_names: &[&str]) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_from(&tokens, flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = Args::parse_from(
+            &toks(&["eval", "--table", "3", "--fast", "--tau=0.5", "extra"]),
+            &["fast"],
+        );
+        assert_eq!(a.positional, vec!["eval", "extra"]);
+        assert_eq!(a.get("table"), Some("3"));
+        assert_eq!(a.get("tau"), Some("0.5"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("table", 0).unwrap(), 3);
+        assert_eq!(a.f64_or("tau", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse_from(&toks(&["--verbose"]), &[]);
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Log-bucketed latency histogram (HDR-style) for P50/P90/P99 reporting —
+//! the Table 5 measurement substrate.
+//!
+//! Buckets are exponential with 64 sub-buckets per octave over a
+//! nanosecond scale, giving <1.6% relative quantile error across
+//! 100ns .. ~5min — more than enough resolution for ms-scale latencies.
+
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u128,
+    max_ns: u64,
+    min_ns: u64,
+}
+
+const SUB_BITS: u32 = 6; // 64 sub-buckets per octave
+const SUB: u64 = 1 << SUB_BITS;
+
+fn bucket_of(v: u64) -> usize {
+    let v = v.max(1);
+    let msb = 63 - v.leading_zeros() as u64;
+    if msb < SUB_BITS as u64 {
+        return v as usize;
+    }
+    let shift = msb - SUB_BITS as u64;
+    let sub = (v >> shift) - SUB;
+    ((msb - SUB_BITS as u64 + 1) * SUB + sub) as usize
+}
+
+fn bucket_mid(b: usize) -> u64 {
+    let b = b as u64;
+    if b < SUB {
+        return b;
+    }
+    let oct = (b / SUB) - 1;
+    let sub = b % SUB;
+    let lo = (SUB + sub) << oct;
+    let hi = (SUB + sub + 1) << oct;
+    (lo + hi) / 2
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; (64 - SUB_BITS as usize + 1) * SUB as usize],
+            total: 0,
+            sum_ns: 0,
+            max_ns: 0,
+            min_ns: u64::MAX,
+        }
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let b = bucket_of(ns);
+        if b < self.counts.len() {
+            self.counts[b] += 1;
+        }
+        self.total += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+        self.min_ns = self.min_ns.min(ns);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.total as f64
+    }
+
+    /// Quantile in nanoseconds, q in [0,1].
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return bucket_mid(b).min(self.max_ns).max(self.min_ns.min(self.max_ns));
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.quantile_ns(0.50) as f64 / 1e6
+    }
+    pub fn p90_ms(&self) -> f64 {
+        self.quantile_ns(0.90) as f64 / 1e6
+    }
+    pub fn p99_ms(&self) -> f64 {
+        self.quantile_ns(0.99) as f64 / 1e6
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns() / 1e6
+    }
+    pub fn max_ms(&self) -> f64 {
+        self.max_ns as f64 / 1e6
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_monotone_and_bounded() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 1000); // 1us .. 10ms
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p90 = h.quantile_ns(0.9);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // within ~2% of the true quantiles
+        assert!((p50 as f64 - 5_000_000.0).abs() / 5_000_000.0 < 0.05, "{p50}");
+        assert!((p99 as f64 - 9_900_000.0).abs() / 9_900_000.0 < 0.05, "{p99}");
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ns(0.9), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for i in 1..1000u64 {
+            a.record_ns(i * 100);
+            c.record_ns(i * 100);
+        }
+        for i in 1..1000u64 {
+            b.record_ns(i * 1000);
+            c.record_ns(i * 1000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile_ns(0.5), c.quantile_ns(0.5));
+    }
+}

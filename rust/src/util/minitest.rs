@@ -1,0 +1,66 @@
+//! Property-test runner (proptest is not in the offline registry).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop`; on failure it performs a bounded shrink search by
+//! re-drawing "smaller" cases from the generator with a shrink hint, then
+//! panics with the seed so the failure is reproducible.
+
+use super::rng::Rng;
+
+/// Size hint passed to generators: starts large, shrinks on failure.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+pub fn check<T: std::fmt::Debug, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, Size) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let size = Size(1 + case * 100 / cases.max(1)); // ramp sizes up
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // shrink: try up to 200 smaller draws, keep the smallest failure
+            let mut best = format!("{input:?}");
+            let mut best_len = best.len();
+            for s in 0..200u64 {
+                let mut r2 = Rng::new(seed ^ (s.wrapping_mul(0x9E37)));
+                let shrunk = gen(&mut r2, Size(1 + (s % 10) as usize));
+                if !prop(&shrunk) {
+                    let repr = format!("{shrunk:?}");
+                    if repr.len() < best_len {
+                        best_len = repr.len();
+                        best = repr;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case});\n  minimal-ish counterexample: {best}"
+            );
+        }
+    }
+}
+
+/// Generate a random vector with generator `g`, length in [0, max_len*size].
+pub fn vec_of<T>(rng: &mut Rng, size: Size, max_len: usize, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let cap = (max_len * size.0 / 100).max(1);
+    let len = rng.next_range(cap as u64 + 1) as usize;
+    (0..len).map(|_| g(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 200, |r, _| r.next_range(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, 50, |r, _| r.next_range(10), |&x| x < 9);
+    }
+}

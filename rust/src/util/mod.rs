@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! RNG, JSON, thread pool, CLI parsing, latency histograms, and the
+//! bench / property-test harnesses used across the crate.
+
+pub mod bench;
+pub mod cli;
+pub mod hist;
+pub mod json;
+pub mod minitest;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,308 @@
+//! Integration tests over real artifacts: registry → runtime → QE service
+//! → coordinator → eval, asserting the paper's *shape* claims.
+//!
+//! All tests no-op (pass) when `artifacts/` has not been built yet so that
+//! `cargo test` works pre-`make artifacts`; run `make artifacts` first for
+//! the real signal.
+
+use std::sync::Arc;
+
+use ipr::coordinator::gating::GatingStrategy;
+use ipr::coordinator::{Router, RouterConfig};
+use ipr::eval::arqgc::{bounded_arqgc, csr_at_quality, tau_sweep};
+use ipr::eval::baselines;
+use ipr::eval::dataset::{self, FamilyView};
+use ipr::eval::metrics;
+use ipr::qe::{BatcherConfig, QeService};
+use ipr::registry::Registry;
+use ipr::runtime::Engine;
+
+fn artifacts() -> Option<Arc<Registry>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Registry::load("artifacts").expect("manifest parses")))
+}
+
+#[test]
+fn registry_has_full_model_grid() {
+    let Some(reg) = artifacts() else { return };
+    for bb in ["roberta_sim", "stella_sim", "qwen_sim", "qwen_emb_sim"] {
+        for fam in ["claude", "llama", "nova"] {
+            let m = reg.family_qe(fam, bb).expect("model present");
+            assert!(!m.variants.is_empty());
+            assert_eq!(m.candidates.len(), reg.family_indices(fam).len());
+        }
+    }
+    assert_eq!(reg.candidates.len(), 11);
+    assert!(reg.model("qe_unified_stella_sim").unwrap().unified);
+    assert!(reg.model("qe_claude_adapter_stella_sim").unwrap().adapter);
+}
+
+/// THE AOT contract: the rust PJRT path must reproduce python's
+/// predictions on the golden batch through HLO text + npz weights.
+#[test]
+fn runtime_reproduces_python_golden_predictions() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let rows = dataset::load(&reg, "test", 4).unwrap();
+    for model_id in [
+        "qe_claude_stella_sim",
+        "qe_llama_roberta_sim",
+        "qe_nova_qwen_sim",
+        "qe_claude_adapter_stella_sim",
+    ] {
+        let entry = reg.model(model_id).unwrap().clone();
+        assert_eq!(entry.golden_pred.len(), 4, "{model_id}");
+        let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
+        let toks: Vec<Vec<u32>> = rows.iter().map(|r| r.tokens.clone()).collect();
+        let out = model.predict(&toks, "xla").unwrap();
+        for (i, row) in out.scores.iter().enumerate() {
+            for (j, &got) in row.iter().enumerate() {
+                let want = entry.golden_pred[i][j] as f32;
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "{model_id} golden mismatch [{i}][{j}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+/// L1 composition proof: the pallas-kernel artifact and the pure-XLA
+/// artifact agree end-to-end through the rust runtime.
+#[test]
+fn pallas_and_xla_artifacts_agree() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    let model = engine.load_model(&reg, &entry, &["xla", "pallas"]).unwrap();
+    let rows = dataset::load(&reg, "test", 8).unwrap();
+    for r in &rows {
+        let a = model.predict(&[r.tokens.clone()], "xla").unwrap();
+        let b = model.predict(&[r.tokens.clone()], "pallas").unwrap();
+        for (x, y) in a.scores[0].iter().zip(&b.scores[0]) {
+            assert!((x - y).abs() < 1e-4, "pallas/xla diverge: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn batch_bucket_selection_consistent_predictions() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
+    let rows = dataset::load(&reg, "test", 8).unwrap();
+    // batch of 8 vs one-by-one must agree
+    let toks: Vec<Vec<u32>> = rows.iter().map(|r| r.tokens.clone()).collect();
+    let batched = model.predict(&toks, "xla").unwrap();
+    assert_eq!(batched.bucket.0, 8);
+    for (i, t) in toks.iter().enumerate() {
+        let single = model.predict(&[t.clone()], "xla").unwrap();
+        assert_eq!(single.bucket.0, 1);
+        for (a, b) in batched.scores[i].iter().zip(&single.scores[0]) {
+            assert!((a - b).abs() < 1e-4, "batch/single diverge");
+        }
+    }
+}
+
+#[test]
+fn qe_service_batches_concurrent_requests() {
+    let Some(reg) = artifacts() else { return };
+    let svc = QeService::start(
+        reg.clone(),
+        "qe_claude_stella_sim",
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(30),
+            kind: "xla".into(),
+            cache_cap: 0,
+        },
+    )
+    .unwrap();
+    let rows = dataset::load(&reg, "test", 32).unwrap();
+    let mut handles = Vec::new();
+    for r in rows {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || svc.score(&r.tokens).unwrap()));
+    }
+    for h in handles {
+        let s = h.join().unwrap();
+        assert_eq!(s.len(), 4);
+    }
+    let sizes = svc.batch_sizes.lock().unwrap().clone();
+    assert!(
+        sizes.iter().any(|&s| s > 1),
+        "no coalescing happened: {sizes:?}"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn score_cache_hits_on_repeat() {
+    let Some(reg) = artifacts() else { return };
+    let svc = QeService::start(reg.clone(), "qe_claude_stella_sim", BatcherConfig::default())
+        .unwrap();
+    let rows = dataset::load(&reg, "test", 2).unwrap();
+    let a = svc.score(&rows[0].tokens).unwrap();
+    let b = svc.score(&rows[0].tokens).unwrap();
+    assert_eq!(a, b);
+    let (hits, _misses) = svc.cache_stats();
+    assert!(hits >= 1);
+    svc.shutdown();
+}
+
+#[test]
+fn router_tau_extremes_and_monotonicity() {
+    let Some(reg) = artifacts() else { return };
+    let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
+    let rows = dataset::load(&reg, "test", 12).unwrap();
+    let cheapest = router
+        .costs
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    for r in &rows {
+        let at0 = router.handle_tokens(&r.tokens, Some(0.0), false, None).unwrap();
+        let at1 = router.handle_tokens(&r.tokens, Some(1.0), false, None).unwrap();
+        let c0 = router.costs[at0.decision.chosen];
+        let c1 = router.costs[at1.decision.chosen];
+        assert!(c1 <= c0, "τ=1 must not cost more than τ=0");
+        assert_eq!(at1.decision.chosen, cheapest, "τ=1 routes to the cheapest model");
+        // monotone in τ
+        let mut prev = f64::MAX;
+        for i in 0..=4 {
+            let t = i as f64 / 4.0;
+            let o = router.handle_tokens(&r.tokens, Some(t), false, None).unwrap();
+            let c = router.costs[o.decision.chosen];
+            assert!(c <= prev + 1e-12);
+            prev = c;
+        }
+    }
+    router.qe.shutdown();
+}
+
+/// Paper shape claims on a real (subsampled) test set:
+/// oracle > IPR > random (Table 3) and CSR(100%) > 0 (Table 4).
+#[test]
+fn routing_shape_claims_hold() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let rows = dataset::load(&reg, "test", 600).unwrap();
+    let view = FamilyView::new(&reg, &rows, reg.family_indices("claude"));
+
+    let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
+    let pred = ipr::eval::scores::score_rows(&model, &rows).unwrap();
+    let truth = view.true_scores();
+
+    // quality estimation sane
+    let mae = metrics::mae(&pred, &truth);
+    assert!(mae < 0.12, "MAE too high: {mae}");
+    let top1 = metrics::topk_accuracy(&pred, &truth, 1);
+    assert!(top1 > 0.3, "top-1 {top1}");
+
+    let ipr_pts = tau_sweep(&view, &reg, &pred, GatingStrategy::DynamicMax, 0.0, 20);
+    let oracle_pts = tau_sweep(&view, &reg, &truth, GatingStrategy::DynamicMax, 0.0, 20);
+    let b_ipr = bounded_arqgc(&ipr_pts);
+    let b_oracle = bounded_arqgc(&oracle_pts);
+    let b_random = bounded_arqgc(&baselines::random_curve(&view, &reg, 3, 20));
+    assert!(b_oracle >= b_ipr - 0.02, "oracle {b_oracle} vs ipr {b_ipr}");
+    assert!(b_ipr > b_random + 0.05, "ipr {b_ipr} vs random {b_random}");
+
+    // CSR at 100% parity exists
+    let fine = tau_sweep(&view, &reg, &pred, GatingStrategy::DynamicMax, 0.0, 100);
+    let (csr, pt) = csr_at_quality(&view, &reg, &fine, 1.0).expect("100% point reachable");
+    assert!(csr > 0.05, "CSR(100%)={csr}");
+    assert!(pt.alpha <= 1.0);
+}
+
+/// §D adapter claim: old-candidate predictions preserved, new candidate
+/// learned.
+#[test]
+fn adapter_preserves_old_candidates() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let rows = dataset::load(&reg, "test", 64).unwrap();
+    let base_e = reg.model("qe_claude3_stella_sim_base").unwrap().clone();
+    let ada_e = reg.model("qe_claude_adapter_stella_sim").unwrap().clone();
+    let base = engine.load_model(&reg, &base_e, &["xla"]).unwrap();
+    let ada = engine.load_model(&reg, &ada_e, &["xla"]).unwrap();
+    let b = ipr::eval::scores::score_rows(&base, &rows).unwrap();
+    let a = ipr::eval::scores::score_rows(&ada, &rows).unwrap();
+    let mut drift = 0.0f64;
+    let mut n = 0;
+    for (rb, ra) in b.iter().zip(&a) {
+        assert_eq!(ra.len(), rb.len() + 1);
+        for j in 0..rb.len() {
+            drift += (rb[j] as f64 - ra[j] as f64).abs();
+            n += 1;
+        }
+    }
+    let drift = drift / n as f64;
+    assert!(drift < 0.02, "old-candidate drift too large: {drift}");
+    // new head MAE vs oracle
+    let new_global = *ada_e.candidates.last().unwrap();
+    let mae_new: f64 = rows
+        .iter()
+        .zip(&a)
+        .map(|(r, s)| (*s.last().unwrap() as f64 - r.rewards[new_global]).abs())
+        .sum::<f64>()
+        / rows.len() as f64;
+    assert!(mae_new < 0.12, "new candidate not learned: {mae_new}");
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection: the coordinator must fail loudly and cleanly, not
+// serve garbage.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_load_missing_dir_errors() {
+    assert!(Registry::load("/nonexistent/artifacts").is_err());
+}
+
+#[test]
+fn load_model_with_bad_weights_path_errors() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let mut entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    entry.weights = "weights/does_not_exist.npz".into();
+    assert!(engine.load_model(&reg, &entry, &["xla"]).is_err());
+}
+
+#[test]
+fn load_model_with_mismatched_param_names_errors() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let mut entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    entry.param_names[0] = "zzz_not_a_param".into();
+    match engine.load_model(&reg, &entry, &["xla"]) {
+        Ok(_) => panic!("expected weight-name mismatch error"),
+        Err(err) => assert!(format!("{err:#}").contains("mismatch"), "{err:#}"),
+    }
+}
+
+#[test]
+fn load_model_with_corrupt_hlo_errors() {
+    let Some(reg) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let mut entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    let bad = reg.root.join("hlo/corrupt_test.hlo.txt");
+    std::fs::write(&bad, "HloModule garbage\nthis is not hlo\n").unwrap();
+    for v in entry.variants.iter_mut() {
+        v.path = "hlo/corrupt_test.hlo.txt".into();
+    }
+    assert!(engine.load_model(&reg, &entry, &["xla"]).is_err());
+    let _ = std::fs::remove_file(&bad);
+}
+
+#[test]
+fn qe_service_unknown_model_errors() {
+    let Some(reg) = artifacts() else { return };
+    assert!(QeService::start(reg, "qe_nonexistent", BatcherConfig::default()).is_err());
+}

@@ -1,0 +1,90 @@
+//! Cross-language parity: the rust SynthWorld/tokenizer must agree with
+//! the python build side *bit for bit* — training labels and serving/eval
+//! labels come from the same distribution or the whole reproduction is
+//! invalid.
+//!
+//! Two independent checks:
+//! 1. the golden file (64 prompts dumped by aot.py) re-derived exactly;
+//! 2. every row of the exported test split re-derived exactly.
+
+use ipr::registry::Registry;
+use ipr::synth::{SynthWorld, N_CANDIDATES};
+use ipr::tokenizer;
+use ipr::util::json::parse;
+
+fn registry() -> Option<Registry> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Registry::load("artifacts").unwrap())
+}
+
+#[test]
+fn golden_file_bit_exact() {
+    let Some(reg) = registry() else { return };
+    let text = std::fs::read_to_string(reg.abs("data/golden_parity.json")).unwrap();
+    let j = parse(&text).unwrap();
+    let world = SynthWorld::new(j.req("seed").unwrap().as_i64().unwrap() as u64);
+    let rows = j.req("rows").unwrap();
+    let rows = rows.as_arr().unwrap();
+    assert!(rows.len() >= 32);
+    for row in rows {
+        let split = row.req("split").unwrap().as_i64().unwrap() as u64;
+        let index = row.req("index").unwrap().as_i64().unwrap() as u64;
+        let p = world.sample_prompt(split, index);
+        let want_tokens: Vec<u32> = row
+            .req("tokens")
+            .unwrap()
+            .usizes()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u32)
+            .collect();
+        assert_eq!(p.tokens, want_tokens, "tokens @{index}");
+        // f64 fields must round-trip EXACTLY (shortest-repr JSON)
+        assert_eq!(p.difficulty, row.req("difficulty").unwrap().as_f64().unwrap());
+        assert_eq!(p.reasoning, row.req("reasoning").unwrap().as_f64().unwrap());
+        assert_eq!(p.domain as i64, row.req("domain").unwrap().as_i64().unwrap());
+        let rewards = row.req("rewards").unwrap().f64s().unwrap();
+        let out_lens = row.req("out_lens").unwrap().usizes().unwrap();
+        assert_eq!(rewards.len(), N_CANDIDATES);
+        for c in 0..N_CANDIDATES {
+            assert_eq!(world.reward(&p, c), rewards[c], "reward @{index} cand {c}");
+            assert_eq!(world.output_length(&p, c) as usize, out_lens[c], "outlen @{index} cand {c}");
+        }
+    }
+}
+
+#[test]
+fn exported_test_split_bit_exact() {
+    let Some(reg) = registry() else { return };
+    let entry = reg.dataset("test").unwrap();
+    let rows = ipr::eval::dataset::load(&reg, "test", 500).unwrap();
+    let world = SynthWorld::new(reg.world_seed);
+    for r in &rows {
+        let p = world.sample_prompt(entry.split_id, r.id as u64);
+        // exported tokens are truncated at seq_len=128
+        let trunc: Vec<u32> = p.tokens.iter().take(128).cloned().collect();
+        assert_eq!(r.tokens, trunc, "row {}", r.id);
+        assert_eq!(r.in_len, p.tokens.len());
+        assert_eq!(r.domain, p.domain);
+        assert_eq!(r.difficulty, p.difficulty);
+        for c in 0..N_CANDIDATES {
+            // rewards were stored as f32 by the python dataset builder
+            assert_eq!(r.rewards[c] as f32, world.reward(&p, c) as f32, "row {} cand {c}", r.id);
+            assert_eq!(r.out_lens[c], world.output_length(&p, c) as usize);
+        }
+    }
+}
+
+#[test]
+fn tokenizer_matches_generator_on_all_splits() {
+    let world = SynthWorld::default();
+    for split in [0u64, 1, 2, 3, 4, 9] {
+        for i in 0..100u64 {
+            let p = world.sample_prompt(split, i);
+            assert_eq!(tokenizer::tokenize(&p.text()), p.tokens);
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Property-based tests (in-repo `minitest` runner; the offline registry
+//! has no proptest) over the coordinator invariants, the JSON substrate,
+//! the histogram, the tokenizer, and the ARQGC metric.
+
+use ipr::coordinator::gating::{route_decision, GatingStrategy};
+use ipr::eval::arqgc::{bounded_arqgc, CurvePoint};
+use ipr::synth::{SynthWorld, VOCAB_SIZE};
+use ipr::tokenizer;
+use ipr::util::hist::Histogram;
+use ipr::util::json::{parse, Json};
+use ipr::util::minitest::{check, Size};
+use ipr::util::rng::Rng;
+
+fn gen_scores(r: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| r.next_f64() as f32).collect()
+}
+
+fn gen_costs(r: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| 0.0001 + 0.02 * r.next_f64()).collect()
+}
+
+/// Routing invariants (Algorithm 1), fuzzed over score/cost vectors,
+/// tolerances, margins and all four strategies.
+#[test]
+fn prop_route_decision_invariants() {
+    check(
+        11,
+        3000,
+        |r, _s: Size| {
+            let n = 2 + r.next_range(9) as usize;
+            let scores = gen_scores(r, n);
+            let costs = gen_costs(r, n);
+            let tau = r.next_f64();
+            let delta = 0.1 * r.next_f64();
+            let strat = match r.next_range(4) {
+                0 => GatingStrategy::DynamicMax,
+                1 => GatingStrategy::DynamicMinMax,
+                2 => GatingStrategy::StaticDynamic { static_min: r.next_f64() },
+                _ => GatingStrategy::Static {
+                    static_min: r.next_f64() * 0.5,
+                    static_max: 0.5 + r.next_f64() * 0.5,
+                },
+            };
+            (scores, costs, tau, delta, strat)
+        },
+        |(scores, costs, tau, delta, strat)| {
+            let d = route_decision(scores, costs, *tau, *strat, *delta);
+            // chosen is a valid index
+            if d.chosen >= scores.len() {
+                return false;
+            }
+            // chosen is feasible, or the decision is a declared fallback
+            if !d.fallback && !d.feasible.contains(&d.chosen) {
+                return false;
+            }
+            // no feasible candidate is cheaper (tie-break: not higher score)
+            for &f in &d.feasible {
+                if costs[f] < costs[d.chosen] - 1e-12 {
+                    return false;
+                }
+                if (costs[f] - costs[d.chosen]).abs() < 1e-12 && scores[f] > scores[d.chosen] {
+                    return false;
+                }
+            }
+            // every feasible candidate meets the threshold
+            d.feasible.iter().all(|&f| scores[f] as f64 >= d.threshold)
+        },
+    );
+}
+
+/// τ-monotonicity of cost under DynamicMax (the user contract: larger
+/// tolerance never costs more).
+#[test]
+fn prop_tau_monotone_cost() {
+    check(
+        13,
+        800,
+        |r, _| {
+            let n = 2 + r.next_range(6) as usize;
+            (gen_scores(r, n), gen_costs(r, n))
+        },
+        |(scores, costs)| {
+            let mut prev = f64::MAX;
+            for i in 0..=20 {
+                let tau = i as f64 / 20.0;
+                let d = route_decision(scores, costs, tau, GatingStrategy::DynamicMax, 0.0);
+                if costs[d.chosen] > prev + 1e-12 {
+                    return false;
+                }
+                prev = costs[d.chosen];
+            }
+            true
+        },
+    );
+}
+
+/// JSON writer → parser round trip over random value trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.next_range(4) } else { r.next_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.next_range(2) == 0),
+            2 => Json::Num((r.next_f64() - 0.5) * 1e6),
+            3 => {
+                let len = r.next_range(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = r.next_range(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::Str(format!("{s}é\"\\\n"))
+            }
+            4 => Json::Arr((0..r.next_range(4)).map(|_| gen_value(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.next_range(4))
+                    .map(|i| (format!("k{i}"), gen_value(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        17,
+        500,
+        |r, _| gen_value(r, 3),
+        |v| match parse(&v.to_string()) {
+            Ok(re) => re == *v,
+            Err(_) => false,
+        },
+    );
+}
+
+/// Histogram quantiles are monotone in q and bracketed by min/max.
+#[test]
+fn prop_histogram_quantiles() {
+    check(
+        19,
+        300,
+        |r, s: Size| {
+            let n = 1 + (s.0 * 30).min(3000);
+            (0..n).map(|_| 1 + r.next_range(10_000_000_000)).collect::<Vec<u64>>()
+        },
+        |samples| {
+            let mut h = Histogram::new();
+            for &s in samples {
+                h.record_ns(s);
+            }
+            let mut prev = 0;
+            for i in 1..=10 {
+                let q = h.quantile_ns(i as f64 / 10.0);
+                if q < prev {
+                    return false;
+                }
+                prev = q;
+            }
+            let max = *samples.iter().max().unwrap();
+            // bucketed estimate must stay within one bucket (<2%) of max
+            h.quantile_ns(1.0) <= max + max / 32 + 1
+        },
+    );
+}
+
+/// Tokenizer: any generated prompt round-trips; any text at all maps into
+/// the vocabulary.
+#[test]
+fn prop_tokenizer_total() {
+    let world = SynthWorld::default();
+    check(
+        23,
+        400,
+        |r, _| r.next_u64(),
+        |&seed| {
+            let p = world.sample_prompt(9, seed % 100_000);
+            if tokenizer::tokenize(&p.text()) != p.tokens {
+                return false;
+            }
+            // arbitrary junk words never panic and stay in-vocab
+            let junk = format!("w{} x{} {}", seed, seed, "héllo wörld");
+            tokenizer::tokenize(&junk).iter().all(|&t| (t as usize) < VOCAB_SIZE)
+        },
+    );
+}
+
+/// Bounded-ARQGC ∈ [0,1] for arbitrary curves, and dominating curves never
+/// score lower.
+#[test]
+fn prop_arqgc_bounded_and_monotone() {
+    check(
+        29,
+        500,
+        |r, _| {
+            let n = 2 + r.next_range(20) as usize;
+            let pts: Vec<CurvePoint> = (0..n)
+                .map(|_| {
+                    let alpha = r.next_f64() * 1.2;
+                    let q = r.next_f64();
+                    CurvePoint { tau: 0.0, alpha, quality: q, q_norm: q }
+                })
+                .collect();
+            pts
+        },
+        |pts| {
+            let v = bounded_arqgc(pts);
+            if !(0.0..=1.0).contains(&v) {
+                return false;
+            }
+            // lift every point by +0.1 (clamped): score must not decrease
+            let lifted: Vec<CurvePoint> = pts
+                .iter()
+                .map(|p| CurvePoint { q_norm: (p.q_norm + 0.1).min(1.0), ..*p })
+                .collect();
+            bounded_arqgc(&lifted) + 1e-9 >= v
+        },
+    );
+}
+
+/// SynthWorld reward bounds under fuzzed (split, index, candidate).
+#[test]
+fn prop_world_rewards_bounded() {
+    let world = SynthWorld::default();
+    check(
+        31,
+        1500,
+        |r, _| (r.next_range(5), r.next_u64() % 1_000_000, r.next_range(11) as usize),
+        |&(split, idx, cand)| {
+            let p = world.sample_prompt(split, idx);
+            let r1 = world.reward(&p, cand);
+            let r2 = world.reward(&p, cand);
+            (0.0..=1.0).contains(&r1) && r1 == r2 && world.output_length(&p, cand) >= 4
+        },
+    );
+}

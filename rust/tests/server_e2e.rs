@@ -1,0 +1,109 @@
+//! End-to-end HTTP tests: full server (tokenize → QE → DO → backend) over
+//! a real compiled artifact, exercised through the wire protocol.
+
+use std::sync::Arc;
+
+use ipr::coordinator::{Router, RouterConfig};
+use ipr::registry::Registry;
+use ipr::server::{HttpClient, Server};
+use ipr::synth::SynthWorld;
+use ipr::util::json::parse;
+
+fn start() -> Option<(Server, HttpClient, Arc<Router>)> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let reg = Arc::new(Registry::load("artifacts").unwrap());
+    let router = Arc::new(Router::new(reg, RouterConfig::default()).unwrap());
+    let server = Server::start(router.clone(), "127.0.0.1:0", 2).unwrap();
+    let client = HttpClient::new(&server.addr);
+    Some((server, client, router))
+}
+
+#[test]
+fn health_and_registry() {
+    let Some((server, client, _r)) = start() else { return };
+    let (st, body) = client.get("/health").unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(body, "ok\n");
+    let (st, body) = client.get("/v1/registry").unwrap();
+    assert_eq!(st, 200);
+    let j = parse(&body).unwrap();
+    assert_eq!(j.req("family").unwrap().as_str().unwrap(), "claude");
+    assert_eq!(j.req("candidates").unwrap().as_arr().unwrap().len(), 4);
+    server.stop();
+}
+
+#[test]
+fn route_and_invoke_roundtrip() {
+    let Some((server, client, router)) = start() else { return };
+    let world = SynthWorld::new(router.registry.world_seed);
+    let p = world.sample_prompt(2, 17);
+
+    // τ=1 routes to the cheapest model
+    let body = format!(
+        "{{\"prompt\": \"{}\", \"tau\": 1.0, \"split\": 2, \"index\": 17}}",
+        p.text()
+    );
+    let (st, resp) = client.post("/v1/route", &body).unwrap();
+    assert_eq!(st, 200, "{resp}");
+    let j = parse(&resp).unwrap();
+    assert_eq!(j.req("model").unwrap().as_str().unwrap(), "claude-3-haiku");
+    assert_eq!(j.req("scores").unwrap().as_arr().unwrap().len(), 4);
+
+    // invoke carries realized reward + cost (identity known)
+    let (st, resp) = client.post("/v1/invoke", &body).unwrap();
+    assert_eq!(st, 200);
+    let j = parse(&resp).unwrap();
+    let inv = j.req("invoke").unwrap();
+    let reward = inv.req("reward").unwrap().as_f64().unwrap();
+    assert_eq!(reward, world.reward(&p, 0));
+    assert!(inv.req("cost_usd").unwrap().as_f64().unwrap() > 0.0);
+
+    // metrics reflect the traffic
+    let (st, m) = client.get("/metrics").unwrap();
+    assert_eq!(st, 200);
+    assert!(m.contains("ipr_requests_total 2"), "{m}");
+    assert!(m.contains("claude-3-haiku"));
+    server.stop();
+}
+
+#[test]
+fn malformed_requests_rejected() {
+    let Some((server, client, _r)) = start() else { return };
+    let (st, _) = client.post("/v1/route", "{not json").unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = client.post("/v1/route", "{}").unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = client.post("/v1/route", "{\"prompt\": \"\"}").unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = client.get("/nope").unwrap();
+    assert_eq!(st, 404);
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_batched() {
+    let Some((server, client, router)) = start() else { return };
+    let world = SynthWorld::new(router.registry.world_seed);
+    let addr = server.addr.clone();
+    let mut handles = Vec::new();
+    for i in 0..16u64 {
+        let addr = addr.clone();
+        let text = world.live_prompt(i).text();
+        handles.push(std::thread::spawn(move || {
+            let c = HttpClient::new(&addr);
+            let body = format!("{{\"prompt\": \"{text}\", \"tau\": 0.2}}");
+            c.post("/v1/route", &body).unwrap()
+        }));
+    }
+    for h in handles {
+        let (st, resp) = h.join().unwrap();
+        assert_eq!(st, 200, "{resp}");
+    }
+    let sizes = router.qe.batch_sizes.lock().unwrap().clone();
+    assert!(!sizes.is_empty());
+    drop(client);
+    server.stop();
+}
