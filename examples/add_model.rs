@@ -12,11 +12,12 @@ use std::sync::Arc;
 use ipr::coordinator::gating::{route_decision, GatingStrategy};
 use ipr::eval::dataset;
 use ipr::registry::Registry;
-use ipr::runtime::Engine;
+use ipr::runtime::{create_engine, Engine as _, QeModel as _};
+use ipr::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
-    let reg = Arc::new(Registry::load("artifacts")?);
-    let engine = Engine::new()?;
+fn main() -> Result<()> {
+    let reg = Arc::new(Registry::load_or_reference("artifacts")?);
+    let engine = create_engine()?;
 
     let base_e = reg.model("qe_claude3_stella_sim_base")?.clone();
     let ada_e = reg.model("qe_claude_adapter_stella_sim")?.clone();
@@ -28,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nadapter integration cost: {} extra weight tensors, {:.0} ms load",
         ada_e.param_names.len() - base_e.param_names.len(),
-        adapted.load_ms
+        adapted.load_ms()
     );
 
     let rows = dataset::load(&reg, "test", 200)?;

@@ -2,27 +2,33 @@
 //! prompts under different user tolerances.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Works from a clean checkout: without `make artifacts` the registry
+//! falls back to self-generated reference artifacts served by the
+//! pure-rust engine.
 
 use std::sync::Arc;
 
 use ipr::coordinator::{Router, RouterConfig};
 use ipr::registry::Registry;
 use ipr::synth::SynthWorld;
+use ipr::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 1. The Model Registry: candidates, prices, deployable QE artifacts.
-    let reg = Arc::new(Registry::load("artifacts")?);
+    let reg = Arc::new(Registry::load_or_reference("artifacts")?);
     println!("registry: {} candidates, {} QE models", reg.candidates.len(), reg.models.len());
 
     // 2. A router for the Claude family with the production defaults
-    //    (stella backbone, DynamicMax gating). This spawns the PJRT engine
-    //    thread, uploads the weights and compiles the (batch, seq) buckets.
+    //    (stella backbone, DynamicMax gating). This spawns the engine
+    //    thread, loads the weights and prepares the (batch, seq) buckets.
     let router = Router::new(reg.clone(), RouterConfig::default())?;
     println!(
-        "loaded {} in {:.0} ms; buckets: {:?}",
+        "loaded {} on the {} engine in {:.0} ms; buckets: {:?}",
         router.qe.entry().id,
+        router.qe.info().engine,
         router.qe.info().load_ms,
         router.qe.info().buckets,
     );

@@ -14,16 +14,17 @@ use ipr::coordinator::{Router, RouterConfig};
 use ipr::registry::Registry;
 use ipr::server::{HttpClient, Server};
 use ipr::synth::{SynthWorld, SPLIT_LIVE};
+use ipr::util::error::Result;
 use ipr::util::hist::Histogram;
 use ipr::util::json::parse;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
     let n_clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
     let tau: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.1);
 
-    let reg = Arc::new(Registry::load("artifacts")?);
+    let reg = Arc::new(Registry::load_or_reference("artifacts")?);
     let router = Arc::new(Router::new(reg.clone(), RouterConfig::default())?);
     let server = Server::start(router.clone(), "127.0.0.1:0", n_clients.max(2))?;
     println!(

@@ -12,8 +12,9 @@ use ipr::eval::baselines;
 use ipr::eval::dataset::{self, FamilyView};
 use ipr::eval::scores::predicted_scores;
 use ipr::eval::tables::EvalCtx;
+use ipr::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let family = args.first().cloned().unwrap_or_else(|| "claude".into());
     let limit: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1500);
@@ -25,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     println!("family={family}, {} test prompts\n", rows.len());
     println!("{:>6} | {:>22} | {:>22} | {:>10}", "τ", "IPR (quality, α-cost)", "oracle", "random-q");
 
-    let pred = predicted_scores(&ctx.engine, &ctx.reg, &format!("qe_{family}_stella_sim"), "test", &rows)?;
+    let pred = predicted_scores(&*ctx.engine, &ctx.reg, &format!("qe_{family}_stella_sim"), "test", &rows)?;
     let ipr = tau_sweep(&view, &ctx.reg, &pred, GatingStrategy::DynamicMax, 0.0, 20);
     let oracle = tau_sweep(&view, &ctx.reg, &view.true_scores(), GatingStrategy::DynamicMax, 0.0, 20);
     let rand = baselines::random_curve(&view, &ctx.reg, 42, 20);
@@ -45,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     // per-backbone curves (Figures 4/5)
     println!("\nper-backbone quality at τ∈{{0, 0.5, 1}} (Fig 4) and α-cost (Fig 5):");
     for bb in ["roberta_sim", "stella_sim", "qwen_sim", "qwen_emb_sim"] {
-        let pred = predicted_scores(&ctx.engine, &ctx.reg, &format!("qe_{family}_{bb}"), "test", &rows)?;
+        let pred = predicted_scores(&*ctx.engine, &ctx.reg, &format!("qe_{family}_{bb}"), "test", &rows)?;
         let pts = tau_sweep(&view, &ctx.reg, &pred, GatingStrategy::DynamicMax, 0.0, 20);
         println!(
             "  {bb:13} q: {:.4} / {:.4} / {:.4}   α: {:.3} / {:.3} / {:.3}   B-ARQGC={:.3}",

@@ -1,0 +1,204 @@
+"""Generate the cross-language QE-forward parity fixture.
+
+Synthesizes deterministic pseudo-random weights from the shared SplitMix64
+stream, runs the *actual* JAX reference kernels (`compile.kernels.ref` via
+`compile.model.qe_apply` / `qe_apply_with_adapter`), and dumps the expected
+predictions to `rust/tests/fixtures/ref_parity.json`.
+
+The rust side (`rust/tests/parity.rs`) re-synthesizes the identical weights
+(same substream indices, same `value = offset + scale * (2u - 1)` mapping,
+cast to f32) and asserts its pure-rust reference engine reproduces these
+numbers to <= 1e-4 — proving the rust port of
+`python/compile/kernels/ref.py` is numerically faithful.
+
+Run from `python/`:  python -m tools.gen_ref_fixture
+(only needed when the fixture format changes; the fixture is checked in,
+cargo test never runs python).
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import synth as S
+
+FIXTURE_SEED = 20250710
+FIXTURE_STREAM = 7
+
+
+def rng_fill(index: int, n: int) -> np.ndarray:
+    """`n` uniforms in [0,1) from substream (FIXTURE_STREAM, index)."""
+    r = S.Rng(S.substream(FIXTURE_SEED, FIXTURE_STREAM, index))
+    return np.array([r.next_f64() for _ in range(n)], np.float64)
+
+
+def spec_of(name, shape, cfg):
+    """Explicit, simple rules — mirrored verbatim in rust."""
+    if name.endswith("_g") or name == "ada_lie_w":
+        return (1.0, 0.05)
+    if "lie_emb" in name:
+        return (0.0, 0.3)
+    if name in ("tok_emb", "pos_emb"):
+        return (0.0, 0.05)
+    if name.endswith("_b") or "_b1" in name or "_b2" in name or name.endswith("b1") or name.endswith("b2"):
+        return (0.0, 0.02)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return (0.0, 1.0 / float(np.sqrt(fan_in)))
+
+
+def synth_params(shapes, cfg):
+    """shapes: ordered [(name, shape)]; returns params + serializable spec."""
+    params = {}
+    spec = []
+    for idx, (name, shape) in enumerate(shapes):
+        offset, scale = spec_of(name, shape, cfg)
+        n = int(np.prod(shape))
+        u = rng_fill(idx, n)
+        vals = (offset + scale * (2.0 * u - 1.0)).astype(np.float32).reshape(shape)
+        params[name] = jnp.asarray(vals)
+        spec.append({"name": name, "shape": list(shape), "offset": offset, "scale": scale})
+    return params, spec
+
+
+def qe_shapes(cfg: M.BackboneConfig, n_cand: int):
+    """Sorted parameter names + shapes, mirroring model.py init."""
+    shapes = {
+        "tok_emb": (cfg.vocab, cfg.d),
+        "pos_emb": (cfg.max_pos, cfg.d),
+        "lnf_g": (cfg.d,),
+        "lnf_b": (cfg.d,),
+        "lie_emb": (n_cand, cfg.d_id),
+        "qp_w1p": (n_cand, cfg.d, cfg.qp_hidden),
+        "qp_w1e": (n_cand, cfg.d_id, cfg.qp_hidden),
+        "qp_b1": (n_cand, cfg.qp_hidden),
+        "qp_w2": (n_cand, cfg.qp_hidden),
+        "qp_b2": (n_cand,),
+    }
+    f = cfg.d * cfg.ffn_mult
+    for i in range(cfg.layers):
+        pre = f"l{i:02d}_"
+        shapes[pre + "ln1_g"] = (cfg.d,)
+        shapes[pre + "ln1_b"] = (cfg.d,)
+        shapes[pre + "wqkv"] = (cfg.d, 3 * cfg.d)
+        shapes[pre + "wo"] = (cfg.d, cfg.d)
+        shapes[pre + "ln2_g"] = (cfg.d,)
+        shapes[pre + "ln2_b"] = (cfg.d,)
+        shapes[pre + "w1"] = (cfg.d, f)
+        shapes[pre + "b1"] = (f,)
+        shapes[pre + "w2"] = (f, cfg.d)
+        shapes[pre + "b2"] = (cfg.d,)
+    return [(k, shapes[k]) for k in sorted(shapes)]
+
+
+def ada_shapes(cfg: M.BackboneConfig):
+    shapes = {
+        "ada_pe_w1": (cfg.d, cfg.d),
+        "ada_pe_b1": (cfg.d,),
+        "ada_pe_w2": (cfg.d, cfg.d),
+        "ada_pe_b2": (cfg.d,),
+        "ada_lie_emb": (1, cfg.d_id),
+        "ada_lie_w": (cfg.d_id, cfg.d_id),
+        "ada_qp_w1p": (1, cfg.d, cfg.qp_hidden),
+        "ada_qp_w1e": (1, cfg.d_id, cfg.qp_hidden),
+        "ada_qp_b1": (1, cfg.qp_hidden),
+        "ada_qp_w2": (1, cfg.qp_hidden),
+        "ada_qp_b2": (1,),
+    }
+    return [(k, shapes[k]) for k in sorted(shapes)]
+
+
+def prompts(world, seq, lens):
+    ids = np.zeros((len(lens), seq), np.int32)
+    mask = np.zeros((len(lens), seq), np.float32)
+    toks = []
+    for i, (split, index) in enumerate(lens):
+        p = world.sample_prompt(split, index)
+        l = min(len(p.tokens), seq)
+        ids[i, :l] = p.tokens[:l]
+        mask[i, :l] = 1.0
+        toks.append([int(t) for t in p.tokens[:l]])
+    return ids, mask, toks
+
+
+def main():
+    world = S.SynthWorld(FIXTURE_SEED)
+    cases = []
+
+    for case_id, (cname, cfg, n_cand, rows) in enumerate([
+        ("small_1layer", M.BackboneConfig("fix_a", d=32, layers=1, heads=2), 4,
+         [(S.SPLIT_TEST, 11), (S.SPLIT_TEST, 12), (S.SPLIT_DEV, 5)]),
+        ("wide_2layer", M.BackboneConfig("fix_b", d=64, layers=2, heads=4), 3,
+         [(S.SPLIT_TEST, 101), (S.SPLIT_OOD_MSMARCO, 7), (S.SPLIT_TEST, 102)]),
+    ]):
+        shapes = qe_shapes(cfg, n_cand)
+        params, spec = synth_params(shapes, cfg)
+        seq = 48
+        ids, mask, toks = prompts(world, seq, rows)
+        pred = M.qe_apply(params, jnp.asarray(ids), jnp.asarray(mask), cfg, use_pallas=False)
+        cases.append({
+            "name": cname,
+            "kind": "qe",
+            "d": cfg.d, "layers": cfg.layers, "heads": cfg.heads,
+            "ffn_mult": cfg.ffn_mult, "vocab": cfg.vocab, "max_pos": cfg.max_pos,
+            "d_id": cfg.d_id, "qp_hidden": cfg.qp_hidden,
+            "n_cand": n_cand, "seq": seq,
+            "params": spec,
+            "tokens": toks,
+            "expected": [[float(x) for x in row] for row in np.asarray(pred)],
+        })
+
+    # adapter case on the small config: base params + adapter params; the
+    # adapter spec continues the substream indices after the base params.
+    cfg = M.BackboneConfig("fix_a", d=32, layers=1, heads=2)
+    base_shapes = qe_shapes(cfg, 3)
+    base_params, base_spec = synth_params(base_shapes, cfg)
+    a_shapes = ada_shapes(cfg)
+    ada_params = {}
+    ada_spec = []
+    for j, (name, shape) in enumerate(a_shapes):
+        offset, scale = spec_of(name, shape, cfg)
+        n = int(np.prod(shape))
+        u = rng_fill(len(base_shapes) + j, n)
+        vals = (offset + scale * (2.0 * u - 1.0)).astype(np.float32).reshape(shape)
+        ada_params[name] = jnp.asarray(vals)
+        ada_spec.append({"name": name, "shape": list(shape), "offset": offset, "scale": scale})
+    seq = 48
+    ids, mask, toks = prompts(world, seq, [(S.SPLIT_TEST, 31), (S.SPLIT_TEST, 32)])
+    pred = M.qe_apply_with_adapter(base_params, ada_params, jnp.asarray(ids),
+                                   jnp.asarray(mask), cfg, use_pallas=False)
+    cases.append({
+        "name": "adapter_small",
+        "kind": "adapter",
+        "d": cfg.d, "layers": cfg.layers, "heads": cfg.heads,
+        "ffn_mult": cfg.ffn_mult, "vocab": cfg.vocab, "max_pos": cfg.max_pos,
+        "d_id": cfg.d_id, "qp_hidden": cfg.qp_hidden,
+        "n_cand": 3, "seq": seq,
+        "params": base_spec + ada_spec,
+        "tokens": toks,
+        "expected": [[float(x) for x in row] for row in np.asarray(pred)],
+    })
+
+    out = {
+        "seed": FIXTURE_SEED,
+        "stream": FIXTURE_STREAM,
+        "note": "value[i] = offset + scale*(2*u-1), u from Rng(substream(seed, stream, param_index)), cast f32, row-major",
+        "cases": cases,
+    }
+    dst = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests",
+                       "fixtures", "ref_parity.json")
+    os.makedirs(os.path.dirname(dst), exist_ok=True)
+    with open(dst, "w") as f:
+        json.dump(out, f)
+    print(f"wrote {os.path.abspath(dst)}: {len(cases)} cases")
+    for c in cases:
+        print(f"  {c['name']}: expected[0][:3] = {c['expected'][0][:3]}")
+
+
+if __name__ == "__main__":
+    main()

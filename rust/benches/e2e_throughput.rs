@@ -15,13 +15,9 @@ use ipr::util::bench::Table;
 use ipr::util::hist::Histogram;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP e2e_throughput: run `make artifacts` first");
-        return;
-    }
     let n_requests: usize = if std::env::var("IPR_BENCH_FAST").is_ok() { 120 } else { 400 };
     let n_clients = 8;
-    let reg = Arc::new(Registry::load("artifacts").unwrap());
+    let reg = Arc::new(Registry::load_or_reference("artifacts").unwrap());
     let world = SynthWorld::new(reg.world_seed);
 
     let mut t = Table::new(

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use ipr::coordinator::gating::{route_decision, GatingStrategy};
 use ipr::registry::Registry;
-use ipr::runtime::Engine;
+use ipr::runtime::{create_engine, Engine as _, QeModel as _};
 use ipr::synth::SynthWorld;
 use ipr::tokenizer;
 use ipr::util::bench::{time_it, Table};
@@ -73,9 +73,9 @@ fn main() {
     t.row(vec!["reward oracle".into(), fmt(h.quantile_ns(0.5) as f64), fmt(h.quantile_ns(0.99) as f64), fmt(h.mean_ns())]);
 
     // 5. QE forward (the dominant stage) — b1 and b8 buckets, per seq.
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let reg = Arc::new(Registry::load("artifacts").unwrap());
-        let engine = Engine::new().unwrap();
+    {
+        let reg = Arc::new(Registry::load_or_reference("artifacts").unwrap());
+        let engine = create_engine().unwrap();
         let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
         let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
         let one = vec![prompts[0].tokens.clone()];

@@ -4,10 +4,6 @@
 use ipr::eval::tables::{table10, EvalCtx};
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP table10_loss: run `make artifacts` first");
-        return;
-    }
     let limit = std::env::var("IPR_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
     let ctx = EvalCtx::new("artifacts", limit).unwrap();
     table10(&ctx).unwrap().print();

@@ -4,10 +4,6 @@
 use ipr::eval::tables::{table11, EvalCtx};
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP table11_unified: run `make artifacts` first");
-        return;
-    }
     let limit = std::env::var("IPR_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
     let ctx = EvalCtx::new("artifacts", limit).unwrap();
     table11(&ctx).unwrap().print();

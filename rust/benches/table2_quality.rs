@@ -4,10 +4,6 @@
 use ipr::eval::tables::{table2, EvalCtx};
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP table2_quality: run `make artifacts` first");
-        return;
-    }
     let limit = std::env::var("IPR_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
     let t0 = std::time::Instant::now();
     let ctx = EvalCtx::new("artifacts", limit).unwrap();

@@ -5,10 +5,6 @@
 use ipr::eval::tables::{table3, EvalCtx};
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP table3_routing: run `make artifacts` first");
-        return;
-    }
     let limit = std::env::var("IPR_EVAL_LIMIT").ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
     let t0 = std::time::Instant::now();
     let ctx = EvalCtx::new("artifacts", limit).unwrap();

@@ -9,18 +9,14 @@
 use std::sync::Arc;
 
 use ipr::registry::Registry;
-use ipr::runtime::{current_rss_mb, Engine};
+use ipr::runtime::{create_engine, current_rss_mb, Engine as _, QeModel as _};
 use ipr::synth::SynthWorld;
 use ipr::util::bench::{time_it, Table};
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP table5_latency: run `make artifacts` first");
-        return;
-    }
     let (warmup, iters) = if std::env::var("IPR_BENCH_FAST").is_ok() { (10, 50) } else { (100, 500) };
-    let reg = Arc::new(Registry::load("artifacts").unwrap());
-    let engine = Engine::new().unwrap();
+    let reg = Arc::new(Registry::load_or_reference("artifacts").unwrap());
+    let engine = create_engine().unwrap();
     let world = SynthWorld::new(reg.world_seed);
 
     let mut t = Table::new(

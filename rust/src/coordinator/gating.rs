@@ -197,4 +197,82 @@ mod tests {
         let d = route_decision(&scores, &COSTS[..2], -3.0, GatingStrategy::DynamicMax, 0.0);
         assert_eq!(d.chosen, 1);
     }
+
+    // -- edge cases -------------------------------------------------------
+
+    #[test]
+    fn tau_zero_exact_threshold_includes_ties_at_max() {
+        // At τ=0 the threshold equals the max score; every candidate tied
+        // at the max is feasible and the cheapest tie wins.
+        let scores = [0.85, 0.85, 0.7, 0.85];
+        let d = route_decision(&scores, &COSTS, 0.0, GatingStrategy::DynamicMax, 0.0);
+        assert_eq!(d.feasible, vec![0, 1, 3]);
+        assert_eq!(d.chosen, 0, "cheapest of the tied maxima");
+        assert!(!d.fallback);
+    }
+
+    #[test]
+    fn tau_one_dynamic_minmax_admits_everything() {
+        // τ=1 under DynamicMinMax drops the threshold to the per-prompt
+        // min — the whole candidate set is feasible, route to cheapest.
+        let scores = [0.2, 0.9, 0.5, 0.6];
+        let d = route_decision(&scores, &COSTS, 1.0, GatingStrategy::DynamicMinMax, 0.0);
+        assert_eq!(d.feasible.len(), 4);
+        assert_eq!(d.chosen, 0);
+    }
+
+    #[test]
+    fn delta_at_least_max_gap_admits_everything() {
+        // δ ≥ (max − min score) makes every candidate feasible even at
+        // τ=0 — the safety margin dominates the gating entirely.
+        let scores = [0.30f32, 0.55, 0.80, 0.92];
+        let max_gap = 0.92 - 0.30;
+        for strat in [GatingStrategy::DynamicMax, GatingStrategy::DynamicMinMax] {
+            let d = route_decision(&scores, &COSTS, 0.0, strat, max_gap + 1e-6);
+            assert_eq!(d.feasible.len(), 4, "{strat:?}");
+            assert_eq!(d.chosen, 0, "{strat:?}: cheapest once all feasible");
+            assert!(!d.fallback);
+        }
+    }
+
+    #[test]
+    fn empty_feasible_fallback_ignores_cost() {
+        // Static bounds above every score: the fallback must pick the
+        // predicted-best candidate even though it is the most expensive.
+        let scores = [0.4, 0.3, 0.45, 0.2];
+        let costs = [0.001, 0.002, 0.09, 0.003];
+        let d = route_decision(
+            &scores,
+            &costs,
+            0.3,
+            GatingStrategy::Static { static_min: 0.5, static_max: 0.99 },
+            0.0,
+        );
+        assert!(d.fallback);
+        assert!(d.feasible.is_empty());
+        assert_eq!(d.chosen, 2, "fallback = arg-max score, not min cost");
+    }
+
+    #[test]
+    fn single_candidate_always_routes_to_it() {
+        for tau in [0.0, 0.5, 1.0] {
+            let d = route_decision(&[0.42], &[0.01], tau, GatingStrategy::DynamicMax, 0.0);
+            assert_eq!(d.chosen, 0);
+            assert!(!d.fallback);
+        }
+    }
+
+    #[test]
+    fn threshold_edges_for_all_strategies() {
+        let scores = [0.2f32, 0.8];
+        // τ=0 ⇒ threshold = r_max for every dynamic-max-style strategy.
+        assert!((GatingStrategy::DynamicMax.threshold(&scores, 0.0) - 0.8).abs() < 1e-6);
+        assert!((GatingStrategy::DynamicMinMax.threshold(&scores, 0.0) - 0.8).abs() < 1e-6);
+        // τ=1 ⇒ threshold = r_min of the strategy's bound pair.
+        assert!(GatingStrategy::DynamicMax.threshold(&scores, 1.0).abs() < 1e-6);
+        assert!((GatingStrategy::DynamicMinMax.threshold(&scores, 1.0) - 0.2).abs() < 1e-6);
+        let s = GatingStrategy::Static { static_min: 0.3, static_max: 0.7 };
+        assert!((s.threshold(&scores, 0.0) - 0.7).abs() < 1e-6);
+        assert!((s.threshold(&scores, 1.0) - 0.3).abs() < 1e-6);
+    }
 }

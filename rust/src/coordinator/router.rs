@@ -7,9 +7,8 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use crate::backends::{Backend, InvokeResult};
+use crate::util::error::Result;
 use crate::coordinator::gating::{route_decision, GatingStrategy, RouteDecision};
 use crate::coordinator::metrics::Metrics;
 use crate::qe::{BatcherConfig, QeService};

@@ -4,9 +4,8 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
 use crate::registry::Registry;
+use crate::util::error::{Context, Result};
 use crate::util::json::parse;
 
 /// One evaluation prompt with its oracle labels.

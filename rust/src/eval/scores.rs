@@ -8,11 +8,11 @@
 use std::io::{Read, Write};
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::eval::dataset::Row;
 use crate::registry::Registry;
 use crate::runtime::{Engine, QeModel};
+use crate::util::error::{Context, Result};
 
 pub fn results_dir(reg: &Registry) -> PathBuf {
     let d = reg.root.join("results");
@@ -61,7 +61,7 @@ pub fn read_matrix(path: &PathBuf) -> Result<Vec<Vec<f32>>> {
 /// Predict scores for all rows with the largest loaded batch bucket,
 /// reading/writing the disk cache keyed by (model, dataset, n).
 pub fn predicted_scores(
-    engine: &Engine,
+    engine: &dyn Engine,
     reg: &Registry,
     model_id: &str,
     dataset_name: &str,
@@ -76,13 +76,13 @@ pub fn predicted_scores(
     }
     let entry = reg.model(model_id)?.clone();
     let model = engine.load_model(reg, &entry, &["xla"])?;
-    let m = score_rows(&model, rows)?;
+    let m = score_rows(&*model, rows)?;
     write_matrix(&path, &m).context("writing score cache")?;
     Ok(m)
 }
 
 /// Batched forward over rows (no cache).
-pub fn score_rows(model: &QeModel, rows: &[Row]) -> Result<Vec<Vec<f32>>> {
+pub fn score_rows(model: &dyn QeModel, rows: &[Row]) -> Result<Vec<Vec<f32>>> {
     // find the largest xla batch bucket
     let b = model
         .available_buckets()

@@ -9,9 +9,8 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::coordinator::gating::GatingStrategy;
+use crate::util::error::Result;
 use crate::eval::arqgc::{bounded_arqgc, csr_at_quality, tau_sweep, CurvePoint};
 use crate::eval::baselines;
 use crate::eval::dataset::{self, FamilyView, Row};
@@ -19,7 +18,7 @@ use crate::eval::human;
 use crate::eval::metrics;
 use crate::eval::scores::{predicted_scores, results_dir};
 use crate::registry::Registry;
-use crate::runtime::Engine;
+use crate::runtime::{create_engine, Engine};
 use crate::synth::SynthWorld;
 use crate::util::bench::Table;
 
@@ -32,7 +31,7 @@ pub const BACKBONES: [(&str, &str); 4] = [
 ];
 
 pub struct EvalCtx {
-    pub engine: Engine,
+    pub engine: Box<dyn Engine>,
     pub reg: Arc<Registry>,
     /// Row limit per dataset (0 = all).
     pub limit: usize,
@@ -41,10 +40,12 @@ pub struct EvalCtx {
 }
 
 impl EvalCtx {
+    /// Build an eval context over `artifacts` (falling back to the
+    /// self-generated reference artifacts) with this build's engine.
     pub fn new(artifacts: &str, limit: usize) -> Result<EvalCtx> {
         Ok(EvalCtx {
-            engine: Engine::new()?,
-            reg: Arc::new(Registry::load(artifacts)?),
+            engine: create_engine()?,
+            reg: Arc::new(Registry::load_or_reference(artifacts)?),
             limit,
             grid: 25,
         })
@@ -59,7 +60,7 @@ impl EvalCtx {
     }
 
     fn ipr_scores(&self, model_id: &str, dataset: &str, rows: &[Row]) -> Result<Vec<Vec<f32>>> {
-        predicted_scores(&self.engine, &self.reg, model_id, dataset, rows)
+        predicted_scores(&*self.engine, &self.reg, model_id, dataset, rows)
     }
 }
 
@@ -390,12 +391,12 @@ pub fn table11(ctx: &EvalCtx) -> Result<Table> {
                 let view = FamilyView::new(&ctx.reg, rows, fam_idx.clone());
                 let raw = if ty == "unified" {
                     // combined OOD needs a distinct cache key per subset size
-                    let all = predicted_scores(&ctx.engine, &ctx.reg, &model_id, ds_name, rows)?;
+                    let all = predicted_scores(&*ctx.engine, &ctx.reg, &model_id, ds_name, rows)?;
                     all.iter()
                         .map(|r| fam_idx.iter().map(|&g| r[g]).collect::<Vec<f32>>())
                         .collect::<Vec<_>>()
                 } else {
-                    predicted_scores(&ctx.engine, &ctx.reg, &model_id, ds_name, rows)?
+                    predicted_scores(&*ctx.engine, &ctx.reg, &model_id, ds_name, rows)?
                 };
                 let truth = view.true_scores();
                 let pts =
@@ -611,6 +612,6 @@ pub fn run_table(ctx: &EvalCtx, which: &str) -> Result<Vec<Table>> {
             }
             v
         }
-        other => anyhow::bail!("unknown table '{other}' (try 1-12, D, fig3, fig45, all)"),
+        other => crate::bail!("unknown table '{other}' (try 1-12, D, fig3, fig45, all)"),
     })
 }

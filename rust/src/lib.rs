@@ -5,23 +5,33 @@
 //!
 //! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
 //! the Quality Estimator model (Layer 2, JAX) with its Pallas kernels
-//! (Layer 1) is AOT-compiled at build time (`make artifacts`) to HLO text +
-//! `.npz` weights, and this crate loads and serves it through the PJRT C
-//! API — python is never on the request path.
+//! (Layer 1). Two interchangeable execution engines sit behind the
+//! [`runtime::Engine`] / [`runtime::QeModel`] traits:
+//!
+//! * the **pure-rust reference engine** ([`runtime::reference`], always
+//!   available, zero dependencies) — a numerically faithful port of the
+//!   JAX reference kernels that runs the QE forward straight from `.npz`
+//!   weights. When no artifacts exist, [`registry::reference`] synthesizes
+//!   a manifest, expert-initialized weights and datasets, so a clean
+//!   checkout builds, tests and serves with no python step;
+//! * the **PJRT engine** (`runtime::pjrt`, cargo feature `pjrt`, off by
+//!   default) — loads the AOT artifacts (HLO text + `.npz` weights)
+//!   produced by `make artifacts` and executes them through the PJRT C
+//!   API, so python is never on the request path.
 //!
 //! Module map (see DESIGN.md §3 for the full inventory):
 //!
-//! * [`util`] — substrates: RNG, JSON, CLI, thread pool, histograms,
-//!   bench/property-test harnesses (the offline registry has no
-//!   tokio/serde/criterion/proptest).
+//! * [`util`] — substrates: errors, RNG, JSON, npz, CLI, thread pool,
+//!   histograms, bench/property-test harnesses (the offline registry has
+//!   no anyhow/tokio/serde/criterion/proptest).
 //! * [`tokenizer`] — prompt text → token ids (bit-identical to python).
 //! * [`synth`] — the SynthWorld parity port: workload generator + reward
 //!   oracle + cost model (the stand-in for Bedrock traffic and the Skywork
 //!   reward model; see DESIGN.md §2).
 //! * [`registry`] — the paper's Model Registry: candidates, prices,
-//!   artifact manifest.
-//! * [`runtime`] — PJRT engine: HLO text → executable, resident weight
-//!   buffers, `execute_b` hot path.
+//!   artifact manifest, and the reference-artifact generator.
+//! * [`runtime`] — the [`runtime::Engine`] abstraction and its reference /
+//!   PJRT implementations; bucket selection; `predict` hot path.
 //! * [`qe`] — Quality Estimator service: tokenize → bucket → dynamic
 //!   batcher → engine → per-candidate scores (+ multi-turn score cache).
 //! * [`coordinator`] — Decision Optimization: Algorithm 1, gating

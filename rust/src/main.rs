@@ -10,16 +10,16 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
 use ipr::coordinator::{GatingStrategy, Router, RouterConfig};
 use ipr::eval::tables::{run_table, EvalCtx};
 use ipr::qe::BatcherConfig;
 use ipr::registry::Registry;
-use ipr::runtime::Engine;
+use ipr::runtime::{create_engine, Engine as _, QeModel as _};
 use ipr::server::Server;
 use ipr::synth::SynthWorld;
 use ipr::util::cli::Args;
+use ipr::bail;
+use ipr::util::error::{Context, Result};
 
 fn main() {
     if let Err(e) = run() {
@@ -74,7 +74,7 @@ fn strategy_of(name: &str) -> Result<GatingStrategy> {
 }
 
 fn build_router(args: &Args) -> Result<Arc<Router>> {
-    let registry = Arc::new(Registry::load(artifacts_dir(args))?);
+    let registry = Arc::new(Registry::load_or_reference(artifacts_dir(args))?);
     let cfg = RouterConfig {
         family: args.get_or("family", "claude").to_string(),
         backbone: args.get_or("backbone", "stella_sim").to_string(),
@@ -148,7 +148,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_registry(args: &Args) -> Result<()> {
-    let reg = Registry::load(artifacts_dir(args))?;
+    let reg = Registry::load_or_reference(artifacts_dir(args))?;
     println!("world seed: {}  vocab: {}", reg.world_seed, reg.vocab_size);
     println!("\ncandidates (Table 8 prices):");
     for c in &reg.candidates {
@@ -177,7 +177,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
 
 fn cmd_parity(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let reg = Registry::load(&dir)?;
+    let reg = Registry::load_or_reference(&dir)?;
     // 1. golden-file parity (python synth == rust synth, bit-exact)
     let golden = std::fs::read_to_string(reg.abs("data/golden_parity.json"))?;
     let j = ipr::util::json::parse(&golden)?;
@@ -205,7 +205,7 @@ fn cmd_parity(args: &Args) -> Result<()> {
     println!("golden parity OK: {checked} prompts, bit-exact rewards/tokens");
 
     // 2. pallas vs xla artifact parity on a real model
-    let engine = Engine::new()?;
+    let engine = create_engine()?;
     let entry = reg.family_qe("claude", "stella_sim")?.clone();
     let model = engine.load_model(&reg, &entry, &["xla", "pallas"])?;
     let mut worst = 0f32;

@@ -2,13 +2,15 @@
 //! artifact (paper §3.1 "Quality Estimator" box).
 //!
 //! Pipeline per request: tokenize → score-cache lookup → dynamic batcher →
-//! PJRT forward (`runtime::QeModel::predict`) → per-candidate scores.
+//! engine forward (`runtime::QeModel::predict`) → per-candidate scores.
 //!
-//! * **Thread confinement**: the `xla` crate's PJRT handles are `Rc`-based
-//!   and neither `Send` nor `Sync`, so the service owns a dedicated
-//!   engine thread that creates the PJRT client, uploads the weights, and
-//!   runs every forward; callers talk to it over channels. This is also
-//!   the natural home for the batcher.
+//! * **Thread confinement**: the [`crate::runtime::Engine`] trait is
+//!   object-safe but deliberately not `Send` (the `xla` crate's PJRT
+//!   handles are `Rc`-based), so the service owns a dedicated engine
+//!   thread that constructs the engine — reference or PJRT, whichever the
+//!   build provides — loads the weights, and runs every forward; callers
+//!   talk to it over channels. This is also the natural home for the
+//!   batcher.
 //! * **Dynamic batcher**: concurrent requests are coalesced up to
 //!   `max_batch` or `max_wait` (whichever first) and served by one padded
 //!   forward pass (ablated in `benches/e2e_throughput.rs`).
@@ -22,10 +24,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
 use crate::registry::{ModelEntry, Registry};
-use crate::runtime::Engine;
+use crate::runtime::{create_engine, Engine as _, QeModel as _};
+use crate::util::error::Result;
 use crate::util::hist::Histogram;
 use crate::util::rng::mix64;
 
@@ -115,6 +117,8 @@ pub struct LoadedInfo {
     pub entry: ModelEntry,
     pub load_ms: f64,
     pub buckets: Vec<(usize, usize, String)>,
+    /// Which execution engine serves this model ("reference" | "pjrt").
+    pub engine: &'static str,
 }
 
 /// The Quality Estimator service. Cheap to share (`Arc`); `score` blocks
@@ -245,8 +249,9 @@ impl Drop for QeService {
     }
 }
 
-/// The engine thread: owns the PJRT client, the resident weights and the
-/// compiled executables; drains the queue in dynamic batches.
+/// The engine thread: owns the execution engine (reference or PJRT), the
+/// resident weights and any compiled executables; drains the queue in
+/// dynamic batches.
 fn engine_thread(
     reg: Arc<Registry>,
     model_id: String,
@@ -257,18 +262,19 @@ fn engine_thread(
     batch_sizes: Arc<Mutex<Vec<usize>>>,
 ) {
     let load = (|| -> Result<_> {
-        let engine = Engine::new()?;
+        let engine = create_engine()?;
         let entry = reg.model(&model_id)?.clone();
         let kinds: Vec<&str> = vec![cfg.kind.as_str()];
         let model = engine.load_model(&reg, &entry, &kinds)?;
-        Ok(model)
+        Ok((engine.name(), model))
     })();
     let model = match load {
-        Ok(m) => {
+        Ok((engine_name, m)) => {
             let _ = ready_tx.send(Ok(LoadedInfo {
-                entry: m.entry.clone(),
-                load_ms: m.load_ms,
+                entry: m.entry().clone(),
+                load_ms: m.load_ms(),
                 buckets: m.available_buckets(),
+                engine: engine_name,
             }));
             m
         }

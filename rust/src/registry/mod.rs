@@ -1,15 +1,30 @@
 //! Model Registry (paper §3.1): candidate metadata, Table 8 prices, and
-//! the AOT artifact manifest written by `python -m compile.aot`.
+//! the artifact manifest.
 //!
 //! The registry is the single source of truth the coordinator consults for
 //! (a) which candidate LLMs exist, their families and prices, and (b) which
-//! Quality Estimator artifacts (HLO variants + weights) are deployable.
+//! Quality Estimator artifacts (variants + weights) are deployable.
+//!
+//! Two manifest producers exist, serving the dual-engine design
+//! (`runtime`):
+//!
+//! * `python -m compile.aot` writes `artifacts/manifest.json` with trained
+//!   weights and lowered HLO variants — the PJRT path (`pjrt` feature);
+//! * [`reference`] self-generates a complete manifest + expert-initialized
+//!   `.npz` weights + datasets when no artifacts exist, which is what lets
+//!   a clean checkout run the full test suite offline through the
+//!   pure-rust reference engine.
+//!
+//! [`Registry::load_or_reference`] is the standard entry point: it prefers
+//! real artifacts and falls back to the self-generated set.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::{parse, Json};
+use crate::{anyhow, bail};
+
+pub mod reference;
 
 /// One candidate LLM as registered on the platform.
 #[derive(Clone, Debug)]
@@ -123,6 +138,37 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Load `artifacts_dir` when it holds a manifest, otherwise fall back
+    /// to the self-generated reference artifacts (materialized on first
+    /// use under `target/`; see [`reference::ensure_reference_artifacts`]).
+    ///
+    /// The fallback is announced on stderr so a mistyped `--artifacts`
+    /// path or a forgotten `make artifacts` cannot silently swap trained
+    /// AOT artifacts for the synthetic expert-initialized set.
+    pub fn load_or_reference(artifacts_dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = artifacts_dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            return Registry::load(dir);
+        }
+        if cfg!(feature = "pjrt") {
+            // The self-generated artifacts carry no HLO variants, so the
+            // PJRT engine cannot serve them — fail up front instead of
+            // erroring on a missing .hlo.txt at first model load.
+            bail!(
+                "{dir:?} has no manifest.json; the pjrt engine requires AOT artifacts \
+                 (run `make artifacts`) — the self-generated reference fallback only \
+                 works with the default pure-rust engine"
+            );
+        }
+        let ref_dir = reference::ensure_reference_artifacts()?;
+        eprintln!(
+            "note: {dir:?} has no manifest.json — serving self-generated reference \
+             artifacts from {ref_dir:?} (expert-initialized weights, pure-rust engine; \
+             run `make artifacts` for trained AOT artifacts, see DESIGN.md §7)"
+        );
+        Registry::load(ref_dir)
+    }
+
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Registry> {
         let root = artifacts_dir.as_ref().to_path_buf();
         let manifest_path = root.join("manifest.json");

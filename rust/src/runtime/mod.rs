@@ -1,212 +1,158 @@
-//! PJRT runtime: loads AOT artifacts (HLO text + .npz weights) and runs
-//! them on the request path.
+//! QE execution engines: the [`Engine`] / [`QeModel`] abstraction and its
+//! two implementations.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → execute.
-//! Two deliberate hot-path choices:
+//! * [`reference`] — the **pure-rust reference engine** (always compiled,
+//!   zero dependencies): a numerically faithful port of
+//!   `python/compile/kernels/ref.py` (embedding → pre-LN attention → FFN →
+//!   fused per-candidate QP heads) that executes the QE forward directly
+//!   from `.npz` weights. It is the default engine, serves the
+//!   self-generated reference artifacts (see `registry::reference`), and
+//!   is held to ≤1e-4 agreement with the JAX kernels by the checked-in
+//!   fixture test (`rust/tests/parity.rs`).
+//! * `pjrt` *(cargo feature `pjrt`, off by default)* — the AOT path:
+//!   HLO text + `.npz` weights produced by `make artifacts`, compiled and
+//!   executed through the PJRT C API. Resident weight buffers and
+//!   per-bucket warm executables; see the module docs for the hot-path
+//!   design. Requires the `xla` crate bindings (see `rust/Cargo.toml`).
 //!
-//! * **Resident weights**: the .npz is read once at load time, each tensor
-//!   uploaded once as a `PjRtBuffer` in the canonical (sorted-name) order;
-//!   requests call `execute_b(&[...weights, ids, mask])` so only the
-//!   (batch, seq) token tensors cross the host/device boundary per call.
-//! * **Bucketed executables**: one compiled executable per lowered
-//!   (batch, seq, kind) variant; `select_variant` picks the smallest
-//!   bucket that fits a request, trading a bounded amount of padding for
-//!   a tiny, fully-warm executable set.
+//! Both engines speak the same artifact contract: a [`crate::registry::ModelEntry`]
+//! names the weights file, the canonical (sorted-name) parameter order and
+//! the lowered `(batch, seq, kind)` variants; `predict` picks the smallest
+//! bucket that fits (padding short prompts, truncating overlong ones to
+//! the largest seq bucket) so serving behavior is engine-independent.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-use std::time::Instant;
+use crate::registry::{ModelEntry, Registry};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+pub mod reference;
 
-use crate::registry::{ModelEntry, Registry, Variant};
-
-/// Shared PJRT client (CPU plugin).
-pub struct Engine {
-    pub client: PjRtClient,
-}
-
-impl Engine {
-    pub fn new() -> Result<Engine> {
-        Ok(Engine { client: PjRtClient::cpu().context("creating PJRT CPU client")? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load one model: weights become resident buffers, every requested
-    /// variant is compiled eagerly (so first-request latency is flat).
-    pub fn load_model(&self, reg: &Registry, entry: &ModelEntry, kinds: &[&str]) -> Result<QeModel> {
-        let t0 = Instant::now();
-        let npz_path = reg.abs(&entry.weights);
-        let mut named = Literal::read_npz(&npz_path, &())
-            .with_context(|| format!("reading weights {npz_path:?}"))?;
-        named.sort_by(|a, b| a.0.cmp(&b.0)); // canonical order = sorted names
-        let names: Vec<&str> = named.iter().map(|(n, _)| n.as_str()).collect();
-        let expect: Vec<&str> = entry.param_names.iter().map(|s| s.as_str()).collect();
-        if names != expect {
-            bail!("weight names mismatch for {}: npz {:?} vs manifest {:?}", entry.id, names, expect);
-        }
-        let weights = named
-            .iter()
-            .map(|(_, lit)| self.client.buffer_from_host_literal(None, lit))
-            .collect::<Result<Vec<_>, _>>()
-            .context("uploading weights")?;
-
-        let mut exes = HashMap::new();
-        for v in &entry.variants {
-            if !kinds.contains(&v.kind.as_str()) {
-                continue;
-            }
-            let exe = self.compile_variant(&reg.abs(&v.path))?;
-            // Warm up: the first execution of a PJRT executable pays
-            // one-time initialization (thread-pool setup, allocation of
-            // output buffers) that otherwise lands on the first real
-            // request as a multi-ms P99 outlier (§Perf iteration 1).
-            let ids = vec![0i32; v.batch * v.seq];
-            let mask = vec![0f32; v.batch * v.seq];
-            let ids_b = self.client.buffer_from_host_buffer(&ids, &[v.batch, v.seq], None)?;
-            let mask_b = self.client.buffer_from_host_buffer(&mask, &[v.batch, v.seq], None)?;
-            let mut args: Vec<&PjRtBuffer> = weights.iter().collect();
-            args.push(&ids_b);
-            args.push(&mask_b);
-            let _ = exe.execute_b(&args)?;
-            exes.insert((v.batch, v.seq, v.kind.clone()), exe);
-        }
-        if exes.is_empty() {
-            bail!("no variants of kinds {kinds:?} for model {}", entry.id);
-        }
-        Ok(QeModel {
-            entry: entry.clone(),
-            weights,
-            exes,
-            load_ms: t0.elapsed().as_secs_f64() * 1e3,
-            calls: Mutex::new(0),
-        })
-    }
-
-    fn compile_variant(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))
-    }
-}
-
-/// A loaded Quality Estimator: resident weights + per-bucket executables.
-pub struct QeModel {
-    pub entry: ModelEntry,
-    weights: Vec<PjRtBuffer>,
-    exes: HashMap<(usize, usize, String), PjRtLoadedExecutable>,
-    pub load_ms: f64,
-    calls: Mutex<u64>,
-}
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 /// Result of one QE forward: per-prompt, per-candidate scores.
 #[derive(Clone, Debug)]
 pub struct Scores {
-    /// scores[i][j] = predicted quality of prompt i under local head j.
+    /// `scores[i][j]` = predicted quality of prompt i under local head j.
     pub scores: Vec<Vec<f32>>,
+    /// The `(batch, seq)` bucket the forward actually ran in.
     pub bucket: (usize, usize),
+    /// Artifact kind executed ("xla" | "pallas").
     pub kind: String,
 }
 
-impl QeModel {
-    pub fn n_heads(&self) -> usize {
-        self.entry.candidates.len()
-    }
+/// A QE execution backend: turns registry entries into loaded models.
+///
+/// Engines are deliberately object-safe: the QE service owns its engine
+/// behind `Box<dyn Engine>` on a dedicated thread, so an engine
+/// implementation is free to be `!Send` (the PJRT handles are).
+pub trait Engine {
+    /// Engine identifier for logs/metrics ("reference" | "pjrt").
+    fn name(&self) -> &'static str;
 
-    pub fn call_count(&self) -> u64 {
-        *self.calls.lock().unwrap()
-    }
+    /// Load one model: read + validate weights against the manifest's
+    /// canonical parameter list and prepare every requested variant kind.
+    fn load_model(
+        &self,
+        reg: &Registry,
+        entry: &ModelEntry,
+        kinds: &[&str],
+    ) -> Result<Box<dyn QeModel>>;
+}
 
-    pub fn available_buckets(&self) -> Vec<(usize, usize, String)> {
-        let mut v: Vec<_> = self.exes.keys().cloned().collect();
-        v.sort();
-        v
-    }
+/// A loaded Quality Estimator, ready to serve `predict` calls.
+pub trait QeModel {
+    /// The registry entry this model was loaded from.
+    fn entry(&self) -> &ModelEntry;
+
+    /// Wall-clock load time (weights + variant preparation), milliseconds.
+    fn load_ms(&self) -> f64;
+
+    /// Number of `predict` forwards served so far.
+    fn call_count(&self) -> u64;
+
+    /// Loaded `(batch, seq, kind)` buckets, sorted.
+    fn available_buckets(&self) -> Vec<(usize, usize, String)>;
 
     /// Predict scores for a batch of token sequences (already tokenized).
-    /// Picks the smallest loaded (batch, seq) bucket that fits; pads with
-    /// zero rows / truncates overlong prompts to the largest bucket.
-    pub fn predict(&self, prompts: &[Vec<u32>], kind: &str) -> Result<Scores> {
-        let n = prompts.len();
-        if n == 0 {
-            bail!("empty batch");
-        }
-        let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
-        let (b, s) = self.pick_bucket(n, max_len, kind)?;
-        let exe = self
-            .exes
-            .get(&(b, s, kind.to_string()))
-            .ok_or_else(|| anyhow!("bucket ({b},{s},{kind}) not loaded"))?;
+    /// Picks the smallest loaded `(batch, seq)` bucket that fits; pads
+    /// with zero rows / truncates overlong prompts to the largest bucket.
+    fn predict(&self, prompts: &[Vec<u32>], kind: &str) -> Result<Scores>;
 
-        // Pack ids + mask for the bucket.
-        let mut ids = vec![0i32; b * s];
-        let mut mask = vec![0f32; b * s];
-        for (i, p) in prompts.iter().enumerate() {
-            let l = p.len().min(s);
-            for (j, &t) in p[..l].iter().enumerate() {
-                ids[i * s + j] = t as i32;
-                mask[i * s + j] = 1.0;
-            }
-        }
-        let ids_buf = exe.client().buffer_from_host_buffer(&ids, &[b, s], None)?;
-        let mask_buf = exe.client().buffer_from_host_buffer(&mask, &[b, s], None)?;
-
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.weights.len() + 2);
-        args.extend(self.weights.iter());
-        args.push(&ids_buf);
-        args.push(&mask_buf);
-
-        let result = exe.execute_b(&args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let out = lit.to_tuple1()?; // lowered with return_tuple=True
-        let flat: Vec<f32> = out.to_vec()?;
-        let c = self.n_heads();
-        if flat.len() != b * c {
-            bail!("unexpected output size {} (want {}x{})", flat.len(), b, c);
-        }
-        *self.calls.lock().unwrap() += 1;
-        Ok(Scores {
-            scores: (0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect(),
-            bucket: (b, s),
-            kind: kind.to_string(),
-        })
+    /// Number of per-candidate output heads.
+    fn n_heads(&self) -> usize {
+        self.entry().candidates.len()
     }
+}
 
-    fn pick_bucket(&self, n: usize, len: usize, kind: &str) -> Result<(usize, usize)> {
-        let mut fits: Vec<(usize, usize)> = self
-            .exes
-            .keys()
-            .filter(|(b, s, k)| k == kind && *b >= n && *s >= len)
-            .map(|(b, s, _)| (*b, *s))
-            .collect();
-        fits.sort_by_key(|&(b, s)| (s, b));
-        if let Some(&x) = fits.first() {
-            return Ok(x);
-        }
-        // overlong prompt: largest seq bucket with enough batch (truncate)
-        let mut all: Vec<(usize, usize)> = self
-            .exes
-            .keys()
-            .filter(|(b, _, k)| k == kind && *b >= n)
-            .map(|(b, s, _)| (*b, *s))
-            .collect();
-        all.sort_by_key(|&(b, s)| (std::cmp::Reverse(s), b));
-        all.first()
-            .copied()
-            .ok_or_else(|| anyhow!("no bucket fits batch={n} kind={kind} for {}", self.entry.id))
+/// Construct the default engine for this build: PJRT when the `pjrt`
+/// feature is enabled, the pure-rust reference engine otherwise.
+pub fn create_engine() -> Result<Box<dyn Engine>> {
+    #[cfg(feature = "pjrt")]
+    {
+        Ok(Box::new(pjrt::PjrtEngine::new()?))
     }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        Ok(Box::new(reference::ReferenceEngine::new()))
+    }
+}
 
-    #[allow(unused)]
-    fn variant_for(&self, v: &Variant) -> Option<&PjRtLoadedExecutable> {
-        self.exes.get(&(v.batch, v.seq, v.kind.clone()))
+/// Shared artifact-contract check: the npz tensor names (sorted) must
+/// equal the manifest's canonical `param_names` exactly — both engines
+/// validate through this one place so the contract cannot drift.
+pub(crate) fn validate_param_names(entry: &ModelEntry, npz_names: &[&str]) -> Result<()> {
+    let expect: Vec<&str> = entry.param_names.iter().map(|s| s.as_str()).collect();
+    if npz_names != expect {
+        bail!(
+            "weight names mismatch for {}: npz {:?} vs manifest {:?}",
+            entry.id,
+            npz_names,
+            expect
+        );
     }
+    Ok(())
+}
+
+/// The `predict` preamble shared by both engines: reject empty batches,
+/// filter the loaded buckets by artifact kind, and pick one via
+/// [`pick_bucket`] — so bucket semantics cannot drift between engines.
+pub(crate) fn select_bucket(
+    buckets: &[(usize, usize, String)],
+    kind: &str,
+    n: usize,
+    max_len: usize,
+    model_id: &str,
+) -> Result<(usize, usize)> {
+    if n == 0 {
+        bail!("empty batch");
+    }
+    let avail: Vec<(usize, usize)> = buckets
+        .iter()
+        .filter(|(_, _, k)| k == kind)
+        .map(|&(b, s, _)| (b, s))
+        .collect();
+    pick_bucket(&avail, n, max_len)
+        .ok_or_else(|| anyhow!("no bucket fits batch={n} kind={kind} for {model_id}"))
+}
+
+/// Shared bucket-selection policy (identical across engines): the
+/// smallest `(seq, batch)` bucket that fits `(n, len)`, else the largest
+/// seq bucket with enough batch capacity (overlong prompts truncate).
+pub(crate) fn pick_bucket(available: &[(usize, usize)], n: usize, len: usize) -> Option<(usize, usize)> {
+    let mut fits: Vec<(usize, usize)> = available
+        .iter()
+        .filter(|&&(b, s)| b >= n && s >= len)
+        .copied()
+        .collect();
+    fits.sort_by_key(|&(b, s)| (s, b));
+    if let Some(&x) = fits.first() {
+        return Some(x);
+    }
+    let mut all: Vec<(usize, usize)> =
+        available.iter().filter(|&&(b, _)| b >= n).copied().collect();
+    all.sort_by_key(|&(b, s)| (std::cmp::Reverse(s), b));
+    all.first().copied()
 }
 
 /// Peak-RSS proxy for Table 5's memory column (CPU testbed: process RSS).
@@ -217,4 +163,23 @@ pub fn current_rss_mb() -> f64 {
         }
     }
     0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_policy_smallest_fit_then_truncate() {
+        let avail = vec![(1, 64), (1, 128), (8, 128), (8, 64)];
+        assert_eq!(pick_bucket(&avail, 1, 50), Some((1, 64)));
+        assert_eq!(pick_bucket(&avail, 1, 100), Some((1, 128)));
+        assert_eq!(pick_bucket(&avail, 4, 100), Some((8, 128)));
+        assert_eq!(pick_bucket(&avail, 3, 10), Some((8, 64)));
+        // overlong: largest seq bucket that fits the batch (truncation)
+        assert_eq!(pick_bucket(&avail, 1, 999), Some((1, 128)));
+        assert_eq!(pick_bucket(&avail, 8, 999), Some((8, 128)));
+        // nothing fits the batch size
+        assert_eq!(pick_bucket(&avail, 9, 10), None);
+    }
 }

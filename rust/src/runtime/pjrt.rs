@@ -1,0 +1,188 @@
+//! PJRT engine (cargo feature `pjrt`): loads AOT artifacts (HLO text +
+//! `.npz` weights produced by `make artifacts`) and runs them on the
+//! request path through the PJRT C API.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → execute.
+//! Two deliberate hot-path choices:
+//!
+//! * **Resident weights**: the .npz is read once at load time, each tensor
+//!   uploaded once as a `PjRtBuffer` in the canonical (sorted-name) order;
+//!   requests call `execute_b(&[...weights, ids, mask])` so only the
+//!   (batch, seq) token tensors cross the host/device boundary per call.
+//! * **Bucketed executables**: one compiled executable per lowered
+//!   (batch, seq, kind) variant; the shared `super::pick_bucket` policy picks
+//!   the smallest bucket that fits a request, trading a bounded amount of
+//!   padding for a tiny, fully-warm executable set.
+//!
+//! This module requires the `xla` crate bindings; see `rust/Cargo.toml`
+//! for how to enable them. The default offline build uses
+//! [`super::reference`] instead.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::registry::{ModelEntry, Registry};
+use crate::runtime::{select_bucket, Engine, QeModel, Scores};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+
+/// Shared PJRT client (CPU plugin).
+pub struct PjrtEngine {
+    pub client: PjRtClient,
+}
+
+impl PjrtEngine {
+    pub fn new() -> Result<PjrtEngine> {
+        Ok(PjrtEngine { client: PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_variant(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Load one model: weights become resident buffers, every requested
+    /// variant is compiled eagerly (so first-request latency is flat).
+    fn load_model(
+        &self,
+        reg: &Registry,
+        entry: &ModelEntry,
+        kinds: &[&str],
+    ) -> Result<Box<dyn QeModel>> {
+        let t0 = Instant::now();
+        let npz_path = reg.abs(&entry.weights);
+        let mut named = Literal::read_npz(&npz_path, &())
+            .with_context(|| format!("reading weights {npz_path:?}"))?;
+        named.sort_by(|a, b| a.0.cmp(&b.0)); // canonical order = sorted names
+        let names: Vec<&str> = named.iter().map(|(n, _)| n.as_str()).collect();
+        crate::runtime::validate_param_names(entry, &names)?;
+        let weights = named
+            .iter()
+            .map(|(_, lit)| self.client.buffer_from_host_literal(None, lit))
+            .collect::<std::result::Result<Vec<_>, _>>()
+            .context("uploading weights")?;
+
+        let mut exes = HashMap::new();
+        for v in &entry.variants {
+            if !kinds.contains(&v.kind.as_str()) {
+                continue;
+            }
+            let exe = self.compile_variant(&reg.abs(&v.path))?;
+            // Warm up: the first execution of a PJRT executable pays
+            // one-time initialization (thread-pool setup, allocation of
+            // output buffers) that otherwise lands on the first real
+            // request as a multi-ms P99 outlier (§Perf iteration 1).
+            let ids = vec![0i32; v.batch * v.seq];
+            let mask = vec![0f32; v.batch * v.seq];
+            let ids_b = self.client.buffer_from_host_buffer(&ids, &[v.batch, v.seq], None)?;
+            let mask_b = self.client.buffer_from_host_buffer(&mask, &[v.batch, v.seq], None)?;
+            let mut args: Vec<&PjRtBuffer> = weights.iter().collect();
+            args.push(&ids_b);
+            args.push(&mask_b);
+            let _ = exe.execute_b(&args)?;
+            exes.insert((v.batch, v.seq, v.kind.clone()), exe);
+        }
+        if exes.is_empty() {
+            bail!("no variants of kinds {kinds:?} for model {}", entry.id);
+        }
+        let mut buckets: Vec<(usize, usize, String)> = exes.keys().cloned().collect();
+        buckets.sort();
+        Ok(Box::new(PjrtModel {
+            entry: entry.clone(),
+            weights,
+            exes,
+            buckets,
+            load_ms: t0.elapsed().as_secs_f64() * 1e3,
+            calls: Mutex::new(0),
+        }))
+    }
+}
+
+/// A loaded Quality Estimator: resident weights + per-bucket executables.
+pub struct PjrtModel {
+    entry: ModelEntry,
+    weights: Vec<PjRtBuffer>,
+    exes: HashMap<(usize, usize, String), PjRtLoadedExecutable>,
+    /// Sorted executable keys, cached so the hot path never re-collects.
+    buckets: Vec<(usize, usize, String)>,
+    load_ms: f64,
+    calls: Mutex<u64>,
+}
+
+impl QeModel for PjrtModel {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn load_ms(&self) -> f64 {
+        self.load_ms
+    }
+
+    fn call_count(&self) -> u64 {
+        *self.calls.lock().unwrap()
+    }
+
+    fn available_buckets(&self) -> Vec<(usize, usize, String)> {
+        self.buckets.clone()
+    }
+
+    fn predict(&self, prompts: &[Vec<u32>], kind: &str) -> Result<Scores> {
+        let n = prompts.len();
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
+        let (b, s) = select_bucket(&self.buckets, kind, n, max_len, &self.entry.id)?;
+        let exe = self
+            .exes
+            .get(&(b, s, kind.to_string()))
+            .ok_or_else(|| anyhow!("bucket ({b},{s},{kind}) not loaded"))?;
+
+        // Pack ids + mask for the bucket.
+        let mut ids = vec![0i32; b * s];
+        let mut mask = vec![0f32; b * s];
+        for (i, p) in prompts.iter().enumerate() {
+            let l = p.len().min(s);
+            for (j, &t) in p[..l].iter().enumerate() {
+                ids[i * s + j] = t as i32;
+                mask[i * s + j] = 1.0;
+            }
+        }
+        let ids_buf = exe.client().buffer_from_host_buffer(&ids, &[b, s], None)?;
+        let mask_buf = exe.client().buffer_from_host_buffer(&mask, &[b, s], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.weights.len() + 2);
+        args.extend(self.weights.iter());
+        args.push(&ids_buf);
+        args.push(&mask_buf);
+
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?; // lowered with return_tuple=True
+        let flat: Vec<f32> = out.to_vec()?;
+        let c = self.entry.candidates.len();
+        if flat.len() != b * c {
+            bail!("unexpected output size {} (want {}x{})", flat.len(), b, c);
+        }
+        *self.calls.lock().unwrap() += 1;
+        Ok(Scores {
+            scores: (0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect(),
+            bucket: (b, s),
+            kind: kind.to_string(),
+        })
+    }
+}

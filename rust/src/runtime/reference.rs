@@ -1,0 +1,607 @@
+//! Pure-rust reference engine: a dependency-free, numerically faithful
+//! port of the JAX reference kernels (`python/compile/kernels/ref.py`)
+//! composed exactly as `python/compile/model.py::qe_apply` /
+//! `qe_apply_with_adapter` compose them.
+//!
+//! Math contract (verified to ≤1e-4 against JAX by the checked-in fixture
+//! `rust/tests/fixtures/ref_parity.json`):
+//!
+//! * all arithmetic in f32, C-order tensors;
+//! * pre-LN transformer encoder: `x += attn(LN(x))·Wo`, `x += FFN(LN(x))`;
+//! * masked scaled-dot-product attention with additive key bias
+//!   (0 for real tokens, −1e30 for padding) and max-subtracted softmax;
+//! * FFN `LN → Linear → GELU(tanh approximation) → Linear`;
+//! * final LN then masked mean pooling;
+//! * fused per-candidate QP heads
+//!   `sigmoid(relu(p·W1p[c] + e_c·W1e[c] + b1[c])·w2[c] + b2[c])`;
+//! * §D adapter path: residual PE adapter (identity at init), frozen base
+//!   heads re-scored from the adapted representation, new-candidate head
+//!   appended last.
+//!
+//! The engine loads weights from the entry's `.npz` (same canonical
+//! sorted-name order the PJRT path uses) and needs no HLO artifacts, which
+//! is what makes `cargo test` self-sufficient: when `artifacts/` is
+//! missing, `registry::reference` synthesizes a manifest + weights and
+//! this engine serves them.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::registry::{ModelEntry, Registry};
+use crate::runtime::{select_bucket, Engine, QeModel, Scores};
+use crate::util::error::{Context, Result};
+use crate::util::npz::{self, Tensor};
+use crate::{anyhow, bail};
+
+/// Additive attention bias for padded key positions (mirrors model.py).
+pub const MASK_NEG: f32 = -1e30;
+
+/// The always-available pure-rust engine.
+pub struct ReferenceEngine;
+
+impl ReferenceEngine {
+    pub fn new() -> ReferenceEngine {
+        ReferenceEngine
+    }
+}
+
+impl Default for ReferenceEngine {
+    fn default() -> Self {
+        ReferenceEngine::new()
+    }
+}
+
+impl Engine for ReferenceEngine {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load_model(
+        &self,
+        reg: &Registry,
+        entry: &ModelEntry,
+        kinds: &[&str],
+    ) -> Result<Box<dyn QeModel>> {
+        let t0 = Instant::now();
+        let npz_path = reg.abs(&entry.weights);
+        let named = npz::read_npz(&npz_path)
+            .with_context(|| format!("reading weights {npz_path:?}"))?;
+        let names: Vec<&str> = named.iter().map(|(n, _)| n.as_str()).collect();
+        crate::runtime::validate_param_names(entry, &names)?;
+        let buckets: Vec<(usize, usize, String)> = entry
+            .variants
+            .iter()
+            .filter(|v| kinds.contains(&v.kind.as_str()))
+            .map(|v| (v.batch, v.seq, v.kind.clone()))
+            .collect();
+        if buckets.is_empty() {
+            bail!("no variants of kinds {kinds:?} for model {}", entry.id);
+        }
+        let mut model = ReferenceModel::from_tensors(entry.clone(), named, buckets)?;
+        model.load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(Box::new(model))
+    }
+}
+
+/// A loaded QE with resident f32 tensors.
+pub struct ReferenceModel {
+    entry: ModelEntry,
+    params: BTreeMap<String, Tensor>,
+    buckets: Vec<(usize, usize, String)>,
+    /// Encoder hyper-parameters, derived from entry + tensor shapes.
+    d: usize,
+    layers: usize,
+    heads: usize,
+    d_id: usize,
+    qp_hidden: usize,
+    max_pos: usize,
+    load_ms: f64,
+    calls: AtomicU64,
+}
+
+impl ReferenceModel {
+    /// Build a model directly from named tensors (used by the engine's
+    /// npz path and by the cross-language parity tests).
+    pub fn from_tensors(
+        entry: ModelEntry,
+        tensors: Vec<(String, Tensor)>,
+        buckets: Vec<(usize, usize, String)>,
+    ) -> Result<ReferenceModel> {
+        let params: BTreeMap<String, Tensor> = tensors.into_iter().collect();
+        let d = entry.d;
+        let layers = entry.layers;
+        let heads = entry.heads;
+        if heads == 0 || d % heads != 0 {
+            bail!("model {}: d={d} not divisible by heads={heads}", entry.id);
+        }
+        let get = |k: &str| -> Result<&Tensor> {
+            params.get(k).ok_or_else(|| anyhow!("model {}: missing tensor '{k}'", entry.id))
+        };
+        let tok = get("tok_emb")?;
+        if tok.shape.len() != 2 || tok.shape[1] != d {
+            bail!("model {}: tok_emb shape {:?} vs d={d}", entry.id, tok.shape);
+        }
+        let pos = get("pos_emb")?;
+        let max_pos = pos.shape.first().copied().unwrap_or(0);
+        for i in 0..layers {
+            let w = get(&format!("l{i:02}_wqkv"))?;
+            if w.shape != vec![d, 3 * d] {
+                bail!("model {}: l{i:02}_wqkv shape {:?}", entry.id, w.shape);
+            }
+        }
+        let lie = get("lie_emb")?;
+        let d_id = lie.shape.get(1).copied().unwrap_or(0);
+        let w1e = get("qp_w1e")?;
+        let qp_hidden = w1e.shape.last().copied().unwrap_or(0);
+        if qp_hidden == 0 {
+            bail!("model {}: empty QP hidden dimension", entry.id);
+        }
+        if entry.adapter {
+            for k in [
+                "ada_pe_w1",
+                "ada_pe_b1",
+                "ada_pe_w2",
+                "ada_pe_b2",
+                "ada_lie_emb",
+                "ada_lie_w",
+                "ada_qp_w1p",
+                "ada_qp_w1e",
+                "ada_qp_b1",
+                "ada_qp_w2",
+                "ada_qp_b2",
+            ] {
+                get(k)?;
+            }
+            // The §D adapter path (model.py qe_apply_with_adapter) extends
+            // a frozen base by exactly ONE candidate; the forward below
+            // relies on that (`new` is [n, 1]).
+            let c_new = get("ada_qp_w1p")?.shape.first().copied().unwrap_or(0);
+            if c_new != 1 {
+                bail!(
+                    "model {}: adapter must add exactly one candidate, got {c_new}",
+                    entry.id
+                );
+            }
+        }
+        Ok(ReferenceModel {
+            entry,
+            params,
+            buckets,
+            d,
+            layers,
+            heads,
+            d_id,
+            qp_hidden,
+            max_pos,
+            load_ms: 0.0,
+            calls: AtomicU64::new(0),
+        })
+    }
+
+    fn p(&self, k: &str) -> &Tensor {
+        // Presence is validated at load; absence here is a programmer error.
+        &self.params[k]
+    }
+
+    /// Encoder-only forward for one prompt: pooled features `[d]`.
+    /// Used by the expert-construction validation tests to compare the
+    /// real forward against the analytic calibration formulas.
+    pub fn pooled_features(&self, tokens: &[u32], seq: usize) -> Result<Vec<f32>> {
+        let s = seq;
+        let mut ids = vec![0i32; s];
+        let mut mask = vec![0f32; s];
+        let l = tokens.len().min(s);
+        for (j, &t) in tokens[..l].iter().enumerate() {
+            ids[j] = t as i32;
+            mask[j] = 1.0;
+        }
+        self.encode(&ids, &mask, 1, s)
+    }
+
+    /// Encoder: token ids [n, s] (+mask) → pooled [n, d].
+    fn encode(&self, ids: &[i32], mask: &[f32], n: usize, s: usize) -> Result<Vec<f32>> {
+        let d = self.d;
+        if s > self.max_pos {
+            bail!("sequence {s} exceeds max_pos {}", self.max_pos);
+        }
+        let tok = &self.p("tok_emb").data;
+        let pos = &self.p("pos_emb").data;
+        let vocab = self.p("tok_emb").shape[0];
+
+        // x = tok_emb[ids] + pos_emb[:s]
+        let mut x = vec![0f32; n * s * d];
+        for i in 0..n {
+            for t in 0..s {
+                let id = ids[i * s + t] as usize;
+                if id >= vocab {
+                    bail!("token id {id} out of vocab {vocab}");
+                }
+                let dst = &mut x[(i * s + t) * d..(i * s + t + 1) * d];
+                let src = &tok[id * d..(id + 1) * d];
+                let psrc = &pos[t * d..(t + 1) * d];
+                for j in 0..d {
+                    dst[j] = src[j] + psrc[j];
+                }
+            }
+        }
+        // additive key bias per (row, position)
+        let bias: Vec<f32> =
+            mask.iter().map(|&m| if m > 0.5 { 0.0 } else { MASK_NEG }).collect();
+
+        let dh = d / self.heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        for l in 0..self.layers {
+            let pre = format!("l{l:02}_");
+            // h = LN1(x)
+            let mut h = x.clone();
+            layer_norm(
+                &mut h,
+                &self.p(&format!("{pre}ln1_g")).data,
+                &self.p(&format!("{pre}ln1_b")).data,
+                d,
+            );
+            // qkv = h @ wqkv  [n*s, 3d]
+            let qkv = matmul(&h, &self.p(&format!("{pre}wqkv")).data, n * s, d, 3 * d);
+
+            // attention per (row, head)
+            let mut o = vec![0f32; n * s * d];
+            let mut srow = vec![0f32; s];
+            for i in 0..n {
+                for hd in 0..self.heads {
+                    let qo = hd * dh;
+                    let ko = d + hd * dh;
+                    let vo = 2 * d + hd * dh;
+                    for tq in 0..s {
+                        // scores over keys
+                        for tk in 0..s {
+                            let mut dot = 0f32;
+                            let qb = (i * s + tq) * 3 * d + qo;
+                            let kb = (i * s + tk) * 3 * d + ko;
+                            for j in 0..dh {
+                                dot += qkv[qb + j] * qkv[kb + j];
+                            }
+                            srow[tk] = dot * scale + bias[i * s + tk];
+                        }
+                        softmax_in_place(&mut srow);
+                        let ob = (i * s + tq) * d + hd * dh;
+                        for j in 0..dh {
+                            let mut acc = 0f32;
+                            for tk in 0..s {
+                                acc += srow[tk] * qkv[(i * s + tk) * 3 * d + vo + j];
+                            }
+                            o[ob + j] = acc;
+                        }
+                    }
+                }
+            }
+            // x += o @ wo
+            let proj = matmul(&o, &self.p(&format!("{pre}wo")).data, n * s, d, d);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            // x += FFN(LN2(x))
+            let mut xn = x.clone();
+            layer_norm(
+                &mut xn,
+                &self.p(&format!("{pre}ln2_g")).data,
+                &self.p(&format!("{pre}ln2_b")).data,
+                d,
+            );
+            let w1 = self.p(&format!("{pre}w1"));
+            let f = w1.shape[1];
+            let mut hmid = matmul(&xn, &w1.data, n * s, d, f);
+            let b1 = &self.p(&format!("{pre}b1")).data;
+            for r in 0..n * s {
+                for j in 0..f {
+                    hmid[r * f + j] = gelu(hmid[r * f + j] + b1[j]);
+                }
+            }
+            let mut y = matmul(&hmid, &self.p(&format!("{pre}w2")).data, n * s, f, d);
+            let b2 = &self.p(&format!("{pre}b2")).data;
+            for r in 0..n * s {
+                for j in 0..d {
+                    y[r * d + j] += b2[j];
+                }
+            }
+            for (xi, yi) in x.iter_mut().zip(&y) {
+                *xi += yi;
+            }
+        }
+
+        // final LN + masked mean pool
+        layer_norm(&mut x, &self.p("lnf_g").data, &self.p("lnf_b").data, d);
+        let mut pooled = vec![0f32; n * d];
+        for i in 0..n {
+            let mut cnt = 0f32;
+            for t in 0..s {
+                let m = mask[i * s + t];
+                if m > 0.0 {
+                    cnt += m;
+                    for j in 0..d {
+                        pooled[i * d + j] += x[(i * s + t) * d + j] * m;
+                    }
+                }
+            }
+            let denom = cnt.max(1.0);
+            for j in 0..d {
+                pooled[i * d + j] /= denom;
+            }
+        }
+        Ok(pooled)
+    }
+
+    /// Fused QP heads over pooled embeddings: returns [n, C].
+    fn qp_heads(
+        &self,
+        pooled: &[f32],
+        n: usize,
+        lie: &Tensor,
+        w1p: &Tensor,
+        w1e: &Tensor,
+        b1: &Tensor,
+        w2: &Tensor,
+        b2: &Tensor,
+    ) -> Vec<f32> {
+        let d = self.d;
+        let hh = self.qp_hidden;
+        let c = w1p.shape[0];
+        let d_id = self.d_id;
+        let mut out = vec![0f32; n * c];
+        // he[c, j] = e_c · w1e[c, :, j]  (prompt-independent)
+        let mut he = vec![0f32; c * hh];
+        for ci in 0..c {
+            for j in 0..hh {
+                let mut acc = 0f32;
+                for e in 0..d_id {
+                    acc += lie.data[ci * d_id + e] * w1e.data[(ci * d_id + e) * hh + j];
+                }
+                he[ci * hh + j] = acc;
+            }
+        }
+        for i in 0..n {
+            let p = &pooled[i * d..(i + 1) * d];
+            for ci in 0..c {
+                let mut logit = b2.data[ci];
+                for j in 0..hh {
+                    let mut pre = he[ci * hh + j] + b1.data[ci * hh + j];
+                    for k in 0..d {
+                        pre += p[k] * w1p.data[(ci * d + k) * hh + j];
+                    }
+                    if pre > 0.0 {
+                        logit += pre * w2.data[ci * hh + j];
+                    }
+                }
+                out[i * c + ci] = sigmoid(logit);
+            }
+        }
+        out
+    }
+
+    /// Full forward for `n` already-packed rows; returns [n, heads].
+    fn forward(&self, ids: &[i32], mask: &[f32], n: usize, s: usize) -> Result<Vec<Vec<f32>>> {
+        let pooled = self.encode(ids, mask, n, s)?;
+        let d = self.d;
+        let flat = if self.entry.adapter {
+            // §D adapter path: residual PE adapter, then base heads + new
+            // head from the adapted representation (new candidate LAST).
+            let w1 = self.p("ada_pe_w1");
+            let b1 = &self.p("ada_pe_b1").data;
+            let w2 = self.p("ada_pe_w2");
+            let b2 = &self.p("ada_pe_b2").data;
+            let mut hmid = matmul(&pooled, &w1.data, n, d, d);
+            for r in 0..n {
+                for j in 0..d {
+                    hmid[r * d + j] = (hmid[r * d + j] + b1[j]).max(0.0);
+                }
+            }
+            let mut pooled_new = matmul(&hmid, &w2.data, n, d, d);
+            for r in 0..n {
+                for j in 0..d {
+                    pooled_new[r * d + j] += pooled[r * d + j] + b2[j];
+                }
+            }
+            let old = self.qp_heads(
+                &pooled_new,
+                n,
+                self.p("lie_emb"),
+                self.p("qp_w1p"),
+                self.p("qp_w1e"),
+                self.p("qp_b1"),
+                self.p("qp_w2"),
+                self.p("qp_b2"),
+            );
+            // e_new = ada_lie_emb @ ada_lie_w  [1, d_id]
+            let lie_raw = self.p("ada_lie_emb");
+            let lie_w = self.p("ada_lie_w");
+            let e_new = Tensor::new(
+                vec![1, self.d_id],
+                matmul(&lie_raw.data, &lie_w.data, 1, self.d_id, self.d_id),
+            );
+            let new = self.qp_heads(
+                &pooled_new,
+                n,
+                &e_new,
+                self.p("ada_qp_w1p"),
+                self.p("ada_qp_w1e"),
+                self.p("ada_qp_b1"),
+                self.p("ada_qp_w2"),
+                self.p("ada_qp_b2"),
+            );
+            let c_old = self.p("qp_w1p").shape[0];
+            let mut flat = Vec::with_capacity(n * (c_old + 1));
+            for i in 0..n {
+                flat.extend_from_slice(&old[i * c_old..(i + 1) * c_old]);
+                flat.push(new[i]);
+            }
+            flat
+        } else {
+            self.qp_heads(
+                &pooled,
+                n,
+                self.p("lie_emb"),
+                self.p("qp_w1p"),
+                self.p("qp_w1e"),
+                self.p("qp_b1"),
+                self.p("qp_w2"),
+                self.p("qp_b2"),
+            )
+        };
+        let c = flat.len() / n.max(1);
+        Ok((0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect())
+    }
+}
+
+impl QeModel for ReferenceModel {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn load_ms(&self) -> f64 {
+        self.load_ms
+    }
+
+    fn call_count(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn available_buckets(&self) -> Vec<(usize, usize, String)> {
+        let mut v = self.buckets.clone();
+        v.sort();
+        v
+    }
+
+    fn predict(&self, prompts: &[Vec<u32>], kind: &str) -> Result<Scores> {
+        let n = prompts.len();
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
+        let (b, s) = select_bucket(&self.buckets, kind, n, max_len, &self.entry.id)?;
+
+        // Pack ids + mask. The reference engine computes only the n real
+        // rows — batch padding exists for PJRT executable-shape parity and
+        // cannot change per-row results (rows are independent).
+        let mut ids = vec![0i32; n * s];
+        let mut mask = vec![0f32; n * s];
+        for (i, p) in prompts.iter().enumerate() {
+            let l = p.len().min(s);
+            for (j, &t) in p[..l].iter().enumerate() {
+                ids[i * s + j] = t as i32;
+                mask[i * s + j] = 1.0;
+            }
+        }
+        let scores = self.forward(&ids, &mask, n, s)?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(Scores { scores, bucket: (b, s), kind: kind.to_string() })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 math primitives (loop order fixed; f32 accumulation like XLA-CPU)
+// ---------------------------------------------------------------------------
+
+/// C-order matmul: a[m,k] @ b[k,n] -> [m,n].
+pub(crate) fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // expert-constructed weights are sparse
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Row-wise LayerNorm (eps 1e-6, matching model.py) in place.
+pub(crate) fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    for row in x.chunks_exact_mut(d) {
+        let mut mean = 0f32;
+        for &v in row.iter() {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0f32;
+        for &v in row.iter() {
+            let c = v - mean;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// Numerically stable softmax in place.
+pub(crate) fn softmax_in_place(row: &mut [f32]) {
+    let mut mx = f32::MIN;
+    for &v in row.iter() {
+        mx = mx.max(v);
+    }
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// GELU, tanh approximation (the `jax.nn.gelu` default used by ref.py).
+pub(crate) fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_sane() {
+        // matmul 2x2
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+        // softmax sums to 1 and is order-preserving
+        let mut r = [1.0f32, 2.0, 3.0];
+        softmax_in_place(&mut r);
+        let s: f32 = r.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(r[2] > r[1] && r[1] > r[0]);
+        // softmax with MASK_NEG zeroes masked entries
+        let mut r = [0.5f32, MASK_NEG, 0.5];
+        softmax_in_place(&mut r);
+        assert_eq!(r[1], 0.0);
+        assert!((r[0] - 0.5).abs() < 1e-6);
+        // gelu reference points
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        layer_norm(&mut x, &g, &b, 4);
+        let mean: f32 = x.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+}

@@ -15,11 +15,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::coordinator::Router;
+use crate::util::error::{Context, Result};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
+use crate::{anyhow, bail};
 
 pub struct Server {
     pub addr: String,
@@ -229,6 +229,7 @@ fn registry_json(router: &Router) -> String {
         ("family", Json::str(&router.cfg.family)),
         ("backbone", Json::str(&router.cfg.backbone)),
         ("model_id", Json::str(&router.qe.entry().id)),
+        ("engine", Json::str(router.qe.info().engine)),
         ("candidates", Json::Arr(cands)),
     ])
     .to_string()

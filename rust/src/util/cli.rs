@@ -4,7 +4,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 #[derive(Debug, Default)]
 pub struct Args {

@@ -1,0 +1,162 @@
+//! Minimal error substrate (the offline registry has no `anyhow`).
+//!
+//! Drop-in subset of the `anyhow` API used across the crate:
+//!
+//! * [`Error`] — a boxed message + context chain; `Display` prints the
+//!   outermost message, `{:#}` (alternate) prints the whole chain
+//!   outermost-first, separated by `": "` (same shape as anyhow's).
+//! * [`Result`] — alias defaulting the error type.
+//! * [`crate::anyhow!`] / [`crate::bail!`] — formatted construction /
+//!   early return.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result` and `Option`.
+//!
+//! Any `std::error::Error` converts into [`Error`] via `?`, so std fallible
+//! APIs (io, parse, utf8, ...) compose without adapters.
+
+use std::fmt;
+
+/// Chain of human-readable messages, outermost context first.
+pub struct Error {
+    /// `chain[0]` is the most recent context; the root cause is last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Push an outer context message (what `.context(..)` does).
+    pub fn wrap(mut self, msg: impl Into<String>) -> Error {
+        self.chain.insert(0, msg.into());
+        self
+    }
+
+    /// The root-cause message (innermost entry of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:?}` in tests / unwrap output: show the full chain.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, which
+// is what lets the blanket `From` below exist (same trick as anyhow).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.wrap(msg)
+        })
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.wrap(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn chain_formats() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        assert!(full.len() > "reading config: ".len());
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        let e: Error = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        let r: Result<u32> = None.context("missing key");
+        assert_eq!(r.unwrap_err().to_string(), "missing key");
+        fn f() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "nope: reason");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn parse() -> Result<f64> {
+            Ok("not-a-number".parse::<f64>()?)
+        }
+        assert!(parse().is_err());
+    }
+}

@@ -9,7 +9,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -420,5 +421,53 @@ mod tests {
         let v = parse(r#"[[[1]], {"k": {"j": [true, false]}}]"#).unwrap();
         let arr = v.as_arr().unwrap();
         assert_eq!(arr.len(), 2);
+    }
+
+    #[test]
+    fn writer_escapes_roundtrip() {
+        // Control characters, quotes, backslashes and non-ASCII must
+        // survive write → parse unchanged.
+        let s = "a\"b\\c\nd\te\r\u{0008}\u{000C}\u{0001}é😀 w/ spaces";
+        let v = Json::Str(s.to_string());
+        let re = parse(&v.to_string()).unwrap();
+        assert_eq!(re.as_str().unwrap(), s);
+    }
+
+    #[test]
+    fn integer_valued_floats_write_as_integers() {
+        // Manifest fields like counts and token ids must not grow ".0"
+        // suffixes (python json.loads accepts both, but the golden parity
+        // files are diffed as text).
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(-3.0).to_string(), "-3");
+        assert_eq!(Json::Num(0.5).to_string(), "0.5");
+        assert_eq!(Json::Num(1e16).to_string(), "10000000000000000");
+    }
+
+    #[test]
+    fn deep_structure_roundtrip() {
+        let src = Json::obj(vec![
+            ("rows", Json::Arr(vec![
+                Json::obj(vec![
+                    ("tokens", Json::Arr(vec![Json::Num(1.0), Json::Num(2047.0)])),
+                    ("difficulty", Json::Num(0.6714657)),
+                    ("rewards", Json::arr_f64(&[0.8331754, 0.12345678901234567])),
+                    ("flag", Json::Bool(false)),
+                    ("none", Json::Null),
+                ]),
+            ])),
+            ("seed", Json::Num(20250710.0)),
+        ]);
+        let re = parse(&src.to_string()).unwrap();
+        assert_eq!(re, src);
+        // and a second trip is byte-stable (canonical output)
+        assert_eq!(re.to_string(), src.to_string());
+    }
+
+    #[test]
+    fn surrogate_pair_escapes() {
+        // \uD83D\uDE00 is the UTF-16 surrogate-pair escape for U+1F600.
+        let v = parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
     }
 }

@@ -1,11 +1,15 @@
 //! Substrate utilities built from scratch for the offline environment:
-//! RNG, JSON, thread pool, CLI parsing, latency histograms, and the
-//! bench / property-test harnesses used across the crate.
+//! error handling, RNG, JSON, npz tensor archives, thread pool, CLI
+//! parsing, latency histograms, and the bench / property-test harnesses
+//! used across the crate (the offline registry has no
+//! anyhow/serde/tokio/criterion/proptest).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod hist;
 pub mod json;
 pub mod minitest;
+pub mod npz;
 pub mod rng;
 pub mod threadpool;

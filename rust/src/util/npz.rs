@@ -1,0 +1,375 @@
+//! Minimal `.npz` reader/writer (numpy zip archives; no external crates).
+//!
+//! Scope: exactly what the artifact pipeline produces and consumes —
+//! `np.savez` archives of little-endian C-order tensors (`<f4`, `<f8`,
+//! `<i4`, `<i8`), ZIP *stored* (method 0) entries. Compressed archives
+//! (`np.savez_compressed`) are rejected with a clear error; they only
+//! appear in python-side training caches, never in serving artifacts.
+//!
+//! The reader walks the ZIP central directory (robust to extra fields and
+//! data descriptors); the writer emits stored entries with correct CRC-32
+//! so `np.load` round-trips the output bit-exactly.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+
+/// One named dense tensor, C-order f32 payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3 polynomial, the ZIP checksum)
+// ---------------------------------------------------------------------------
+
+fn crc32_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+fn u16le(b: &[u8], off: usize) -> usize {
+    u16::from_le_bytes([b[off], b[off + 1]]) as usize
+}
+
+fn u32le(b: &[u8], off: usize) -> usize {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]]) as usize
+}
+
+/// Read every tensor of an `.npz` file, sorted by entry name.
+pub fn read_npz(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let buf = std::fs::read(path).with_context(|| format!("reading npz {path:?}"))?;
+    let mut out = read_npz_bytes(&buf).with_context(|| format!("parsing npz {path:?}"))?;
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+pub fn read_npz_bytes(buf: &[u8]) -> Result<Vec<(String, Tensor)>> {
+    // Locate the end-of-central-directory record (scan the tail for the
+    // signature; the comment is at most 64KiB).
+    if buf.len() < 22 {
+        bail!("not a zip: {} bytes", buf.len());
+    }
+    let scan_from = buf.len().saturating_sub(22 + 65_536);
+    let mut eocd = None;
+    let mut i = buf.len() - 22;
+    loop {
+        if u32le(buf, i) == 0x0605_4B50 {
+            eocd = Some(i);
+            break;
+        }
+        if i == scan_from {
+            break;
+        }
+        i -= 1;
+    }
+    let eocd = eocd.ok_or_else(|| anyhow!("zip end-of-central-directory not found"))?;
+    let n_entries = u16le(buf, eocd + 10);
+    let cd_off = u32le(buf, eocd + 16);
+
+    let mut tensors = Vec::with_capacity(n_entries);
+    let mut p = cd_off;
+    for _ in 0..n_entries {
+        if p + 46 > buf.len() || u32le(buf, p) != 0x0201_4B50 {
+            bail!("corrupt zip central directory at offset {p}");
+        }
+        let method = u16le(buf, p + 10);
+        let csize = u32le(buf, p + 20);
+        let name_len = u16le(buf, p + 28);
+        let extra_len = u16le(buf, p + 30);
+        let comment_len = u16le(buf, p + 32);
+        let local_off = u32le(buf, p + 42);
+        if p + 46 + name_len > buf.len() {
+            bail!("zip entry name out of bounds at offset {p}");
+        }
+        let name = std::str::from_utf8(&buf[p + 46..p + 46 + name_len])
+            .context("zip entry name is not utf-8")?
+            .to_string();
+        if method != 0 {
+            bail!(
+                "zip entry '{name}' uses compression method {method}; only stored (np.savez, \
+                 not savez_compressed) archives are supported"
+            );
+        }
+        // Local header: re-read name/extra lengths (extra field may differ).
+        if local_off + 30 > buf.len() || u32le(buf, local_off) != 0x0403_4B50 {
+            bail!("corrupt zip local header for '{name}'");
+        }
+        let lname = u16le(buf, local_off + 26);
+        let lextra = u16le(buf, local_off + 28);
+        let data_off = local_off + 30 + lname + lextra;
+        if data_off + csize > buf.len() {
+            bail!("zip entry '{name}' data out of bounds");
+        }
+        let tname = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+        let tensor = parse_npy(&buf[data_off..data_off + csize])
+            .with_context(|| format!("entry '{name}'"))?;
+        tensors.push((tname, tensor));
+        p += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(tensors)
+}
+
+fn parse_npy(b: &[u8]) -> Result<Tensor> {
+    if b.len() < 10 || &b[..6] != b"\x93NUMPY" {
+        bail!("bad npy magic");
+    }
+    let (major, header_len, body_off): (u8, usize, usize) = if b[6] == 1 {
+        (1, u16le(b, 8), 10)
+    } else {
+        if b.len() < 12 {
+            bail!("truncated npy v2 header");
+        }
+        (b[6], u32le(b, 8), 12)
+    };
+    if major > 3 {
+        bail!("unsupported npy version {major}");
+    }
+    if body_off + header_len > b.len() {
+        bail!("npy header out of bounds");
+    }
+    let header = std::str::from_utf8(&b[body_off..body_off + header_len])
+        .context("npy header is not utf-8")?;
+    let descr = dict_value(header, "descr")?;
+    let descr = descr.trim_matches(|c| c == '\'' || c == '"');
+    let fortran = dict_value(header, "fortran_order")?;
+    if fortran.trim() != "False" {
+        bail!("fortran-order arrays are not supported");
+    }
+    let shape_s = dict_value(header, "shape")?;
+    let shape: Vec<usize> = shape_s
+        .trim_matches(|c| c == '(' || c == ')')
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().map_err(|_| anyhow!("bad shape token '{t}'")))
+        .collect::<Result<_>>()?;
+    let n: usize = shape.iter().product();
+    let body = &b[body_off + header_len..];
+    let mut data = Vec::with_capacity(n);
+    match descr {
+        "<f4" => {
+            if body.len() < n * 4 {
+                bail!("npy body too short for {n} f32");
+            }
+            for i in 0..n {
+                data.push(f32::from_le_bytes(body[i * 4..i * 4 + 4].try_into().unwrap()));
+            }
+        }
+        "<f8" => {
+            if body.len() < n * 8 {
+                bail!("npy body too short for {n} f64");
+            }
+            for i in 0..n {
+                data.push(f64::from_le_bytes(body[i * 8..i * 8 + 8].try_into().unwrap()) as f32);
+            }
+        }
+        "<i4" => {
+            if body.len() < n * 4 {
+                bail!("npy body too short for {n} i32");
+            }
+            for i in 0..n {
+                data.push(i32::from_le_bytes(body[i * 4..i * 4 + 4].try_into().unwrap()) as f32);
+            }
+        }
+        "<i8" => {
+            if body.len() < n * 8 {
+                bail!("npy body too short for {n} i64");
+            }
+            for i in 0..n {
+                data.push(i64::from_le_bytes(body[i * 8..i * 8 + 8].try_into().unwrap()) as f32);
+            }
+        }
+        other => bail!("unsupported npy dtype '{other}'"),
+    }
+    Ok(Tensor::new(shape, data))
+}
+
+fn dict_value<'a>(header: &'a str, key: &str) -> Result<&'a str> {
+    // The npy header is a python dict literal with a fixed, flat layout.
+    let pat = format!("'{key}':");
+    let start = header
+        .find(&pat)
+        .ok_or_else(|| anyhow!("npy header missing key '{key}'"))?
+        + pat.len();
+    let rest = header[start..].trim_start();
+    let end = if rest.starts_with('(') {
+        rest.find(')').map(|i| i + 1).unwrap_or(rest.len())
+    } else {
+        rest.find(',').unwrap_or_else(|| rest.find('}').unwrap_or(rest.len()))
+    };
+    Ok(rest[..end].trim())
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+fn npy_bytes(t: &Tensor) -> Vec<u8> {
+    let shape = if t.shape.len() == 1 {
+        format!("({},)", t.shape[0])
+    } else {
+        format!("({})", t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", "))
+    };
+    let mut header =
+        format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {shape}, }}");
+    // magic(6) + version(2) + len(2) + header must be a multiple of 64.
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut out = Vec::with_capacity(10 + header.len() + t.data.len() * 4);
+    out.extend_from_slice(b"\x93NUMPY\x01\x00");
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for &x in &t.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Write tensors as an uncompressed `.npz` (np.load-compatible).
+pub fn write_npz(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
+    let mut payload: Vec<u8> = Vec::new();
+    let mut central: Vec<u8> = Vec::new();
+    let mut n = 0u16;
+    for (name, t) in tensors {
+        let fname = format!("{name}.npy");
+        let body = npy_bytes(t);
+        let crc = crc32(&body);
+        let local_off = payload.len() as u32;
+        // local file header
+        payload.extend_from_slice(&0x0403_4B50u32.to_le_bytes());
+        payload.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        payload.extend_from_slice(&0u16.to_le_bytes()); // flags
+        payload.extend_from_slice(&0u16.to_le_bytes()); // method: stored
+        payload.extend_from_slice(&0u32.to_le_bytes()); // mod time+date
+        payload.extend_from_slice(&crc.to_le_bytes());
+        payload.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(fname.len() as u16).to_le_bytes());
+        payload.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        payload.extend_from_slice(fname.as_bytes());
+        payload.extend_from_slice(&body);
+        // central directory entry
+        central.extend_from_slice(&0x0201_4B50u32.to_le_bytes());
+        central.extend_from_slice(&20u16.to_le_bytes()); // version made by
+        central.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        central.extend_from_slice(&0u16.to_le_bytes()); // flags
+        central.extend_from_slice(&0u16.to_le_bytes()); // method
+        central.extend_from_slice(&0u32.to_le_bytes()); // time+date
+        central.extend_from_slice(&crc.to_le_bytes());
+        central.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(fname.len() as u16).to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes()); // extra
+        central.extend_from_slice(&0u16.to_le_bytes()); // comment
+        central.extend_from_slice(&0u16.to_le_bytes()); // disk
+        central.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+        central.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+        central.extend_from_slice(&local_off.to_le_bytes());
+        central.extend_from_slice(fname.as_bytes());
+        n += 1;
+    }
+    let cd_off = payload.len() as u32;
+    let cd_size = central.len() as u32;
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    f.write_all(&payload)?;
+    f.write_all(&central)?;
+    // end of central directory
+    let mut eocd = Vec::with_capacity(22);
+    eocd.extend_from_slice(&0x0605_4B50u32.to_le_bytes());
+    eocd.extend_from_slice(&0u16.to_le_bytes()); // disk
+    eocd.extend_from_slice(&0u16.to_le_bytes()); // cd disk
+    eocd.extend_from_slice(&n.to_le_bytes());
+    eocd.extend_from_slice(&n.to_le_bytes());
+    eocd.extend_from_slice(&cd_size.to_le_bytes());
+    eocd.extend_from_slice(&cd_off.to_le_bytes());
+    eocd.extend_from_slice(&0u16.to_le_bytes()); // comment len
+    f.write_all(&eocd)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_reference_vector() {
+        // Well-known check value for the ASCII string "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn npz_roundtrip() {
+        let tensors = vec![
+            ("alpha".to_string(), Tensor::new(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, 9.25])),
+            ("beta".to_string(), Tensor::new(vec![4], vec![0.5, 0.25, -0.125, 2048.0])),
+        ];
+        let p = std::env::temp_dir().join(format!("ipr_npz_test_{}.npz", std::process::id()));
+        write_npz(&p, &tensors).unwrap();
+        let back = read_npz(&p).unwrap();
+        assert_eq!(back, tensors);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_npz_bytes(b"PK\x03\x04 not a real zip").is_err());
+        assert!(read_npz_bytes(b"").is_err());
+        assert!(parse_npy(b"\x93NUMPYxx").is_err());
+    }
+
+    #[test]
+    fn npy_header_is_64_aligned() {
+        let t = Tensor::new(vec![1], vec![1.0]);
+        let b = npy_bytes(&t);
+        let header_len = u16::from_le_bytes([b[8], b[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+        let parsed = parse_npy(&b).unwrap();
+        assert_eq!(parsed, t);
+    }
+}

@@ -1,9 +1,12 @@
 //! Integration tests over real artifacts: registry → runtime → QE service
 //! → coordinator → eval, asserting the paper's *shape* claims.
 //!
-//! All tests no-op (pass) when `artifacts/` has not been built yet so that
-//! `cargo test` works pre-`make artifacts`; run `make artifacts` first for
-//! the real signal.
+//! No silent skips: when `artifacts/` has not been built (`make
+//! artifacts`), the registry falls back to the self-generated reference
+//! artifacts served by the pure-rust engine, so every assertion below
+//! executes in a plain `cargo test -q` from a clean checkout. The only
+//! pjrt-specific case (corrupt-HLO loading) is feature-gated with a
+//! logged skip.
 
 use std::sync::Arc;
 
@@ -15,19 +18,18 @@ use ipr::eval::dataset::{self, FamilyView};
 use ipr::eval::metrics;
 use ipr::qe::{BatcherConfig, QeService};
 use ipr::registry::Registry;
-use ipr::runtime::Engine;
+use ipr::runtime::{create_engine, Engine as _, QeModel as _};
 
-fn artifacts() -> Option<Arc<Registry>> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Arc::new(Registry::load("artifacts").expect("manifest parses")))
+fn registry() -> Arc<Registry> {
+    Arc::new(
+        Registry::load_or_reference("artifacts")
+            .expect("real or reference artifacts must load"),
+    )
 }
 
 #[test]
 fn registry_has_full_model_grid() {
-    let Some(reg) = artifacts() else { return };
+    let reg = registry();
     for bb in ["roberta_sim", "stella_sim", "qwen_sim", "qwen_emb_sim"] {
         for fam in ["claude", "llama", "nova"] {
             let m = reg.family_qe(fam, bb).expect("model present");
@@ -40,12 +42,14 @@ fn registry_has_full_model_grid() {
     assert!(reg.model("qe_claude_adapter_stella_sim").unwrap().adapter);
 }
 
-/// THE AOT contract: the rust PJRT path must reproduce python's
-/// predictions on the golden batch through HLO text + npz weights.
+/// THE artifact contract: this build's engine must reproduce the
+/// manifest's golden predictions (python-side predictions for AOT
+/// artifacts; reference-forward predictions for self-generated ones)
+/// through the weights + manifest path.
 #[test]
-fn runtime_reproduces_python_golden_predictions() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+fn runtime_reproduces_golden_predictions() {
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let rows = dataset::load(&reg, "test", 4).unwrap();
     for model_id in [
         "qe_claude_stella_sim",
@@ -70,12 +74,12 @@ fn runtime_reproduces_python_golden_predictions() {
     }
 }
 
-/// L1 composition proof: the pallas-kernel artifact and the pure-XLA
-/// artifact agree end-to-end through the rust runtime.
+/// L1 composition proof: the pallas-kernel variant and the pure-XLA
+/// variant agree end-to-end through the serving runtime.
 #[test]
 fn pallas_and_xla_artifacts_agree() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
     let model = engine.load_model(&reg, &entry, &["xla", "pallas"]).unwrap();
     let rows = dataset::load(&reg, "test", 8).unwrap();
@@ -90,8 +94,8 @@ fn pallas_and_xla_artifacts_agree() {
 
 #[test]
 fn batch_bucket_selection_consistent_predictions() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
     let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
     let rows = dataset::load(&reg, "test", 8).unwrap();
@@ -110,7 +114,7 @@ fn batch_bucket_selection_consistent_predictions() {
 
 #[test]
 fn qe_service_batches_concurrent_requests() {
-    let Some(reg) = artifacts() else { return };
+    let reg = registry();
     let svc = QeService::start(
         reg.clone(),
         "qe_claude_stella_sim",
@@ -142,7 +146,7 @@ fn qe_service_batches_concurrent_requests() {
 
 #[test]
 fn score_cache_hits_on_repeat() {
-    let Some(reg) = artifacts() else { return };
+    let reg = registry();
     let svc = QeService::start(reg.clone(), "qe_claude_stella_sim", BatcherConfig::default())
         .unwrap();
     let rows = dataset::load(&reg, "test", 2).unwrap();
@@ -156,7 +160,7 @@ fn score_cache_hits_on_repeat() {
 
 #[test]
 fn router_tau_extremes_and_monotonicity() {
-    let Some(reg) = artifacts() else { return };
+    let reg = registry();
     let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
     let rows = dataset::load(&reg, "test", 12).unwrap();
     let cheapest = router
@@ -190,14 +194,14 @@ fn router_tau_extremes_and_monotonicity() {
 /// oracle > IPR > random (Table 3) and CSR(100%) > 0 (Table 4).
 #[test]
 fn routing_shape_claims_hold() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let rows = dataset::load(&reg, "test", 600).unwrap();
     let view = FamilyView::new(&reg, &rows, reg.family_indices("claude"));
 
     let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
     let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
-    let pred = ipr::eval::scores::score_rows(&model, &rows).unwrap();
+    let pred = ipr::eval::scores::score_rows(&*model, &rows).unwrap();
     let truth = view.true_scores();
 
     // quality estimation sane
@@ -225,15 +229,15 @@ fn routing_shape_claims_hold() {
 /// learned.
 #[test]
 fn adapter_preserves_old_candidates() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let rows = dataset::load(&reg, "test", 64).unwrap();
     let base_e = reg.model("qe_claude3_stella_sim_base").unwrap().clone();
     let ada_e = reg.model("qe_claude_adapter_stella_sim").unwrap().clone();
     let base = engine.load_model(&reg, &base_e, &["xla"]).unwrap();
     let ada = engine.load_model(&reg, &ada_e, &["xla"]).unwrap();
-    let b = ipr::eval::scores::score_rows(&base, &rows).unwrap();
-    let a = ipr::eval::scores::score_rows(&ada, &rows).unwrap();
+    let b = ipr::eval::scores::score_rows(&*base, &rows).unwrap();
+    let a = ipr::eval::scores::score_rows(&*ada, &rows).unwrap();
     let mut drift = 0.0f64;
     let mut n = 0;
     for (rb, ra) in b.iter().zip(&a) {
@@ -268,8 +272,8 @@ fn registry_load_missing_dir_errors() {
 
 #[test]
 fn load_model_with_bad_weights_path_errors() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let mut entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
     entry.weights = "weights/does_not_exist.npz".into();
     assert!(engine.load_model(&reg, &entry, &["xla"]).is_err());
@@ -277,8 +281,8 @@ fn load_model_with_bad_weights_path_errors() {
 
 #[test]
 fn load_model_with_mismatched_param_names_errors() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let mut entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
     entry.param_names[0] = "zzz_not_a_param".into();
     match engine.load_model(&reg, &entry, &["xla"]) {
@@ -288,11 +292,27 @@ fn load_model_with_mismatched_param_names_errors() {
 }
 
 #[test]
+fn load_model_with_corrupt_weights_errors() {
+    let reg = registry();
+    let engine = create_engine().unwrap();
+    let mut entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    let bad = reg.root.join("weights/corrupt_test.npz");
+    std::fs::write(&bad, b"PK\x03\x04 this is not a real npz archive").unwrap();
+    entry.weights = "weights/corrupt_test.npz".into();
+    assert!(engine.load_model(&reg, &entry, &["xla"]).is_err());
+    let _ = std::fs::remove_file(&bad);
+}
+
+/// Corrupt-HLO loading only exists on the PJRT path (the reference engine
+/// never reads HLO text).
+#[cfg(feature = "pjrt")]
+#[test]
 fn load_model_with_corrupt_hlo_errors() {
-    let Some(reg) = artifacts() else { return };
-    let engine = Engine::new().unwrap();
+    let reg = registry();
+    let engine = create_engine().unwrap();
     let mut entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
     let bad = reg.root.join("hlo/corrupt_test.hlo.txt");
+    std::fs::create_dir_all(bad.parent().unwrap()).unwrap();
     std::fs::write(&bad, "HloModule garbage\nthis is not hlo\n").unwrap();
     for v in entry.variants.iter_mut() {
         v.path = "hlo/corrupt_test.hlo.txt".into();
@@ -301,8 +321,18 @@ fn load_model_with_corrupt_hlo_errors() {
     let _ = std::fs::remove_file(&bad);
 }
 
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn load_model_with_corrupt_hlo_errors() {
+    eprintln!(
+        "SKIP: corrupt-HLO loading is a pjrt-feature path (the reference \
+         engine executes from npz weights and never parses HLO text); \
+         re-run with --features pjrt for this case"
+    );
+}
+
 #[test]
 fn qe_service_unknown_model_errors() {
-    let Some(reg) = artifacts() else { return };
+    let reg = registry();
     assert!(QeService::start(reg, "qe_nonexistent", BatcherConfig::default()).is_err());
 }

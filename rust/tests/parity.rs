@@ -1,28 +1,34 @@
 //! Cross-language parity: the rust SynthWorld/tokenizer must agree with
 //! the python build side *bit for bit* — training labels and serving/eval
 //! labels come from the same distribution or the whole reproduction is
-//! invalid.
+//! invalid — and the pure-rust reference engine must agree with the JAX
+//! reference kernels numerically.
 //!
-//! Two independent checks:
-//! 1. the golden file (64 prompts dumped by aot.py) re-derived exactly;
-//! 2. every row of the exported test split re-derived exactly.
+//! Three independent checks:
+//! 1. the golden file (64 prompts dumped by aot.py, or re-derived by the
+//!    reference generator in the identical format) re-derived exactly;
+//! 2. every row of the exported test split re-derived exactly;
+//! 3. the reference engine reproduces JAX `kernels/ref.py` forwards on
+//!    the checked-in synthesized-weight fixture to ≤1e-4
+//!    (`tests/fixtures/ref_parity.json`, written by
+//!    `python -m tools.gen_ref_fixture`).
 
-use ipr::registry::Registry;
+use ipr::registry::{ModelEntry, Registry};
+use ipr::runtime::reference::ReferenceModel;
+use ipr::runtime::QeModel as _;
 use ipr::synth::{SynthWorld, N_CANDIDATES};
 use ipr::tokenizer;
 use ipr::util::json::parse;
+use ipr::util::npz::Tensor;
+use ipr::util::rng::{substream, Rng};
 
-fn registry() -> Option<Registry> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built");
-        return None;
-    }
-    Some(Registry::load("artifacts").unwrap())
+fn registry() -> Registry {
+    Registry::load_or_reference("artifacts").expect("real or reference artifacts must load")
 }
 
 #[test]
 fn golden_file_bit_exact() {
-    let Some(reg) = registry() else { return };
+    let reg = registry();
     let text = std::fs::read_to_string(reg.abs("data/golden_parity.json")).unwrap();
     let j = parse(&text).unwrap();
     let world = SynthWorld::new(j.req("seed").unwrap().as_i64().unwrap() as u64);
@@ -58,7 +64,7 @@ fn golden_file_bit_exact() {
 
 #[test]
 fn exported_test_split_bit_exact() {
-    let Some(reg) = registry() else { return };
+    let reg = registry();
     let entry = reg.dataset("test").unwrap();
     let rows = ipr::eval::dataset::load(&reg, "test", 500).unwrap();
     let world = SynthWorld::new(reg.world_seed);
@@ -71,7 +77,7 @@ fn exported_test_split_bit_exact() {
         assert_eq!(r.domain, p.domain);
         assert_eq!(r.difficulty, p.difficulty);
         for c in 0..N_CANDIDATES {
-            // rewards were stored as f32 by the python dataset builder
+            // rewards were stored as f32 by the dataset builder
             assert_eq!(r.rewards[c] as f32, world.reward(&p, c) as f32, "row {} cand {c}", r.id);
             assert_eq!(r.out_lens[c], world.output_length(&p, c) as usize);
         }
@@ -87,4 +93,110 @@ fn tokenizer_matches_generator_on_all_splits() {
             assert_eq!(tokenizer::tokenize(&p.text()), p.tokens);
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Reference-engine vs JAX kernels (the ≤1e-4 numerical parity gate)
+// ---------------------------------------------------------------------------
+
+/// Re-synthesize one fixture parameter: `value = offset + scale·(2u−1)`
+/// with `u` drawn from `Rng(substream(seed, stream, param_index))`,
+/// cast to f32 — byte-identical to tools/gen_ref_fixture.py.
+fn synth_tensor(seed: u64, stream: u64, index: u64, shape: &[usize], offset: f64, scale: f64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(substream(seed, stream, index));
+    let data: Vec<f32> = (0..n)
+        .map(|_| (offset + scale * (2.0 * rng.next_f64() - 1.0)) as f32)
+        .collect();
+    Tensor::new(shape.to_vec(), data)
+}
+
+#[test]
+fn reference_engine_matches_python_ref_kernels() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/ref_parity.json");
+    let j = parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let seed = j.req("seed").unwrap().as_i64().unwrap() as u64;
+    let stream = j.req("stream").unwrap().as_i64().unwrap() as u64;
+
+    let mut cases_run = 0;
+    for case in j.req("cases").unwrap().as_arr().unwrap() {
+        let name = case.req("name").unwrap().as_str().unwrap().to_string();
+        let d = case.req("d").unwrap().as_usize().unwrap();
+        let layers = case.req("layers").unwrap().as_usize().unwrap();
+        let heads = case.req("heads").unwrap().as_usize().unwrap();
+        let n_cand = case.req("n_cand").unwrap().as_usize().unwrap();
+        let seq = case.req("seq").unwrap().as_usize().unwrap();
+        let adapter = case.req("kind").unwrap().as_str().unwrap() == "adapter";
+
+        let mut tensors = Vec::new();
+        for (idx, spec) in case.req("params").unwrap().as_arr().unwrap().iter().enumerate() {
+            let pname = spec.req("name").unwrap().as_str().unwrap().to_string();
+            let shape = spec.req("shape").unwrap().usizes().unwrap();
+            let offset = spec.req("offset").unwrap().as_f64().unwrap();
+            let scale = spec.req("scale").unwrap().as_f64().unwrap();
+            tensors.push((pname, synth_tensor(seed, stream, idx as u64, &shape, offset, scale)));
+        }
+
+        let prompts: Vec<Vec<u32>> = case
+            .req("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.usizes().unwrap().iter().map(|&x| x as u32).collect())
+            .collect();
+        let expected: Vec<Vec<f64>> = case
+            .req("expected")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.f64s().unwrap())
+            .collect();
+
+        let entry = ModelEntry {
+            id: name.clone(),
+            kind: "qe".into(),
+            backbone: "fixture".into(),
+            d,
+            layers,
+            heads,
+            loss: "mse".into(),
+            candidates: (0..n_cand).collect(),
+            candidate_names: (0..n_cand).map(|i| format!("cand{i}")).collect(),
+            weights: String::new(),
+            param_names: tensors.iter().map(|(n, _)| n.clone()).collect(),
+            variants: Vec::new(),
+            dev_mae: None,
+            golden_pred: Vec::new(),
+            unified: false,
+            adapter,
+            weak: None,
+            strong: None,
+        };
+        let model = ReferenceModel::from_tensors(
+            entry,
+            tensors,
+            vec![(prompts.len(), seq, "xla".to_string())],
+        )
+        .unwrap();
+        let out = model.predict(&prompts, "xla").unwrap();
+        assert_eq!(out.scores.len(), expected.len(), "{name}: row count");
+        let mut worst = 0f64;
+        for (i, (got_row, want_row)) in out.scores.iter().zip(&expected).enumerate() {
+            assert_eq!(got_row.len(), want_row.len(), "{name}: cols @{i}");
+            for (jx, (&got, &want)) in got_row.iter().zip(want_row).enumerate() {
+                let diff = (got as f64 - want).abs();
+                worst = worst.max(diff);
+                assert!(
+                    diff <= 1e-4,
+                    "{name}: jax/rust diverge at [{i}][{jx}]: rust {got} vs jax {want}"
+                );
+            }
+        }
+        eprintln!("ref parity '{name}': max |Δ| = {worst:.2e}");
+        cases_run += 1;
+    }
+    assert!(cases_run >= 3, "fixture must cover qe (x2) + adapter cases");
 }
