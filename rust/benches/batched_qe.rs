@@ -1,0 +1,23 @@
+//! Batched-vs-unbatched QE throughput (the batched-pipeline tentpole):
+//! the packed ragged `score_batch` kernel against the bucket-shaped
+//! per-request `predict` path at batch sizes 1/8/64 over a deterministic
+//! ragged live workload. Emits `BENCH_batched.json` (recorded in
+//! EXPERIMENTS.md; uploaded as a CI artifact by the bench-regression
+//! job). `IPR_BENCH_FAST=1` selects the smoke-sized run CI uses.
+
+use ipr::eval::bench_pipeline::{batched_qe_bench, print_batched};
+
+fn main() {
+    let fast = std::env::var("IPR_BENCH_FAST").is_ok();
+    let n = if fast { 96 } else { 384 };
+    let repeats = if fast { 1 } else { 3 };
+    let (arms, json) = batched_qe_bench("artifacts", &[1, 8, 64], n, repeats).unwrap();
+    print_batched(&arms);
+    std::fs::write("BENCH_batched.json", json.to_string()).unwrap();
+    let at64 = arms
+        .iter()
+        .find(|a| a.path == "score_batch" && a.batch == 64)
+        .map(|a| a.speedup)
+        .unwrap_or(0.0);
+    println!("\nwrote BENCH_batched.json  (batch-64 speedup vs unbatched: {at64:.2}x)");
+}

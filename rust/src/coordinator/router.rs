@@ -7,6 +7,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::anyhow;
 use crate::backends::{Backend, InvokeResult};
 use crate::util::error::Result;
 use crate::coordinator::gating::{route_decision, GatingStrategy, RouteDecision};
@@ -44,6 +45,22 @@ impl Default for RouterConfig {
             time_scale: 0.0,
         }
     }
+}
+
+/// One pre-tokenized request inside a batched routing call
+/// ([`Router::handle_batch`]). The server's micro-batcher builds these on
+/// its connection threads and hands whole batches to a drain worker.
+#[derive(Debug)]
+pub struct BatchItem {
+    pub tokens: Vec<u32>,
+    pub tau: Option<f64>,
+    pub invoke: bool,
+    pub identity: Option<Prompt>,
+    /// Tokenization time already spent on this request (µs).
+    pub tokenize_us: u64,
+    /// When the request entered the system; queueing + coalescing time
+    /// shows up in the outcome's `total_us`.
+    pub t_start: Instant,
 }
 
 /// Full outcome of one routed request.
@@ -139,6 +156,72 @@ impl Router {
         self.handle_tokens_timed(tokens, tau, invoke, identity, 0, Instant::now())
     }
 
+    /// Route a coalesced batch of requests: ONE `score_batch` through the
+    /// QE service for the whole batch, then per-request Decision
+    /// Optimization, invoke and metering. `qe_us` on every outcome is the
+    /// shared batch-forward latency (the requests waited on it together).
+    pub fn handle_batch(&self, items: &[BatchItem]) -> Result<Vec<RouteOutcome>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        // The one copy on this path: `finish` still needs each request's
+        // tokens (invoke + cost metering), so the service takes its own.
+        let toks: Vec<Vec<u32>> = items.iter().map(|it| it.tokens.clone()).collect();
+        let t1 = Instant::now();
+        let scores = self.qe.score_batch(toks)?;
+        let qe_us = t1.elapsed().as_micros() as u64;
+
+        // With latency simulation on, sequential invokes would serialize
+        // every simulated sleep behind one drain worker (head-of-line
+        // blocking: the last request waits the SUM of the batch's
+        // latencies). Fan the per-request tails out to scoped threads in
+        // that case; the plain metering path stays inline.
+        let simulate = self.cfg.time_scale > 0.0 && items.len() > 1 && items.iter().any(|it| it.invoke);
+        if !simulate {
+            return items
+                .iter()
+                .zip(scores)
+                .map(|(it, sc)| {
+                    self.finish(
+                        &it.tokens,
+                        sc,
+                        it.tau,
+                        it.invoke,
+                        it.identity.as_ref(),
+                        it.tokenize_us,
+                        qe_us,
+                        it.t_start,
+                    )
+                })
+                .collect();
+        }
+        let mut outs: Vec<Result<RouteOutcome>> = Vec::with_capacity(items.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = items
+                .iter()
+                .zip(scores)
+                .map(|(it, sc)| {
+                    s.spawn(move || {
+                        self.finish(
+                            &it.tokens,
+                            sc,
+                            it.tau,
+                            it.invoke,
+                            it.identity.as_ref(),
+                            it.tokenize_us,
+                            qe_us,
+                            it.t_start,
+                        )
+                    })
+                })
+                .collect();
+            for h in handles {
+                outs.push(h.join().unwrap_or_else(|_| Err(anyhow!("invoke worker panicked"))));
+            }
+        });
+        outs.into_iter().collect()
+    }
+
     fn handle_tokens_timed(
         &self,
         tokens: &[u32],
@@ -148,11 +231,26 @@ impl Router {
         tokenize_us: u64,
         t_start: Instant,
     ) -> Result<RouteOutcome> {
-        let tau = tau.unwrap_or(self.cfg.tau_default);
-
         let t1 = Instant::now();
         let scores = self.qe.score(tokens)?;
         let qe_us = t1.elapsed().as_micros() as u64;
+        self.finish(tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
+    }
+
+    /// The per-request tail shared by the single and batched paths:
+    /// Decision Optimization → optional invoke → metering.
+    fn finish(
+        &self,
+        tokens: &[u32],
+        scores: Vec<f32>,
+        tau: Option<f64>,
+        invoke: bool,
+        identity: Option<&Prompt>,
+        tokenize_us: u64,
+        qe_us: u64,
+        t_start: Instant,
+    ) -> Result<RouteOutcome> {
+        let tau = tau.unwrap_or(self.cfg.tau_default);
 
         let t2 = Instant::now();
         let decision = route_decision(&scores, &self.costs, tau, self.cfg.strategy, self.cfg.delta);

@@ -1,0 +1,225 @@
+//! Pipeline benches behind the `ipr bench` subcommand and the
+//! `batched_qe` bench target: batched-vs-unbatched QE throughput and
+//! single-request routing latency, emitted as `BENCH_batched.json` /
+//! `BENCH_routing.json` for the CI bench-regression job
+//! (`.github/workflows/ci.yml`, baseline in `ci/bench_baseline.json`).
+//!
+//! Determinism: the workload is the seeded SynthWorld live split, so a
+//! smoke run measures the exact same prompts on every machine (latency
+//! values are still hardware-dependent — the CI gate compares p50 against
+//! a checked-in baseline with a generous regression ratio).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::anyhow;
+use crate::coordinator::{Router, RouterConfig};
+use crate::qe::BatcherConfig;
+use crate::registry::Registry;
+use crate::runtime::{create_engine, Engine as _, QeModel as _};
+use crate::synth::{SynthWorld, SPLIT_LIVE};
+use crate::util::bench::Table;
+use crate::util::error::{Context, Result};
+use crate::util::hist::Histogram;
+use crate::util::json::{parse, Json};
+
+/// One measured arm of the batched-QE bench.
+pub struct BatchArm {
+    /// "predict" (the pre-batching per-request path, bucket-shaped
+    /// forward per prompt) or "score_batch" (packed ragged kernel).
+    pub path: &'static str,
+    /// Prompts per `score_batch` call (1 for the predict baseline).
+    pub batch: usize,
+    pub wall_s: f64,
+    pub prompts_per_s: f64,
+    /// Throughput vs the `predict` batch-1 baseline.
+    pub speedup: f64,
+}
+
+/// Deterministic ragged workload: the first `n` live-split prompts.
+fn workload(reg: &Registry, n: usize) -> Vec<Vec<u32>> {
+    let world = SynthWorld::new(reg.world_seed);
+    (0..n as u64).map(|i| world.sample_prompt(SPLIT_LIVE, i).tokens).collect()
+}
+
+/// Batched-vs-unbatched QE throughput on this build's engine.
+///
+/// The baseline arm scores every prompt through `predict` one at a time —
+/// the serving path before this pipeline existed. Each `score_batch` arm
+/// scores the same prompts in chunks of the given batch size. Returns the
+/// measured arms plus the `BENCH_batched.json` document.
+pub fn batched_qe_bench(
+    artifacts: &str,
+    batch_sizes: &[usize],
+    n_prompts: usize,
+    repeats: usize,
+) -> Result<(Vec<BatchArm>, Json)> {
+    if n_prompts == 0 || repeats == 0 {
+        return Err(anyhow!("need n_prompts > 0 and repeats > 0"));
+    }
+    let reg = Registry::load_or_reference(artifacts)?;
+    let engine = create_engine()?;
+    let entry = reg.family_qe("claude", "stella_sim")?.clone();
+    let model = engine.load_model(&reg, &entry, &["xla"])?;
+    let prompts = workload(&reg, n_prompts);
+
+    // Warm both paths (first-call page-in, artifact mmap, thread spawn).
+    let _ = model.predict(std::slice::from_ref(&prompts[0]), "xla")?;
+    let _ = model.score_batch(&prompts[..prompts.len().min(8)], "xla")?;
+
+    let mut arms: Vec<BatchArm> = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..repeats {
+        for p in &prompts {
+            let _ = model.predict(std::slice::from_ref(p), "xla")?;
+        }
+    }
+    let base_wall = t0.elapsed().as_secs_f64() / repeats as f64;
+    let base_tput = n_prompts as f64 / base_wall;
+    arms.push(BatchArm {
+        path: "predict",
+        batch: 1,
+        wall_s: base_wall,
+        prompts_per_s: base_tput,
+        speedup: 1.0,
+    });
+
+    for &b in batch_sizes {
+        let t0 = Instant::now();
+        for _ in 0..repeats {
+            for chunk in prompts.chunks(b.max(1)) {
+                let _ = model.score_batch(chunk, "xla")?;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64() / repeats as f64;
+        let tput = n_prompts as f64 / wall;
+        arms.push(BatchArm {
+            path: "score_batch",
+            batch: b,
+            wall_s: wall,
+            prompts_per_s: tput,
+            speedup: tput / base_tput,
+        });
+    }
+
+    let json = Json::obj(vec![
+        ("schema", Json::str("ipr-bench-batched/v1")),
+        ("engine", Json::str(engine.name())),
+        ("model", Json::str(&entry.id)),
+        ("n_prompts", Json::Num(n_prompts as f64)),
+        ("repeats", Json::Num(repeats as f64)),
+        (
+            "arms",
+            Json::Arr(
+                arms.iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("path", Json::str(a.path)),
+                            ("batch", Json::Num(a.batch as f64)),
+                            ("wall_s", Json::Num(a.wall_s)),
+                            ("prompts_per_s", Json::Num(a.prompts_per_s)),
+                            ("speedup_vs_unbatched", Json::Num(a.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    Ok((arms, json))
+}
+
+/// Print the arms as the uniform markdown-style bench table.
+pub fn print_batched(arms: &[BatchArm]) {
+    let mut t = Table::new(
+        "Batched QE throughput — packed ragged score_batch vs per-request predict",
+        &["path", "batch", "wall (s)", "prompts/s", "speedup"],
+    );
+    for a in arms {
+        t.row(vec![
+            a.path.to_string(),
+            a.batch.to_string(),
+            format!("{:.3}", a.wall_s),
+            format!("{:.1}", a.prompts_per_s),
+            format!("{:.2}x", a.speedup),
+        ]);
+    }
+    t.print();
+}
+
+/// Single-request routing latency through the full Router (tokenized
+/// fast path, score cache off so every request pays a real forward).
+/// The CI regression metric is `p50_us`.
+pub fn routing_bench(artifacts: &str, n_requests: usize) -> Result<Json> {
+    if n_requests == 0 {
+        return Err(anyhow!("need n_requests > 0"));
+    }
+    let reg = Arc::new(Registry::load_or_reference(artifacts)?);
+    let cfg = RouterConfig {
+        batcher: BatcherConfig { cache_cap: 0, ..BatcherConfig::default() },
+        ..RouterConfig::default()
+    };
+    let router = Router::new(reg.clone(), cfg)?;
+    let prompts = workload(&reg, n_requests);
+    let _ = router.handle_tokens(&prompts[0], Some(0.2), false, None)?;
+    let mut h = Histogram::new();
+    let t0 = Instant::now();
+    for p in &prompts {
+        let q0 = Instant::now();
+        let _ = router.handle_tokens(p, Some(0.2), false, None)?;
+        h.record(q0.elapsed());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    router.qe.shutdown();
+    Ok(Json::obj(vec![
+        ("schema", Json::str("ipr-bench-routing/v1")),
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("p50_us", Json::Num(h.quantile_ns(0.5) as f64 / 1e3)),
+        ("p99_us", Json::Num(h.quantile_ns(0.99) as f64 / 1e3)),
+        ("mean_us", Json::Num(h.mean_ns() / 1e3)),
+        ("req_per_s", Json::Num(n_requests as f64 / wall)),
+    ]))
+}
+
+/// Compare a fresh routing-bench document against the checked-in
+/// baseline: error when p50 regresses past `baseline * max_ratio` (the
+/// CI bench-regression gate). Returns the OK message otherwise.
+pub fn check_routing_regression(
+    current: &Json,
+    baseline_path: &str,
+    max_ratio: f64,
+) -> Result<String> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let base = parse(&text)?;
+    let base_p50 = base.req("routing_p50_us")?.as_f64()?;
+    let cur_p50 = current.req("p50_us")?.as_f64()?;
+    let limit = base_p50 * max_ratio;
+    if cur_p50 > limit {
+        return Err(anyhow!(
+            "p50 routing latency regression: {cur_p50:.1}us > {limit:.1}us \
+             (baseline {base_p50:.1}us x {max_ratio}); refresh with \
+             `ipr bench --write-baseline ci/bench_baseline.json` if intended"
+        ));
+    }
+    Ok(format!(
+        "bench-regression OK: p50 {cur_p50:.1}us <= {limit:.1}us (baseline {base_p50:.1}us x {max_ratio})"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression-gate logic on synthetic documents (no timing).
+    #[test]
+    fn regression_check_logic() {
+        let file = std::env::temp_dir().join(format!("ipr-bench-baseline-{}", std::process::id()));
+        std::fs::write(&file, "{\"routing_p50_us\": 100.0}").unwrap();
+        let path = file.to_str().unwrap();
+        let ok = Json::obj(vec![("p50_us", Json::Num(120.0))]);
+        assert!(check_routing_regression(&ok, path, 1.25).is_ok());
+        let bad = Json::obj(vec![("p50_us", Json::Num(130.0))]);
+        assert!(check_routing_regression(&bad, path, 1.25).is_err());
+        let _ = std::fs::remove_file(&file);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod arqgc;
 pub mod baselines;
+pub mod bench_pipeline;
 pub mod dataset;
 pub mod human;
 pub mod metrics;

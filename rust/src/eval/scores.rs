@@ -8,7 +8,6 @@
 use std::io::{Read, Write};
 use std::path::PathBuf;
 
-use crate::bail;
 use crate::eval::dataset::Row;
 use crate::registry::Registry;
 use crate::runtime::{Engine, QeModel};
@@ -81,27 +80,15 @@ pub fn predicted_scores(
     Ok(m)
 }
 
-/// Batched forward over rows (no cache).
+/// Batched forward over rows (no cache): `score_batch` slabs — the
+/// engine packs raggedly (reference) or chunks to its buckets (PJRT);
+/// see DESIGN.md §11. 256-row slabs bound the packed activation buffers
+/// to tens of MB while still amortizing weights and worker threads.
 pub fn score_rows(model: &dyn QeModel, rows: &[Row]) -> Result<Vec<Vec<f32>>> {
-    // find the largest xla batch bucket
-    let b = model
-        .available_buckets()
-        .into_iter()
-        .filter(|(_, _, k)| k == "xla")
-        .map(|(b, _, _)| b)
-        .max()
-        .unwrap_or(1);
-    if b == 0 {
-        bail!("no xla buckets loaded");
-    }
     let mut out = Vec::with_capacity(rows.len());
-    let mut i = 0;
-    while i < rows.len() {
-        let chunk = &rows[i..(i + b).min(rows.len())];
+    for chunk in rows.chunks(256) {
         let toks: Vec<Vec<u32>> = chunk.iter().map(|r| r.tokens.clone()).collect();
-        let scores = model.predict(&toks, "xla")?;
-        out.extend(scores.scores);
-        i += b;
+        out.extend(model.score_batch(&toks, "xla")?.scores);
     }
     Ok(out)
 }

@@ -1,9 +1,12 @@
 //! `ipr` — the IPR coordinator CLI.
 //!
 //! Subcommands:
-//! * `serve`         — start the routing server (HTTP/1.1).
+//! * `serve`         — start the routing server (HTTP/1.1, micro-batched).
 //! * `route`         — one-shot route of a prompt from the command line.
 //! * `eval`          — regenerate a paper table/figure (`--table 3`, `all`).
+//! * `bench`         — batched-QE + routing-latency benches → BENCH_*.json
+//!                     (the CI bench-regression job runs this in --smoke
+//!                     mode against `ci/bench_baseline.json`).
 //! * `registry`      — show candidates, prices and deployable QE models.
 //! * `parity`        — golden-file + pallas-vs-xla numerical parity checks.
 //! * `gen-workload`  — print synthetic traffic (text + identity fields).
@@ -11,15 +14,19 @@
 use std::sync::Arc;
 
 use ipr::coordinator::{GatingStrategy, Router, RouterConfig};
+use ipr::eval::bench_pipeline::{
+    batched_qe_bench, check_routing_regression, print_batched, routing_bench,
+};
 use ipr::eval::tables::{run_table, EvalCtx};
 use ipr::qe::BatcherConfig;
 use ipr::registry::Registry;
 use ipr::runtime::{create_engine, Engine as _, QeModel as _};
-use ipr::server::Server;
+use ipr::server::{Server, ServerConfig};
 use ipr::synth::SynthWorld;
 use ipr::util::cli::Args;
-use ipr::bail;
 use ipr::util::error::{Context, Result};
+use ipr::util::json::Json;
+use ipr::{anyhow, bail};
 
 fn main() {
     if let Err(e) = run() {
@@ -35,20 +42,27 @@ USAGE:
   ipr serve   [--artifacts DIR] [--family claude] [--backbone stella_sim]
               [--bind 127.0.0.1:8080] [--workers 4] [--tau 0.0]
               [--strategy dynamic_max] [--kind xla] [--time-scale 0]
+              [--max-batch 8] [--max-wait-us 500] [--batch-workers 2]
+              [--drain-ms 5000]
   ipr route   --prompt \"...\" [--tau 0.3] [--family claude] [--invoke]
   ipr eval    --table {1..12|D|fig3|fig45|all} [--limit N] [--artifacts DIR]
+  ipr bench   [--artifacts DIR] [--out-dir .] [--smoke] [--batch-sizes 1,8,64]
+              [--prompts N] [--repeats N] [--route-requests N]
+              [--baseline ci/bench_baseline.json] [--max-regress 1.25]
+              [--write-baseline PATH]
   ipr registry [--artifacts DIR]
   ipr parity  [--artifacts DIR]
   ipr gen-workload [--n 10]
 ";
 
 fn run() -> Result<()> {
-    let args = Args::parse(&["invoke", "help"]);
+    let args = Args::parse(&["invoke", "help", "smoke"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
         "route" => cmd_route(&args),
         "eval" => cmd_eval(&args),
+        "bench" => cmd_bench(&args),
         "registry" => cmd_registry(&args),
         "parity" => cmd_parity(&args),
         "gen-workload" => cmd_gen_workload(&args),
@@ -102,12 +116,68 @@ fn build_router(args: &Args) -> Result<Arc<Router>> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let router = build_router(args)?;
     let bind = args.get_or("bind", "127.0.0.1:8080");
-    let workers = args.usize_or("workers", 4)?;
-    let server = Server::start(router, bind, workers)?;
+    let cfg = ServerConfig {
+        workers: args.usize_or("workers", 4)?,
+        // 0 = mirror --max-batch (the router's QE batcher setting).
+        max_batch: 0,
+        max_wait: std::time::Duration::from_micros(args.usize_or("max-wait-us", 500)? as u64),
+        batch_workers: args.usize_or("batch-workers", 2)?,
+        drain: std::time::Duration::from_millis(args.usize_or("drain-ms", 5000)? as u64),
+    };
+    let server = Server::start_with(router, bind, cfg)?;
     println!("ipr serving on http://{}  (Ctrl-C to stop)", server.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// `ipr bench`: run the batched-QE throughput bench and the routing
+/// latency bench, write `BENCH_batched.json` / `BENCH_routing.json`, and
+/// optionally gate against a checked-in baseline (CI bench-regression).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let smoke = args.flag("smoke");
+    let out_dir = args.get_or("out-dir", ".").to_string();
+    let sizes: Vec<usize> = args
+        .get_or("batch-sizes", "1,8,64")
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--batch-sizes expects integers, got '{s}'"))
+        })
+        .collect::<Result<Vec<usize>>>()?;
+    let n = args.usize_or("prompts", if smoke { 96 } else { 384 })?;
+    let repeats = args.usize_or("repeats", if smoke { 1 } else { 3 })?;
+
+    let (arms, batched) = batched_qe_bench(&dir, &sizes, n, repeats)?;
+    print_batched(&arms);
+    let path = format!("{out_dir}/BENCH_batched.json");
+    std::fs::write(&path, batched.to_string()).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+
+    let n_route = args.usize_or("route-requests", if smoke { 200 } else { 1000 })?;
+    let routing = routing_bench(&dir, n_route)?;
+    let p50 = routing.req("p50_us")?.as_f64()?;
+    let p99 = routing.req("p99_us")?.as_f64()?;
+    println!("routing latency over {n_route} requests: p50 {p50:.1}us  p99 {p99:.1}us");
+    let path = format!("{out_dir}/BENCH_routing.json");
+    std::fs::write(&path, routing.to_string()).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+
+    if let Some(bp) = args.get("write-baseline") {
+        let doc = Json::obj(vec![
+            ("schema", Json::str("ipr-bench-baseline/v1")),
+            ("routing_p50_us", Json::Num(p50)),
+        ]);
+        std::fs::write(bp, doc.to_string()).with_context(|| format!("writing {bp}"))?;
+        println!("wrote baseline {bp}");
+    }
+    if let Some(b) = args.get("baseline") {
+        let msg = check_routing_regression(&routing, b, args.f64_or("max-regress", 1.25)?)?;
+        println!("{msg}");
+    }
+    Ok(())
 }
 
 fn cmd_route(args: &Args) -> Result<()> {

@@ -2,7 +2,8 @@
 //! artifact (paper §3.1 "Quality Estimator" box).
 //!
 //! Pipeline per request: tokenize → score-cache lookup → dynamic batcher →
-//! engine forward (`runtime::QeModel::predict`) → per-candidate scores.
+//! engine forward (`runtime::QeModel::score_batch`; a single request is a
+//! batch of one) → per-candidate scores.
 //!
 //! * **Thread confinement**: the [`crate::runtime::Engine`] trait is
 //!   object-safe but deliberately not `Send` (the `xla` crate's PJRT
@@ -33,8 +34,9 @@ use crate::util::rng::mix64;
 
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
-    /// Max prompts coalesced into one forward (bounded by the largest
-    /// lowered batch bucket).
+    /// Max prompts coalesced into one `score_batch` forward. No longer
+    /// bounded by the largest lowered batch bucket: engines chunk (PJRT)
+    /// or pack raggedly (reference) past it — see `runtime::QeModel`.
     pub max_batch: usize,
     /// Max time the first request in a batch waits for company.
     pub max_wait: Duration,
@@ -98,6 +100,12 @@ impl ScoreCache {
     }
 
     fn put(&self, tokens: &[u32], scores: Vec<f32>) {
+        self.put_key(Self::key(tokens), scores);
+    }
+
+    /// Insert under a pre-computed key (the batch path hashes before
+    /// moving token ownership into the queue).
+    fn put_key(&self, key: u64, scores: Vec<f32>) {
         if self.cap == 0 {
             return;
         }
@@ -107,7 +115,7 @@ impl ScoreCache {
                 m.remove(&k);
             }
         }
-        m.insert(Self::key(tokens), scores);
+        m.insert(key, scores);
     }
 }
 
@@ -208,29 +216,49 @@ impl QeService {
         Ok(scores)
     }
 
-    /// Score many prompts through the batcher (saturates batching without
-    /// extra client threads).
-    pub fn score_many(&self, prompts: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
-        let mut rxs = Vec::with_capacity(prompts.len());
+    /// Score a whole batch through the batcher in ONE submission: every
+    /// prompt is enqueued under a single lock acquisition, so the engine
+    /// thread coalesces them immediately (no per-prompt wakeup latency).
+    /// This is the server micro-batcher's entry point; results come back
+    /// in input order and computed scores populate the cache. Takes the
+    /// prompts by value — token buffers move through the queue to the
+    /// engine thread without another copy.
+    pub fn score_batch(&self, prompts: Vec<Vec<u32>>) -> Result<Vec<Vec<f32>>> {
+        enum Slot {
+            Hit(Vec<f32>),
+            Rx(u64, mpsc::Receiver<Result<Vec<f32>>>),
+        }
+        let mut slots = Vec::with_capacity(prompts.len());
         {
             let mut q = self.queue.q.lock().unwrap();
             for p in prompts {
-                if let Some(hit) = self.cache.get(p) {
-                    rxs.push(Err(hit)); // pre-resolved
+                if let Some(hit) = self.cache.get(&p) {
+                    slots.push(Slot::Hit(hit));
                     continue;
                 }
+                let key = ScoreCache::key(&p);
                 let (tx, rx) = mpsc::channel();
-                q.push_back(Pending { tokens: p.clone(), tx });
-                rxs.push(Ok(rx));
+                q.push_back(Pending { tokens: p, tx });
+                slots.push(Slot::Rx(key, rx));
             }
         }
         self.queue.cv.notify_all();
-        rxs.into_iter()
-            .map(|r| match r {
-                Err(hit) => Ok(hit),
-                Ok(rx) => rx.recv().map_err(|_| anyhow!("QE engine dropped request"))?,
+        slots
+            .into_iter()
+            .map(|slot| match slot {
+                Slot::Hit(hit) => Ok(hit),
+                Slot::Rx(key, rx) => {
+                    let s = rx.recv().map_err(|_| anyhow!("QE engine dropped request"))??;
+                    self.cache.put_key(key, s.clone());
+                    Ok(s)
+                }
             })
             .collect()
+    }
+
+    /// Back-compat alias for [`QeService::score_batch`].
+    pub fn score_many(&self, prompts: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        self.score_batch(prompts.to_vec())
     }
 
     pub fn shutdown(&self) {
@@ -336,20 +364,25 @@ fn engine_thread(
         }
 
         prev_batch_len = batch.len();
-        let tokens: Vec<Vec<u32>> = batch.iter().map(|p| p.tokens.clone()).collect();
+        let n = batch.len();
+        // Move tokens out of the queue entries — no copy on the hot path.
+        let (tokens, txs): (Vec<Vec<u32>>, Vec<mpsc::Sender<Result<Vec<f32>>>>) =
+            batch.into_iter().map(|p| (p.tokens, p.tx)).unzip();
         let t0 = Instant::now();
-        let result = model.predict(&tokens, &cfg.kind);
+        // Batch-first: a single request is a score_batch of size 1, so
+        // the reference and PJRT engines share one serving code path.
+        let result = model.score_batch(&tokens, &cfg.kind);
         batch_hist.lock().unwrap().record(t0.elapsed());
-        batch_sizes.lock().unwrap().push(batch.len());
+        crate::util::push_bounded(&mut batch_sizes.lock().unwrap(), n);
         match result {
             Ok(scores) => {
-                for (p, s) in batch.into_iter().zip(scores.scores) {
-                    let _ = p.tx.send(Ok(s));
+                for (tx, s) in txs.iter().zip(scores.scores) {
+                    let _ = tx.send(Ok(s));
                 }
             }
             Err(e) => {
-                for p in batch {
-                    let _ = p.tx.send(Err(anyhow!("QE forward failed: {e}")));
+                for tx in &txs {
+                    let _ = tx.send(Err(anyhow!("QE forward failed: {e}")));
                 }
             }
         }

@@ -50,7 +50,8 @@ use crate::util::rng::squash;
 
 /// Bumped whenever generated content changes shape; the directory name
 /// carries it so stale caches are simply ignored.
-const REF_VERSION: &str = "v1";
+// v2: batched-inference grid — 64-wide xla batch buckets for score_batch.
+const REF_VERSION: &str = "v2";
 
 /// Dataset sizes (scaled-down counterparts of aot.py's splits; enough for
 /// every test and the default `--limit 2000` eval).
@@ -211,7 +212,11 @@ fn generate_into(dir: &Path) -> Result<()> {
         Ok(model_json(entry))
     };
 
-    let grid_xla: Vec<(usize, usize)> = vec![(1, 64), (1, 128), (1, 256), (8, 64), (8, 128)];
+    // Per-request buckets stay small and warm (AOT executable set); the
+    // 64-wide buckets are the batched-inference capacity classes consumed
+    // by `score_batch` (runtime::reference packs them raggedly).
+    let grid_xla: Vec<(usize, usize)> =
+        vec![(1, 64), (1, 128), (1, 256), (8, 64), (8, 128), (64, 64), (64, 128), (64, 256)];
     let grid_pallas: Vec<(usize, usize)> = vec![(1, 128)];
 
     // Per-backbone calibration + encoder tensors, computed once (the

@@ -20,6 +20,14 @@
 //! the lowered `(batch, seq, kind)` variants; `predict` picks the smallest
 //! bucket that fits (padding short prompts, truncating overlong ones to
 //! the largest seq bucket) so serving behavior is engine-independent.
+//!
+//! Serving is batch-first: [`QeModel::score_batch`] is the hot path (the
+//! QE service always scores through it, a single request being a batch of
+//! one). The reference engine implements it with packed ragged kernels —
+//! one GEMM over the concatenated `[total_tokens, d]` activation buffer
+//! per projection, per-row attention, per-candidate QP-head GEMMs
+//! evaluated once per batch — parallelized across rows; AOT engines fall
+//! back to bucket-chunked `predict` calls (see DESIGN.md §11).
 
 use crate::registry::{ModelEntry, Registry};
 use crate::util::error::Result;
@@ -30,12 +38,21 @@ pub mod reference;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+/// A tokenized prompt: the token-id sequence a QE forward consumes.
+pub type TokenizedPrompt = Vec<u32>;
+
+/// Per-candidate quality scores for one prompt, in the model's local
+/// candidate-head order.
+pub type QualityVector = Vec<f32>;
+
 /// Result of one QE forward: per-prompt, per-candidate scores.
 #[derive(Clone, Debug)]
 pub struct Scores {
     /// `scores[i][j]` = predicted quality of prompt i under local head j.
-    pub scores: Vec<Vec<f32>>,
-    /// The `(batch, seq)` bucket the forward actually ran in.
+    pub scores: Vec<QualityVector>,
+    /// The `(batch, seq)` bucket the forward ran in (for the reference
+    /// engine's packed batch path: the logical capacity class — see
+    /// [`QeModel::score_batch`]).
     pub bucket: (usize, usize),
     /// Artifact kind executed ("xla" | "pallas").
     pub kind: String,
@@ -77,7 +94,46 @@ pub trait QeModel {
     /// Predict scores for a batch of token sequences (already tokenized).
     /// Picks the smallest loaded `(batch, seq)` bucket that fits; pads
     /// with zero rows / truncates overlong prompts to the largest bucket.
+    /// This is the per-request path: the forward runs in the full bucket
+    /// shape (the AOT executables are fixed-shape, and the reference
+    /// engine mirrors their cost model).
     fn predict(&self, prompts: &[Vec<u32>], kind: &str) -> Result<Scores>;
+
+    /// Batch-first scoring: score an arbitrary number of prompts in as
+    /// few kernel invocations as the engine allows. The contract is exact
+    /// row-wise equivalence — `score_batch(ps).scores[i]` equals
+    /// `predict(&[ps[i]]).scores[0]` to ≤1e-6 for every i, including
+    /// ragged lengths, overlong truncation and batch size 1 (asserted by
+    /// `rust/tests/proptests.rs`). Rows are independent in the QE
+    /// forward, so batching is purely a throughput lever.
+    ///
+    /// The default implementation chunks the batch to the largest lowered
+    /// batch bucket and concatenates `predict` calls — how an AOT engine
+    /// (PJRT) serves arbitrary batch sizes through its fixed executables.
+    /// The reference engine overrides this with packed ragged kernels
+    /// (`reference::ReferenceModel`). The single-prompt serving path is a
+    /// `score_batch` of size 1, so every engine shares one code path from
+    /// the QE service down.
+    fn score_batch(&self, prompts: &[TokenizedPrompt], kind: &str) -> Result<Scores> {
+        if prompts.is_empty() {
+            bail!("empty batch");
+        }
+        let buckets = self.available_buckets();
+        let cap = buckets
+            .iter()
+            .filter(|(_, _, k)| k == kind)
+            .map(|&(b, _, _)| b)
+            .max()
+            .ok_or_else(|| anyhow!("no '{kind}' buckets for {}", self.entry().id))?;
+        let mut scores: Vec<QualityVector> = Vec::with_capacity(prompts.len());
+        let mut bucket = (0, 0);
+        for chunk in prompts.chunks(cap.max(1)) {
+            let part = self.predict(chunk, kind)?;
+            bucket = part.bucket;
+            scores.extend(part.scores);
+        }
+        Ok(Scores { scores, bucket, kind: kind.to_string() })
+    }
 
     /// Number of per-candidate output heads.
     fn n_heads(&self) -> usize {

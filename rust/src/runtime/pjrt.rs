@@ -15,6 +15,12 @@
 //!   the smallest bucket that fits a request, trading a bounded amount of
 //!   padding for a tiny, fully-warm executable set.
 //!
+//! Batched serving: the PJRT model keeps the default
+//! [`QeModel::score_batch`] implementation — arbitrary batch sizes are
+//! chunked to the largest compiled batch bucket and served by the same
+//! `predict` executables, so the QE service's batch-first path works
+//! unchanged against this engine (DESIGN.md §11).
+//!
 //! This module requires the `xla` crate bindings; see `rust/Cargo.toml`
 //! for how to enable them. The default offline build uses
 //! [`super::reference`] instead.

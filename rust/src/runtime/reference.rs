@@ -23,13 +23,25 @@
 //! is what makes `cargo test` self-sufficient: when `artifacts/` is
 //! missing, `registry::reference` synthesizes a manifest + weights and
 //! this engine serves them.
+//!
+//! Two execution paths share these kernels (DESIGN.md §11):
+//!
+//! * `predict` — the per-request path: the forward runs in the selected
+//!   lowered `(batch, seq)` bucket shape, mirroring the fixed-shape AOT
+//!   executables' cost model;
+//! * `score_batch` — the batched hot path: packed ragged kernels (every
+//!   GEMM over the concatenated `[total_tokens, d]` buffer, per-row
+//!   attention over real keys only, QP heads once per batch),
+//!   row-parallel across worker threads. Row results are exactly equal
+//!   between the two paths because masked padding cannot influence a
+//!   real row (softmax weight of a −1e30-biased key underflows to 0.0).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::registry::{ModelEntry, Registry};
-use crate::runtime::{select_bucket, Engine, QeModel, Scores};
+use crate::runtime::{pick_bucket, select_bucket, Engine, QeModel, QualityVector, Scores, TokenizedPrompt};
 use crate::util::error::{Context, Result};
 use crate::util::npz::{self, Tensor};
 use crate::{anyhow, bail};
@@ -229,8 +241,6 @@ impl ReferenceModel {
         let bias: Vec<f32> =
             mask.iter().map(|&m| if m > 0.5 { 0.0 } else { MASK_NEG }).collect();
 
-        let dh = d / self.heads;
-        let scale = 1.0 / (dh as f32).sqrt();
         for l in 0..self.layers {
             let pre = format!("l{l:02}_");
             // h = LN1(x)
@@ -241,39 +251,18 @@ impl ReferenceModel {
                 &self.p(&format!("{pre}ln1_b")).data,
                 d,
             );
-            // qkv = h @ wqkv  [n*s, 3d]
+            // qkv = h @ wqkv  [n*s, 3d] — one GEMM over the whole batch
             let qkv = matmul(&h, &self.p(&format!("{pre}wqkv")).data, n * s, d, 3 * d);
 
-            // attention per (row, head)
+            // attention per row (batched GEMM form inside attend_row)
             let mut o = vec![0f32; n * s * d];
-            let mut srow = vec![0f32; s];
             for i in 0..n {
-                for hd in 0..self.heads {
-                    let qo = hd * dh;
-                    let ko = d + hd * dh;
-                    let vo = 2 * d + hd * dh;
-                    for tq in 0..s {
-                        // scores over keys
-                        for tk in 0..s {
-                            let mut dot = 0f32;
-                            let qb = (i * s + tq) * 3 * d + qo;
-                            let kb = (i * s + tk) * 3 * d + ko;
-                            for j in 0..dh {
-                                dot += qkv[qb + j] * qkv[kb + j];
-                            }
-                            srow[tk] = dot * scale + bias[i * s + tk];
-                        }
-                        softmax_in_place(&mut srow);
-                        let ob = (i * s + tq) * d + hd * dh;
-                        for j in 0..dh {
-                            let mut acc = 0f32;
-                            for tk in 0..s {
-                                acc += srow[tk] * qkv[(i * s + tk) * 3 * d + vo + j];
-                            }
-                            o[ob + j] = acc;
-                        }
-                    }
-                }
+                self.attend_row(
+                    &qkv[i * s * 3 * d..(i + 1) * s * 3 * d],
+                    &bias[i * s..(i + 1) * s],
+                    s,
+                    &mut o[i * s * d..(i + 1) * s * d],
+                );
             }
             // x += o @ wo
             let proj = matmul(&o, &self.p(&format!("{pre}wo")).data, n * s, d, d);
@@ -331,6 +320,50 @@ impl ReferenceModel {
         Ok(pooled)
     }
 
+    /// Multi-head self-attention for ONE row: `qkv_row` is that row's
+    /// `[s, 3d]` slice of the QKV projection, `bias` its `[s]` additive
+    /// key bias (0 real / MASK_NEG padded), `o_row` the `[s, d]` output.
+    ///
+    /// GEMM form: per head, gather Q `[s, dh]`, Kᵀ `[dh, s]`, V `[s, dh]`
+    /// and compute `softmax(Q·Kᵀ·scale + bias)·V` as two matmuls. The
+    /// accumulation order (dh for scores, key order for the value mix) is
+    /// identical to the scalar loops this replaced, so the ≤1e-4 JAX
+    /// parity fixture is unaffected.
+    fn attend_row(&self, qkv_row: &[f32], bias: &[f32], s: usize, o_row: &mut [f32]) {
+        let d = self.d;
+        let dh = d / self.heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut q = vec![0f32; s * dh];
+        let mut kt = vec![0f32; dh * s];
+        let mut v = vec![0f32; s * dh];
+        for hd in 0..self.heads {
+            let qo = hd * dh;
+            let ko = d + hd * dh;
+            let vo = 2 * d + hd * dh;
+            for t in 0..s {
+                let base = t * 3 * d;
+                for j in 0..dh {
+                    q[t * dh + j] = qkv_row[base + qo + j];
+                    kt[j * s + t] = qkv_row[base + ko + j];
+                    v[t * dh + j] = qkv_row[base + vo + j];
+                }
+            }
+            let mut sc = matmul(&q, &kt, s, dh, s);
+            for tq in 0..s {
+                let row = &mut sc[tq * s..(tq + 1) * s];
+                for (tk, x) in row.iter_mut().enumerate() {
+                    *x = *x * scale + bias[tk];
+                }
+                softmax_in_place(row);
+            }
+            let oh = matmul(&sc, &v, s, s, dh);
+            for t in 0..s {
+                let dst = t * d + hd * dh;
+                o_row[dst..dst + dh].copy_from_slice(&oh[t * dh..(t + 1) * dh]);
+            }
+        }
+    }
+
     /// Fused QP heads over pooled embeddings: returns [n, C].
     fn qp_heads(
         &self,
@@ -348,7 +381,8 @@ impl ReferenceModel {
         let c = w1p.shape[0];
         let d_id = self.d_id;
         let mut out = vec![0f32; n * c];
-        // he[c, j] = e_c · w1e[c, :, j]  (prompt-independent)
+        // he[c, j] = e_c · w1e[c, :, j]  (prompt-independent: computed
+        // once per batch, amortized over every row)
         let mut he = vec![0f32; c * hh];
         for ci in 0..c {
             for j in 0..hh {
@@ -359,17 +393,21 @@ impl ReferenceModel {
                 he[ci * hh + j] = acc;
             }
         }
-        for i in 0..n {
-            let p = &pooled[i * d..(i + 1) * d];
-            for ci in 0..c {
+        // per candidate: ONE GEMM over the whole batch, then the fused
+        // ReLU·w2 readout per row
+        for ci in 0..c {
+            let w1p_c = &w1p.data[ci * d * hh..(ci + 1) * d * hh];
+            let pre = matmul(pooled, w1p_c, n, d, hh);
+            let hb = &he[ci * hh..(ci + 1) * hh];
+            let b1c = &b1.data[ci * hh..(ci + 1) * hh];
+            let w2c = &w2.data[ci * hh..(ci + 1) * hh];
+            for i in 0..n {
+                let prow = &pre[i * hh..(i + 1) * hh];
                 let mut logit = b2.data[ci];
                 for j in 0..hh {
-                    let mut pre = he[ci * hh + j] + b1.data[ci * hh + j];
-                    for k in 0..d {
-                        pre += p[k] * w1p.data[(ci * d + k) * hh + j];
-                    }
-                    if pre > 0.0 {
-                        logit += pre * w2.data[ci * hh + j];
+                    let a = prow[j] + hb[j] + b1c[j];
+                    if a > 0.0 {
+                        logit += a * w2c[j];
                     }
                 }
                 out[i * c + ci] = sigmoid(logit);
@@ -379,8 +417,15 @@ impl ReferenceModel {
     }
 
     /// Full forward for `n` already-packed rows; returns [n, heads].
-    fn forward(&self, ids: &[i32], mask: &[f32], n: usize, s: usize) -> Result<Vec<Vec<f32>>> {
+    fn forward(&self, ids: &[i32], mask: &[f32], n: usize, s: usize) -> Result<Vec<QualityVector>> {
         let pooled = self.encode(ids, mask, n, s)?;
+        Ok(self.heads_from_pooled(&pooled, n))
+    }
+
+    /// QP-head stage shared by the padded (`predict`) and packed ragged
+    /// (`score_batch`) paths: pooled `[n, d]` → per-candidate scores
+    /// `[n, C]`, including the §D adapter composition.
+    fn heads_from_pooled(&self, pooled: &[f32], n: usize) -> Vec<QualityVector> {
         let d = self.d;
         let flat = if self.entry.adapter {
             // §D adapter path: residual PE adapter, then base heads + new
@@ -389,7 +434,7 @@ impl ReferenceModel {
             let b1 = &self.p("ada_pe_b1").data;
             let w2 = self.p("ada_pe_w2");
             let b2 = &self.p("ada_pe_b2").data;
-            let mut hmid = matmul(&pooled, &w1.data, n, d, d);
+            let mut hmid = matmul(pooled, &w1.data, n, d, d);
             for r in 0..n {
                 for j in 0..d {
                     hmid[r * d + j] = (hmid[r * d + j] + b1[j]).max(0.0);
@@ -437,7 +482,7 @@ impl ReferenceModel {
             flat
         } else {
             self.qp_heads(
-                &pooled,
+                pooled,
                 n,
                 self.p("lie_emb"),
                 self.p("qp_w1p"),
@@ -448,8 +493,199 @@ impl ReferenceModel {
             )
         };
         let c = flat.len() / n.max(1);
-        Ok((0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect())
+        (0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect()
     }
+
+    /// Packed ragged encoder — the batched hot path. Rows are
+    /// concatenated back to back (`offs` = cumulative token offsets), so
+    /// every GEMM runs over a dense `[total_tokens, d]` activation buffer
+    /// with NO padded positions at all; attention runs per row over that
+    /// row's real keys only. Numerically this is exactly the padded
+    /// forward restricted to real positions: padded keys carry an
+    /// additive −1e30 bias whose softmax weight underflows to 0.0 exactly,
+    /// and pooling is masked, so padding can never influence a real row
+    /// (the `score_batch == predict` property test pins this).
+    ///
+    /// Returns pooled `[n, d]`; zero-length rows pool to the zero vector,
+    /// matching the padded path's `max(cnt, 1)` denominator.
+    fn encode_rows(&self, rows: &[&[u32]]) -> Result<Vec<f32>> {
+        let d = self.d;
+        let n = rows.len();
+        let mut offs = Vec::with_capacity(n + 1);
+        offs.push(0usize);
+        for r in rows {
+            if r.len() > self.max_pos {
+                bail!("sequence {} exceeds max_pos {}", r.len(), self.max_pos);
+            }
+            offs.push(offs.last().unwrap() + r.len());
+        }
+        let total = *offs.last().unwrap();
+        let mut pooled = vec![0f32; n * d];
+        if total == 0 {
+            return Ok(pooled);
+        }
+        let tok = &self.p("tok_emb").data;
+        let pos = &self.p("pos_emb").data;
+        let vocab = self.p("tok_emb").shape[0];
+
+        // x = tok_emb[ids] + pos_emb[:len] per row, packed
+        let mut x = vec![0f32; total * d];
+        for (i, r) in rows.iter().enumerate() {
+            for (t, &tk) in r.iter().enumerate() {
+                let id = tk as usize;
+                if id >= vocab {
+                    bail!("token id {id} out of vocab {vocab}");
+                }
+                let row = offs[i] + t;
+                let dst = &mut x[row * d..(row + 1) * d];
+                let src = &tok[id * d..(id + 1) * d];
+                let psrc = &pos[t * d..(t + 1) * d];
+                for j in 0..d {
+                    dst[j] = src[j] + psrc[j];
+                }
+            }
+        }
+
+        // all packed positions are real tokens: additive key bias ≡ 0
+        let max_l = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        let zero_bias = vec![0f32; max_l];
+        for l in 0..self.layers {
+            let pre = format!("l{l:02}_");
+            let mut h = x.clone();
+            layer_norm(
+                &mut h,
+                &self.p(&format!("{pre}ln1_g")).data,
+                &self.p(&format!("{pre}ln1_b")).data,
+                d,
+            );
+            let qkv = matmul(&h, &self.p(&format!("{pre}wqkv")).data, total, d, 3 * d);
+            let mut o = vec![0f32; total * d];
+            for (i, r) in rows.iter().enumerate() {
+                let li = r.len();
+                if li == 0 {
+                    continue;
+                }
+                let qb = offs[i] * 3 * d;
+                let ob = offs[i] * d;
+                self.attend_row(
+                    &qkv[qb..qb + li * 3 * d],
+                    &zero_bias[..li],
+                    li,
+                    &mut o[ob..ob + li * d],
+                );
+            }
+            let proj = matmul(&o, &self.p(&format!("{pre}wo")).data, total, d, d);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            let mut xn = x.clone();
+            layer_norm(
+                &mut xn,
+                &self.p(&format!("{pre}ln2_g")).data,
+                &self.p(&format!("{pre}ln2_b")).data,
+                d,
+            );
+            let w1 = self.p(&format!("{pre}w1"));
+            let f = w1.shape[1];
+            let mut hmid = matmul(&xn, &w1.data, total, d, f);
+            let b1 = &self.p(&format!("{pre}b1")).data;
+            for r in 0..total {
+                for j in 0..f {
+                    hmid[r * f + j] = gelu(hmid[r * f + j] + b1[j]);
+                }
+            }
+            let mut y = matmul(&hmid, &self.p(&format!("{pre}w2")).data, total, f, d);
+            let b2 = &self.p(&format!("{pre}b2")).data;
+            for r in 0..total {
+                for j in 0..d {
+                    y[r * d + j] += b2[j];
+                }
+            }
+            for (xi, yi) in x.iter_mut().zip(&y) {
+                *xi += yi;
+            }
+        }
+
+        // final LN + mean pool over each row's real tokens
+        layer_norm(&mut x, &self.p("lnf_g").data, &self.p("lnf_b").data, d);
+        for (i, r) in rows.iter().enumerate() {
+            let li = r.len();
+            if li == 0 {
+                continue;
+            }
+            let acc = &mut pooled[i * d..(i + 1) * d];
+            for t in 0..li {
+                let src = &x[(offs[i] + t) * d..(offs[i] + t + 1) * d];
+                for j in 0..d {
+                    acc[j] += src[j];
+                }
+            }
+            let denom = (li as f32).max(1.0);
+            for v in acc.iter_mut() {
+                *v /= denom;
+            }
+        }
+        Ok(pooled)
+    }
+
+    /// Data-parallel wrapper over [`ReferenceModel::encode_rows`]: split
+    /// the batch into contiguous row groups of roughly equal token counts
+    /// and encode each group on its own scoped thread (rows are
+    /// independent, so the split cannot change results). Small batches
+    /// run inline — a `score_batch` of size 1 pays no thread overhead.
+    fn encode_rows_parallel(&self, rows: &[&[u32]]) -> Result<Vec<f32>> {
+        let total: usize = rows.iter().map(|r| r.len()).sum();
+        let threads = batch_threads();
+        if threads <= 1 || rows.len() < 2 || total < 2048 {
+            return self.encode_rows(rows);
+        }
+        let groups = threads.min(rows.len());
+        let target = (total + groups - 1) / groups;
+        // contiguous cut points at ≈target tokens per group
+        let mut cuts: Vec<usize> = Vec::with_capacity(groups);
+        let mut acc = 0usize;
+        for (i, r) in rows.iter().enumerate() {
+            acc += r.len();
+            if acc >= target {
+                cuts.push(i + 1);
+                acc = 0;
+            }
+        }
+        if cuts.last() != Some(&rows.len()) {
+            cuts.push(rows.len());
+        }
+        let mut parts: Vec<Result<Vec<f32>>> = Vec::with_capacity(cuts.len());
+        std::thread::scope(|sc| {
+            let mut handles = Vec::with_capacity(cuts.len());
+            let mut start = 0usize;
+            for &end in &cuts {
+                let slice = &rows[start..end];
+                handles.push(sc.spawn(move || self.encode_rows(slice)));
+                start = end;
+            }
+            for h in handles {
+                parts.push(
+                    h.join().unwrap_or_else(|_| Err(anyhow!("batch encode worker panicked"))),
+                );
+            }
+        });
+        let mut pooled = Vec::with_capacity(rows.len() * self.d);
+        for p in parts {
+            pooled.extend(p?);
+        }
+        Ok(pooled)
+    }
+}
+
+/// Worker threads for batched forwards: `IPR_BATCH_THREADS` override,
+/// else the machine's available parallelism.
+fn batch_threads() -> usize {
+    if let Ok(v) = std::env::var("IPR_BATCH_THREADS") {
+        if let Ok(x) = v.parse::<usize>() {
+            return x.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
 }
 
 impl QeModel for ReferenceModel {
@@ -489,6 +725,46 @@ impl QeModel for ReferenceModel {
             }
         }
         let scores = self.forward(&ids, &mask, n, s)?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        Ok(Scores { scores, bucket: (b, s), kind: kind.to_string() })
+    }
+
+    /// The batched hot path: packed ragged kernels (`encode_rows`) over
+    /// the whole batch, parallelized across rows, with the fused QP heads
+    /// evaluated once per batch. Unlike `predict` — which mirrors the
+    /// fixed-shape AOT cost model by computing the full bucket seq — this
+    /// path computes ONLY real tokens (pad-to-nothing); results are
+    /// row-wise identical either way because padding is masked out of
+    /// every kernel exactly (see `encode_rows`).
+    ///
+    /// Bucket semantics are preserved for the API: `bucket` reports the
+    /// logical capacity class the shared `pick_bucket` policy assigns
+    /// (chunked to the largest lowered batch bucket), and overlong
+    /// prompts truncate to the largest lowered seq — byte-identical
+    /// truncation to what `predict` applies.
+    fn score_batch(&self, prompts: &[TokenizedPrompt], kind: &str) -> Result<Scores> {
+        let n = prompts.len();
+        if n == 0 {
+            bail!("empty batch");
+        }
+        let avail: Vec<(usize, usize)> = self
+            .buckets
+            .iter()
+            .filter(|(_, _, k)| k == kind)
+            .map(|&(b, s, _)| (b, s))
+            .collect();
+        if avail.is_empty() {
+            bail!("no '{kind}' buckets for {}", self.entry.id);
+        }
+        let b_cap = avail.iter().map(|&(b, _)| b).max().unwrap();
+        let s_cap = avail.iter().map(|&(_, s)| s).max().unwrap();
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+        let (b, s) = pick_bucket(&avail, n.min(b_cap), max_len.max(1)).ok_or_else(|| {
+            anyhow!("no bucket fits batch={} kind={kind} for {}", n.min(b_cap), self.entry.id)
+        })?;
+        let rows: Vec<&[u32]> = prompts.iter().map(|p| &p[..p.len().min(s_cap)]).collect();
+        let pooled = self.encode_rows_parallel(&rows)?;
+        let scores = self.heads_from_pooled(&pooled, n);
         self.calls.fetch_add(1, Ordering::Relaxed);
         Ok(Scores { scores, bucket: (b, s), kind: kind.to_string() })
     }

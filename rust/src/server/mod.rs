@@ -9,66 +9,326 @@
 //! * `GET  /metrics`   — text metrics (stage latencies, route mix, CSR).
 //! * `GET  /v1/registry` — candidates + loaded model info.
 //! * `GET  /health`.
+//!
+//! Request path (DESIGN.md §11): connection threads parse + tokenize,
+//! then submit to the server-side [`MicroBatcher`] — a queue that
+//! coalesces concurrent requests (≤ `max_batch` or `max_wait`, whichever
+//! first) into single [`Router::handle_batch`] calls executed by
+//! dedicated drain workers on the in-repo thread pool. Teardown is
+//! bounded: `stop()` waits a drain deadline for in-flight requests, then
+//! force-closes idle connections and detaches stragglers instead of
+//! hanging forever on a parked keep-alive reader.
 
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::coordinator::Router;
+use crate::coordinator::{BatchItem, RouteOutcome, Router};
+use crate::tokenizer;
 use crate::util::error::{Context, Result};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 use crate::{anyhow, bail};
 
+/// Server tuning knobs; `Server::start` uses the defaults with the
+/// micro-batch size mirroring the router's QE batcher.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Connection-handler threads (parse/serialize; they park cheaply on
+    /// the micro-batcher while drain workers own the QE forwards).
+    pub workers: usize,
+    /// Micro-batch coalescing cap. 0 = mirror the router's
+    /// `BatcherConfig::max_batch` (one knob tunes both layers).
+    pub max_batch: usize,
+    /// Max time the first request in a micro-batch waits for company.
+    pub max_wait: Duration,
+    /// Drain workers: each runs whole batches through `Router::handle_batch`.
+    pub batch_workers: usize,
+    /// `stop()` deadline: how long to wait for in-flight requests before
+    /// force-closing connections and detaching worker threads.
+    pub drain: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 4,
+            max_batch: 0,
+            max_wait: Duration::from_micros(500),
+            batch_workers: 2,
+            drain: Duration::from_secs(5),
+        }
+    }
+}
+
+/// The server-side micro-batching queue: concurrent `/v1/route` and
+/// `/v1/invoke` requests are coalesced and routed as single
+/// `Router::handle_batch` calls (one QE `score_batch` per batch). The
+/// 3-phase drain mirrors the QE engine thread, including the adaptive
+/// grace window (EXPERIMENTS.md §Perf iteration 2).
+pub struct MicroBatcher {
+    q: Mutex<VecDeque<PendingRoute>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    max_batch: usize,
+    max_wait: Duration,
+    pool: Mutex<Option<ThreadPool>>,
+    /// Realized batch sizes (observability; mirrors `qe.batch_sizes`).
+    pub batch_sizes: Mutex<Vec<usize>>,
+}
+
+struct PendingRoute {
+    item: BatchItem,
+    tx: mpsc::Sender<Result<RouteOutcome>>,
+}
+
+impl MicroBatcher {
+    fn start(
+        router: Arc<Router>,
+        max_batch: usize,
+        max_wait: Duration,
+        workers: usize,
+    ) -> Arc<MicroBatcher> {
+        let mb = Arc::new(MicroBatcher {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            max_batch: max_batch.max(1),
+            max_wait,
+            pool: Mutex::new(None),
+            batch_sizes: Mutex::new(Vec::new()),
+        });
+        let pool = ThreadPool::new(workers.max(1));
+        for _ in 0..workers.max(1) {
+            let mb2 = mb.clone();
+            let router = router.clone();
+            pool.execute(move || mb2.drain_loop(&router));
+        }
+        *mb.pool.lock().unwrap() = Some(pool);
+        mb
+    }
+
+    fn submit(&self, item: BatchItem) -> mpsc::Receiver<Result<RouteOutcome>> {
+        let (tx, rx) = mpsc::channel();
+        if self.shutdown.load(Ordering::SeqCst) {
+            let _ = tx.send(Err(anyhow!("server is stopping")));
+            return rx;
+        }
+        {
+            let mut q = self.q.lock().unwrap();
+            q.push_back(PendingRoute { item, tx });
+        }
+        self.cv.notify_one();
+        // Close the race with shutdown: if the stop signal landed between
+        // the check above and the push, the drain workers may already be
+        // gone — fail whatever is still queued (including our own entry)
+        // instead of leaving a receiver parked forever.
+        if self.shutdown.load(Ordering::SeqCst) {
+            for p in self.q.lock().unwrap().drain(..) {
+                let _ = p.tx.send(Err(anyhow!("server is stopping")));
+            }
+        }
+        rx
+    }
+
+    /// Phase 1: block for the first request. Phase 2: take what's queued.
+    /// Phase 3: grace window for stragglers — engaged only after a batch
+    /// actually coalesced, so light load pays no extra latency. On
+    /// shutdown, remaining queued requests are still served (drain
+    /// semantics), then the worker exits.
+    fn drain_loop(&self, router: &Router) {
+        let mut prev = 0usize;
+        loop {
+            let mut batch: Vec<PendingRoute> = Vec::with_capacity(self.max_batch);
+            {
+                let mut q = self.q.lock().unwrap();
+                loop {
+                    if let Some(p) = q.pop_front() {
+                        batch.push(p);
+                        break;
+                    }
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    q = self.cv.wait(q).unwrap();
+                }
+                while batch.len() < self.max_batch {
+                    match q.pop_front() {
+                        Some(p) => batch.push(p),
+                        None => break,
+                    }
+                }
+            }
+            let engage = batch.len() > 1 || prev > 1;
+            if engage
+                && batch.len() < self.max_batch
+                && !self.max_wait.is_zero()
+                && !self.shutdown.load(Ordering::SeqCst)
+            {
+                let deadline = Instant::now() + self.max_wait;
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline || batch.len() >= self.max_batch {
+                        break;
+                    }
+                    let mut q = self.q.lock().unwrap();
+                    if let Some(p) = q.pop_front() {
+                        batch.push(p);
+                        continue;
+                    }
+                    let (qq, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+                    q = qq;
+                    if let Some(p) = q.pop_front() {
+                        batch.push(p);
+                    }
+                }
+            }
+            prev = batch.len();
+            crate::util::push_bounded(&mut self.batch_sizes.lock().unwrap(), batch.len());
+            let (items, txs): (Vec<BatchItem>, Vec<mpsc::Sender<Result<RouteOutcome>>>) =
+                batch.into_iter().map(|p| (p.item, p.tx)).unzip();
+            match router.handle_batch(&items) {
+                Ok(outs) => {
+                    for (tx, o) in txs.iter().zip(outs) {
+                        let _ = tx.send(Ok(o));
+                    }
+                }
+                Err(e) => {
+                    for tx in &txs {
+                        let _ = tx.send(Err(anyhow!("batched route failed: {e}")));
+                    }
+                }
+            }
+        }
+    }
+
+    fn signal_stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+/// Shared state the accept loop hands to every connection handler.
+struct ServerShared {
+    router: Arc<Router>,
+    batcher: Arc<MicroBatcher>,
+    stop: Arc<AtomicBool>,
+    /// Requests currently between full parse and response write.
+    active: AtomicUsize,
+    /// Open connections by id, force-closable at `stop()` to unblock
+    /// parked keep-alive readers.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn: AtomicU64,
+}
+
 pub struct Server {
     pub addr: String,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<ServerShared>,
+    pool: Arc<ThreadPool>,
+    drain: Duration,
 }
 
 impl Server {
     /// Bind and serve in background threads; returns once listening.
+    /// Uses [`ServerConfig`] defaults with `workers` connection threads
+    /// (micro-batch size mirrors the router's QE batcher config).
     pub fn start(router: Arc<Router>, bind: &str, workers: usize) -> Result<Server> {
+        Server::start_with(router, bind, ServerConfig { workers, ..ServerConfig::default() })
+    }
+
+    /// Bind and serve with explicit tuning; returns once listening.
+    pub fn start_with(router: Arc<Router>, bind: &str, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?.to_string();
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("ipr-accept".into())
-            .spawn(move || {
-                let pool = ThreadPool::new(workers);
-                listener
-                    .set_nonblocking(false)
-                    .expect("listener blocking mode");
-                // Use a short accept timeout via nonblocking + poll so the
-                // stop flag is honored promptly.
+        let max_batch =
+            if cfg.max_batch == 0 { router.cfg.batcher.max_batch } else { cfg.max_batch };
+        let batcher = MicroBatcher::start(router.clone(), max_batch, cfg.max_wait, cfg.batch_workers);
+        let shared = Arc::new(ServerShared {
+            router,
+            batcher,
+            stop: stop.clone(),
+            active: AtomicUsize::new(0),
+            conns: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(0),
+        });
+        let pool = Arc::new(ThreadPool::new(cfg.workers));
+        let accept_thread = {
+            let stop = stop.clone();
+            let shared = shared.clone();
+            let pool = pool.clone();
+            std::thread::Builder::new().name("ipr-accept".into()).spawn(move || {
+                // Nonblocking + poll so the stop flag is honored promptly.
                 listener.set_nonblocking(true).expect("nonblocking");
                 loop {
-                    if stop2.load(Ordering::SeqCst) {
+                    if stop.load(Ordering::SeqCst) {
                         break;
                     }
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let r = router.clone();
+                            let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                            if let Ok(dup) = stream.try_clone() {
+                                shared.conns.lock().unwrap().insert(id, dup);
+                            }
+                            let sh = shared.clone();
                             pool.execute(move || {
-                                let _ = handle_conn(stream, &r);
+                                let _ = handle_conn(stream, &sh);
+                                sh.conns.lock().unwrap().remove(&id);
                             });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
+                            std::thread::sleep(Duration::from_millis(2));
                         }
                         Err(_) => break,
                     }
                 }
-            })?;
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+            })?
+        };
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread), shared, pool, drain: cfg.drain })
     }
 
+    /// Realized micro-batch sizes so far (observability/tests).
+    pub fn micro_batch_sizes(&self) -> Vec<usize> {
+        self.shared.batcher.batch_sizes.lock().unwrap().clone()
+    }
+
+    /// Graceful stop with a drain deadline: stop accepting, wait for
+    /// in-flight requests to finish, serve whatever the micro-batcher has
+    /// queued, then unblock parked keep-alive readers by shutting their
+    /// sockets and join the workers. Stragglers past the deadline are
+    /// detached rather than hanging the caller (the old teardown joined
+    /// the pool unconditionally and an idle keep-alive connection could
+    /// block it forever — the `server_e2e` flake).
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        let deadline = Instant::now() + self.drain;
+        while self.shared.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Stop the micro-batcher (drain workers finish queued requests,
+        // then exit) and unblock any parked connection readers.
+        self.shared.batcher.signal_stop();
+        for (_, s) in self.shared.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let left = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(250));
+        self.pool.join_deadline(left);
+        if let Some(p) = self.shared.batcher.pool.lock().unwrap().take() {
+            p.join_deadline(Duration::from_millis(500));
+        }
+        // Anything still queued was never picked up: fail it loudly.
+        for p in self.shared.batcher.q.lock().unwrap().drain(..) {
+            let _ = p.tx.send(Err(anyhow!("server stopped before this request was routed")));
         }
     }
 }
@@ -76,13 +336,27 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.shared.batcher.signal_stop();
+        // Unblock parked readers so the pool's own teardown is bounded
+        // even when the server is dropped without a graceful stop().
+        for (_, s) in self.shared.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // Mirror stop()'s final sweep: a request enqueued while the drain
+        // workers were exiting must get an error, not a parked receiver.
+        for p in self.shared.batcher.q.lock().unwrap().drain(..) {
+            let _ = p.tx.send(Err(anyhow!("server stopped before this request was routed")));
+        }
     }
 }
 
-fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
+fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     loop {
+        if sh.stop.load(Ordering::SeqCst) {
+            return Ok(()); // shutting down: stop serving keep-alive turns
+        }
         let mut line = String::new();
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client closed
@@ -118,30 +392,39 @@ fn handle_conn(stream: TcpStream, router: &Router) -> Result<()> {
         reader.read_exact(&mut body)?;
         let body = String::from_utf8_lossy(&body).to_string();
 
-        let (status, ctype, resp) = dispatch(router, &method, &path, &body);
-        let mut out = stream.try_clone()?;
-        write!(
-            out,
-            "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-            resp.len(),
-            if keep_alive { "keep-alive" } else { "close" },
-        )?;
-        out.write_all(resp.as_bytes())?;
-        out.flush()?;
+        // In-flight from full parse to response write: `stop()` waits for
+        // this window before force-closing connections.
+        sh.active.fetch_add(1, Ordering::SeqCst);
+        let (status, ctype, resp) = dispatch(sh, &method, &path, &body);
+        let write_res = (|| -> Result<()> {
+            let mut out = stream.try_clone()?;
+            write!(
+                out,
+                "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+                resp.len(),
+                if keep_alive { "keep-alive" } else { "close" },
+            )?;
+            out.write_all(resp.as_bytes())?;
+            out.flush()?;
+            Ok(())
+        })();
+        sh.active.fetch_sub(1, Ordering::SeqCst);
+        write_res?;
         if !keep_alive {
             return Ok(());
         }
     }
 }
 
-fn dispatch(router: &Router, method: &str, path: &str, body: &str) -> (&'static str, &'static str, String) {
+fn dispatch(sh: &ServerShared, method: &str, path: &str, body: &str) -> (&'static str, &'static str, String) {
+    let router = &*sh.router;
     match (method, path) {
         ("GET", "/health") => ("200 OK", "text/plain", "ok\n".into()),
         ("GET", "/metrics") => ("200 OK", "text/plain", router.metrics.render()),
         ("GET", "/v1/registry") => ("200 OK", "application/json", registry_json(router)),
         ("POST", "/v1/route") | ("POST", "/v1/invoke") => {
             let force_invoke = path == "/v1/invoke";
-            match handle_route(router, body, force_invoke) {
+            match handle_route(sh, body, force_invoke) {
                 Ok(j) => ("200 OK", "application/json", j),
                 Err(e) => (
                     "400 Bad Request",
@@ -154,7 +437,10 @@ fn dispatch(router: &Router, method: &str, path: &str, body: &str) -> (&'static 
     }
 }
 
-fn handle_route(router: &Router, body: &str, force_invoke: bool) -> Result<String> {
+/// Parse → tokenize (on the connection thread) → submit to the
+/// micro-batcher → wait for the routed outcome.
+fn handle_route(sh: &ServerShared, body: &str, force_invoke: bool) -> Result<String> {
+    let t_start = Instant::now();
     let j = parse(body).context("request body must be JSON")?;
     let prompt = j.req("prompt")?.as_str()?.to_string();
     if prompt.is_empty() {
@@ -165,15 +451,26 @@ fn handle_route(router: &Router, body: &str, force_invoke: bool) -> Result<Strin
         || j.get("invoke").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
     let identity = match (j.get("split"), j.get("index")) {
         (Some(s), Some(i)) => Some(
-            router
+            sh.router
                 .backend
                 .world()
                 .sample_prompt(s.as_i64()? as u64, i.as_i64()? as u64),
         ),
         _ => None,
     };
-    let out = router.handle_text(&prompt, tau, invoke, identity.as_ref())?;
+    let t0 = Instant::now();
+    let tokens = tokenizer::tokenize(&prompt);
+    let tokenize_us = t0.elapsed().as_micros() as u64;
+    let item = BatchItem { tokens, tau, invoke, identity, tokenize_us, t_start };
+    let out = sh
+        .batcher
+        .submit(item)
+        .recv()
+        .map_err(|_| anyhow!("micro-batcher dropped request"))??;
+    Ok(outcome_json(&out))
+}
 
+fn outcome_json(out: &RouteOutcome) -> String {
     let mut fields = vec![
         ("model", Json::str(&out.model_name)),
         ("candidate", Json::Num(out.candidate_global as f64)),
@@ -193,7 +490,7 @@ fn handle_route(router: &Router, body: &str, force_invoke: bool) -> Result<Strin
         ("decide_us", Json::Num(out.decide_us as f64)),
         ("total_us", Json::Num(out.total_us as f64)),
     ];
-    if let Some(inv) = out.invoke {
+    if let Some(inv) = &out.invoke {
         fields.push((
             "invoke",
             Json::obj(vec![
@@ -208,7 +505,7 @@ fn handle_route(router: &Router, body: &str, force_invoke: bool) -> Result<Strin
             ]),
         ));
     }
-    Ok(Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()).to_string())
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()).to_string()
 }
 
 fn registry_json(router: &Router) -> String {

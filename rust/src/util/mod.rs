@@ -13,3 +13,14 @@ pub mod minitest;
 pub mod npz;
 pub mod rng;
 pub mod threadpool;
+
+/// Append to a bounded observability log (realized batch sizes etc.):
+/// once the log reaches 64Ki entries the oldest half is evicted, so a
+/// forever-running serve loop cannot grow it without bound. One policy,
+/// shared by the QE engine thread and the server micro-batcher.
+pub fn push_bounded(v: &mut Vec<usize>, x: usize) {
+    if v.len() >= 65_536 {
+        v.drain(..32_768);
+    }
+    v.push(x);
+}

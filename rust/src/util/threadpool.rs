@@ -5,6 +5,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -15,10 +16,13 @@ struct Shared {
 }
 
 /// A classic worker pool: `execute` enqueues a closure, workers drain the
-/// queue, `join` (or Drop) shuts down after the queue is empty.
+/// queue, `join` (or Drop) shuts down after the queue is empty. For
+/// teardown with a bound, [`ThreadPool::join_deadline`] waits only so
+/// long before detaching stragglers (a worker stuck in blocking I/O must
+/// not hang the caller — see `server::Server::stop`).
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl ThreadPool {
@@ -37,7 +41,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { shared, workers }
+        ThreadPool { shared, workers: Mutex::new(workers) }
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -52,14 +56,49 @@ impl ThreadPool {
     }
 
     /// Signal shutdown and wait for workers to finish remaining jobs.
-    pub fn join(mut self) {
+    pub fn join(self) {
         self.shutdown_and_join();
     }
 
-    fn shutdown_and_join(&mut self) {
+    /// Signal shutdown and wait up to `deadline` for every worker to
+    /// finish (remaining queued jobs still run). Workers that are still
+    /// busy past the deadline are detached — their threads keep running
+    /// to completion, but the caller returns. Returns whether the pool
+    /// drained fully in time.
+    pub fn join_deadline(&self, deadline: Duration) -> bool {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.cv.notify_all();
-        for w in self.workers.drain(..) {
+        let end = Instant::now() + deadline;
+        loop {
+            let done = {
+                let ws = self.workers.lock().unwrap();
+                ws.iter().all(|w| w.is_finished())
+            };
+            if done {
+                self.shutdown_and_join();
+                return true;
+            }
+            if Instant::now() >= end {
+                // Detach: drop the handles of the stuck workers.
+                self.workers.lock().unwrap().drain(..);
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn shutdown_and_join(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let me = std::thread::current().id();
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.drain(..) {
+            // A pool can be dropped FROM one of its own workers (e.g. the
+            // last Arc to a structure owning the pool is released inside a
+            // job); joining the current thread would deadlock — detach it.
+            if w.thread().id() == me {
+                continue;
+            }
             let _ = w.join();
         }
     }
@@ -109,6 +148,33 @@ mod tests {
         }
         pool.join();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn join_deadline_drains_fast_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..20 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert!(pool.join_deadline(std::time::Duration::from_secs(5)));
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn join_deadline_detaches_stuck_worker() {
+        let pool = ThreadPool::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.execute(move || {
+            let _ = rx.recv(); // blocks until the test drops tx
+        });
+        let t0 = std::time::Instant::now();
+        assert!(!pool.join_deadline(std::time::Duration::from_millis(50)));
+        assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+        drop(tx); // unblock the detached worker so the process exits clean
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Property-based tests (in-repo `minitest` runner; the offline registry
 //! has no proptest) over the coordinator invariants, the JSON substrate,
-//! the histogram, the tokenizer, and the ARQGC metric.
+//! the histogram, the tokenizer, the ARQGC metric, and the batched-QE
+//! equivalence contract.
 
 use ipr::coordinator::gating::{route_decision, GatingStrategy};
 use ipr::eval::arqgc::{bounded_arqgc, CurvePoint};
-use ipr::synth::{SynthWorld, VOCAB_SIZE};
+use ipr::registry::Registry;
+use ipr::runtime::{create_engine, Engine as _, QeModel as _};
+use ipr::synth::{SynthWorld, SPLIT_LIVE, VOCAB_SIZE};
 use ipr::tokenizer;
 use ipr::util::hist::Histogram;
 use ipr::util::json::{parse, Json};
@@ -211,6 +214,64 @@ fn prop_arqgc_bounded_and_monotone() {
                 .map(|p| CurvePoint { q_norm: (p.q_norm + 0.1).min(1.0), ..*p })
                 .collect();
             bounded_arqgc(&lifted) + 1e-9 >= v
+        },
+    );
+}
+
+/// The batched-inference contract (DESIGN.md §11): `score_batch` over any
+/// batch — ragged lengths, single tokens, empty rows, overlong prompts
+/// through the truncation path, and batch size 1 — is element-wise equal
+/// (≤1e-6) to n single-prompt `predict` calls. This pins the packed
+/// ragged kernels, the row-parallel split and the bucket-capacity
+/// chunking against the padded per-request path.
+#[test]
+fn prop_score_batch_matches_single() {
+    let reg = Registry::load_or_reference("artifacts").unwrap();
+    let engine = create_engine().unwrap();
+    let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
+    let world = SynthWorld::new(reg.world_seed);
+    check(
+        41,
+        25,
+        |r, _| {
+            let n = 1 + r.next_range(9) as usize;
+            (0..n)
+                .map(|_| {
+                    let p = world.sample_prompt(SPLIT_LIVE, r.next_u64() % 50_000);
+                    match r.next_range(8) {
+                        0 => Vec::new(), // empty row: pools to zeros
+                        1 => {
+                            // overlong: exercise truncation at the seq cap
+                            let mut t = p.tokens.clone();
+                            while t.len() <= 300 {
+                                t.extend_from_slice(&p.tokens);
+                            }
+                            t
+                        }
+                        2 => p.tokens[..1].to_vec(), // single token
+                        _ => p.tokens,
+                    }
+                })
+                .collect::<Vec<Vec<u32>>>()
+        },
+        |batch| {
+            let b = model.score_batch(batch, "xla").unwrap();
+            if b.scores.len() != batch.len() {
+                return false;
+            }
+            for (i, p) in batch.iter().enumerate() {
+                let s = model.predict(std::slice::from_ref(p), "xla").unwrap();
+                if b.scores[i].len() != s.scores[0].len() {
+                    return false;
+                }
+                for (x, y) in b.scores[i].iter().zip(&s.scores[0]) {
+                    if (x - y).abs() > 1e-6 {
+                        return false;
+                    }
+                }
+            }
+            true
         },
     );
 }

@@ -103,6 +103,34 @@ fn concurrent_clients_batched() {
     }
     let sizes = router.qe.batch_sizes.lock().unwrap().clone();
     assert!(!sizes.is_empty());
+    // the server-side micro-batcher routed every request
+    let mb = server.micro_batch_sizes();
+    assert!(!mb.is_empty());
+    assert_eq!(mb.iter().sum::<usize>(), 16, "{mb:?}");
     drop(client);
     server.stop();
+}
+
+/// Teardown regression (the `server_e2e` flake): an idle keep-alive
+/// connection used to park a pool worker in `read_line` forever, and
+/// `stop()` joined that worker unconditionally. The drain-deadline stop
+/// must finish promptly: in-flight requests drain, the idle socket is
+/// force-closed, stragglers are detached.
+#[test]
+fn stop_drains_promptly_with_idle_keepalive_conn() {
+    let (server, client, router) = start();
+    // Park an idle connection that never sends a byte.
+    let idle = std::net::TcpStream::connect(&server.addr).unwrap();
+    // Serve one real request so the pool is demonstrably working.
+    let (st, _) = client.post("/v1/route", "{\"prompt\": \"w100 w200 w300\"}").unwrap();
+    assert_eq!(st, 200);
+    let t0 = std::time::Instant::now();
+    server.stop();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(8),
+        "stop() exceeded the drain deadline: {:?}",
+        t0.elapsed()
+    );
+    drop(idle);
+    router.qe.shutdown();
 }
