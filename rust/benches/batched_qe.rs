@@ -1,11 +1,13 @@
 //! Batched-vs-unbatched QE throughput (the batched-pipeline tentpole):
 //! the packed ragged `score_batch` kernel against the bucket-shaped
 //! per-request `predict` path at batch sizes 1/8/64 over a deterministic
-//! ragged live workload. Emits `BENCH_batched.json` (recorded in
-//! EXPERIMENTS.md; uploaded as a CI artifact by the bench-regression
+//! ragged live workload, plus the §12 kernel micro-bench (planned GEMM
+//! GFLOP/s, encode ns/row, score-cache hit latency). Emits
+//! `BENCH_batched.json` + `BENCH_kernels.json` (recorded in
+//! EXPERIMENTS.md; uploaded as CI artifacts by the bench-regression
 //! job). `IPR_BENCH_FAST=1` selects the smoke-sized run CI uses.
 
-use ipr::eval::bench_pipeline::{batched_qe_bench, print_batched};
+use ipr::eval::bench_pipeline::{batched_qe_bench, kernels_bench, print_batched};
 
 fn main() {
     let fast = std::env::var("IPR_BENCH_FAST").is_ok();
@@ -20,4 +22,14 @@ fn main() {
         .map(|a| a.speedup)
         .unwrap_or(0.0);
     println!("\nwrote BENCH_batched.json  (batch-64 speedup vs unbatched: {at64:.2}x)");
+
+    let kernels = kernels_bench("artifacts", fast).unwrap();
+    std::fs::write("BENCH_kernels.json", kernels.to_string()).unwrap();
+    println!(
+        "wrote BENCH_kernels.json  (GEMM {:.2} GFLOP/s, encode {:.0} ns/row, \
+         cache-hit speedup {:.0}x)",
+        kernels.req("gemm_gflops").unwrap().as_f64().unwrap(),
+        kernels.req("encode_ns_per_row").unwrap().as_f64().unwrap(),
+        kernels.req("cache_hit_speedup").unwrap().as_f64().unwrap(),
+    );
 }

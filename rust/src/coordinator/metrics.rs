@@ -3,9 +3,10 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::util::hist::Histogram;
+use crate::util::score_cache::ShardedScoreCache;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -21,12 +22,20 @@ pub struct Metrics {
     /// policy would have incurred (for live CSR).
     pub spend_microusd: AtomicU64,
     pub spend_best_microusd: AtomicU64,
+    /// Routing-score cache, attached by the router at construction so its
+    /// hit/miss/eviction counters render in `GET /metrics`.
+    score_cache: Mutex<Option<Arc<ShardedScoreCache>>>,
 }
 
 impl Metrics {
     pub fn record_route(&self, model: &str) {
         let mut m = self.routes.lock().unwrap();
         *m.entry(model.to_string()).or_insert(0) += 1;
+    }
+
+    /// Attach the router's score cache for rendering.
+    pub fn attach_score_cache(&self, cache: Arc<ShardedScoreCache>) {
+        *self.score_cache.lock().unwrap() = Some(cache);
     }
 
     pub fn add_spend(&self, usd: f64, usd_best: f64) {
@@ -77,6 +86,23 @@ impl Metrics {
         }
         for (model, count) in self.routes.lock().unwrap().iter() {
             out.push_str(&format!("ipr_routed_total{{model=\"{model}\"}} {count}\n"));
+        }
+        if let Some(cache) = self.score_cache.lock().unwrap().as_ref() {
+            let s = cache.stats();
+            out.push_str(&format!(
+                "ipr_score_cache_hits_total {}\n",
+                s.hits.load(Ordering::Relaxed)
+            ));
+            out.push_str(&format!(
+                "ipr_score_cache_misses_total {}\n",
+                s.misses.load(Ordering::Relaxed)
+            ));
+            out.push_str(&format!(
+                "ipr_score_cache_evictions_total {}\n",
+                s.evictions.load(Ordering::Relaxed)
+            ));
+            out.push_str(&format!("ipr_score_cache_entries {}\n", cache.len()));
+            out.push_str(&format!("ipr_score_cache_hit_ratio {:.4}\n", s.hit_ratio()));
         }
         out.push_str(&format!("ipr_live_csr {:.4}\n", self.live_csr()));
         out

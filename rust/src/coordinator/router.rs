@@ -4,6 +4,7 @@
 //! forward) → Decision Optimization (Algorithm 1) → simulated endpoint
 //! invoke → metering. Everything below the HTTP layer lives here.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -61,6 +62,10 @@ pub struct BatchItem {
     /// When the request entered the system; queueing + coalescing time
     /// shows up in the outcome's `total_us`.
     pub t_start: Instant,
+    /// Score-cache key when the submitter already did this request's
+    /// counted cache lookup (and missed) — `handle_batch` then only
+    /// re-peeks uncounted instead of double-counting a miss.
+    pub cache_key: Option<u64>,
 }
 
 /// Full outcome of one routed request.
@@ -117,11 +122,15 @@ impl Router {
             .max_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap())
             .unwrap_or(0);
         let world = SynthWorld::new(registry.world_seed);
+        let metrics = Arc::new(Metrics::default());
+        // Surface the score cache's hit/miss/eviction counters through
+        // GET /metrics.
+        metrics.attach_score_cache(qe.cache().clone());
         Ok(Router {
             registry,
             qe,
             backend: Backend::new(world, cfg.time_scale),
-            metrics: Arc::new(Metrics::default()),
+            metrics,
             cfg,
             cand_global,
             costs,
@@ -156,20 +165,63 @@ impl Router {
         self.handle_tokens_timed(tokens, tau, invoke, identity, 0, Instant::now())
     }
 
-    /// Route a coalesced batch of requests: ONE `score_batch` through the
-    /// QE service for the whole batch, then per-request Decision
-    /// Optimization, invoke and metering. `qe_us` on every outcome is the
-    /// shared batch-forward latency (the requests waited on it together).
+    /// Route a coalesced batch of requests. The score cache is consulted
+    /// first — hits skip the QE entirely — and ONE `score_batch` goes
+    /// through the QE service for the remaining misses, then per-request
+    /// Decision Optimization, invoke and metering. `qe_us` on a miss
+    /// outcome is the shared batch-forward latency (those requests waited
+    /// on it together); cache hits report 0.
     pub fn handle_batch(&self, items: &[BatchItem]) -> Result<Vec<RouteOutcome>> {
         if items.is_empty() {
             return Ok(Vec::new());
         }
-        // The one copy on this path: `finish` still needs each request's
-        // tokens (invoke + cost metering), so the service takes its own.
-        let toks: Vec<Vec<u32>> = items.iter().map(|it| it.tokens.clone()).collect();
+        // Cache pass: collect per-item hits, gather misses for one batch
+        // forward. Items whose submitter already did the counted lookup
+        // (server fast path) carry their key; re-peek uncounted in case a
+        // sibling batch populated the entry since submission. Identical
+        // keys within the batch (retry/templated bursts — exactly the
+        // traffic the cache targets) dedup to ONE forward row.
+        enum Looked {
+            Hit(Vec<f32>),
+            Miss(usize),
+        }
+        let mut lookups: Vec<Looked> = Vec::with_capacity(items.len());
+        let mut slot_of: HashMap<u64, usize> = HashMap::new();
+        let mut misses: Vec<(u64, Vec<u32>)> = Vec::new();
+        for it in items {
+            let (key, hit) = match it.cache_key {
+                Some(k) => (k, self.qe.cache().peek(k)),
+                None => self.qe.cache_lookup(&it.tokens),
+            };
+            match hit {
+                Some(s) => lookups.push(Looked::Hit(s)),
+                None => {
+                    let pos = *slot_of.entry(key).or_insert_with(|| {
+                        // The one copy on this path: `finish` still needs
+                        // each request's tokens (invoke + cost metering),
+                        // so the service takes its own.
+                        misses.push((key, it.tokens.clone()));
+                        misses.len() - 1
+                    });
+                    lookups.push(Looked::Miss(pos));
+                }
+            }
+        }
         let t1 = Instant::now();
-        let scores = self.qe.score_batch(toks)?;
+        let computed = if misses.is_empty() {
+            Vec::new()
+        } else {
+            self.qe.score_batch_with_keys(misses)?
+        };
         let qe_us = t1.elapsed().as_micros() as u64;
+        // (scores, qe_us) per item, in input order
+        let scored: Vec<(Vec<f32>, u64)> = lookups
+            .into_iter()
+            .map(|h| match h {
+                Looked::Hit(s) => (s, 0),
+                Looked::Miss(pos) => (computed[pos].clone(), qe_us),
+            })
+            .collect();
 
         // With latency simulation on, sequential invokes would serialize
         // every simulated sleep behind one drain worker (head-of-line
@@ -180,8 +232,8 @@ impl Router {
         if !simulate {
             return items
                 .iter()
-                .zip(scores)
-                .map(|(it, sc)| {
+                .zip(scored)
+                .map(|(it, (sc, qe))| {
                     self.finish(
                         &it.tokens,
                         sc,
@@ -189,7 +241,7 @@ impl Router {
                         it.invoke,
                         it.identity.as_ref(),
                         it.tokenize_us,
-                        qe_us,
+                        qe,
                         it.t_start,
                     )
                 })
@@ -199,8 +251,8 @@ impl Router {
         std::thread::scope(|s| {
             let handles: Vec<_> = items
                 .iter()
-                .zip(scores)
-                .map(|(it, sc)| {
+                .zip(scored)
+                .map(|(it, (sc, qe))| {
                     s.spawn(move || {
                         self.finish(
                             &it.tokens,
@@ -209,7 +261,7 @@ impl Router {
                             it.invoke,
                             it.identity.as_ref(),
                             it.tokenize_us,
-                            qe_us,
+                            qe,
                             it.t_start,
                         )
                     })
@@ -222,6 +274,24 @@ impl Router {
         outs.into_iter().collect()
     }
 
+    /// Complete a request whose scores came from a cache hit the CALLER
+    /// observed (server fast path — the request never enters the
+    /// micro-batcher): Decision Optimization → optional invoke → metering.
+    #[allow(clippy::too_many_arguments)]
+    pub fn handle_cached_scores(
+        &self,
+        tokens: &[u32],
+        scores: Vec<f32>,
+        tau: Option<f64>,
+        invoke: bool,
+        identity: Option<&Prompt>,
+        tokenize_us: u64,
+        qe_us: u64,
+        t_start: Instant,
+    ) -> Result<RouteOutcome> {
+        self.finish(tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
+    }
+
     fn handle_tokens_timed(
         &self,
         tokens: &[u32],
@@ -231,8 +301,15 @@ impl Router {
         tokenize_us: u64,
         t_start: Instant,
     ) -> Result<RouteOutcome> {
+        // Score cache first: a hit skips the QE service (queue, engine
+        // thread, forward) entirely — `qe_us` then measures only the
+        // sharded-LRU lookup.
         let t1 = Instant::now();
-        let scores = self.qe.score(tokens)?;
+        let (key, hit) = self.qe.cache_lookup(tokens);
+        let scores = match hit {
+            Some(s) => s,
+            None => self.qe.score_with_key(key, tokens)?,
+        };
         let qe_us = t1.elapsed().as_micros() as u64;
         self.finish(tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
     }

@@ -1,14 +1,17 @@
 //! Pipeline benches behind the `ipr bench` subcommand and the
-//! `batched_qe` bench target: batched-vs-unbatched QE throughput and
-//! single-request routing latency, emitted as `BENCH_batched.json` /
-//! `BENCH_routing.json` for the CI bench-regression job
-//! (`.github/workflows/ci.yml`, baseline in `ci/bench_baseline.json`).
+//! `batched_qe` bench target: batched-vs-unbatched QE throughput,
+//! single-request routing latency, and the kernel micro-bench (GEMM
+//! GFLOP/s, encode ns/row, score-cache hit latency), emitted as
+//! `BENCH_batched.json` / `BENCH_routing.json` / `BENCH_kernels.json`
+//! for the CI bench-regression job (`.github/workflows/ci.yml`,
+//! baseline in `ci/bench_baseline.json`).
 //!
 //! Determinism: the workload is the seeded SynthWorld live split, so a
 //! smoke run measures the exact same prompts on every machine (latency
 //! values are still hardware-dependent — the CI gate compares p50 against
 //! a checked-in baseline with a generous regression ratio).
 
+use std::hint::black_box;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -16,12 +19,15 @@ use crate::anyhow;
 use crate::coordinator::{Router, RouterConfig};
 use crate::qe::BatcherConfig;
 use crate::registry::Registry;
+use crate::runtime::reference::{matmul, Epilogue, PackedGemm};
 use crate::runtime::{create_engine, Engine as _, QeModel as _};
 use crate::synth::{SynthWorld, SPLIT_LIVE};
 use crate::util::bench::Table;
 use crate::util::error::{Context, Result};
 use crate::util::hist::Histogram;
 use crate::util::json::{parse, Json};
+use crate::util::rng::Rng;
+use crate::util::score_cache::ShardedScoreCache;
 
 /// One measured arm of the batched-QE bench.
 pub struct BatchArm {
@@ -178,6 +184,151 @@ pub fn routing_bench(artifacts: &str, n_requests: usize) -> Result<Json> {
         ("mean_us", Json::Num(h.mean_ns() / 1e3)),
         ("req_per_s", Json::Num(n_requests as f64 / wall)),
     ]))
+}
+
+/// Kernel micro-bench (DESIGN.md §12): the planned GEMM's GFLOP/s on a
+/// model-shaped dense matrix (vs the naive reference kernel), batched
+/// encode ns/row through the real engine, raw sharded-cache hit latency,
+/// and the router-level cache-hit vs cache-miss p50 — the "hit ≥10x
+/// cheaper than a forward" serving contract. Emits `BENCH_kernels.json`.
+pub fn kernels_bench(artifacts: &str, smoke: bool) -> Result<Json> {
+    // --- 1. GEMM GFLOP/s, packed tiled kernel vs naive ---
+    let (m, k, n) = (if smoke { 256 } else { 512 }, 64usize, 256usize);
+    let mut rng = Rng::new(5);
+    let a: Vec<f32> = (0..m * k).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+    let pg = PackedGemm::pack(&b, k, n);
+    let mut out = vec![0f32; m * n];
+    let mut tmp = Vec::new();
+    pg.gemm(&a, m, &mut out, Epilogue::Store, &mut tmp); // warm
+    let reps = if smoke { 25 } else { 100 };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        pg.gemm(&a, m, black_box(&mut out), Epilogue::Store, &mut tmp);
+    }
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let gflops = flops * reps as f64 / t0.elapsed().as_secs_f64() / 1e9;
+    let naive_reps = reps.min(25);
+    let t0 = Instant::now();
+    for _ in 0..naive_reps {
+        black_box(matmul(&a, &b, m, k, n));
+    }
+    let naive_gflops = flops * naive_reps as f64 / t0.elapsed().as_secs_f64() / 1e9;
+
+    // --- 2. batched encode ns/row through this build's engine ---
+    let reg = Registry::load_or_reference(artifacts)?;
+    let engine = create_engine()?;
+    let entry = reg.family_qe("claude", "stella_sim")?.clone();
+    let model = engine.load_model(&reg, &entry, &["xla"])?;
+    let n_rows = if smoke { 128 } else { 512 };
+    let prompts = workload(&reg, n_rows);
+    let _ = model.score_batch(&prompts[..prompts.len().min(64)], "xla")?; // warm
+    let t0 = Instant::now();
+    for chunk in prompts.chunks(64) {
+        let _ = model.score_batch(chunk, "xla")?;
+    }
+    let encode_ns_per_row = t0.elapsed().as_nanos() as f64 / n_rows as f64;
+
+    // --- 3. raw sharded-cache hit latency ---
+    let cache = ShardedScoreCache::new(4096, 1);
+    cache.put(&prompts[0], vec![0.5; 4]);
+    let lookups = if smoke { 20_000 } else { 100_000 };
+    let _ = cache.lookup(&prompts[0]); // warm
+    let t0 = Instant::now();
+    for _ in 0..lookups {
+        black_box(cache.lookup(black_box(&prompts[0])));
+    }
+    let cache_hit_ns = t0.elapsed().as_nanos() as f64 / lookups as f64;
+
+    // --- 4. router-level: cache-hit p50 vs cache-miss p50 ---
+    let reg = Arc::new(reg);
+    let router = Router::new(reg.clone(), RouterConfig::default())?;
+    let _ = router.handle_tokens(&prompts[0], Some(0.2), false, None)?; // populate
+    let mut hit_hist = Histogram::new();
+    let hit_reqs = if smoke { 500 } else { 2000 };
+    for _ in 0..hit_reqs {
+        let q0 = Instant::now();
+        let _ = router.handle_tokens(&prompts[0], Some(0.2), false, None)?;
+        hit_hist.record(q0.elapsed());
+    }
+    router.qe.shutdown();
+    let miss_cfg = RouterConfig {
+        batcher: BatcherConfig { cache_cap: 0, ..BatcherConfig::default() },
+        ..RouterConfig::default()
+    };
+    let miss_router = Router::new(reg, miss_cfg)?;
+    let _ = miss_router.handle_tokens(&prompts[0], Some(0.2), false, None)?; // warm
+    let mut miss_hist = Histogram::new();
+    for p in prompts.iter().take(if smoke { 64 } else { 256 }) {
+        let q0 = Instant::now();
+        let _ = miss_router.handle_tokens(p, Some(0.2), false, None)?;
+        miss_hist.record(q0.elapsed());
+    }
+    miss_router.qe.shutdown();
+    let hit_p50_us = hit_hist.quantile_ns(0.5) as f64 / 1e3;
+    let miss_p50_us = miss_hist.quantile_ns(0.5) as f64 / 1e3;
+    let speedup = if hit_p50_us > 0.0 { miss_p50_us / hit_p50_us } else { f64::INFINITY };
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str("ipr-bench-kernels/v1")),
+        ("gemm_m", Json::Num(m as f64)),
+        ("gemm_k", Json::Num(k as f64)),
+        ("gemm_n", Json::Num(n as f64)),
+        ("gemm_density", Json::Num(pg.density)),
+        ("gemm_sparse_kind", Json::Bool(pg.is_sparse())),
+        ("gemm_gflops", Json::Num(gflops)),
+        ("gemm_naive_gflops", Json::Num(naive_gflops)),
+        ("gemm_speedup_vs_naive", Json::Num(gflops / naive_gflops.max(1e-9))),
+        ("encode_ns_per_row", Json::Num(encode_ns_per_row)),
+        ("cache_hit_ns", Json::Num(cache_hit_ns)),
+        ("route_hit_p50_us", Json::Num(hit_p50_us)),
+        ("route_miss_p50_us", Json::Num(miss_p50_us)),
+        ("cache_hit_speedup", Json::Num(speedup)),
+    ]))
+}
+
+/// Gate the kernel micro-bench against the baseline: `encode_ns_per_row`
+/// may not regress past `baseline * max_ratio`, and the router-level
+/// cache-hit speedup may not fall below the baseline's floor (both
+/// checks are skipped when the baseline lacks the field — pre-§12
+/// baselines stay valid).
+pub fn check_kernels_regression(
+    current: &Json,
+    baseline_path: &str,
+    max_ratio: f64,
+) -> Result<String> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let base = parse(&text)?;
+    let mut msgs: Vec<String> = Vec::new();
+    if let Some(b) = base.get("encode_ns_per_row") {
+        let base_ns = b.as_f64()?;
+        let cur = current.req("encode_ns_per_row")?.as_f64()?;
+        let limit = base_ns * max_ratio;
+        if cur > limit {
+            return Err(anyhow!(
+                "encode ns/row regression: {cur:.0}ns > {limit:.0}ns \
+                 (baseline {base_ns:.0}ns x {max_ratio}); refresh with \
+                 `ipr bench --write-baseline ci/bench_baseline.json` if intended"
+            ));
+        }
+        msgs.push(format!("encode {cur:.0}ns/row <= {limit:.0}ns"));
+    }
+    if let Some(b) = base.get("min_cache_hit_speedup") {
+        let floor = b.as_f64()?;
+        let cur = current.req("cache_hit_speedup")?.as_f64()?;
+        if cur < floor {
+            return Err(anyhow!(
+                "cache-hit speedup {cur:.1}x below the {floor:.1}x floor \
+                 (cache-hit routing must stay >= {floor:.0}x cheaper than a miss forward)"
+            ));
+        }
+        msgs.push(format!("cache-hit speedup {cur:.1}x >= {floor:.1}x"));
+    }
+    if msgs.is_empty() {
+        return Ok("kernels gate skipped: baseline has no kernel fields".to_string());
+    }
+    Ok(format!("kernels gate OK: {}", msgs.join(", ")))
 }
 
 /// Compare a fresh routing-bench document against the checked-in

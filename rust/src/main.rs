@@ -15,7 +15,8 @@ use std::sync::Arc;
 
 use ipr::coordinator::{GatingStrategy, Router, RouterConfig};
 use ipr::eval::bench_pipeline::{
-    batched_qe_bench, check_routing_regression, print_batched, routing_bench,
+    batched_qe_bench, check_kernels_regression, check_routing_regression, kernels_bench,
+    print_batched, routing_bench,
 };
 use ipr::eval::tables::{run_table, EvalCtx};
 use ipr::qe::BatcherConfig;
@@ -43,7 +44,8 @@ USAGE:
               [--bind 127.0.0.1:8080] [--workers 4] [--tau 0.0]
               [--strategy dynamic_max] [--kind xla] [--time-scale 0]
               [--max-batch 8] [--max-wait-us 500] [--batch-workers 2]
-              [--drain-ms 5000]
+              [--drain-ms 5000] [--score-cache-entries 4096]
+              [--no-score-cache]
   ipr route   --prompt \"...\" [--tau 0.3] [--family claude] [--invoke]
   ipr eval    --table {1..12|D|fig3|fig45|all} [--limit N] [--artifacts DIR]
   ipr bench   [--artifacts DIR] [--out-dir .] [--smoke] [--batch-sizes 1,8,64]
@@ -56,7 +58,7 @@ USAGE:
 ";
 
 fn run() -> Result<()> {
-    let args = Args::parse(&["invoke", "help", "smoke"]);
+    let args = Args::parse(&["invoke", "help", "smoke", "no-score-cache"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
@@ -99,7 +101,14 @@ fn build_router(args: &Args) -> Result<Arc<Router>> {
             max_batch: args.usize_or("max-batch", 8)?,
             max_wait: std::time::Duration::from_micros(args.usize_or("max-wait-us", 500)? as u64),
             kind: args.get_or("kind", "xla").to_string(),
-            cache_cap: args.usize_or("cache-cap", 4096)?,
+            // --score-cache-entries N sizes the sharded routing-score
+            // cache (0 or --no-score-cache disables it); --cache-cap is
+            // the pre-PR-3 spelling, kept as a fallback.
+            cache_cap: if args.flag("no-score-cache") {
+                0
+            } else {
+                args.usize_or("score-cache-entries", args.usize_or("cache-cap", 4096)?)?
+            },
         },
         time_scale: args.f64_or("time-scale", 0.0)?,
     };
@@ -165,16 +174,36 @@ fn cmd_bench(args: &Args) -> Result<()> {
     std::fs::write(&path, routing.to_string()).with_context(|| format!("writing {path}"))?;
     println!("wrote {path}");
 
+    let kernels = kernels_bench(&dir, smoke)?;
+    println!(
+        "kernels: GEMM {:.2} GFLOP/s ({:.2}x vs naive)  encode {:.0} ns/row  \
+         cache hit {:.0}ns raw / p50 {:.1}us routed ({:.0}x cheaper than a miss forward)",
+        kernels.req("gemm_gflops")?.as_f64()?,
+        kernels.req("gemm_speedup_vs_naive")?.as_f64()?,
+        kernels.req("encode_ns_per_row")?.as_f64()?,
+        kernels.req("cache_hit_ns")?.as_f64()?,
+        kernels.req("route_hit_p50_us")?.as_f64()?,
+        kernels.req("cache_hit_speedup")?.as_f64()?,
+    );
+    let path = format!("{out_dir}/BENCH_kernels.json");
+    std::fs::write(&path, kernels.to_string()).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+
     if let Some(bp) = args.get("write-baseline") {
         let doc = Json::obj(vec![
-            ("schema", Json::str("ipr-bench-baseline/v1")),
+            ("schema", Json::str("ipr-bench-baseline/v2")),
             ("routing_p50_us", Json::Num(p50)),
+            ("encode_ns_per_row", Json::Num(kernels.req("encode_ns_per_row")?.as_f64()?)),
+            ("min_cache_hit_speedup", Json::Num(10.0)),
         ]);
         std::fs::write(bp, doc.to_string()).with_context(|| format!("writing {bp}"))?;
         println!("wrote baseline {bp}");
     }
     if let Some(b) = args.get("baseline") {
-        let msg = check_routing_regression(&routing, b, args.f64_or("max-regress", 1.25)?)?;
+        let ratio = args.f64_or("max-regress", 1.25)?;
+        let msg = check_routing_regression(&routing, b, ratio)?;
+        println!("{msg}");
+        let msg = check_kernels_regression(&kernels, b, ratio)?;
         println!("{msg}");
     }
     Ok(())

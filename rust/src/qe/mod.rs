@@ -17,11 +17,14 @@
 //!   forward pass (ablated in `benches/e2e_throughput.rs`).
 //! * **Score cache**: Algorithm 1 line 1 notes the prompt embedding is
 //!   "cached across turns if multi-turn"; we cache the per-candidate score
-//!   vector keyed by the token-sequence hash, which subsumes the embedding
-//!   cache for identical turn prefixes.
+//!   vector in the sharded LRU [`crate::util::score_cache`], keyed by
+//!   token-sequence hash + artifact kind + model identity. The router
+//!   consults it once per request ([`QeService::cache_lookup`]) and only
+//!   forwards misses, so repeated traffic never reaches the engine
+//!   thread at all.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -30,7 +33,7 @@ use crate::registry::{ModelEntry, Registry};
 use crate::runtime::{create_engine, Engine as _, QeModel as _};
 use crate::util::error::Result;
 use crate::util::hist::Histogram;
-use crate::util::rng::mix64;
+use crate::util::score_cache::{key_seed, ShardedScoreCache};
 
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
@@ -68,57 +71,6 @@ struct Queue {
     shutdown: AtomicBool,
 }
 
-/// FIFO-ish score cache with arbitrary eviction; the hit path is O(1).
-struct ScoreCache {
-    map: Mutex<HashMap<u64, Vec<f32>>>,
-    cap: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-}
-
-impl ScoreCache {
-    fn key(tokens: &[u32]) -> u64 {
-        let mut h = 0x100_0193u64;
-        for &t in tokens {
-            h = mix64(h ^ t as u64);
-        }
-        h
-    }
-
-    fn get(&self, tokens: &[u32]) -> Option<Vec<f32>> {
-        if self.cap == 0 {
-            return None;
-        }
-        let m = self.map.lock().unwrap();
-        let r = m.get(&Self::key(tokens)).cloned();
-        if r.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        }
-        r
-    }
-
-    fn put(&self, tokens: &[u32], scores: Vec<f32>) {
-        self.put_key(Self::key(tokens), scores);
-    }
-
-    /// Insert under a pre-computed key (the batch path hashes before
-    /// moving token ownership into the queue).
-    fn put_key(&self, key: u64, scores: Vec<f32>) {
-        if self.cap == 0 {
-            return;
-        }
-        let mut m = self.map.lock().unwrap();
-        if m.len() >= self.cap {
-            if let Some(&k) = m.keys().next() {
-                m.remove(&k);
-            }
-        }
-        m.insert(key, scores);
-    }
-}
-
 /// Model metadata surfaced from the engine thread at load time.
 #[derive(Clone, Debug)]
 pub struct LoadedInfo {
@@ -134,7 +86,7 @@ pub struct LoadedInfo {
 pub struct QeService {
     pub cfg: BatcherConfig,
     queue: Arc<Queue>,
-    cache: Arc<ScoreCache>,
+    cache: Arc<ShardedScoreCache>,
     info: LoadedInfo,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
     /// Forward-pass latency (per batch) and realized batch sizes.
@@ -150,12 +102,6 @@ impl QeService {
             q: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-        });
-        let cache = Arc::new(ScoreCache {
-            map: Mutex::new(HashMap::new()),
-            cap: cfg.cache_cap,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
         });
         let batch_hist = Arc::new(Mutex::new(Histogram::new()));
         let batch_sizes = Arc::new(Mutex::new(Vec::new()));
@@ -176,6 +122,10 @@ impl QeService {
         let info = ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died during load"))??;
+        // The cache key folds in model id + kind + candidate set, so a
+        // cache can never leak scores across models even if shared.
+        let seed = key_seed(&info.entry.id, &cfg.kind, &info.entry.candidates);
+        let cache = Arc::new(ShardedScoreCache::new(cfg.cache_cap, seed));
         Ok(Arc::new(QeService {
             cfg,
             queue,
@@ -196,15 +146,36 @@ impl QeService {
     }
 
     pub fn cache_stats(&self) -> (u64, u64) {
-        (self.cache.hits.load(Ordering::Relaxed), self.cache.misses.load(Ordering::Relaxed))
+        let s = self.cache.stats();
+        (s.hits.load(Ordering::Relaxed), s.misses.load(Ordering::Relaxed))
+    }
+
+    /// The sharded score cache (router fast path, metrics, tests).
+    pub fn cache(&self) -> &Arc<ShardedScoreCache> {
+        &self.cache
+    }
+
+    /// The single *counted* cache consultation for one request: returns
+    /// the key (so the caller can insert after a miss without re-hashing)
+    /// and the cached scores on a hit. Call exactly once per request —
+    /// hit/miss stats are request-level.
+    pub fn cache_lookup(&self, tokens: &[u32]) -> (u64, Option<Vec<f32>>) {
+        self.cache.lookup(tokens)
     }
 
     /// Score one prompt (blocking). Returns one score per local head, in
     /// the model's candidate order.
     pub fn score(&self, tokens: &[u32]) -> Result<Vec<f32>> {
-        if let Some(hit) = self.cache.get(tokens) {
+        let (key, hit) = self.cache.lookup(tokens);
+        if let Some(hit) = hit {
             return Ok(hit);
         }
+        self.score_with_key(key, tokens)
+    }
+
+    /// Score a known cache miss (the caller already did the counted
+    /// lookup and holds the key): enqueue, wait, populate the cache.
+    pub fn score_with_key(&self, key: u64, tokens: &[u32]) -> Result<Vec<f32>> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.queue.q.lock().unwrap();
@@ -212,17 +183,20 @@ impl QeService {
         }
         self.queue.cv.notify_one();
         let scores = rx.recv().map_err(|_| anyhow!("QE engine dropped request"))??;
-        self.cache.put(tokens, scores.clone());
+        self.cache.put_key(key, scores.clone());
         Ok(scores)
     }
 
-    /// Score a whole batch through the batcher in ONE submission: every
-    /// prompt is enqueued under a single lock acquisition, so the engine
-    /// thread coalesces them immediately (no per-prompt wakeup latency).
-    /// This is the server micro-batcher's entry point; results come back
-    /// in input order and computed scores populate the cache. Takes the
-    /// prompts by value — token buffers move through the queue to the
-    /// engine thread without another copy.
+    /// Score a whole batch with per-prompt cache checks in ONE
+    /// submission: every miss is enqueued under a single lock
+    /// acquisition, so the engine thread coalesces them immediately (no
+    /// per-prompt wakeup latency). Results come back in input order and
+    /// computed scores populate the cache. Takes the prompts by value —
+    /// token buffers move through the queue to the engine thread without
+    /// another copy. (The server path routes through
+    /// `Router::handle_batch` → [`QeService::score_batch_with_keys`]
+    /// instead, which filters hits before the batch reaches here; this
+    /// entry point serves direct library users and `score_many`.)
     pub fn score_batch(&self, prompts: Vec<Vec<u32>>) -> Result<Vec<Vec<f32>>> {
         enum Slot {
             Hit(Vec<f32>),
@@ -232,11 +206,11 @@ impl QeService {
         {
             let mut q = self.queue.q.lock().unwrap();
             for p in prompts {
-                if let Some(hit) = self.cache.get(&p) {
+                let (key, hit) = self.cache.lookup(&p);
+                if let Some(hit) = hit {
                     slots.push(Slot::Hit(hit));
                     continue;
                 }
-                let key = ScoreCache::key(&p);
                 let (tx, rx) = mpsc::channel();
                 q.push_back(Pending { tokens: p, tx });
                 slots.push(Slot::Rx(key, rx));
@@ -259,6 +233,31 @@ impl QeService {
     /// Back-compat alias for [`QeService::score_batch`].
     pub fn score_many(&self, prompts: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
         self.score_batch(prompts.to_vec())
+    }
+
+    /// Score a batch of known cache misses (the caller already did the
+    /// counted lookups): enqueue everything under ONE lock acquisition,
+    /// wait in input order, populate the cache under the provided keys.
+    /// This is `Router::handle_batch`'s entry point — by the time a batch
+    /// reaches the engine, hits have already been filtered out.
+    pub fn score_batch_with_keys(&self, items: Vec<(u64, Vec<u32>)>) -> Result<Vec<Vec<f32>>> {
+        let mut rxs = Vec::with_capacity(items.len());
+        {
+            let mut q = self.queue.q.lock().unwrap();
+            for (key, tokens) in items {
+                let (tx, rx) = mpsc::channel();
+                q.push_back(Pending { tokens, tx });
+                rxs.push((key, rx));
+            }
+        }
+        self.queue.cv.notify_all();
+        rxs.into_iter()
+            .map(|(key, rx)| {
+                let s = rx.recv().map_err(|_| anyhow!("QE engine dropped request"))??;
+                self.cache.put_key(key, s.clone());
+                Ok(s)
+            })
+            .collect()
     }
 
     pub fn shutdown(&self) {

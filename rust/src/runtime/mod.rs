@@ -28,6 +28,13 @@
 //! per projection, per-row attention, per-candidate QP-head GEMMs
 //! evaluated once per batch — parallelized across rows; AOT engines fall
 //! back to bucket-chunked `predict` calls (see DESIGN.md §11).
+//!
+//! The reference engine executes from a **load-time execution plan**
+//! (DESIGN.md §12): weights prebound into typed per-layer structs, GEMM
+//! weights pre-packed (tiled dense panels or CSR, decided per weight by
+//! measured density), bias/activation/residual epilogues fused into the
+//! GEMM stores, and all intermediates carried in per-thread scratch
+//! arenas so the steady-state forward allocates nothing.
 
 use crate::registry::{ModelEntry, Registry};
 use crate::util::error::Result;

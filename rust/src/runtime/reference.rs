@@ -18,11 +18,24 @@
 //!   heads re-scored from the adapted representation, new-candidate head
 //!   appended last.
 //!
-//! The engine loads weights from the entry's `.npz` (same canonical
-//! sorted-name order the PJRT path uses) and needs no HLO artifacts, which
-//! is what makes `cargo test` self-sufficient: when `artifacts/` is
-//! missing, `registry::reference` synthesizes a manifest + weights and
-//! this engine serves them.
+//! Execution model (DESIGN.md §12): loading builds an **execution plan**
+//! — every per-layer weight resolved ONCE into typed `LayerPlan` /
+//! `HeadPlan` structs (no string lookups or `format!` anywhere in the
+//! forward), every GEMM weight pre-packed into 8-wide column panels (or a
+//! CSR form when the measured density is low — decided per weight at
+//! load, not per multiply), bias+GELU / bias+residual epilogues fused
+//! into the GEMM output loop, and the prompt-independent QP-head
+//! identity-embedding term precomputed. The forward threads per-thread
+//! [`ScratchArena`] buffers through every kernel, so the steady-state hot
+//! path performs zero heap allocations (outputs excepted — the returned
+//! score vectors are API-owned).
+//!
+//! **Accumulation-order invariant**: every kernel accumulates each output
+//! element in strictly ascending k order from a 0.0 start, exactly like
+//! the scalar reference loops. Register tiling only reorders *which*
+//! elements are in flight, never the per-element contraction order, so
+//! tiled results match the naive kernels bit-for-bit (modulo the sign of
+//! exact zeros) and the golden/parity fixtures hold at ≤1e-6.
 //!
 //! Two execution paths share these kernels (DESIGN.md §11):
 //!
@@ -32,22 +45,39 @@
 //! * `score_batch` — the batched hot path: packed ragged kernels (every
 //!   GEMM over the concatenated `[total_tokens, d]` buffer, per-row
 //!   attention over real keys only, QP heads once per batch),
-//!   row-parallel across worker threads. Row results are exactly equal
-//!   between the two paths because masked padding cannot influence a
-//!   real row (softmax weight of a −1e30-biased key underflows to 0.0).
+//!   row-parallel across the persistent batch worker pool. Row results
+//!   are exactly equal between the two paths because masked padding
+//!   cannot influence a real row (softmax weight of a −1e30-biased key
+//!   underflows to 0.0).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::registry::{ModelEntry, Registry};
 use crate::runtime::{pick_bucket, select_bucket, Engine, QeModel, QualityVector, Scores, TokenizedPrompt};
+use crate::util::arena::{slot, zslot, AttnScratch, EncScratch, HeadScratch, ScratchArena};
 use crate::util::error::{Context, Result};
 use crate::util::npz::{self, Tensor};
+use crate::util::threadpool::{ScopedJob, ThreadPool};
 use crate::{anyhow, bail};
 
 /// Additive attention bias for padded key positions (mirrors model.py).
 pub const MASK_NEG: f32 = -1e30;
+
+/// Below this weight density the load-time planner stores a GEMM weight
+/// as CSR and runs the sparse kernel; at or above it, packed dense
+/// panels. Decided once per weight from measured density — the old
+/// per-multiply `if av == 0.0 { continue }` branch is gone.
+const SPARSE_DENSITY_MAX: f64 = 0.30;
+/// Tiny weights always go dense (CSR bookkeeping would dominate).
+const SPARSE_MIN_ELEMS: usize = 512;
+
+/// Minimum packed-batch token count before the forward fans out to the
+/// persistent worker pool (below it, thread hand-off costs more than the
+/// compute it saves).
+const PARALLEL_MIN_TOKENS: usize = 2048;
 
 /// The always-available pure-rust engine.
 pub struct ReferenceEngine;
@@ -96,104 +126,463 @@ impl Engine for ReferenceEngine {
     }
 }
 
-/// A loaded QE with resident f32 tensors.
+// ---------------------------------------------------------------------------
+// Planned GEMM: load-time weight packing + fused epilogues
+// ---------------------------------------------------------------------------
+
+/// Column-panel width of the dense kernel (8 accumulators live in
+/// registers per A-row) and the row block (4 A-rows share each packed
+/// B-panel load).
+const NR: usize = 8;
+const MR: usize = 4;
+
+/// What the GEMM output loop does with each finished accumulator tile —
+/// the bias/activation/residual epilogues fused into the store so the
+/// output buffer is touched exactly once.
+#[derive(Clone, Copy)]
+pub(crate) enum Epilogue<'a> {
+    /// `out = acc`
+    Store,
+    /// `out += acc` (residual add, e.g. `x += o·Wo`)
+    AddTo,
+    /// `out = gelu(acc + b)` (FFN first linear)
+    BiasGelu(&'a [f32]),
+    /// `out += acc + b` (FFN second linear onto the residual stream)
+    AddBiasTo(&'a [f32]),
+    /// `out = max(acc + b, 0)` (adapter MLP)
+    BiasRelu(&'a [f32]),
+    /// `out = acc + (other_row + b)` (adapter residual: `p' = W2·h + p + b`)
+    StoreAddRowBias { other: &'a [f32], bias: &'a [f32] },
+}
+
+impl Epilogue<'_> {
+    /// Apply to `w` finished lanes of row `i` starting at column `j0`.
+    #[inline]
+    fn apply(&self, i: usize, n: usize, orow: &mut [f32], j0: usize, w: usize, acc: &[f32; NR]) {
+        match self {
+            Epilogue::Store => orow[j0..j0 + w].copy_from_slice(&acc[..w]),
+            Epilogue::AddTo => {
+                for l in 0..w {
+                    orow[j0 + l] += acc[l];
+                }
+            }
+            Epilogue::BiasGelu(b) => {
+                for l in 0..w {
+                    orow[j0 + l] = gelu(acc[l] + b[j0 + l]);
+                }
+            }
+            Epilogue::AddBiasTo(b) => {
+                for l in 0..w {
+                    orow[j0 + l] += acc[l] + b[j0 + l];
+                }
+            }
+            Epilogue::BiasRelu(b) => {
+                for l in 0..w {
+                    orow[j0 + l] = (acc[l] + b[j0 + l]).max(0.0);
+                }
+            }
+            Epilogue::StoreAddRowBias { other, bias } => {
+                for l in 0..w {
+                    orow[j0 + l] = acc[l] + (other[i * n + j0 + l] + bias[j0 + l]);
+                }
+            }
+        }
+    }
+}
+
+enum GemmKind {
+    /// B pre-packed into `ceil(n/8)` column panels, each `[k, 8]`
+    /// contiguous — the inner loop streams one cache line per k step.
+    Dense { panels: Vec<f32> },
+    /// CSR over B's k rows (chosen for low-density expert weights): for
+    /// each k, the (col, val) pairs of its non-zeros.
+    Sparse { row_ptr: Vec<u32>, cols: Vec<u32>, vals: Vec<f32> },
+}
+
+/// A weight matrix bound to its kernel at load time: `[k, n]`, packed
+/// dense or CSR by measured density.
+pub(crate) struct PackedGemm {
+    k: usize,
+    n: usize,
+    /// Fraction of non-zero weights (observability / tests).
+    pub(crate) density: f64,
+    kind: GemmKind,
+}
+
+impl PackedGemm {
+    /// Pack `b` (`[k, n]`, C-order), choosing dense panels or CSR from
+    /// the measured density — the once-per-weight replacement for the old
+    /// per-element zero test in the matmul inner loop.
+    pub(crate) fn pack(b: &[f32], k: usize, n: usize) -> PackedGemm {
+        debug_assert!(b.len() >= k * n);
+        let nnz = b[..k * n].iter().filter(|&&v| v != 0.0).count();
+        let density = if k * n == 0 { 1.0 } else { nnz as f64 / (k * n) as f64 };
+        if density < SPARSE_DENSITY_MAX && k * n >= SPARSE_MIN_ELEMS {
+            PackedGemm::pack_sparse(b, k, n)
+        } else {
+            PackedGemm::pack_dense(b, k, n)
+        }
+    }
+
+    /// Force the dense panel layout (tests/benches).
+    pub(crate) fn pack_dense(b: &[f32], k: usize, n: usize) -> PackedGemm {
+        let nnz = b[..k * n].iter().filter(|&&v| v != 0.0).count();
+        let np = n.div_ceil(NR);
+        let mut panels = vec![0f32; np * k * NR];
+        for p in 0..np {
+            for kk in 0..k {
+                for l in 0..NR {
+                    let col = p * NR + l;
+                    if col < n {
+                        panels[(p * k + kk) * NR + l] = b[kk * n + col];
+                    }
+                }
+            }
+        }
+        PackedGemm {
+            k,
+            n,
+            density: if k * n == 0 { 1.0 } else { nnz as f64 / (k * n) as f64 },
+            kind: GemmKind::Dense { panels },
+        }
+    }
+
+    /// Force the CSR layout (tests/benches).
+    pub(crate) fn pack_sparse(b: &[f32], k: usize, n: usize) -> PackedGemm {
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        let mut nnz = 0usize;
+        for kk in 0..k {
+            for j in 0..n {
+                let v = b[kk * n + j];
+                if v != 0.0 {
+                    cols.push(j as u32);
+                    vals.push(v);
+                    nnz += 1;
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        PackedGemm {
+            k,
+            n,
+            density: if k * n == 0 { 1.0 } else { nnz as f64 / (k * n) as f64 },
+            kind: GemmKind::Sparse { row_ptr, cols, vals },
+        }
+    }
+
+    pub(crate) fn is_sparse(&self) -> bool {
+        matches!(self.kind, GemmKind::Sparse { .. })
+    }
+
+    /// `out[m, n] ⟵ epilogue(a[m, k] @ B)` — register-tiled (4×8),
+    /// 8-wide-unrolled, branch-free inner loop. Each output element's
+    /// contraction runs in ascending k order from 0.0, identical to the
+    /// naive kernel (the parity invariant).
+    ///
+    /// `tmp` is the sparse kernel's per-row accumulation buffer (a
+    /// scratch-arena slot); the dense kernel ignores it.
+    pub(crate) fn gemm(
+        &self,
+        a: &[f32],
+        m: usize,
+        out: &mut [f32],
+        ep: Epilogue<'_>,
+        tmp: &mut Vec<f32>,
+    ) {
+        let (k, n) = (self.k, self.n);
+        debug_assert!(a.len() >= m * k && out.len() >= m * n);
+        match &self.kind {
+            GemmKind::Dense { panels } => {
+                let np = n.div_ceil(NR);
+                let mut i = 0usize;
+                while i + MR <= m {
+                    for p in 0..np {
+                        let panel = &panels[p * k * NR..(p + 1) * k * NR];
+                        let mut acc = [[0f32; NR]; MR];
+                        for kk in 0..k {
+                            let b8 = &panel[kk * NR..kk * NR + NR];
+                            for r in 0..MR {
+                                let av = a[(i + r) * k + kk];
+                                let c = &mut acc[r];
+                                for l in 0..NR {
+                                    c[l] += av * b8[l];
+                                }
+                            }
+                        }
+                        let j0 = p * NR;
+                        let w = (n - j0).min(NR);
+                        for r in 0..MR {
+                            let orow = &mut out[(i + r) * n..(i + r + 1) * n];
+                            ep.apply(i + r, n, orow, j0, w, &acc[r]);
+                        }
+                    }
+                    i += MR;
+                }
+                while i < m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    for p in 0..np {
+                        let panel = &panels[p * k * NR..(p + 1) * k * NR];
+                        let mut acc = [0f32; NR];
+                        for (kk, &av) in arow.iter().enumerate() {
+                            let b8 = &panel[kk * NR..kk * NR + NR];
+                            for l in 0..NR {
+                                acc[l] += av * b8[l];
+                            }
+                        }
+                        let j0 = p * NR;
+                        let w = (n - j0).min(NR);
+                        let orow = &mut out[i * n..(i + 1) * n];
+                        ep.apply(i, n, orow, j0, w, &acc);
+                    }
+                    i += 1;
+                }
+            }
+            GemmKind::Sparse { row_ptr, cols, vals } => {
+                let t = slot(tmp, n);
+                for i in 0..m {
+                    t.fill(0.0);
+                    let arow = &a[i * k..(i + 1) * k];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue; // once per k row, amortized over its nnz
+                        }
+                        let s = row_ptr[kk] as usize;
+                        let e = row_ptr[kk + 1] as usize;
+                        for idx in s..e {
+                            t[cols[idx] as usize] += av * vals[idx];
+                        }
+                    }
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    let mut j0 = 0usize;
+                    let mut acc = [0f32; NR];
+                    while j0 < n {
+                        let w = (n - j0).min(NR);
+                        acc[..w].copy_from_slice(&t[j0..j0 + w]);
+                        ep.apply(i, n, orow, j0, w, &acc);
+                        j0 += NR;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution plan: all weights resolved + packed at load time
+// ---------------------------------------------------------------------------
+
+/// One encoder layer, fully prebound: LN params by value, projection
+/// weights packed for the tiled kernel. Built once at load — the forward
+/// never touches a map or formats a key.
+struct LayerPlan {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    /// `[d, 3d]` QKV projection (Store epilogue).
+    wqkv: PackedGemm,
+    /// `[d, d]` attention output projection (AddTo epilogue onto x).
+    wo: PackedGemm,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    /// `[d, f]` FFN up (BiasGelu epilogue).
+    w1: PackedGemm,
+    b1: Vec<f32>,
+    /// `[f, d]` FFN down (AddBiasTo epilogue onto x).
+    w2: PackedGemm,
+    b2: Vec<f32>,
+    /// FFN hidden width.
+    f: usize,
+}
+
+/// The fused QP heads, prebound: per-candidate packed `W1p`, and the
+/// prompt-independent identity-embedding term `he[c] = e_c · W1e[c]`
+/// precomputed at load (it used to be recomputed every batch).
+struct HeadPlan {
+    c: usize,
+    hh: usize,
+    w1p: Vec<PackedGemm>,
+    he: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+/// §D adapter: residual PE adapter MLP + the appended new-candidate head
+/// (its identity embedding `e_new = ada_lie_emb · ada_lie_w` is folded
+/// into `heads_new.he` at load).
+struct AdapterPlan {
+    pe_w1: PackedGemm,
+    pe_b1: Vec<f32>,
+    pe_w2: PackedGemm,
+    pe_b2: Vec<f32>,
+    heads_new: HeadPlan,
+}
+
+/// Everything the forward needs, typed and resolved.
+struct ExecutionPlan {
+    tok_emb: Tensor,
+    pos_emb: Tensor,
+    layers: Vec<LayerPlan>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    heads: HeadPlan,
+    adapter: Option<AdapterPlan>,
+}
+
+/// A loaded QE with its load-time execution plan resident.
 pub struct ReferenceModel {
     entry: ModelEntry,
-    params: BTreeMap<String, Tensor>,
+    plan: ExecutionPlan,
     buckets: Vec<(usize, usize, String)>,
     /// Encoder hyper-parameters, derived from entry + tensor shapes.
     d: usize,
-    layers: usize,
     heads: usize,
-    d_id: usize,
-    qp_hidden: usize,
     max_pos: usize,
     load_ms: f64,
     calls: AtomicU64,
 }
 
+fn take(params: &mut BTreeMap<String, Tensor>, model_id: &str, k: &str) -> Result<Tensor> {
+    params
+        .remove(k)
+        .ok_or_else(|| anyhow!("model {model_id}: missing tensor '{k}'"))
+}
+
 impl ReferenceModel {
     /// Build a model directly from named tensors (used by the engine's
-    /// npz path and by the cross-language parity tests).
+    /// npz path and by the cross-language parity tests). Consumes the
+    /// tensors into the execution plan — weights are validated, packed
+    /// and prebound here, once.
     pub fn from_tensors(
         entry: ModelEntry,
         tensors: Vec<(String, Tensor)>,
         buckets: Vec<(usize, usize, String)>,
     ) -> Result<ReferenceModel> {
-        let params: BTreeMap<String, Tensor> = tensors.into_iter().collect();
+        let mut params: BTreeMap<String, Tensor> = tensors.into_iter().collect();
         let d = entry.d;
         let layers = entry.layers;
         let heads = entry.heads;
+        let id = entry.id.clone();
         if heads == 0 || d % heads != 0 {
             bail!("model {}: d={d} not divisible by heads={heads}", entry.id);
         }
-        let get = |k: &str| -> Result<&Tensor> {
-            params.get(k).ok_or_else(|| anyhow!("model {}: missing tensor '{k}'", entry.id))
-        };
-        let tok = get("tok_emb")?;
-        if tok.shape.len() != 2 || tok.shape[1] != d {
-            bail!("model {}: tok_emb shape {:?} vs d={d}", entry.id, tok.shape);
+
+        // --- encoder ---
+        let tok_emb = take(&mut params, &id, "tok_emb")?;
+        if tok_emb.shape.len() != 2 || tok_emb.shape[1] != d {
+            bail!("model {id}: tok_emb shape {:?} vs d={d}", tok_emb.shape);
         }
-        let pos = get("pos_emb")?;
-        let max_pos = pos.shape.first().copied().unwrap_or(0);
+        let pos_emb = take(&mut params, &id, "pos_emb")?;
+        let max_pos = pos_emb.shape.first().copied().unwrap_or(0);
+        let mut layer_plans = Vec::with_capacity(layers);
         for i in 0..layers {
-            let w = get(&format!("l{i:02}_wqkv"))?;
-            if w.shape != vec![d, 3 * d] {
-                bail!("model {}: l{i:02}_wqkv shape {:?}", entry.id, w.shape);
+            let pre = format!("l{i:02}_");
+            let wqkv = take(&mut params, &id, &format!("{pre}wqkv"))?;
+            if wqkv.shape != vec![d, 3 * d] {
+                bail!("model {id}: l{i:02}_wqkv shape {:?}", wqkv.shape);
             }
+            let wo = take(&mut params, &id, &format!("{pre}wo"))?;
+            let w1 = take(&mut params, &id, &format!("{pre}w1"))?;
+            let f = w1.shape.get(1).copied().unwrap_or(0);
+            if f == 0 {
+                bail!("model {id}: l{i:02}_w1 shape {:?}", w1.shape);
+            }
+            let w2 = take(&mut params, &id, &format!("{pre}w2"))?;
+            layer_plans.push(LayerPlan {
+                ln1_g: take(&mut params, &id, &format!("{pre}ln1_g"))?.data,
+                ln1_b: take(&mut params, &id, &format!("{pre}ln1_b"))?.data,
+                wqkv: PackedGemm::pack(&wqkv.data, d, 3 * d),
+                wo: PackedGemm::pack(&wo.data, d, d),
+                ln2_g: take(&mut params, &id, &format!("{pre}ln2_g"))?.data,
+                ln2_b: take(&mut params, &id, &format!("{pre}ln2_b"))?.data,
+                w1: PackedGemm::pack(&w1.data, d, f),
+                b1: take(&mut params, &id, &format!("{pre}b1"))?.data,
+                w2: PackedGemm::pack(&w2.data, f, d),
+                b2: take(&mut params, &id, &format!("{pre}b2"))?.data,
+                f,
+            });
         }
-        let lie = get("lie_emb")?;
+        let lnf_g = take(&mut params, &id, "lnf_g")?.data;
+        let lnf_b = take(&mut params, &id, "lnf_b")?.data;
+
+        // --- QP heads ---
+        let lie = take(&mut params, &id, "lie_emb")?;
         let d_id = lie.shape.get(1).copied().unwrap_or(0);
-        let w1e = get("qp_w1e")?;
+        let w1e = take(&mut params, &id, "qp_w1e")?;
         let qp_hidden = w1e.shape.last().copied().unwrap_or(0);
         if qp_hidden == 0 {
-            bail!("model {}: empty QP hidden dimension", entry.id);
+            bail!("model {id}: empty QP hidden dimension");
         }
-        if entry.adapter {
-            for k in [
-                "ada_pe_w1",
-                "ada_pe_b1",
-                "ada_pe_w2",
-                "ada_pe_b2",
-                "ada_lie_emb",
-                "ada_lie_w",
-                "ada_qp_w1p",
-                "ada_qp_w1e",
-                "ada_qp_b1",
-                "ada_qp_w2",
-                "ada_qp_b2",
-            ] {
-                get(k)?;
-            }
-            // The §D adapter path (model.py qe_apply_with_adapter) extends
-            // a frozen base by exactly ONE candidate; the forward below
-            // relies on that (`new` is [n, 1]).
-            let c_new = get("ada_qp_w1p")?.shape.first().copied().unwrap_or(0);
-            if c_new != 1 {
-                bail!(
-                    "model {}: adapter must add exactly one candidate, got {c_new}",
-                    entry.id
-                );
-            }
-        }
-        Ok(ReferenceModel {
-            entry,
-            params,
-            buckets,
+        let w1p = take(&mut params, &id, "qp_w1p")?;
+        let heads_plan = build_head_plan(
+            &lie.data,
+            &w1e.data,
+            &w1p,
+            take(&mut params, &id, "qp_b1")?.data,
+            take(&mut params, &id, "qp_w2")?.data,
+            take(&mut params, &id, "qp_b2")?.data,
             d,
-            layers,
-            heads,
             d_id,
             qp_hidden,
+        );
+
+        // --- §D adapter ---
+        let adapter = if entry.adapter {
+            let pe_w1 = take(&mut params, &id, "ada_pe_w1")?;
+            let pe_b1 = take(&mut params, &id, "ada_pe_b1")?.data;
+            let pe_w2 = take(&mut params, &id, "ada_pe_w2")?;
+            let pe_b2 = take(&mut params, &id, "ada_pe_b2")?.data;
+            let ada_lie = take(&mut params, &id, "ada_lie_emb")?;
+            let ada_lie_w = take(&mut params, &id, "ada_lie_w")?;
+            let ada_w1p = take(&mut params, &id, "ada_qp_w1p")?;
+            let ada_w1e = take(&mut params, &id, "ada_qp_w1e")?;
+            let ada_b1 = take(&mut params, &id, "ada_qp_b1")?.data;
+            let ada_w2 = take(&mut params, &id, "ada_qp_w2")?.data;
+            let ada_b2 = take(&mut params, &id, "ada_qp_b2")?.data;
+            // The §D adapter path (model.py qe_apply_with_adapter) extends
+            // a frozen base by exactly ONE candidate; the forward below
+            // relies on that (`heads_new` is a single head).
+            let c_new = ada_w1p.shape.first().copied().unwrap_or(0);
+            if c_new != 1 {
+                bail!("model {id}: adapter must add exactly one candidate, got {c_new}");
+            }
+            // e_new = ada_lie_emb @ ada_lie_w  [1, d_id] — prompt
+            // independent, folded into the new head's `he` at load.
+            let e_new = matmul(&ada_lie.data, &ada_lie_w.data, 1, d_id, d_id);
+            let heads_new = build_head_plan(
+                &e_new, &ada_w1e.data, &ada_w1p, ada_b1, ada_w2, ada_b2, d, d_id, qp_hidden,
+            );
+            Some(AdapterPlan {
+                pe_w1: PackedGemm::pack(&pe_w1.data, d, d),
+                pe_b1,
+                pe_w2: PackedGemm::pack(&pe_w2.data, d, d),
+                pe_b2,
+                heads_new,
+            })
+        } else {
+            None
+        };
+
+        Ok(ReferenceModel {
+            entry,
+            plan: ExecutionPlan {
+                tok_emb,
+                pos_emb,
+                layers: layer_plans,
+                lnf_g,
+                lnf_b,
+                heads: heads_plan,
+                adapter,
+            },
+            buckets,
+            d,
+            heads,
             max_pos,
             load_ms: 0.0,
             calls: AtomicU64::new(0),
         })
-    }
-
-    fn p(&self, k: &str) -> &Tensor {
-        // Presence is validated at load; absence here is a programmer error.
-        &self.params[k]
     }
 
     /// Encoder-only forward for one prompt: pooled features `[d]`.
@@ -208,29 +597,47 @@ impl ReferenceModel {
             ids[j] = t as i32;
             mask[j] = 1.0;
         }
-        self.encode(&ids, &mask, 1, s)
+        ScratchArena::with(|ar| -> Result<Vec<f32>> {
+            let nd = self.d;
+            slot(&mut ar.pooled, nd); // encode_into zero-fills it
+
+            self.encode_into(&ids, &mask, 1, s, &mut ar.enc, &mut ar.attn, &mut ar.pooled[..nd])?;
+            Ok(ar.pooled[..nd].to_vec())
+        })
     }
 
-    /// Encoder: token ids [n, s] (+mask) → pooled [n, d].
-    fn encode(&self, ids: &[i32], mask: &[f32], n: usize, s: usize) -> Result<Vec<f32>> {
+    /// Encoder (padded path): token ids `[n, s]` (+mask) → pooled written
+    /// to `out_pooled` (`[n, d]`, caller-zeroed slot).
+    fn encode_into(
+        &self,
+        ids: &[i32],
+        mask: &[f32],
+        n: usize,
+        s: usize,
+        enc: &mut EncScratch,
+        attn: &mut AttnScratch,
+        out_pooled: &mut [f32],
+    ) -> Result<()> {
         let d = self.d;
         if s > self.max_pos {
             bail!("sequence {s} exceeds max_pos {}", self.max_pos);
         }
-        let tok = &self.p("tok_emb").data;
-        let pos = &self.p("pos_emb").data;
-        let vocab = self.p("tok_emb").shape[0];
+        let plan = &self.plan;
+        let tok = &plan.tok_emb.data;
+        let pos = &plan.pos_emb.data;
+        let vocab = plan.tok_emb.shape[0];
+        let rows = n * s;
 
         // x = tok_emb[ids] + pos_emb[:s]
-        let mut x = vec![0f32; n * s * d];
+        let x = slot(&mut enc.x, rows * d);
         for i in 0..n {
             for t in 0..s {
-                let id = ids[i * s + t] as usize;
-                if id >= vocab {
-                    bail!("token id {id} out of vocab {vocab}");
+                let idx = ids[i * s + t] as usize;
+                if idx >= vocab {
+                    bail!("token id {idx} out of vocab {vocab}");
                 }
                 let dst = &mut x[(i * s + t) * d..(i * s + t + 1) * d];
-                let src = &tok[id * d..(id + 1) * d];
+                let src = &tok[idx * d..(idx + 1) * d];
                 let psrc = &pos[t * d..(t + 1) * d];
                 for j in 0..d {
                     dst[j] = src[j] + psrc[j];
@@ -238,86 +645,63 @@ impl ReferenceModel {
             }
         }
         // additive key bias per (row, position)
-        let bias: Vec<f32> =
-            mask.iter().map(|&m| if m > 0.5 { 0.0 } else { MASK_NEG }).collect();
+        let bias = slot(&mut enc.bias, rows);
+        for (b, &m) in bias.iter_mut().zip(mask.iter()) {
+            *b = if m > 0.5 { 0.0 } else { MASK_NEG };
+        }
 
-        for l in 0..self.layers {
-            let pre = format!("l{l:02}_");
-            // h = LN1(x)
-            let mut h = x.clone();
-            layer_norm(
-                &mut h,
-                &self.p(&format!("{pre}ln1_g")).data,
-                &self.p(&format!("{pre}ln1_b")).data,
-                d,
-            );
-            // qkv = h @ wqkv  [n*s, 3d] — one GEMM over the whole batch
-            let qkv = matmul(&h, &self.p(&format!("{pre}wqkv")).data, n * s, d, 3 * d);
+        for layer in &plan.layers {
+            // h = LN1(x); qkv = h @ Wqkv
+            let h = slot(&mut enc.h, rows * d);
+            h.copy_from_slice(x);
+            layer_norm(h, &layer.ln1_g, &layer.ln1_b, d);
+            let qkv = slot(&mut enc.qkv, rows * 3 * d);
+            layer.wqkv.gemm(h, rows, qkv, Epilogue::Store, &mut enc.gemm_tmp);
 
             // attention per row (batched GEMM form inside attend_row)
-            let mut o = vec![0f32; n * s * d];
+            let o = slot(&mut enc.o, rows * d);
             for i in 0..n {
                 self.attend_row(
                     &qkv[i * s * 3 * d..(i + 1) * s * 3 * d],
                     &bias[i * s..(i + 1) * s],
                     s,
                     &mut o[i * s * d..(i + 1) * s * d],
+                    attn,
                 );
             }
-            // x += o @ wo
-            let proj = matmul(&o, &self.p(&format!("{pre}wo")).data, n * s, d, d);
-            for (xi, pi) in x.iter_mut().zip(&proj) {
-                *xi += pi;
-            }
-            // x += FFN(LN2(x))
-            let mut xn = x.clone();
-            layer_norm(
-                &mut xn,
-                &self.p(&format!("{pre}ln2_g")).data,
-                &self.p(&format!("{pre}ln2_b")).data,
-                d,
-            );
-            let w1 = self.p(&format!("{pre}w1"));
-            let f = w1.shape[1];
-            let mut hmid = matmul(&xn, &w1.data, n * s, d, f);
-            let b1 = &self.p(&format!("{pre}b1")).data;
-            for r in 0..n * s {
-                for j in 0..f {
-                    hmid[r * f + j] = gelu(hmid[r * f + j] + b1[j]);
-                }
-            }
-            let mut y = matmul(&hmid, &self.p(&format!("{pre}w2")).data, n * s, f, d);
-            let b2 = &self.p(&format!("{pre}b2")).data;
-            for r in 0..n * s {
-                for j in 0..d {
-                    y[r * d + j] += b2[j];
-                }
-            }
-            for (xi, yi) in x.iter_mut().zip(&y) {
-                *xi += yi;
-            }
+            // x += o @ Wo (fused residual epilogue)
+            layer.wo.gemm(o, rows, x, Epilogue::AddTo, &mut enc.gemm_tmp);
+
+            // x += FFN(LN2(x)), bias+GELU and bias+residual fused
+            h.copy_from_slice(x);
+            layer_norm(h, &layer.ln2_g, &layer.ln2_b, d);
+            let hm = slot(&mut enc.hmid, rows * layer.f);
+            layer.w1.gemm(h, rows, hm, Epilogue::BiasGelu(&layer.b1), &mut enc.gemm_tmp);
+            layer.w2.gemm(hm, rows, x, Epilogue::AddBiasTo(&layer.b2), &mut enc.gemm_tmp);
         }
 
         // final LN + masked mean pool
-        layer_norm(&mut x, &self.p("lnf_g").data, &self.p("lnf_b").data, d);
-        let mut pooled = vec![0f32; n * d];
+        layer_norm(x, &plan.lnf_g, &plan.lnf_b, d);
+        out_pooled.fill(0.0);
         for i in 0..n {
             let mut cnt = 0f32;
             for t in 0..s {
                 let m = mask[i * s + t];
                 if m > 0.0 {
                     cnt += m;
+                    let src = &x[(i * s + t) * d..(i * s + t + 1) * d];
+                    let acc = &mut out_pooled[i * d..(i + 1) * d];
                     for j in 0..d {
-                        pooled[i * d + j] += x[(i * s + t) * d + j] * m;
+                        acc[j] += src[j] * m;
                     }
                 }
             }
             let denom = cnt.max(1.0);
-            for j in 0..d {
-                pooled[i * d + j] /= denom;
+            for v in out_pooled[i * d..(i + 1) * d].iter_mut() {
+                *v /= denom;
             }
         }
-        Ok(pooled)
+        Ok(())
     }
 
     /// Multi-head self-attention for ONE row: `qkv_row` is that row's
@@ -325,17 +709,26 @@ impl ReferenceModel {
     /// key bias (0 real / MASK_NEG padded), `o_row` the `[s, d]` output.
     ///
     /// GEMM form: per head, gather Q `[s, dh]`, Kᵀ `[dh, s]`, V `[s, dh]`
-    /// and compute `softmax(Q·Kᵀ·scale + bias)·V` as two matmuls. The
-    /// accumulation order (dh for scores, key order for the value mix) is
-    /// identical to the scalar loops this replaced, so the ≤1e-4 JAX
-    /// parity fixture is unaffected.
-    fn attend_row(&self, qkv_row: &[f32], bias: &[f32], s: usize, o_row: &mut [f32]) {
+    /// and compute `softmax(Q·Kᵀ·scale + bias)·V` as two matmuls over
+    /// arena scratch. The accumulation order (dh for scores, key order
+    /// for the value mix) is identical to the scalar loops this replaced,
+    /// so the ≤1e-4 JAX parity fixture is unaffected.
+    fn attend_row(
+        &self,
+        qkv_row: &[f32],
+        bias: &[f32],
+        s: usize,
+        o_row: &mut [f32],
+        at: &mut AttnScratch,
+    ) {
         let d = self.d;
         let dh = d / self.heads;
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut q = vec![0f32; s * dh];
-        let mut kt = vec![0f32; dh * s];
-        let mut v = vec![0f32; s * dh];
+        let q = slot(&mut at.q, s * dh);
+        let kt = slot(&mut at.kt, dh * s);
+        let v = slot(&mut at.v, s * dh);
+        let sc = slot(&mut at.sc, s * s);
+        let oh = slot(&mut at.oh, s * dh);
         for hd in 0..self.heads {
             let qo = hd * dh;
             let ko = d + hd * dh;
@@ -348,7 +741,7 @@ impl ReferenceModel {
                     v[t * dh + j] = qkv_row[base + vo + j];
                 }
             }
-            let mut sc = matmul(&q, &kt, s, dh, s);
+            matmul_into(q, kt, sc, s, dh, s);
             for tq in 0..s {
                 let row = &mut sc[tq * s..(tq + 1) * s];
                 for (tk, x) in row.iter_mut().enumerate() {
@@ -356,7 +749,7 @@ impl ReferenceModel {
                 }
                 softmax_in_place(row);
             }
-            let oh = matmul(&sc, &v, s, s, dh);
+            matmul_into(sc, v, oh, s, s, dh);
             for t in 0..s {
                 let dst = t * d + hd * dh;
                 o_row[dst..dst + dh].copy_from_slice(&oh[t * dh..(t + 1) * dh]);
@@ -364,179 +757,118 @@ impl ReferenceModel {
         }
     }
 
-    /// Fused QP heads over pooled embeddings: returns [n, C].
-    fn qp_heads(
+    /// QP-head stage shared by the padded (`predict`) and packed ragged
+    /// (`score_batch`) paths: pooled `[n, d]` → per-candidate scores,
+    /// including the §D adapter composition. All weights come prebound
+    /// from the plan; the only allocations are the returned score vectors.
+    fn heads_from_pooled_ar(
         &self,
         pooled: &[f32],
         n: usize,
-        lie: &Tensor,
-        w1p: &Tensor,
-        w1e: &Tensor,
-        b1: &Tensor,
-        w2: &Tensor,
-        b2: &Tensor,
-    ) -> Vec<f32> {
+        hs: &mut HeadScratch,
+    ) -> Vec<QualityVector> {
+        let plan = &self.plan;
         let d = self.d;
-        let hh = self.qp_hidden;
-        let c = w1p.shape[0];
-        let d_id = self.d_id;
-        let mut out = vec![0f32; n * c];
-        // he[c, j] = e_c · w1e[c, :, j]  (prompt-independent: computed
-        // once per batch, amortized over every row)
-        let mut he = vec![0f32; c * hh];
-        for ci in 0..c {
-            for j in 0..hh {
-                let mut acc = 0f32;
-                for e in 0..d_id {
-                    acc += lie.data[ci * d_id + e] * w1e.data[(ci * d_id + e) * hh + j];
-                }
-                he[ci * hh + j] = acc;
-            }
-        }
-        // per candidate: ONE GEMM over the whole batch, then the fused
-        // ReLU·w2 readout per row
-        for ci in 0..c {
-            let w1p_c = &w1p.data[ci * d * hh..(ci + 1) * d * hh];
-            let pre = matmul(pooled, w1p_c, n, d, hh);
-            let hb = &he[ci * hh..(ci + 1) * hh];
-            let b1c = &b1.data[ci * hh..(ci + 1) * hh];
-            let w2c = &w2.data[ci * hh..(ci + 1) * hh];
-            for i in 0..n {
-                let prow = &pre[i * hh..(i + 1) * hh];
-                let mut logit = b2.data[ci];
-                for j in 0..hh {
-                    let a = prow[j] + hb[j] + b1c[j];
-                    if a > 0.0 {
-                        logit += a * w2c[j];
-                    }
-                }
-                out[i * c + ci] = sigmoid(logit);
-            }
-        }
-        out
+        let (flat, c) = if let Some(ap) = &plan.adapter {
+            // §D adapter path: residual PE adapter, then base heads + new
+            // head from the adapted representation (new candidate LAST).
+            let c_old = plan.heads.c;
+            let c = c_old + 1;
+            let nd = n * d;
+            let hmid = slot(&mut hs.hmid, nd);
+            ap.pe_w1.gemm(pooled, n, hmid, Epilogue::BiasRelu(&ap.pe_b1), &mut hs.gemm_tmp);
+            let pooled_new = slot(&mut hs.pooled_new, nd);
+            ap.pe_w2.gemm(
+                hmid,
+                n,
+                pooled_new,
+                Epilogue::StoreAddRowBias { other: pooled, bias: &ap.pe_b2 },
+                &mut hs.gemm_tmp,
+            );
+            let mut flat = vec![0f32; n * c];
+            run_heads(&plan.heads, pooled_new, n, &mut hs.pre, &mut hs.gemm_tmp, &mut flat, c, 0);
+            run_heads(
+                &ap.heads_new,
+                pooled_new,
+                n,
+                &mut hs.pre,
+                &mut hs.gemm_tmp,
+                &mut flat,
+                c,
+                c_old,
+            );
+            (flat, c)
+        } else {
+            let c = plan.heads.c;
+            let mut flat = vec![0f32; n * c];
+            run_heads(&plan.heads, pooled, n, &mut hs.pre, &mut hs.gemm_tmp, &mut flat, c, 0);
+            (flat, c)
+        };
+        (0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect()
     }
 
     /// Full forward for `n` already-packed rows; returns [n, heads].
     fn forward(&self, ids: &[i32], mask: &[f32], n: usize, s: usize) -> Result<Vec<QualityVector>> {
-        let pooled = self.encode(ids, mask, n, s)?;
-        Ok(self.heads_from_pooled(&pooled, n))
-    }
+        ScratchArena::with(|ar| -> Result<Vec<QualityVector>> {
+            let nd = n * self.d;
+            slot(&mut ar.pooled, nd); // encode_into zero-fills it
 
-    /// QP-head stage shared by the padded (`predict`) and packed ragged
-    /// (`score_batch`) paths: pooled `[n, d]` → per-candidate scores
-    /// `[n, C]`, including the §D adapter composition.
-    fn heads_from_pooled(&self, pooled: &[f32], n: usize) -> Vec<QualityVector> {
-        let d = self.d;
-        let flat = if self.entry.adapter {
-            // §D adapter path: residual PE adapter, then base heads + new
-            // head from the adapted representation (new candidate LAST).
-            let w1 = self.p("ada_pe_w1");
-            let b1 = &self.p("ada_pe_b1").data;
-            let w2 = self.p("ada_pe_w2");
-            let b2 = &self.p("ada_pe_b2").data;
-            let mut hmid = matmul(pooled, &w1.data, n, d, d);
-            for r in 0..n {
-                for j in 0..d {
-                    hmid[r * d + j] = (hmid[r * d + j] + b1[j]).max(0.0);
-                }
-            }
-            let mut pooled_new = matmul(&hmid, &w2.data, n, d, d);
-            for r in 0..n {
-                for j in 0..d {
-                    pooled_new[r * d + j] += pooled[r * d + j] + b2[j];
-                }
-            }
-            let old = self.qp_heads(
-                &pooled_new,
-                n,
-                self.p("lie_emb"),
-                self.p("qp_w1p"),
-                self.p("qp_w1e"),
-                self.p("qp_b1"),
-                self.p("qp_w2"),
-                self.p("qp_b2"),
-            );
-            // e_new = ada_lie_emb @ ada_lie_w  [1, d_id]
-            let lie_raw = self.p("ada_lie_emb");
-            let lie_w = self.p("ada_lie_w");
-            let e_new = Tensor::new(
-                vec![1, self.d_id],
-                matmul(&lie_raw.data, &lie_w.data, 1, self.d_id, self.d_id),
-            );
-            let new = self.qp_heads(
-                &pooled_new,
-                n,
-                &e_new,
-                self.p("ada_qp_w1p"),
-                self.p("ada_qp_w1e"),
-                self.p("ada_qp_b1"),
-                self.p("ada_qp_w2"),
-                self.p("ada_qp_b2"),
-            );
-            let c_old = self.p("qp_w1p").shape[0];
-            let mut flat = Vec::with_capacity(n * (c_old + 1));
-            for i in 0..n {
-                flat.extend_from_slice(&old[i * c_old..(i + 1) * c_old]);
-                flat.push(new[i]);
-            }
-            flat
-        } else {
-            self.qp_heads(
-                pooled,
-                n,
-                self.p("lie_emb"),
-                self.p("qp_w1p"),
-                self.p("qp_w1e"),
-                self.p("qp_b1"),
-                self.p("qp_w2"),
-                self.p("qp_b2"),
-            )
-        };
-        let c = flat.len() / n.max(1);
-        (0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect()
+            self.encode_into(ids, mask, n, s, &mut ar.enc, &mut ar.attn, &mut ar.pooled[..nd])?;
+            Ok(self.heads_from_pooled_ar(&ar.pooled[..nd], n, &mut ar.heads))
+        })
     }
 
     /// Packed ragged encoder — the batched hot path. Rows are
-    /// concatenated back to back (`offs` = cumulative token offsets), so
-    /// every GEMM runs over a dense `[total_tokens, d]` activation buffer
-    /// with NO padded positions at all; attention runs per row over that
-    /// row's real keys only. Numerically this is exactly the padded
-    /// forward restricted to real positions: padded keys carry an
-    /// additive −1e30 bias whose softmax weight underflows to 0.0 exactly,
-    /// and pooling is masked, so padding can never influence a real row
-    /// (the `score_batch == predict` property test pins this).
+    /// concatenated back to back, so every GEMM runs over a dense
+    /// `[total_tokens, d]` activation buffer with NO padded positions at
+    /// all; attention runs per row over that row's real keys only.
+    /// Numerically this is exactly the padded forward restricted to real
+    /// positions: padded keys carry an additive −1e30 bias whose softmax
+    /// weight underflows to 0.0 exactly, and pooling is masked, so
+    /// padding can never influence a real row (the `score_batch ==
+    /// predict` property test pins this).
     ///
-    /// Returns pooled `[n, d]`; zero-length rows pool to the zero vector,
-    /// matching the padded path's `max(cnt, 1)` denominator.
-    fn encode_rows(&self, rows: &[&[u32]]) -> Result<Vec<f32>> {
+    /// Writes pooled `[n, d]` into `out_pooled`; zero-length rows pool to
+    /// the zero vector, matching the padded path's `max(cnt, 1)`
+    /// denominator. Steady-state zero-alloc: every intermediate is an
+    /// arena slot.
+    fn encode_rows_into(
+        &self,
+        rows: &[&[u32]],
+        enc: &mut EncScratch,
+        attn: &mut AttnScratch,
+        out_pooled: &mut [f32],
+    ) -> Result<()> {
         let d = self.d;
         let n = rows.len();
-        let mut offs = Vec::with_capacity(n + 1);
-        offs.push(0usize);
+        debug_assert!(out_pooled.len() >= n * d);
+        enc.offs.clear();
+        enc.offs.push(0usize);
         for r in rows {
             if r.len() > self.max_pos {
                 bail!("sequence {} exceeds max_pos {}", r.len(), self.max_pos);
             }
-            offs.push(offs.last().unwrap() + r.len());
+            enc.offs.push(enc.offs.last().unwrap() + r.len());
         }
-        let total = *offs.last().unwrap();
-        let mut pooled = vec![0f32; n * d];
+        let total = *enc.offs.last().unwrap();
+        out_pooled[..n * d].fill(0.0);
         if total == 0 {
-            return Ok(pooled);
+            return Ok(());
         }
-        let tok = &self.p("tok_emb").data;
-        let pos = &self.p("pos_emb").data;
-        let vocab = self.p("tok_emb").shape[0];
+        let plan = &self.plan;
+        let tok = &plan.tok_emb.data;
+        let pos = &plan.pos_emb.data;
+        let vocab = plan.tok_emb.shape[0];
 
         // x = tok_emb[ids] + pos_emb[:len] per row, packed
-        let mut x = vec![0f32; total * d];
+        let x = slot(&mut enc.x, total * d);
         for (i, r) in rows.iter().enumerate() {
             for (t, &tk) in r.iter().enumerate() {
                 let id = tk as usize;
                 if id >= vocab {
                     bail!("token id {id} out of vocab {vocab}");
                 }
-                let row = offs[i] + t;
+                let row = enc.offs[i] + t;
                 let dst = &mut x[row * d..(row + 1) * d];
                 let src = &tok[id * d..(id + 1) * d];
                 let psrc = &pos[t * d..(t + 1) * d];
@@ -548,74 +880,47 @@ impl ReferenceModel {
 
         // all packed positions are real tokens: additive key bias ≡ 0
         let max_l = rows.iter().map(|r| r.len()).max().unwrap_or(0);
-        let zero_bias = vec![0f32; max_l];
-        for l in 0..self.layers {
-            let pre = format!("l{l:02}_");
-            let mut h = x.clone();
-            layer_norm(
-                &mut h,
-                &self.p(&format!("{pre}ln1_g")).data,
-                &self.p(&format!("{pre}ln1_b")).data,
-                d,
-            );
-            let qkv = matmul(&h, &self.p(&format!("{pre}wqkv")).data, total, d, 3 * d);
-            let mut o = vec![0f32; total * d];
+        let zero_bias = zslot(&mut enc.bias, max_l);
+        for layer in &plan.layers {
+            let h = slot(&mut enc.h, total * d);
+            h.copy_from_slice(x);
+            layer_norm(h, &layer.ln1_g, &layer.ln1_b, d);
+            let qkv = slot(&mut enc.qkv, total * 3 * d);
+            layer.wqkv.gemm(h, total, qkv, Epilogue::Store, &mut enc.gemm_tmp);
+            let o = slot(&mut enc.o, total * d);
             for (i, r) in rows.iter().enumerate() {
                 let li = r.len();
                 if li == 0 {
                     continue;
                 }
-                let qb = offs[i] * 3 * d;
-                let ob = offs[i] * d;
+                let qb = enc.offs[i] * 3 * d;
+                let ob = enc.offs[i] * d;
                 self.attend_row(
                     &qkv[qb..qb + li * 3 * d],
                     &zero_bias[..li],
                     li,
                     &mut o[ob..ob + li * d],
+                    attn,
                 );
             }
-            let proj = matmul(&o, &self.p(&format!("{pre}wo")).data, total, d, d);
-            for (xi, pi) in x.iter_mut().zip(&proj) {
-                *xi += pi;
-            }
-            let mut xn = x.clone();
-            layer_norm(
-                &mut xn,
-                &self.p(&format!("{pre}ln2_g")).data,
-                &self.p(&format!("{pre}ln2_b")).data,
-                d,
-            );
-            let w1 = self.p(&format!("{pre}w1"));
-            let f = w1.shape[1];
-            let mut hmid = matmul(&xn, &w1.data, total, d, f);
-            let b1 = &self.p(&format!("{pre}b1")).data;
-            for r in 0..total {
-                for j in 0..f {
-                    hmid[r * f + j] = gelu(hmid[r * f + j] + b1[j]);
-                }
-            }
-            let mut y = matmul(&hmid, &self.p(&format!("{pre}w2")).data, total, f, d);
-            let b2 = &self.p(&format!("{pre}b2")).data;
-            for r in 0..total {
-                for j in 0..d {
-                    y[r * d + j] += b2[j];
-                }
-            }
-            for (xi, yi) in x.iter_mut().zip(&y) {
-                *xi += yi;
-            }
+            layer.wo.gemm(o, total, x, Epilogue::AddTo, &mut enc.gemm_tmp);
+            h.copy_from_slice(x);
+            layer_norm(h, &layer.ln2_g, &layer.ln2_b, d);
+            let hm = slot(&mut enc.hmid, total * layer.f);
+            layer.w1.gemm(h, total, hm, Epilogue::BiasGelu(&layer.b1), &mut enc.gemm_tmp);
+            layer.w2.gemm(hm, total, x, Epilogue::AddBiasTo(&layer.b2), &mut enc.gemm_tmp);
         }
 
         // final LN + mean pool over each row's real tokens
-        layer_norm(&mut x, &self.p("lnf_g").data, &self.p("lnf_b").data, d);
+        layer_norm(x, &plan.lnf_g, &plan.lnf_b, d);
         for (i, r) in rows.iter().enumerate() {
             let li = r.len();
             if li == 0 {
                 continue;
             }
-            let acc = &mut pooled[i * d..(i + 1) * d];
+            let acc = &mut out_pooled[i * d..(i + 1) * d];
             for t in 0..li {
-                let src = &x[(offs[i] + t) * d..(offs[i] + t + 1) * d];
+                let src = &x[(enc.offs[i] + t) * d..(enc.offs[i] + t + 1) * d];
                 for j in 0..d {
                     acc[j] += src[j];
                 }
@@ -625,67 +930,107 @@ impl ReferenceModel {
                 *v /= denom;
             }
         }
-        Ok(pooled)
-    }
-
-    /// Data-parallel wrapper over [`ReferenceModel::encode_rows`]: split
-    /// the batch into contiguous row groups of roughly equal token counts
-    /// and encode each group on its own scoped thread (rows are
-    /// independent, so the split cannot change results). Small batches
-    /// run inline — a `score_batch` of size 1 pays no thread overhead.
-    fn encode_rows_parallel(&self, rows: &[&[u32]]) -> Result<Vec<f32>> {
-        let total: usize = rows.iter().map(|r| r.len()).sum();
-        let threads = batch_threads();
-        if threads <= 1 || rows.len() < 2 || total < 2048 {
-            return self.encode_rows(rows);
-        }
-        let groups = threads.min(rows.len());
-        let target = (total + groups - 1) / groups;
-        // contiguous cut points at ≈target tokens per group
-        let mut cuts: Vec<usize> = Vec::with_capacity(groups);
-        let mut acc = 0usize;
-        for (i, r) in rows.iter().enumerate() {
-            acc += r.len();
-            if acc >= target {
-                cuts.push(i + 1);
-                acc = 0;
-            }
-        }
-        if cuts.last() != Some(&rows.len()) {
-            cuts.push(rows.len());
-        }
-        let mut parts: Vec<Result<Vec<f32>>> = Vec::with_capacity(cuts.len());
-        std::thread::scope(|sc| {
-            let mut handles = Vec::with_capacity(cuts.len());
-            let mut start = 0usize;
-            for &end in &cuts {
-                let slice = &rows[start..end];
-                handles.push(sc.spawn(move || self.encode_rows(slice)));
-                start = end;
-            }
-            for h in handles {
-                parts.push(
-                    h.join().unwrap_or_else(|_| Err(anyhow!("batch encode worker panicked"))),
-                );
-            }
-        });
-        let mut pooled = Vec::with_capacity(rows.len() * self.d);
-        for p in parts {
-            pooled.extend(p?);
-        }
-        Ok(pooled)
+        Ok(())
     }
 }
 
-/// Worker threads for batched forwards: `IPR_BATCH_THREADS` override,
-/// else the machine's available parallelism.
-fn batch_threads() -> usize {
-    if let Ok(v) = std::env::var("IPR_BATCH_THREADS") {
-        if let Ok(x) = v.parse::<usize>() {
-            return x.max(1);
+/// Evaluate one prebound head bank over pooled features, writing
+/// `sigmoid` scores at `out[i*stride + offset + ci]`. The ReLU-knot
+/// readout keeps the exact reference accumulation:
+/// `logit = b2 + Σ_j max(p·W1p + he + b1, 0)·w2` with the `a > 0` guard
+/// (skipping vs adding zero terms is bit-equal for finite weights).
+fn run_heads(
+    hp: &HeadPlan,
+    pooled: &[f32],
+    n: usize,
+    pre_buf: &mut Vec<f32>,
+    gemm_tmp: &mut Vec<f32>,
+    out: &mut [f32],
+    stride: usize,
+    offset: usize,
+) {
+    let hh = hp.hh;
+    for ci in 0..hp.c {
+        let pre = slot(pre_buf, n * hh);
+        hp.w1p[ci].gemm(pooled, n, pre, Epilogue::Store, gemm_tmp);
+        let heb = &hp.he[ci * hh..(ci + 1) * hh];
+        let b1c = &hp.b1[ci * hh..(ci + 1) * hh];
+        let w2c = &hp.w2[ci * hh..(ci + 1) * hh];
+        for i in 0..n {
+            let prow = &pre[i * hh..(i + 1) * hh];
+            let mut logit = hp.b2[ci];
+            for j in 0..hh {
+                let a = prow[j] + heb[j] + b1c[j];
+                if a > 0.0 {
+                    logit += a * w2c[j];
+                }
+            }
+            out[i * stride + offset + ci] = sigmoid(logit);
         }
     }
-    std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+}
+
+/// Build one head bank: pack per-candidate `W1p` and precompute the
+/// prompt-independent `he[c, j] = e_c · W1e[c, :, j]` term (e-ascending
+/// accumulation, same as the per-batch loop it replaces).
+#[allow(clippy::too_many_arguments)]
+fn build_head_plan(
+    lie: &[f32],
+    w1e: &[f32],
+    w1p: &Tensor,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    d: usize,
+    d_id: usize,
+    hh: usize,
+) -> HeadPlan {
+    let c = w1p.shape.first().copied().unwrap_or(0);
+    let mut he = vec![0f32; c * hh];
+    for ci in 0..c {
+        for j in 0..hh {
+            let mut acc = 0f32;
+            for e in 0..d_id {
+                acc += lie[ci * d_id + e] * w1e[(ci * d_id + e) * hh + j];
+            }
+            he[ci * hh + j] = acc;
+        }
+    }
+    let packed = (0..c)
+        .map(|ci| PackedGemm::pack(&w1p.data[ci * d * hh..(ci + 1) * d * hh], d, hh))
+        .collect();
+    HeadPlan { c, hh, w1p: packed, he, b1, w2, b2 }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent batch worker pool
+// ---------------------------------------------------------------------------
+
+/// Worker threads for batched forwards: `IPR_BATCH_THREADS` override,
+/// else the machine's available parallelism. Resolved ONCE per process
+/// (`OnceLock`) — the old implementation paid an env-var syscall-path
+/// lookup on every batched forward.
+pub(crate) fn batch_threads() -> usize {
+    static BATCH_THREADS: OnceLock<usize> = OnceLock::new();
+    *BATCH_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("IPR_BATCH_THREADS") {
+            if let Ok(x) = v.parse::<usize>() {
+                return x.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    })
+}
+
+/// The shared, lazily-spawned persistent worker pool for row-parallel
+/// batched encodes. Replaces the per-batch `std::thread::scope` spawn —
+/// workers persist for the process lifetime (each owning its thread-local
+/// scratch arena, so their buffers stay warm across batches) and serve
+/// every loaded model. Dedicated (pinned) to batch-encode work: nothing
+/// else enqueues on this pool.
+fn batch_pool() -> &'static ThreadPool {
+    static BATCH_POOL: OnceLock<ThreadPool> = OnceLock::new();
+    BATCH_POOL.get_or_init(|| ThreadPool::new(batch_threads()))
 }
 
 impl QeModel for ReferenceModel {
@@ -729,13 +1074,13 @@ impl QeModel for ReferenceModel {
         Ok(Scores { scores, bucket: (b, s), kind: kind.to_string() })
     }
 
-    /// The batched hot path: packed ragged kernels (`encode_rows`) over
-    /// the whole batch, parallelized across rows, with the fused QP heads
-    /// evaluated once per batch. Unlike `predict` — which mirrors the
-    /// fixed-shape AOT cost model by computing the full bucket seq — this
-    /// path computes ONLY real tokens (pad-to-nothing); results are
-    /// row-wise identical either way because padding is masked out of
-    /// every kernel exactly (see `encode_rows`).
+    /// The batched hot path: packed ragged kernels (`encode_rows_into`)
+    /// over the whole batch, row-parallel on the persistent worker pool,
+    /// with the fused QP heads evaluated once per batch. Unlike `predict`
+    /// — which mirrors the fixed-shape AOT cost model by computing the
+    /// full bucket seq — this path computes ONLY real tokens
+    /// (pad-to-nothing); results are row-wise identical either way
+    /// because padding is masked out of every kernel exactly.
     ///
     /// Bucket semantics are preserved for the API: `bucket` reports the
     /// logical capacity class the shared `pick_bucket` policy assigns
@@ -762,9 +1107,66 @@ impl QeModel for ReferenceModel {
         let (b, s) = pick_bucket(&avail, n.min(b_cap), max_len.max(1)).ok_or_else(|| {
             anyhow!("no bucket fits batch={} kind={kind} for {}", n.min(b_cap), self.entry.id)
         })?;
+        // The row-view vec (n fat pointers) is the one unavoidable
+        // per-batch allocation on this path — it borrows the request's
+        // token buffers and cannot live in the f32 arena.
         let rows: Vec<&[u32]> = prompts.iter().map(|p| &p[..p.len().min(s_cap)]).collect();
-        let pooled = self.encode_rows_parallel(&rows)?;
-        let scores = self.heads_from_pooled(&pooled, n);
+        let d = self.d;
+        let scores = ScratchArena::with(|ar| -> Result<Vec<QualityVector>> {
+            let nd = n * d;
+            // size only — both encode paths establish the zero state of
+            // their own output slices
+            slot(&mut ar.pooled, nd);
+            let total: usize = rows.iter().map(|r| r.len()).sum();
+            let threads = batch_threads();
+            if threads <= 1 || rows.len() < 2 || total < PARALLEL_MIN_TOKENS {
+                self.encode_rows_into(&rows, &mut ar.enc, &mut ar.attn, &mut ar.pooled[..nd])?;
+            } else {
+                // Contiguous row groups of ≈equal token counts, one per
+                // persistent worker (rows are independent, so the split
+                // cannot change results).
+                let groups = threads.min(rows.len());
+                let target = total.div_ceil(groups);
+                let mut cuts: Vec<usize> = Vec::with_capacity(groups);
+                let mut acc = 0usize;
+                for (i, r) in rows.iter().enumerate() {
+                    acc += r.len();
+                    if acc >= target {
+                        cuts.push(i + 1);
+                        acc = 0;
+                    }
+                }
+                if cuts.last() != Some(&rows.len()) {
+                    cuts.push(rows.len());
+                }
+                let mut results: Vec<Result<()>> = (0..cuts.len()).map(|_| Ok(())).collect();
+                let mut jobs: Vec<ScopedJob> = Vec::with_capacity(cuts.len());
+                let mut rest: &mut [f32] = &mut ar.pooled[..nd];
+                let mut start = 0usize;
+                let mut res_iter = results.iter_mut();
+                for &end in &cuts {
+                    let seg = &rows[start..end];
+                    let (chunk, r2) = rest.split_at_mut((end - start) * d);
+                    rest = r2;
+                    let res = res_iter.next().unwrap();
+                    jobs.push(Box::new(move || {
+                        // each worker encodes its group with its OWN
+                        // thread-local arena (buffers stay warm per worker)
+                        *res = ScratchArena::with(|wa| {
+                            self.encode_rows_into(seg, &mut wa.enc, &mut wa.attn, chunk)
+                        });
+                    }));
+                    start = end;
+                }
+                if !batch_pool().scoped(jobs) {
+                    bail!("batch encode worker panicked");
+                }
+                for r in results {
+                    r?;
+                }
+            }
+            Ok(self.heads_from_pooled_ar(&ar.pooled[..nd], n, &mut ar.heads))
+        })?;
         self.calls.fetch_add(1, Ordering::Relaxed);
         Ok(Scores { scores, bucket: (b, s), kind: kind.to_string() })
     }
@@ -774,24 +1176,31 @@ impl QeModel for ReferenceModel {
 // f32 math primitives (loop order fixed; f32 accumulation like XLA-CPU)
 // ---------------------------------------------------------------------------
 
-/// C-order matmul: a[m,k] @ b[k,n] -> [m,n].
+/// C-order matmul: a[m,k] @ b[k,n] -> [m,n]. The naive reference kernel —
+/// kept as the numerical ground truth for the tiled/sparse kernels'
+/// equivalence tests and for load-time one-off products. Branch-free:
+/// dense/sparse is decided per weight at pack time, not per element here.
 pub(crate) fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert!(a.len() >= m * k && b.len() >= k * n);
     let mut out = vec![0f32; m * n];
+    matmul_into(a, b, &mut out, m, k, n);
+    out
+}
+
+/// `matmul` into a caller-provided (arena) buffer; zero-fills then
+/// accumulates in ascending k order per element.
+pub(crate) fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    out[..m * n].fill(0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // expert-constructed weights are sparse
-            }
             let brow = &b[kk * n..(kk + 1) * n];
             for j in 0..n {
                 orow[j] += av * brow[j];
             }
         }
     }
-    out
 }
 
 /// Row-wise LayerNorm (eps 1e-6, matching model.py) in place.
@@ -845,6 +1254,7 @@ pub(crate) fn sigmoid(x: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::minitest::check;
 
     #[test]
     fn primitives_sane() {
@@ -879,5 +1289,168 @@ mod tests {
         let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-6);
         assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    fn gen_mat(r: &mut crate::util::rng::Rng, len: usize, zero_every: u64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if zero_every > 0 && r.next_range(zero_every) == 0 {
+                    0.0
+                } else {
+                    (r.next_f64() as f32 - 0.5) * 2.0
+                }
+            })
+            .collect()
+    }
+
+    /// Kernel equivalence: the tiled dense kernel AND the CSR kernel both
+    /// match the naive reference matmul to ≤1e-6 over ragged shapes,
+    /// including m/n/k that are not multiples of the 4×8 tile.
+    #[test]
+    fn prop_packed_gemm_matches_naive() {
+        check(
+            47,
+            250,
+            |r, _| {
+                let m = 1 + r.next_range(13) as usize; // covers m % 4 != 0
+                let k = 1 + r.next_range(19) as usize;
+                let n = 1 + r.next_range(21) as usize; // covers n % 8 != 0
+                let a = gen_mat(r, m * k, 4);
+                let b = gen_mat(r, k * n, 2); // ~50% zeros: both kinds exercised
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let want = matmul(a, b, *m, *k, *n);
+                let mut tmp = Vec::new();
+                for pg in [PackedGemm::pack_dense(b, *k, *n), PackedGemm::pack_sparse(b, *k, *n)] {
+                    let mut got = vec![f32::NAN; m * n];
+                    pg.gemm(a, *m, &mut got, Epilogue::Store, &mut tmp);
+                    for (w, g) in want.iter().zip(&got) {
+                        if (w - g).abs() > 1e-6 {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// Fused epilogues equal the unfused compute-then-postprocess
+    /// sequence on both kernels.
+    #[test]
+    fn prop_gemm_epilogues_match_unfused() {
+        check(
+            53,
+            200,
+            |r, _| {
+                let m = 1 + r.next_range(9) as usize;
+                let k = 1 + r.next_range(11) as usize;
+                let n = 1 + r.next_range(17) as usize;
+                let a = gen_mat(r, m * k, 3);
+                let b = gen_mat(r, k * n, 2);
+                let bias = gen_mat(r, n, 0);
+                let init = gen_mat(r, m * n, 0);
+                let which = r.next_range(5) as usize;
+                (m, k, n, a, b, bias, init, which)
+            },
+            |(m, k, n, a, b, bias, init, which)| {
+                let (m, k, n, which) = (*m, *k, *n, *which);
+                let raw = matmul(a, b, m, k, n);
+                // expected per epilogue
+                let mut want = init.clone();
+                match which {
+                    0 => want.copy_from_slice(&raw), // Store
+                    1 => {
+                        for (w, r0) in want.iter_mut().zip(&raw) {
+                            *w += r0;
+                        }
+                    }
+                    2 => {
+                        for i in 0..m {
+                            for j in 0..n {
+                                want[i * n + j] = gelu(raw[i * n + j] + bias[j]);
+                            }
+                        }
+                    }
+                    3 => {
+                        for i in 0..m {
+                            for j in 0..n {
+                                want[i * n + j] += raw[i * n + j] + bias[j];
+                            }
+                        }
+                    }
+                    _ => {
+                        for i in 0..m {
+                            for j in 0..n {
+                                want[i * n + j] = (raw[i * n + j] + bias[j]).max(0.0);
+                            }
+                        }
+                    }
+                }
+                let mut tmp = Vec::new();
+                for pg in [PackedGemm::pack_dense(b, k, n), PackedGemm::pack_sparse(b, k, n)] {
+                    let ep = match which {
+                        0 => Epilogue::Store,
+                        1 => Epilogue::AddTo,
+                        2 => Epilogue::BiasGelu(bias),
+                        3 => Epilogue::AddBiasTo(bias),
+                        _ => Epilogue::BiasRelu(bias),
+                    };
+                    let mut got = init.clone();
+                    pg.gemm(a, m, &mut got, ep, &mut tmp);
+                    for (w, g) in want.iter().zip(&got) {
+                        if (w - g).abs() > 1e-6 {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_row_bias_epilogue_matches_unfused() {
+        let (m, k, n) = (3usize, 5usize, 7usize);
+        let mut r = crate::util::rng::Rng::new(9);
+        let a = gen_mat(&mut r, m * k, 0);
+        let b = gen_mat(&mut r, k * n, 3);
+        let other = gen_mat(&mut r, m * n, 0);
+        let bias = gen_mat(&mut r, n, 0);
+        let raw = matmul(&a, &b, m, k, n);
+        let mut tmp = Vec::new();
+        for pg in [PackedGemm::pack_dense(&b, k, n), PackedGemm::pack_sparse(&b, k, n)] {
+            let mut got = vec![0f32; m * n];
+            pg.gemm(
+                &a,
+                m,
+                &mut got,
+                Epilogue::StoreAddRowBias { other: &other, bias: &bias },
+                &mut tmp,
+            );
+            for i in 0..m {
+                for j in 0..n {
+                    let want = raw[i * n + j] + (other[i * n + j] + bias[j]);
+                    assert!((got[i * n + j] - want).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_picks_kind_by_density() {
+        // 64x64 identity: density 1/64 << 0.30 and 4096 elems >= 512
+        let n = 64usize;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        assert!(PackedGemm::pack(&eye, n, n).is_sparse());
+        let dense: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 + 1.0).collect();
+        assert!(!PackedGemm::pack(&dense, n, n).is_sparse());
+        // tiny matrices stay dense regardless of density
+        let tiny = vec![0f32, 1.0, 0.0, 0.0];
+        assert!(!PackedGemm::pack(&tiny, 2, 2).is_sparse());
     }
 }

@@ -10,8 +10,10 @@
 //! * `GET  /v1/registry` — candidates + loaded model info.
 //! * `GET  /health`.
 //!
-//! Request path (DESIGN.md §11): connection threads parse + tokenize,
-//! then submit to the server-side [`MicroBatcher`] — a queue that
+//! Request path (DESIGN.md §11–§12): connection threads parse + tokenize
+//! (into a per-connection reusable buffer), consult the sharded routing-
+//! score cache — hits are routed inline and never enter the batcher —
+//! then submit misses to the server-side [`MicroBatcher`] — a queue that
 //! coalesces concurrent requests (≤ `max_batch` or `max_wait`, whichever
 //! first) into single [`Router::handle_batch`] calls executed by
 //! dedicated drain workers on the in-repo thread pool. Teardown is
@@ -353,6 +355,10 @@ impl Drop for Server {
 fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
+    // Per-connection token buffer: `tokenize_into` reuses it across
+    // keep-alive requests, so the steady-state parse path allocates no
+    // token vec (cache hits never need an owned copy at all).
+    let mut tok_buf: Vec<u32> = Vec::new();
     loop {
         if sh.stop.load(Ordering::SeqCst) {
             return Ok(()); // shutting down: stop serving keep-alive turns
@@ -395,7 +401,7 @@ fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
         // In-flight from full parse to response write: `stop()` waits for
         // this window before force-closing connections.
         sh.active.fetch_add(1, Ordering::SeqCst);
-        let (status, ctype, resp) = dispatch(sh, &method, &path, &body);
+        let (status, ctype, resp) = dispatch(sh, &method, &path, &body, &mut tok_buf);
         let write_res = (|| -> Result<()> {
             let mut out = stream.try_clone()?;
             write!(
@@ -416,7 +422,13 @@ fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
     }
 }
 
-fn dispatch(sh: &ServerShared, method: &str, path: &str, body: &str) -> (&'static str, &'static str, String) {
+fn dispatch(
+    sh: &ServerShared,
+    method: &str,
+    path: &str,
+    body: &str,
+    tok_buf: &mut Vec<u32>,
+) -> (&'static str, &'static str, String) {
     let router = &*sh.router;
     match (method, path) {
         ("GET", "/health") => ("200 OK", "text/plain", "ok\n".into()),
@@ -424,7 +436,7 @@ fn dispatch(sh: &ServerShared, method: &str, path: &str, body: &str) -> (&'stati
         ("GET", "/v1/registry") => ("200 OK", "application/json", registry_json(router)),
         ("POST", "/v1/route") | ("POST", "/v1/invoke") => {
             let force_invoke = path == "/v1/invoke";
-            match handle_route(sh, body, force_invoke) {
+            match handle_route(sh, body, force_invoke, tok_buf) {
                 Ok(j) => ("200 OK", "application/json", j),
                 Err(e) => (
                     "400 Bad Request",
@@ -437,9 +449,15 @@ fn dispatch(sh: &ServerShared, method: &str, path: &str, body: &str) -> (&'stati
     }
 }
 
-/// Parse → tokenize (on the connection thread) → submit to the
-/// micro-batcher → wait for the routed outcome.
-fn handle_route(sh: &ServerShared, body: &str, force_invoke: bool) -> Result<String> {
+/// Parse → tokenize into the connection's reusable buffer → score-cache
+/// lookup (hits route inline, skipping the batcher entirely) → submit
+/// misses to the micro-batcher → wait for the routed outcome.
+fn handle_route(
+    sh: &ServerShared,
+    body: &str,
+    force_invoke: bool,
+    tok_buf: &mut Vec<u32>,
+) -> Result<String> {
     let t_start = Instant::now();
     let j = parse(body).context("request body must be JSON")?;
     let prompt = j.req("prompt")?.as_str()?.to_string();
@@ -459,9 +477,42 @@ fn handle_route(sh: &ServerShared, body: &str, force_invoke: bool) -> Result<Str
         _ => None,
     };
     let t0 = Instant::now();
-    let tokens = tokenizer::tokenize(&prompt);
+    tokenizer::tokenize_into(tok_buf, &prompt);
     let tokenize_us = t0.elapsed().as_micros() as u64;
-    let item = BatchItem { tokens, tau, invoke, identity, tokenize_us, t_start };
+
+    // Score-cache fast path: the request's ONE counted lookup. A hit is
+    // routed inline on the connection thread (DO + metering are µs-scale)
+    // — the micro-batcher only ever forwards cache misses, and the hit
+    // path moves no token buffer (zero-alloc repeat traffic).
+    let t1 = Instant::now();
+    let (key, hit) = sh.router.qe.cache_lookup(tok_buf);
+    if let Some(scores) = hit {
+        let qe_us = t1.elapsed().as_micros() as u64;
+        let out = sh.router.handle_cached_scores(
+            tok_buf,
+            scores,
+            tau,
+            invoke,
+            identity.as_ref(),
+            tokenize_us,
+            qe_us,
+            t_start,
+        )?;
+        return Ok(outcome_json(&out));
+    }
+    // Clone (not mem::take) so the connection buffer keeps its capacity:
+    // the clone is ONE right-sized allocation — the unavoidable ownership
+    // hand-off to the batcher queue — while `tokenize_into` into the
+    // retained buffer stays allocation-free on every subsequent request.
+    let item = BatchItem {
+        tokens: tok_buf.clone(),
+        tau,
+        invoke,
+        identity,
+        tokenize_us,
+        t_start,
+        cache_key: Some(key),
+    };
     let out = sh
         .batcher
         .submit(item)

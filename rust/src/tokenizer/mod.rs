@@ -10,7 +10,18 @@ use crate::util::rng::mix64;
 
 /// Tokenize prompt text into vocabulary ids (no padding/truncation).
 pub fn tokenize(text: &str) -> Vec<u32> {
-    text.split_whitespace().map(token_of).collect()
+    let mut out = Vec::new();
+    tokenize_into(&mut out, text);
+    out
+}
+
+/// Tokenize into a caller-owned buffer (cleared first) — the reuse path
+/// the server's connection loop uses so steady-state keep-alive traffic
+/// pays no per-request token-vec allocation once the buffer has grown to
+/// its high-water mark.
+pub fn tokenize_into(out: &mut Vec<u32>, text: &str) {
+    out.clear();
+    out.extend(text.split_whitespace().map(token_of));
 }
 
 fn token_of(word: &str) -> u32 {
@@ -70,6 +81,17 @@ mod tests {
         for &t in &b {
             assert!(t >= FILLER_BASE);
         }
+    }
+
+    #[test]
+    fn tokenize_into_reuses_buffer_and_matches() {
+        let mut buf = vec![99u32; 8]; // stale contents must be cleared
+        tokenize_into(&mut buf, "w1 w2 hello");
+        assert_eq!(buf, tokenize("w1 w2 hello"));
+        let cap = buf.capacity();
+        tokenize_into(&mut buf, "w3");
+        assert_eq!(buf, tokenize("w3"));
+        assert_eq!(buf.capacity(), cap, "no shrink/realloc on smaller input");
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Scratch arenas for the QE forward: per-thread reusable f32 buffers so
+//! the steady-state hot path performs **zero heap allocations** (DESIGN.md
+//! §12). Every intermediate of the encoder (LN output, QKV projection,
+//! attention workspaces, FFN hidden) and of the QP-head stage lives in one
+//! of these buffers; buffers grow to their high-water mark on the first
+//! batch of a given shape and are reused verbatim afterwards.
+//!
+//! Ownership rules (the arena contract):
+//!
+//! * an arena belongs to exactly one thread — access goes through
+//!   [`ScratchArena::with`], which hands out the calling thread's
+//!   thread-local instance. Worker threads of the batch pool therefore
+//!   each own a private arena; there is no sharing and no locking;
+//! * a kernel never holds arena slices across a call that itself takes
+//!   the arena — callers split disjoint sub-arenas (`enc` / `attn` /
+//!   `heads` / `pooled`) at the call site so the borrows are field-level
+//!   and checkable;
+//! * [`slot`] returns a buffer whose contents are STALE (previous call's
+//!   data) — only use it when the kernel overwrites every element;
+//!   [`zslot`] additionally zero-fills, for accumulation targets.
+//!
+//! The buffers deliberately never shrink: serving traffic converges on a
+//! bounded working set (largest micro-batch × largest bucket), and the
+//! arena simply holds that high-water footprint per worker.
+
+use std::cell::RefCell;
+
+/// Grow-only scratch slot: returns `buf[..len]` WITHOUT clearing existing
+/// contents (they are overwritten by the caller). Allocates only when the
+/// high-water mark grows.
+pub fn slot(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    &mut buf[..len]
+}
+
+/// Like [`slot`] but zero-filled — for buffers the kernel accumulates
+/// into rather than stores into.
+pub fn zslot(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    let s = slot(buf, len);
+    s.fill(0.0);
+    s
+}
+
+/// Encoder-level scratch: packed activation buffers sized by
+/// `total_tokens × {d, 3d, ffn}` plus the per-(row,position) attention
+/// bias of the padded path.
+#[derive(Default)]
+pub struct EncScratch {
+    /// Residual stream `[rows, d]`.
+    pub x: Vec<f32>,
+    /// LN1/LN2 output (shared — LN1's copy is dead once QKV is formed).
+    pub h: Vec<f32>,
+    /// QKV projection `[rows, 3d]`.
+    pub qkv: Vec<f32>,
+    /// Attention output `[rows, d]`.
+    pub o: Vec<f32>,
+    /// FFN hidden `[rows, ffn]`.
+    pub hmid: Vec<f32>,
+    /// Additive key bias (padded path) / zero bias (packed path).
+    pub bias: Vec<f32>,
+    /// Row workspace for the sparse-weight GEMM kernel.
+    pub gemm_tmp: Vec<f32>,
+    /// Cumulative token offsets of the packed ragged batch.
+    pub offs: Vec<usize>,
+}
+
+/// Per-row attention scratch (one head at a time): Q, Kᵀ, V gathers and
+/// the score/output tiles.
+#[derive(Default)]
+pub struct AttnScratch {
+    pub q: Vec<f32>,
+    pub kt: Vec<f32>,
+    pub v: Vec<f32>,
+    pub sc: Vec<f32>,
+    pub oh: Vec<f32>,
+}
+
+/// QP-head scratch: per-candidate GEMM output plus the §D adapter's
+/// residual-MLP intermediates.
+#[derive(Default)]
+pub struct HeadScratch {
+    /// `pooled @ W1p[c]` pre-activations `[n, qp_hidden]`.
+    pub pre: Vec<f32>,
+    /// Adapter residual-MLP hidden `[n, d]`.
+    pub hmid: Vec<f32>,
+    /// Adapted representation `[n, d]`.
+    pub pooled_new: Vec<f32>,
+    /// Row workspace for the sparse-weight GEMM kernel.
+    pub gemm_tmp: Vec<f32>,
+}
+
+/// The full per-thread arena. Sub-arenas are separate fields so a caller
+/// can hand `&mut arena.enc` and `&mut arena.attn` to one kernel while
+/// `arena.pooled` stays borrowed elsewhere.
+#[derive(Default)]
+pub struct ScratchArena {
+    pub enc: EncScratch,
+    pub attn: AttnScratch,
+    pub heads: HeadScratch,
+    /// Pooled features `[n, d]` — the encoder→heads hand-off buffer.
+    pub pooled: Vec<f32>,
+}
+
+thread_local! {
+    static TLS_ARENA: RefCell<ScratchArena> = RefCell::new(ScratchArena::default());
+}
+
+impl ScratchArena {
+    /// Run `f` with the calling thread's arena. Do NOT nest `with` calls
+    /// (the thread-local is a `RefCell`); take the arena once at the top
+    /// of a forward and pass sub-arenas down.
+    pub fn with<R>(f: impl FnOnce(&mut ScratchArena) -> R) -> R {
+        TLS_ARENA.with(|cell| f(&mut cell.borrow_mut()))
+    }
+
+    /// Total f32 capacity currently held (observability/tests).
+    pub fn footprint(&self) -> usize {
+        self.enc.x.capacity()
+            + self.enc.h.capacity()
+            + self.enc.qkv.capacity()
+            + self.enc.o.capacity()
+            + self.enc.hmid.capacity()
+            + self.enc.bias.capacity()
+            + self.enc.gemm_tmp.capacity()
+            + self.attn.q.capacity()
+            + self.attn.kt.capacity()
+            + self.attn.v.capacity()
+            + self.attn.sc.capacity()
+            + self.attn.oh.capacity()
+            + self.heads.pre.capacity()
+            + self.heads.hmid.capacity()
+            + self.heads.pooled_new.capacity()
+            + self.heads.gemm_tmp.capacity()
+            + self.pooled.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_grow_then_reuse() {
+        let mut buf = Vec::new();
+        {
+            let s = zslot(&mut buf, 16);
+            assert_eq!(s.len(), 16);
+            assert!(s.iter().all(|&v| v == 0.0));
+            s[0] = 7.0;
+        }
+        let cap = buf.capacity();
+        // smaller request: no realloc, stale contents visible through slot
+        {
+            let s = slot(&mut buf, 8);
+            assert_eq!(s.len(), 8);
+            assert_eq!(s[0], 7.0);
+        }
+        assert_eq!(buf.capacity(), cap);
+        // zslot clears
+        assert!(zslot(&mut buf, 8).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tls_arena_persists_across_calls() {
+        let cap0 = ScratchArena::with(|a| {
+            slot(&mut a.enc.x, 1024);
+            a.enc.x.capacity()
+        });
+        let cap1 = ScratchArena::with(|a| a.enc.x.capacity());
+        assert!(cap1 >= 1024);
+        assert_eq!(cap0, cap1, "arena must persist between with() calls");
+    }
+}

@@ -4,6 +4,7 @@
 //! used across the crate (the offline registry has no
 //! anyhow/serde/tokio/criterion/proptest).
 
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod error;
@@ -12,6 +13,7 @@ pub mod json;
 pub mod minitest;
 pub mod npz;
 pub mod rng;
+pub mod score_cache;
 pub mod threadpool;
 
 /// Append to a bounded observability log (realized batch sizes etc.):

@@ -1,0 +1,403 @@
+//! Sharded LRU routing-score cache (DESIGN.md §12).
+//!
+//! Caches the per-candidate score vector of a QE forward, keyed by a
+//! 64-bit hash of (prompt token sequence, artifact kind, model identity +
+//! candidate set) — the *seed* folds in everything but the tokens, so a
+//! cache can never leak scores across models, kinds or candidate sets
+//! even if instances were shared. Repeated traffic (retries, multi-turn
+//! prefixes, templated prompts) skips the QE forward entirely:
+//! `Router::handle_text` / `handle_batch` consult the cache first and
+//! only forward misses to the engine.
+//!
+//! Design:
+//! * **Sharded**: up to `N_SHARDS` independent LRU shards, each behind
+//!   its own mutex, selected by the low key bits — concurrent connection
+//!   threads hit disjoint locks. Capacity divides evenly across shards
+//!   (small budgets get fewer shards so they are honored exactly).
+//! * **True LRU per shard**: intrusive doubly-linked list over a slab of
+//!   entries; get/put are O(1) and a hit refreshes recency (the old
+//!   qe-level cache evicted arbitrary entries).
+//! * **Zero-cost off switch**: capacity 0 builds a disabled cache whose
+//!   `lookup` returns a key (for downstream insert symmetry) but never
+//!   stores, counts, or locks.
+//!
+//! Hit/miss/eviction counters live in a shared [`CacheStats`] handle the
+//! router metrics render (`ipr_score_cache_*` in `GET /metrics`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::rng::mix64;
+
+/// Shard count — power of two, small enough that a tiny cache still gets
+/// a sane per-shard capacity, large enough to spread connection threads.
+const N_SHARDS: usize = 16;
+
+const NIL: u32 = u32::MAX;
+
+/// Monotonic cache counters, shared with the metrics renderer.
+#[derive(Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+struct Entry {
+    key: u64,
+    val: Vec<f32>,
+    prev: u32,
+    next: u32,
+}
+
+/// One LRU shard: slab + intrusive list, head = most recent. There is no
+/// per-entry removal API, so slab slots are only ever recycled through
+/// tail eviction — no free list needed.
+struct Shard {
+    map: HashMap<u64, u32>,
+    slab: Vec<Entry>,
+    head: u32,
+    tail: u32,
+}
+
+impl Shard {
+    fn new(cap: usize) -> Shard {
+        Shard {
+            map: HashMap::with_capacity(cap),
+            slab: Vec::with_capacity(cap),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    fn unlink(&mut self, i: u32) {
+        let (p, n) = {
+            let e = &self.slab[i as usize];
+            (e.prev, e.next)
+        };
+        if p != NIL {
+            self.slab[p as usize].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slab[n as usize].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, i: u32) {
+        let old = self.head;
+        {
+            let e = &mut self.slab[i as usize];
+            e.prev = NIL;
+            e.next = old;
+        }
+        if old != NIL {
+            self.slab[old as usize].prev = i;
+        } else {
+            self.tail = i;
+        }
+        self.head = i;
+    }
+
+    fn get(&mut self, key: u64) -> Option<Vec<f32>> {
+        let i = *self.map.get(&key)?;
+        self.unlink(i);
+        self.push_front(i);
+        Some(self.slab[i as usize].val.clone())
+    }
+
+    /// Insert/update; returns true when an old entry was evicted.
+    fn put(&mut self, key: u64, val: Vec<f32>, cap: usize) -> bool {
+        if let Some(&i) = self.map.get(&key) {
+            self.slab[i as usize].val = val;
+            self.unlink(i);
+            self.push_front(i);
+            return false;
+        }
+        let mut evicted = false;
+        let i = if self.map.len() >= cap {
+            // recycle the LRU tail slot
+            let t = self.tail;
+            debug_assert_ne!(t, NIL);
+            self.unlink(t);
+            let old_key = self.slab[t as usize].key;
+            self.map.remove(&old_key);
+            self.slab[t as usize].key = key;
+            self.slab[t as usize].val = val;
+            evicted = true;
+            t
+        } else {
+            self.slab.push(Entry { key, val, prev: NIL, next: NIL });
+            (self.slab.len() - 1) as u32
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+        evicted
+    }
+}
+
+/// The sharded LRU score cache. Cheap to share behind an `Arc`.
+pub struct ShardedScoreCache {
+    shards: Vec<Mutex<Shard>>,
+    /// `shards.len() - 1` (shard count is a power of two).
+    shard_mask: usize,
+    /// Per-shard capacity; 0 = cache disabled.
+    shard_cap: usize,
+    seed: u64,
+    stats: CacheStats,
+}
+
+impl ShardedScoreCache {
+    /// `capacity` is the total entry budget (0 disables). `seed` must
+    /// fold in every non-token component of the key — use [`key_seed`].
+    ///
+    /// Small budgets use fewer shards so they are honored exactly;
+    /// otherwise capacity rounds UP to the next multiple of the shard
+    /// count — [`ShardedScoreCache::capacity`] reports the effective
+    /// bound.
+    pub fn new(capacity: usize, seed: u64) -> ShardedScoreCache {
+        let mut n_shards = N_SHARDS;
+        while n_shards > 1 && n_shards > capacity {
+            n_shards /= 2;
+        }
+        let shard_cap = if capacity == 0 { 0 } else { capacity.div_ceil(n_shards).max(1) };
+        ShardedScoreCache {
+            shards: (0..n_shards).map(|_| Mutex::new(Shard::new(shard_cap.min(64)))).collect(),
+            shard_mask: n_shards - 1,
+            shard_cap,
+            seed,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.shard_cap > 0
+    }
+
+    /// Effective total capacity (entries) across shards — the requested
+    /// budget rounded up to a multiple of the shard count.
+    pub fn capacity(&self) -> usize {
+        self.shard_cap * self.shards.len()
+    }
+
+    /// Current resident entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Key of a token sequence under this cache's seed.
+    pub fn key_of(&self, tokens: &[u32]) -> u64 {
+        let mut h = self.seed;
+        for &t in tokens {
+            h = mix64(h ^ t as u64);
+        }
+        mix64(h ^ tokens.len() as u64)
+    }
+
+    fn shard_of(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[(key as usize) & self.shard_mask]
+    }
+
+    /// The counted lookup — exactly one per routed request, so hit/miss
+    /// stats measure request-level traffic. Returns the key either way so
+    /// the caller can insert after a miss without re-hashing.
+    pub fn lookup(&self, tokens: &[u32]) -> (u64, Option<Vec<f32>>) {
+        let key = self.key_of(tokens);
+        if self.shard_cap == 0 {
+            return (key, None);
+        }
+        let hit = self.shard_of(key).lock().unwrap().get(key);
+        if hit.is_some() {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        (key, hit)
+    }
+
+    /// Uncounted get by precomputed key (re-checks between a request's
+    /// counted lookup and its batch execution must not double-count).
+    pub fn peek(&self, key: u64) -> Option<Vec<f32>> {
+        if self.shard_cap == 0 {
+            return None;
+        }
+        self.shard_of(key).lock().unwrap().get(key)
+    }
+
+    /// Insert under a precomputed key. No-op when disabled.
+    pub fn put_key(&self, key: u64, scores: Vec<f32>) {
+        if self.shard_cap == 0 {
+            return;
+        }
+        let evicted = self.shard_of(key).lock().unwrap().put(key, scores, self.shard_cap);
+        if evicted {
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Convenience: hash + insert.
+    pub fn put(&self, tokens: &[u32], scores: Vec<f32>) {
+        let key = self.key_of(tokens);
+        self.put_key(key, scores);
+    }
+}
+
+/// Build a cache seed from the non-token key components: model id,
+/// artifact kind, and the global candidate set the local heads map to.
+pub fn key_seed(model_id: &str, kind: &str, candidates: &[usize]) -> u64 {
+    let mut h = 0x9E37_79B9_7F4A_7C15u64;
+    for b in model_id.bytes() {
+        h = mix64(h ^ b as u64);
+    }
+    h = mix64(h ^ 0x6b69_6e64); // "kind" separator
+    for b in kind.bytes() {
+        h = mix64(h ^ b as u64);
+    }
+    for &c in candidates {
+        h = mix64(h ^ (c as u64).wrapping_add(0x5ca1ab1e));
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minitest::check;
+    use std::collections::HashMap as StdMap;
+
+    #[test]
+    fn hit_returns_identical_vector() {
+        let c = ShardedScoreCache::new(64, 1);
+        let v = vec![0.125f32, -0.5, 3.0e-7, 1.0];
+        c.put(&[1, 2, 3], v.clone());
+        let (_, hit) = c.lookup(&[1, 2, 3]);
+        // byte-identical: same bits, not just approximately equal
+        let got = hit.expect("hit");
+        assert_eq!(got.len(), v.len());
+        for (a, b) in got.iter().zip(&v) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(c.stats().hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn keying_separates_models_kinds_and_lengths() {
+        let a = ShardedScoreCache::new(8, key_seed("m1", "xla", &[0, 1]));
+        let b = ShardedScoreCache::new(8, key_seed("m2", "xla", &[0, 1]));
+        let k = ShardedScoreCache::new(8, key_seed("m1", "pallas", &[0, 1]));
+        let s = ShardedScoreCache::new(8, key_seed("m1", "xla", &[0, 2]));
+        let t = [5u32, 6, 7];
+        let keys = [a.key_of(&t), b.key_of(&t), k.key_of(&t), s.key_of(&t)];
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j], "seed components must separate keys");
+            }
+        }
+        assert_ne!(a.key_of(&[]), a.key_of(&[0]), "length folds into the key");
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_within_shard() {
+        // capacity 32 => per-shard cap 2; keys 0/16/32 land in shard 0.
+        let c = ShardedScoreCache::new(32, 0);
+        c.put_key(0, vec![0.0]);
+        c.put_key(16, vec![1.0]);
+        assert!(c.peek(0).is_some());
+        // 0 is now most-recent; inserting 32 must evict 16.
+        c.put_key(32, vec![2.0]);
+        assert!(c.peek(16).is_none(), "LRU entry must be evicted");
+        assert!(c.peek(0).is_some());
+        assert!(c.peek(32).is_some());
+        assert_eq!(c.stats().evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn small_capacities_honored_exactly() {
+        for cap in [1usize, 2, 4, 8] {
+            let c = ShardedScoreCache::new(cap, 3);
+            assert_eq!(c.capacity(), cap, "power-of-two budgets must not round");
+            for i in 0..100u64 {
+                c.put_key(mix64(i), vec![i as f32]);
+            }
+            assert!(c.len() <= cap, "cap {cap}: {} resident", c.len());
+        }
+    }
+
+    #[test]
+    fn capacity_bounds_len() {
+        let c = ShardedScoreCache::new(64, 7);
+        for i in 0..10_000u64 {
+            c.put_key(mix64(i), vec![i as f32]);
+        }
+        assert!(c.len() <= c.capacity(), "{} > {}", c.len(), c.capacity());
+        assert!(c.stats().evictions.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn disabled_cache_is_passthrough() {
+        let c = ShardedScoreCache::new(0, 9);
+        assert!(!c.enabled());
+        c.put(&[1, 2], vec![1.0]);
+        let (key, hit) = c.lookup(&[1, 2]);
+        assert!(hit.is_none());
+        assert!(c.peek(key).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats().hits.load(Ordering::Relaxed), 0);
+        assert_eq!(c.stats().misses.load(Ordering::Relaxed), 0);
+    }
+
+    /// Property: against a reference model (hash map, unbounded), every
+    /// cache hit returns exactly the last value stored under that key.
+    #[test]
+    fn prop_hits_match_reference_model() {
+        check(
+            43,
+            200,
+            |r, _| {
+                (0..64)
+                    .map(|_| (r.next_range(24), r.next_f64() as f32, r.next_range(2) == 0))
+                    .collect::<Vec<(u64, f32, bool)>>()
+            },
+            |ops| {
+                let c = ShardedScoreCache::new(4096, 11);
+                let mut model: StdMap<u64, f32> = StdMap::new();
+                for &(key, val, is_put) in ops {
+                    if is_put {
+                        c.put_key(key, vec![val]);
+                        model.insert(key, val);
+                    } else if let Some(got) = c.peek(key) {
+                        // big capacity => nothing evicted; a hit must match
+                        if model.get(&key) != Some(&got[0]) {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -2,12 +2,24 @@
 //! registry — the server and batch evaluators run on this substrate).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A borrowed job for [`ThreadPool::scoped`]: may capture references into
+/// the caller's stack frame (the call blocks until every job finished).
+pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Completion tracking for one `scoped` call.
+struct ScopeSync {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
 
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
@@ -53,6 +65,55 @@ impl ThreadPool {
 
     pub fn queued(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Run borrowed jobs on the pool's persistent workers and block until
+    /// every one of them has finished — the replacement for per-batch
+    /// `std::thread::scope` spawns on the QE hot path (thread creation
+    /// per batch costs more than a small forward). Returns `false` when
+    /// any job panicked (the panic is contained to its worker; the worker
+    /// thread survives and keeps serving).
+    ///
+    /// Safety: the jobs' `'a` borrows are transmuted to `'static` to ride
+    /// the pool's queue; this is sound because this function does not
+    /// return until the completion counter reaches zero, which every job
+    /// wrapper decrements on ALL exit paths (normal return and unwind via
+    /// `catch_unwind`), so no borrowed data can be observed after the
+    /// borrow scope ends. Do not call from inside a pool job of the same
+    /// pool with fewer than 2 workers (the waiting job would starve the
+    /// queue) — the batch pool is only driven from engine/bench threads.
+    pub fn scoped(&self, jobs: Vec<ScopedJob<'_>>) -> bool {
+        if jobs.is_empty() {
+            return true;
+        }
+        let sync = Arc::new(ScopeSync {
+            remaining: Mutex::new(jobs.len()),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for job in jobs {
+            // lifetime erasure; see safety comment above
+            let job: Job = unsafe {
+                std::mem::transmute::<ScopedJob<'_>, Job>(job)
+            };
+            let s = sync.clone();
+            self.execute(move || {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    s.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut r = s.remaining.lock().unwrap();
+                *r -= 1;
+                if *r == 0 {
+                    s.cv.notify_all();
+                }
+            });
+        }
+        let mut r = sync.remaining.lock().unwrap();
+        while *r > 0 {
+            r = sync.cv.wait(r).unwrap();
+        }
+        drop(r);
+        !sync.panicked.load(Ordering::SeqCst)
     }
 
     /// Signal shutdown and wait for workers to finish remaining jobs.
@@ -175,6 +236,53 @@ mod tests {
         assert!(!pool.join_deadline(std::time::Duration::from_millis(50)));
         assert!(t0.elapsed() < std::time::Duration::from_secs(2));
         drop(tx); // unblock the detached worker so the process exits clean
+    }
+
+    #[test]
+    fn scoped_runs_borrowed_jobs_to_completion() {
+        let pool = ThreadPool::new(4);
+        let mut results = vec![0usize; 32];
+        {
+            let jobs: Vec<ScopedJob> = results
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    Box::new(move || {
+                        *slot = i * 2;
+                    }) as ScopedJob
+                })
+                .collect();
+            assert!(pool.scoped(jobs));
+        }
+        for (i, &r) in results.iter().enumerate() {
+            assert_eq!(r, i * 2);
+        }
+        // the pool survives and is reusable after a scoped batch
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scoped_reports_panics_and_keeps_workers_alive() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<ScopedJob> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("boom");
+                    }
+                }) as ScopedJob
+            })
+            .collect();
+        assert!(!pool.scoped(jobs), "a panicked job must be reported");
+        // workers survived the contained panic
+        let ok: Vec<ScopedJob> = (0..4).map(|_| Box::new(|| {}) as ScopedJob).collect();
+        assert!(pool.scoped(ok));
     }
 
     #[test]

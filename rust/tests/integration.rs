@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use ipr::coordinator::gating::GatingStrategy;
-use ipr::coordinator::{Router, RouterConfig};
+use ipr::coordinator::{BatchItem, Router, RouterConfig};
 use ipr::eval::arqgc::{bounded_arqgc, csr_at_quality, tau_sweep};
 use ipr::eval::baselines;
 use ipr::eval::dataset::{self, FamilyView};
@@ -142,6 +142,133 @@ fn qe_service_batches_concurrent_requests() {
         "no coalescing happened: {sizes:?}"
     );
     svc.shutdown();
+}
+
+/// §12 arena-reuse contract: repeated batched forwards through the same
+/// model reuse the per-thread scratch arenas and must produce
+/// bit-identical scores — including after interleaved calls of different
+/// batch shapes (stale buffer contents may never leak into results).
+#[test]
+fn arena_reuse_scores_bit_identical() {
+    let reg = registry();
+    let engine = create_engine().unwrap();
+    let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
+    let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();
+    let rows = dataset::load(&reg, "test", 24).unwrap();
+    let toks: Vec<Vec<u32>> = rows.iter().map(|r| r.tokens.clone()).collect();
+    let a = model.score_batch(&toks, "xla").unwrap();
+    for _ in 0..3 {
+        let b = model.score_batch(&toks, "xla").unwrap();
+        assert_eq!(a.scores.len(), b.scores.len());
+        for (ra, rb) in a.scores.iter().zip(&b.scores) {
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "arena reuse changed a score");
+            }
+        }
+    }
+    // a smaller batch in between grows/dirties the arenas differently —
+    // the full batch must still reproduce exactly
+    let _ = model.score_batch(&toks[..3], "xla").unwrap();
+    let _ = model.predict(std::slice::from_ref(&toks[0]), "xla").unwrap();
+    let c = model.score_batch(&toks, "xla").unwrap();
+    for (ra, rc) in a.scores.iter().zip(&c.scores) {
+        for (x, y) in ra.iter().zip(rc) {
+            assert_eq!(x.to_bits(), y.to_bits(), "stale arena contents leaked into a score");
+        }
+    }
+}
+
+/// Score-cache correctness at the router layer: a hit returns a
+/// byte-identical routed outcome, and the hit/miss counters + metrics
+/// lines reflect exactly one counted lookup per request.
+#[test]
+fn router_score_cache_hit_outcome_identical() {
+    let reg = registry();
+    let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
+    let rows = dataset::load(&reg, "test", 1).unwrap();
+    let miss = router.handle_tokens(&rows[0].tokens, Some(0.3), false, None).unwrap();
+    let hit = router.handle_tokens(&rows[0].tokens, Some(0.3), false, None).unwrap();
+    assert_eq!(miss.model_name, hit.model_name);
+    assert_eq!(miss.candidate_global, hit.candidate_global);
+    assert_eq!(miss.decision.chosen, hit.decision.chosen);
+    assert_eq!(miss.decision.threshold, hit.decision.threshold);
+    assert_eq!(miss.decision.feasible, hit.decision.feasible);
+    assert_eq!(miss.decision.fallback, hit.decision.fallback);
+    assert_eq!(miss.scores.len(), hit.scores.len());
+    for (a, b) in miss.scores.iter().zip(&hit.scores) {
+        assert_eq!(a.to_bits(), b.to_bits(), "cache hit must return byte-identical scores");
+    }
+    let (hits, misses) = router.qe.cache_stats();
+    assert_eq!((hits, misses), (1, 1));
+    let text = router.metrics.render();
+    assert!(text.contains("ipr_score_cache_hits_total 1"), "{text}");
+    assert!(text.contains("ipr_score_cache_misses_total 1"), "{text}");
+    router.qe.shutdown();
+}
+
+/// Disabled cache (`cache_cap: 0` / `--no-score-cache`): pure
+/// passthrough — identical results, nothing stored, nothing counted.
+#[test]
+fn router_disabled_cache_is_passthrough() {
+    let reg = registry();
+    let cfg = RouterConfig {
+        batcher: BatcherConfig { cache_cap: 0, ..BatcherConfig::default() },
+        ..RouterConfig::default()
+    };
+    let router = Router::new(reg.clone(), cfg).unwrap();
+    let rows = dataset::load(&reg, "test", 1).unwrap();
+    let a = router.handle_tokens(&rows[0].tokens, Some(0.3), false, None).unwrap();
+    let b = router.handle_tokens(&rows[0].tokens, Some(0.3), false, None).unwrap();
+    for (x, y) in a.scores.iter().zip(&b.scores) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert!(!router.qe.cache().enabled());
+    assert_eq!(router.qe.cache().len(), 0);
+    assert_eq!(router.qe.cache_stats(), (0, 0), "disabled cache must not count");
+    router.qe.shutdown();
+}
+
+/// `handle_batch` filters cache hits and forwards only misses — outcomes
+/// stay in input order and agree bit-for-bit with the single path.
+#[test]
+fn handle_batch_mixes_hits_and_misses() {
+    let reg = registry();
+    let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
+    let rows = dataset::load(&reg, "test", 6).unwrap();
+    // warm the first half into the cache through the single path
+    let singles: Vec<_> = rows
+        .iter()
+        .take(3)
+        .map(|r| router.handle_tokens(&r.tokens, Some(0.2), false, None).unwrap())
+        .collect();
+    let items: Vec<BatchItem> = rows
+        .iter()
+        .map(|r| BatchItem {
+            tokens: r.tokens.clone(),
+            tau: Some(0.2),
+            invoke: false,
+            identity: None,
+            tokenize_us: 0,
+            t_start: std::time::Instant::now(),
+            cache_key: None,
+        })
+        .collect();
+    let outs = router.handle_batch(&items).unwrap();
+    assert_eq!(outs.len(), 6);
+    for (s, o) in singles.iter().zip(&outs) {
+        assert_eq!(s.decision.chosen, o.decision.chosen);
+        for (x, y) in s.scores.iter().zip(&o.scores) {
+            assert_eq!(x.to_bits(), y.to_bits(), "batch hit diverged from single path");
+        }
+    }
+    // the miss half is now cached; re-routing must agree with the batch
+    for (r, o) in rows.iter().zip(&outs).skip(3) {
+        let again = router.handle_tokens(&r.tokens, Some(0.2), false, None).unwrap();
+        for (x, y) in again.scores.iter().zip(&o.scores) {
+            assert_eq!(x.to_bits(), y.to_bits(), "batch miss diverged from single path");
+        }
+    }
+    router.qe.shutdown();
 }
 
 #[test]
