@@ -1,0 +1,144 @@
+"""Golden digests for the rust workload generator (cross-language check).
+
+This is a 1:1 mirror of ``rust/src/workload/mod.rs`` — ``generate`` +
+``stream_digest`` — built on the bit-exact SplitMix64 / SynthWorld port in
+``compile/synth.py``. The workload generator deliberately uses only f64
+``+ - * /`` and integer arithmetic (no libm transcendentals), so python
+and rust produce bit-identical request streams; the digests printed here
+are hard-coded as golden snapshots in ``rust/tests/workload.rs``.
+
+Run from ``python/``:  python3 tools/workload_golden.py
+(or from the repo root: python3 python/tools/workload_golden.py)
+
+Only needed when the generator contract or the presets change — the
+goldens are checked in, cargo test never runs python.
+"""
+
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+from compile import synth as S
+
+MASK64 = S.MASK64
+DIGEST_SALT = S.GOLDEN
+STREAM_ARRIVAL = 101
+STREAM_REQ = 102
+SPLIT_LIVE = 9
+
+# Golden-test parameters (mirrored in rust/tests/workload.rs).
+GOLDEN_SEED = 7
+GOLDEN_REQUESTS = 64
+
+# The four shipped presets — field-for-field mirror of
+# rust/src/workload/mod.rs::preset().
+#   (name, base_rps, burst_rps, burst_len, hot_set, hot_frac,
+#    stretch_frac, stretch_target, tenants[(weight, tau_lo, tau_hi)],
+#    invoke_frac)
+PRESETS = [
+    ("uniform", 400.0, 400.0, 0, 0, 0.0, 0.0, 0, [(1.0, 0.1, 0.6)], 0.25),
+    ("bursty", 150.0, 1200.0, 32, 0, 0.0, 0.06, 320, [(1.0, 0.2, 0.5)], 0.2),
+    ("hot_keys", 800.0, 800.0, 0, 32, 0.75, 0.0, 0, [(1.0, 0.1, 0.4)], 0.2),
+    (
+        "mixed_tau", 600.0, 600.0, 0, 16, 0.3, 0.0, 0,
+        [(0.25, 0.0, 0.1), (0.5, 0.2, 0.5), (0.25, 0.7, 1.0)], 0.3,
+    ),
+]
+
+
+def f64_bits(x: float) -> int:
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def fold(h: int, x: int) -> int:
+    return S.mix64((h ^ ((x + DIGEST_SALT) & MASK64)) & MASK64)
+
+
+def zipf_draw(r: S.Rng, n: int) -> int:
+    total = 0.0
+    for k in range(n):
+        total += 1.0 / (k + 1.0)
+    draw = r.next_f64() * total
+    acc = 0.0
+    for k in range(n):
+        acc += 1.0 / (k + 1.0)
+        if draw < acc:
+            return k
+    return n - 1
+
+
+def pick_tenant(r: S.Rng, tenants, total_w: float) -> int:
+    draw = r.next_f64() * total_w
+    acc = 0.0
+    for i, t in enumerate(tenants):
+        acc += t[0]
+        if draw < acc:
+            return i
+    return len(tenants) - 1
+
+
+def generate(world: S.SynthWorld, preset, seed: int):
+    (_name, base_rps, burst_rps, burst_len, hot_set, hot_frac,
+     stretch_frac, stretch_target, tenants, invoke_frac) = preset
+    total_w = 0.0
+    for t in tenants:
+        total_w += t[0]
+    arr = S.Rng(S.substream(seed, STREAM_ARRIVAL, 0))
+    t_us = 0
+    reqs = []
+    for i in range(GOLDEN_REQUESTS):
+        in_burst = burst_len > 0 and (i // burst_len) % 2 == 1
+        rate = burst_rps if in_burst else base_rps
+        gap_us = int(arr.next_f64() * 2.0e6 / rate)
+        t_us = (t_us + gap_us) & MASK64
+        r = S.Rng(S.substream(seed, STREAM_REQ, i))
+        hot_draw = r.next_f64()
+        is_hot = hot_set > 0 and hot_draw < hot_frac
+        index = zipf_draw(r, hot_set) if is_hot else hot_set + i
+        tenant = pick_tenant(r, tenants, total_w)
+        _w, lo, hi = tenants[tenant]
+        tau = lo + (hi - lo) * r.next_f64()
+        invoke = r.next_f64() < invoke_frac
+        stretched = r.next_f64() < stretch_frac
+        p = world.sample_prompt(SPLIT_LIVE, index)
+        tokens = list(p.tokens)
+        if stretched:
+            while len(tokens) < stretch_target:
+                tokens.extend(p.tokens)
+        reqs.append((index, t_us, tau, tenant, invoke, tokens))
+    return reqs
+
+
+def stream_digest(name: str, seed: int, reqs) -> int:
+    h = S.mix64((seed ^ len(reqs)) & MASK64)
+    for b in name.encode():
+        h = fold(h, b)
+    for (index, t_us, tau, tenant, invoke, tokens) in reqs:
+        h = fold(h, t_us)
+        h = fold(h, index)
+        h = fold(h, f64_bits(tau))
+        h = fold(h, tenant)
+        h = fold(h, 1 if invoke else 0)
+        h = fold(h, len(tokens))
+        for t in tokens:
+            h = fold(h, t)
+    return h
+
+
+def main():
+    world = S.SynthWorld()  # default seed 20250710 == rust SynthWorld::default()
+    print(f"# workload goldens: seed={GOLDEN_SEED} requests={GOLDEN_REQUESTS}")
+    print("# (name, stream_digest, token_total, invoked)")
+    for preset in PRESETS:
+        name = preset[0]
+        reqs = generate(world, preset, GOLDEN_SEED)
+        d = stream_digest(name, GOLDEN_SEED, reqs)
+        token_total = sum(len(q[5]) for q in reqs)
+        invoked = sum(1 for q in reqs if q[4])
+        print(f'("{name}", {d:#018x}, {token_total}, {invoked}),')
+
+
+if __name__ == "__main__":
+    main()

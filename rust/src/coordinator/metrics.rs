@@ -104,6 +104,17 @@ impl Metrics {
             out.push_str(&format!("ipr_score_cache_entries {}\n", cache.len()));
             out.push_str(&format!("ipr_score_cache_hit_ratio {:.4}\n", s.hit_ratio()));
         }
+        // Accumulated simulated spend vs the always-strongest
+        // counterfactual — the numbers behind ipr_live_csr, needed by
+        // workload drivers (ipr loadgen) metering cost externally.
+        out.push_str(&format!(
+            "ipr_spend_usd {:.6}\n",
+            self.spend_microusd.load(Ordering::Relaxed) as f64 / 1e6
+        ));
+        out.push_str(&format!(
+            "ipr_spend_strongest_usd {:.6}\n",
+            self.spend_best_microusd.load(Ordering::Relaxed) as f64 / 1e6
+        ));
         out.push_str(&format!("ipr_live_csr {:.4}\n", self.live_csr()));
         out
     }

@@ -12,4 +12,4 @@ pub mod metrics;
 pub mod router;
 
 pub use gating::{route_decision, GatingStrategy, RouteDecision};
-pub use router::{BatchItem, Router, RouterConfig, RouteOutcome};
+pub use router::{validate_tau, BatchItem, Router, RouterConfig, RouteOutcome};

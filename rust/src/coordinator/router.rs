@@ -8,8 +8,8 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::anyhow;
 use crate::backends::{Backend, InvokeResult};
+use crate::{anyhow, bail};
 use crate::util::error::Result;
 use crate::coordinator::gating::{route_decision, GatingStrategy, RouteDecision};
 use crate::coordinator::metrics::Metrics;
@@ -46,6 +46,20 @@ impl Default for RouterConfig {
             time_scale: 0.0,
         }
     }
+}
+
+/// Validate a request-supplied tolerance: τ is the user's quality-cost
+/// contract, so a non-finite or out-of-`[0, 1]` value is a caller error —
+/// it must be rejected (the server maps this to a 400), never silently
+/// clamped and routed with. `None` (use the router default) passes
+/// through.
+pub fn validate_tau(tau: Option<f64>) -> Result<Option<f64>> {
+    if let Some(t) = tau {
+        if !t.is_finite() || !(0.0..=1.0).contains(&t) {
+            bail!("tau must be a finite number in [0, 1], got {t}");
+        }
+    }
+    Ok(tau)
 }
 
 /// One pre-tokenized request inside a batched routing call
@@ -327,7 +341,9 @@ impl Router {
         qe_us: u64,
         t_start: Instant,
     ) -> Result<RouteOutcome> {
-        let tau = tau.unwrap_or(self.cfg.tau_default);
+        // Library callers reach `finish` without passing the server's
+        // boundary check, so the τ contract is enforced here too.
+        let tau = validate_tau(tau)?.unwrap_or(self.cfg.tau_default);
 
         let t2 = Instant::now();
         let decision = route_decision(&scores, &self.costs, tau, self.cfg.strategy, self.cfg.delta);
@@ -373,5 +389,37 @@ impl Router {
             total_us,
             invoke: inv,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_tau_accepts_the_contract_range() {
+        for ok in [0.0, 0.25, 0.5, 1.0] {
+            assert_eq!(validate_tau(Some(ok)).unwrap(), Some(ok));
+        }
+        assert_eq!(validate_tau(None).unwrap(), None);
+    }
+
+    #[test]
+    fn validate_tau_rejects_out_of_range_and_non_finite() {
+        for bad in [
+            -0.0001,
+            1.0001,
+            1.5,
+            -3.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ] {
+            let err = validate_tau(Some(bad)).unwrap_err();
+            assert!(
+                format!("{err}").contains("tau must be a finite number in [0, 1]"),
+                "unexpected message for {bad}: {err}"
+            );
+        }
     }
 }

@@ -21,7 +21,7 @@ use crate::qe::BatcherConfig;
 use crate::registry::Registry;
 use crate::runtime::reference::{matmul, Epilogue, PackedGemm};
 use crate::runtime::{create_engine, Engine as _, QeModel as _};
-use crate::synth::{SynthWorld, SPLIT_LIVE};
+use crate::testkit::live_prompts;
 use crate::util::bench::Table;
 use crate::util::error::{Context, Result};
 use crate::util::hist::Histogram;
@@ -40,12 +40,6 @@ pub struct BatchArm {
     pub prompts_per_s: f64,
     /// Throughput vs the `predict` batch-1 baseline.
     pub speedup: f64,
-}
-
-/// Deterministic ragged workload: the first `n` live-split prompts.
-fn workload(reg: &Registry, n: usize) -> Vec<Vec<u32>> {
-    let world = SynthWorld::new(reg.world_seed);
-    (0..n as u64).map(|i| world.sample_prompt(SPLIT_LIVE, i).tokens).collect()
 }
 
 /// Batched-vs-unbatched QE throughput on this build's engine.
@@ -67,7 +61,7 @@ pub fn batched_qe_bench(
     let engine = create_engine()?;
     let entry = reg.family_qe("claude", "stella_sim")?.clone();
     let model = engine.load_model(&reg, &entry, &["xla"])?;
-    let prompts = workload(&reg, n_prompts);
+    let prompts = live_prompts(&reg, n_prompts);
 
     // Warm both paths (first-call page-in, artifact mmap, thread spawn).
     let _ = model.predict(std::slice::from_ref(&prompts[0]), "xla")?;
@@ -165,7 +159,7 @@ pub fn routing_bench(artifacts: &str, n_requests: usize) -> Result<Json> {
         ..RouterConfig::default()
     };
     let router = Router::new(reg.clone(), cfg)?;
-    let prompts = workload(&reg, n_requests);
+    let prompts = live_prompts(&reg, n_requests);
     let _ = router.handle_tokens(&prompts[0], Some(0.2), false, None)?;
     let mut h = Histogram::new();
     let t0 = Instant::now();
@@ -221,7 +215,7 @@ pub fn kernels_bench(artifacts: &str, smoke: bool) -> Result<Json> {
     let entry = reg.family_qe("claude", "stella_sim")?.clone();
     let model = engine.load_model(&reg, &entry, &["xla"])?;
     let n_rows = if smoke { 128 } else { 512 };
-    let prompts = workload(&reg, n_rows);
+    let prompts = live_prompts(&reg, n_rows);
     let _ = model.score_batch(&prompts[..prompts.len().min(64)], "xla")?; // warm
     let t0 = Instant::now();
     for chunk in prompts.chunks(64) {

@@ -42,6 +42,11 @@
 //!   `/metrics`).
 //! * [`eval`] — metrics (MAE, Top-K, Bounded-ARQGC, CSR), baselines and
 //!   the per-table/figure reproduction harness.
+//! * [`workload`] — deterministic workload simulation: seeded arrival
+//!   processes, hot-key skew, heavy-tail lengths, mixed-τ tenant
+//!   populations, plus the `ipr loadgen` closed/open-loop driver.
+//! * [`testkit`] — shared in-process fixtures (server builder, workload
+//!   presets, golden loaders, snapshot assertions) for tests and benches.
 
 // The numeric kernels and parity ports are written with explicit index
 // loops on purpose (loop order IS the f32 accumulation contract — see
@@ -63,5 +68,7 @@ pub mod registry;
 pub mod runtime;
 pub mod server;
 pub mod synth;
+pub mod testkit;
 pub mod tokenizer;
 pub mod util;
+pub mod workload;

@@ -7,6 +7,10 @@
 //! * `bench`         — batched-QE + routing-latency benches → BENCH_*.json
 //!                     (the CI bench-regression job runs this in --smoke
 //!                     mode against `ci/bench_baseline.json`).
+//! * `loadgen`       — deterministic workload simulation against the real
+//!                     server → BENCH_workloads.json (per-scenario routed
+//!                     p50/p95/p99, throughput, cache hit rate, mean cost,
+//!                     quality parity; seeded, bit-reproducible streams).
 //! * `registry`      — show candidates, prices and deployable QE models.
 //! * `parity`        — golden-file + pallas-vs-xla numerical parity checks.
 //! * `gen-workload`  — print synthetic traffic (text + identity fields).
@@ -25,8 +29,13 @@ use ipr::runtime::{create_engine, Engine as _, QeModel as _};
 use ipr::server::{Server, ServerConfig};
 use ipr::synth::SynthWorld;
 use ipr::util::cli::Args;
+use ipr::util::bench::Table;
 use ipr::util::error::{Context, Result};
 use ipr::util::json::Json;
+use ipr::workload;
+use ipr::workload::loadgen::{
+    check_workloads_regression, run_scenario, workloads_json, LoadgenOptions,
+};
 use ipr::{anyhow, bail};
 
 fn main() {
@@ -52,6 +61,11 @@ USAGE:
               [--prompts N] [--repeats N] [--route-requests N]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
+  ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|all] [--seed 7]
+              [--requests N] [--clients N] [--smoke] [--time-scale 0]
+              [--out BENCH_workloads.json] [--artifacts DIR]
+              [--baseline ci/bench_baseline.json] [--max-regress 1.25]
+              [--write-baseline PATH]
   ipr registry [--artifacts DIR]
   ipr parity  [--artifacts DIR]
   ipr gen-workload [--n 10]
@@ -65,6 +79,7 @@ fn run() -> Result<()> {
         "route" => cmd_route(&args),
         "eval" => cmd_eval(&args),
         "bench" => cmd_bench(&args),
+        "loadgen" => cmd_loadgen(&args),
         "registry" => cmd_registry(&args),
         "parity" => cmd_parity(&args),
         "gen-workload" => cmd_gen_workload(&args),
@@ -204,6 +219,107 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let msg = check_routing_regression(&routing, b, ratio)?;
         println!("{msg}");
         let msg = check_kernels_regression(&kernels, b, ratio)?;
+        println!("{msg}");
+    }
+    Ok(())
+}
+
+/// `ipr loadgen`: drive the real HTTP server with seeded workload
+/// scenarios (closed/open-loop client pools over real sockets), write
+/// `BENCH_workloads.json`, and optionally gate routed p95 against the
+/// checked-in baseline (the CI bench-regression job runs this with
+/// `--smoke`).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let seed = args.usize_or("seed", 7)? as u64;
+    let requests = args.usize_or("requests", if smoke { 120 } else { 600 })?;
+    let which = args.get_or("scenario", "all").to_string();
+    let out = args.get_or("out", "BENCH_workloads.json").to_string();
+    let opts = LoadgenOptions {
+        artifacts: artifacts_dir(args),
+        seed,
+        clients: args.usize_or("clients", 0)?,
+        time_scale: args.f64_or("time-scale", 0.0)?,
+    };
+    let scenarios = if which == "all" {
+        workload::presets(requests)
+    } else {
+        vec![workload::preset(&which, requests).ok_or_else(|| {
+            anyhow!(
+                "unknown scenario '{which}' (have: {} or 'all')",
+                workload::PRESET_NAMES.join(", ")
+            )
+        })?]
+    };
+
+    let mut reports = Vec::with_capacity(scenarios.len());
+    let mut t = Table::new(
+        "Workload simulation — seeded scenarios against the real server",
+        &[
+            "scenario", "reqs", "clients", "loop", "req/s", "p50 (us)", "p95 (us)", "p99 (us)",
+            "cache hit", "mean $(1k)", "parity", "err",
+        ],
+    );
+    for sc in &scenarios {
+        let r = run_scenario(&opts, sc)?;
+        println!(
+            "{}: stream {:#018x}  decisions {:#018x}",
+            r.name, r.stream_digest, r.decision_digest
+        );
+        t.row(vec![
+            r.name.clone(),
+            r.requests.to_string(),
+            r.clients.to_string(),
+            if r.open_loop { "open".into() } else { "closed".into() },
+            format!("{:.0}", r.req_per_s),
+            format!("{:.1}", r.p50_us),
+            format!("{:.1}", r.p95_us),
+            format!("{:.1}", r.p99_us),
+            format!("{:.1}%", r.cache_hit_rate * 100.0),
+            r.mean_cost_usd.map(|c| format!("{:.4}", c * 1000.0)).unwrap_or_else(|| "-".into()),
+            r.quality_parity.map(|q| format!("{:.3}", q)).unwrap_or_else(|| "-".into()),
+            r.errors.to_string(),
+        ]);
+        reports.push(r);
+    }
+    t.print();
+
+    let doc = workloads_json(seed, &reports);
+    std::fs::write(&out, doc.to_string()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+
+    if let Some(bp) = args.get("write-baseline") {
+        // The stored ceiling gates EVERY scenario, so it must be measured
+        // from a full run — a partial run (e.g. uniform only) would
+        // record an unrepresentatively low p95 and fail the next full CI
+        // run spuriously.
+        if which != "all" {
+            bail!(
+                "--write-baseline requires a full run: the p95 ceiling gates every \
+                 scenario, but only '{which}' ran (drop --scenario or use 'all')"
+            );
+        }
+        // Merge into the existing baseline (the bench subcommand owns the
+        // routing/kernel fields) rather than clobbering it.
+        let worst_p95 = reports.iter().map(|r| r.p95_us).fold(0.0f64, f64::max);
+        let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(bp) {
+            Ok(text) => ipr::util::json::parse(&text)?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            Err(_) => vec![("schema".to_string(), Json::str("ipr-bench-baseline/v3"))],
+        };
+        pairs.retain(|(k, _)| k != "loadgen_routed_p95_us" && k != "schema");
+        pairs.push(("schema".to_string(), Json::str("ipr-bench-baseline/v3")));
+        pairs.push(("loadgen_routed_p95_us".to_string(), Json::Num(worst_p95)));
+        let base_doc = Json::Obj(pairs.into_iter().collect());
+        std::fs::write(bp, base_doc.to_string()).with_context(|| format!("writing {bp}"))?;
+        println!("wrote baseline {bp} (loadgen_routed_p95_us {worst_p95:.1})");
+    }
+    if let Some(b) = args.get("baseline") {
+        let ratio = args.f64_or("max-regress", 1.25)?;
+        let msg = check_workloads_regression(&doc, b, ratio)?;
         println!("{msg}");
     }
     Ok(())

@@ -28,12 +28,17 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{BatchItem, RouteOutcome, Router};
+use crate::coordinator::{validate_tau, BatchItem, RouteOutcome, Router};
 use crate::tokenizer;
 use crate::util::error::{Context, Result};
 use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 use crate::{anyhow, bail};
+
+/// Request bodies past this size are rejected with `413 Payload Too
+/// Large` *before* the body buffer is allocated — a hostile
+/// Content-Length header must not drive an allocation.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
 
 /// Server tuning knobs; `Server::start` uses the defaults with the
 /// micro-batch size mirroring the router's QE batcher.
@@ -394,6 +399,22 @@ fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
                 keep_alive = false;
             }
         }
+        // Oversized-body guard: refuse before allocating. The unread
+        // body would desynchronize the connection, so this response
+        // always closes it.
+        if content_len > MAX_BODY_BYTES {
+            let msg = format!(
+                "{{\"error\": \"body of {content_len} bytes exceeds the {MAX_BODY_BYTES}-byte limit\"}}"
+            );
+            let mut out = stream.try_clone()?;
+            write!(
+                out,
+                "HTTP/1.1 413 Payload Too Large\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{msg}",
+                msg.len(),
+            )?;
+            out.flush()?;
+            return Ok(());
+        }
         let mut body = vec![0u8; content_len];
         reader.read_exact(&mut body)?;
         let body = String::from_utf8_lossy(&body).to_string();
@@ -464,7 +485,9 @@ fn handle_route(
     if prompt.is_empty() {
         bail!("empty prompt");
     }
-    let tau = j.get("tau").map(|v| v.as_f64()).transpose()?;
+    // Boundary validation: a non-finite or out-of-[0,1] τ is a client
+    // error (400), never something to silently clamp and route with.
+    let tau = validate_tau(j.get("tau").map(|v| v.as_f64()).transpose()?)?;
     let invoke = force_invoke
         || j.get("invoke").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
     let identity = match (j.get("split"), j.get("index")) {
@@ -614,29 +637,143 @@ impl HttpClient {
             body.len()
         )?;
         let mut reader = BufReader::new(stream);
-        let mut status_line = String::new();
-        reader.read_line(&mut status_line)?;
-        let status: u16 = status_line
-            .split_whitespace()
-            .nth(1)
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| anyhow!("bad status line: {status_line:?}"))?;
-        let mut content_len = 0usize;
-        loop {
-            let mut h = String::new();
-            if reader.read_line(&mut h)? == 0 {
-                break;
+        let (status, body, _close) = read_response(&mut reader)?;
+        Ok((status, body))
+    }
+}
+
+/// Read one HTTP/1.1 response (status, body, server-asked-to-close) from
+/// a buffered stream. Shared by [`HttpClient`], [`KeepAliveClient`] and
+/// the testkit's raw-socket escape hatch.
+pub(crate) fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(u16, String, bool)> {
+    let mut status_line = String::new();
+    if reader.read_line(&mut status_line)? == 0 {
+        bail!("connection closed before a response");
+    }
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line: {status_line:?}"))?;
+    let mut content_len = 0usize;
+    let mut close = false;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        let lower = t.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+        if lower.starts_with("connection:") && lower.contains("close") {
+            close = true;
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).to_string(), close))
+}
+
+/// Persistent-connection HTTP client: one TCP connection reused across
+/// requests (`Connection: keep-alive`). This is what the loadgen client
+/// pool and the keep-alive e2e tests drive; `reconnects()` exposes how
+/// often the connection had to be re-established (0 across an error
+/// response proves the server kept the connection alive).
+///
+/// Retry rule: a failed attempt on a pooled connection is retried ONCE
+/// on a fresh connection **only when the request provably never reached
+/// the server** (the write/flush itself failed). A failure after the
+/// request was flushed is surfaced instead — the server may already have
+/// processed it, and blindly replaying a `/v1/invoke` would double-meter
+/// spend and skew exactly the cost numbers the workload harness exists
+/// to measure.
+pub struct KeepAliveClient {
+    addr: String,
+    conn: Option<(TcpStream, BufReader<TcpStream>)>,
+    reconnects: usize,
+}
+
+impl KeepAliveClient {
+    pub fn new(addr: &str) -> KeepAliveClient {
+        KeepAliveClient { addr: addr.to_string(), conn: None, reconnects: 0 }
+    }
+
+    /// Times the connection was (re-)established after the first.
+    pub fn reconnects(&self) -> usize {
+        self.reconnects
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request("POST", path, body)
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
+        self.request("GET", path, "")
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let had_conn = self.conn.is_some();
+        let (delivered, res) = self.try_request(method, path, body);
+        match res {
+            Ok(out) => Ok(out),
+            // Safe retry: the pooled connection died before the request
+            // was flushed, so the server cannot have processed it.
+            Err(_) if had_conn && !delivered => {
+                self.reconnects += 1;
+                self.try_request(method, path, body).1
             }
-            let t = h.trim_end();
-            if t.is_empty() {
-                break;
-            }
-            if let Some(v) = t.to_ascii_lowercase().strip_prefix("content-length:") {
-                content_len = v.trim().parse().unwrap_or(0);
+            Err(e) => Err(e),
+        }
+    }
+
+    fn connect(&mut self) -> Result<()> {
+        let s = TcpStream::connect(&self.addr)?;
+        s.set_nodelay(true).ok();
+        let r = BufReader::new(s.try_clone()?);
+        self.conn = Some((s, r));
+        Ok(())
+    }
+
+    /// One attempt. The bool reports whether the request was fully
+    /// written + flushed (⇒ the server may have seen it ⇒ NOT safe to
+    /// replay non-idempotent traffic).
+    fn try_request(&mut self, method: &str, path: &str, body: &str) -> (bool, Result<(u16, String)>) {
+        let addr = self.addr.clone();
+        if self.conn.is_none() {
+            if let Err(e) = self.connect() {
+                return (false, Err(e));
             }
         }
-        let mut body = vec![0u8; content_len];
-        reader.read_exact(&mut body)?;
-        Ok((status, String::from_utf8_lossy(&body).to_string()))
+        let (w, r) = self.conn.as_mut().unwrap();
+        let wrote = (|| -> Result<()> {
+            write!(
+                w,
+                "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+                body.len()
+            )?;
+            w.flush()?;
+            Ok(())
+        })();
+        if let Err(e) = wrote {
+            self.conn = None;
+            return (false, Err(e));
+        }
+        match read_response(r) {
+            Ok((status, body, close)) => {
+                if close {
+                    self.conn = None;
+                }
+                (true, Ok((status, body)))
+            }
+            Err(e) => {
+                self.conn = None;
+                (true, Err(e))
+            }
+        }
     }
 }

@@ -1,0 +1,211 @@
+//! Shared in-process test/bench kit (DESIGN.md §13).
+//!
+//! Before this module, every integration test, e2e test and bench
+//! hand-rolled the same setup: load-or-generate the reference artifacts,
+//! build a `Router`, start a `Server` on an ephemeral port, make a
+//! client. That boilerplate is now one line —
+//!
+//! ```ignore
+//! let fx = testkit::ServerFixture::start();               // defaults
+//! let fx = testkit::FixtureBuilder::new()                 // tuned
+//!     .router(|c| c.tau_default = 0.3)
+//!     .server(|c| c.workers = 8)
+//!     .start();
+//! ```
+//!
+//! — so every future PR gets cluster-style e2e scenarios for free. The
+//! kit also carries the shared deterministic workload helpers
+//! ([`live_prompts`], re-exported scenario [`presets`]), artifact/golden
+//! loaders, a raw-socket escape hatch for protocol-level tests
+//! ([`raw_request`]), and the golden-snapshot assertion used by
+//! `rust/tests/workload.rs`.
+//!
+//! This is a first-class module (like [`crate::util::minitest`]) rather
+//! than a `#[cfg(test)]` item so integration tests, benches AND
+//! `eval::bench_pipeline` all build on the same fixtures.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use crate::coordinator::{Router, RouterConfig};
+use crate::registry::Registry;
+use crate::server::{HttpClient, KeepAliveClient, Server, ServerConfig};
+use crate::synth::{SynthWorld, SPLIT_LIVE};
+use crate::util::error::{Context, Result};
+use crate::util::json::{parse, Json};
+
+pub use crate::workload::{preset, presets, PRESET_NAMES};
+
+/// Load the real artifact set when `make artifacts` has been run, else
+/// fall back to the self-generated reference artifacts — the shared
+/// "no silent skips" entry point every test used to spell by hand.
+pub fn registry() -> Arc<Registry> {
+    Arc::new(
+        Registry::load_or_reference("artifacts")
+            .expect("real or reference artifacts must load"),
+    )
+}
+
+/// The first `n` live-split prompts under the registry's world seed: the
+/// deterministic ragged workload shared by benches and tests (every
+/// machine measures the exact same prompts).
+pub fn live_prompts(reg: &Registry, n: usize) -> Vec<Vec<u32>> {
+    let world = SynthWorld::new(reg.world_seed);
+    (0..n as u64).map(|i| world.sample_prompt(SPLIT_LIVE, i).tokens).collect()
+}
+
+/// Parse the checked-in golden-parity artifact (`data/golden_parity.json`)
+/// of an artifact set: the python-side prompt/reward dump the parity
+/// tests re-derive bit-exactly.
+pub fn golden_parity_doc(reg: &Registry) -> Result<Json> {
+    let path = reg.abs("data/golden_parity.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&text)
+}
+
+/// Golden-snapshot assertion with a regeneration hint: used for the
+/// python-mirrored workload digests (and any future cross-language
+/// goldens).
+#[track_caller]
+pub fn assert_snapshot(name: &str, got: u64, want: u64) {
+    assert_eq!(
+        got, want,
+        "golden snapshot '{name}' drifted: got {got:#018x}, want {want:#018x} \
+         (if the generator contract changed intentionally, regenerate with \
+         `python3 python/tools/workload_golden.py` and update the golden constants)"
+    );
+}
+
+/// Builder for a full in-process serving stack.
+pub struct FixtureBuilder {
+    artifacts: String,
+    router_cfg: RouterConfig,
+    server_cfg: ServerConfig,
+}
+
+impl Default for FixtureBuilder {
+    fn default() -> Self {
+        FixtureBuilder {
+            artifacts: "artifacts".into(),
+            router_cfg: RouterConfig::default(),
+            server_cfg: ServerConfig { workers: 2, ..ServerConfig::default() },
+        }
+    }
+}
+
+impl FixtureBuilder {
+    pub fn new() -> FixtureBuilder {
+        FixtureBuilder::default()
+    }
+
+    /// Artifact directory (defaults to `artifacts`, with the reference
+    /// fallback).
+    pub fn artifacts(mut self, dir: &str) -> FixtureBuilder {
+        self.artifacts = dir.to_string();
+        self
+    }
+
+    /// Tweak the router config in place.
+    pub fn router(mut self, f: impl FnOnce(&mut RouterConfig)) -> FixtureBuilder {
+        f(&mut self.router_cfg);
+        self
+    }
+
+    /// Tweak the server config in place.
+    pub fn server(mut self, f: impl FnOnce(&mut ServerConfig)) -> FixtureBuilder {
+        f(&mut self.server_cfg);
+        self
+    }
+
+    /// Build the registry + router and bind the server on an ephemeral
+    /// port. Panics on failure (fixtures are test substrate; a broken
+    /// fixture should fail loudly, not be handled).
+    pub fn start(self) -> ServerFixture {
+        self.try_start().expect("server fixture must start")
+    }
+
+    pub fn try_start(self) -> Result<ServerFixture> {
+        let reg = Arc::new(Registry::load_or_reference(self.artifacts.as_str())?);
+        let router = Arc::new(Router::new(reg, self.router_cfg)?);
+        let server = Server::start_with(router.clone(), "127.0.0.1:0", self.server_cfg)?;
+        let addr = server.addr.clone();
+        Ok(ServerFixture { server: Some(server), router, addr })
+    }
+}
+
+/// A running in-process server plus everything a test wants to poke it
+/// with. Dropping the fixture tears the stack down (bounded, via the
+/// server's drain-deadline teardown); call [`ServerFixture::stop`] for
+/// the explicit graceful path.
+pub struct ServerFixture {
+    server: Option<Server>,
+    pub router: Arc<Router>,
+    pub addr: String,
+}
+
+impl ServerFixture {
+    /// Default stack: reference artifacts, default router, 2 workers.
+    pub fn start() -> ServerFixture {
+        FixtureBuilder::new().start()
+    }
+
+    /// One-shot-connection client (`Connection: close` per request).
+    pub fn client(&self) -> HttpClient {
+        HttpClient::new(&self.addr)
+    }
+
+    /// Persistent-connection client (keep-alive across requests).
+    pub fn keep_alive_client(&self) -> KeepAliveClient {
+        KeepAliveClient::new(&self.addr)
+    }
+
+    /// The SynthWorld this stack routes under (realized-quality oracle).
+    pub fn world(&self) -> SynthWorld {
+        SynthWorld::new(self.router.registry.world_seed)
+    }
+
+    /// Realized server-side micro-batch sizes so far.
+    pub fn micro_batch_sizes(&self) -> Vec<usize> {
+        self.server.as_ref().map(|s| s.micro_batch_sizes()).unwrap_or_default()
+    }
+
+    /// Write raw bytes to a fresh connection and read one HTTP response —
+    /// the escape hatch for protocol-level tests (malformed framing,
+    /// hostile headers) that no well-formed client can express.
+    pub fn raw(&self, bytes: &[u8]) -> Result<(u16, String)> {
+        raw_request(&self.addr, bytes)
+    }
+
+    /// Graceful stop: drain the server, then shut the QE engine thread.
+    pub fn stop(mut self) {
+        if let Some(s) = self.server.take() {
+            s.stop();
+        }
+        self.router.qe.shutdown();
+    }
+}
+
+impl Drop for ServerFixture {
+    fn drop(&mut self) {
+        // `Server`'s own Drop force-closes connections; shutting the QE
+        // engine here keeps dropped fixtures from leaking engine threads.
+        self.server.take();
+        self.router.qe.shutdown();
+    }
+}
+
+/// Send raw bytes over a fresh TCP connection and parse one HTTP/1.1
+/// response (status, body) — with the same response parser the real
+/// clients use (`server::read_response`), so protocol tests can never
+/// drift from the clients under test.
+pub fn raw_request(addr: &str, bytes: &[u8]) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    stream.write_all(bytes)?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (status, body, _close) = crate::server::read_response(&mut reader)?;
+    Ok((status, body))
+}

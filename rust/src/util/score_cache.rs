@@ -370,6 +370,76 @@ mod tests {
         assert_eq!(c.stats().misses.load(Ordering::Relaxed), 0);
     }
 
+    /// Concurrency stress: N threads hammering overlapping keys through
+    /// the counted `lookup` path. The stats contract must survive
+    /// contention exactly — hits + misses == total counted lookups —
+    /// and a hit may only ever return a value some thread stored.
+    #[test]
+    fn concurrent_stress_stats_exact_under_contention() {
+        use crate::util::rng::Rng;
+        const THREADS: u64 = 8;
+        const LOOKUPS: u64 = 2000;
+        // 64 distinct token keys shared by all threads: heavy overlap,
+        // well under capacity so nothing is ever evicted.
+        let c = ShardedScoreCache::new(1024, 77);
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let c = &c;
+                s.spawn(move || {
+                    let mut r = Rng::new(1000 + t);
+                    for _ in 0..LOOKUPS {
+                        let tokens = [r.next_range(64) as u32];
+                        let (key, hit) = c.lookup(&tokens);
+                        match hit {
+                            // Values are keyed by token id: any hit must
+                            // carry the token it was stored under.
+                            Some(v) => assert_eq!(v[0], tokens[0] as f32),
+                            None => c.put_key(key, vec![tokens[0] as f32]),
+                        }
+                    }
+                });
+            }
+        });
+        let st = c.stats();
+        let hits = st.hits.load(Ordering::Relaxed);
+        let misses = st.misses.load(Ordering::Relaxed);
+        assert_eq!(
+            hits + misses,
+            THREADS * LOOKUPS,
+            "counted lookups must balance exactly: {hits} + {misses}"
+        );
+        assert_eq!(st.evictions.load(Ordering::Relaxed), 0, "64 keys never evict at cap 1024");
+        assert!(c.len() <= 64, "at most one entry per distinct key: {}", c.len());
+        assert!(hits > misses, "overlapping keys must mostly hit");
+    }
+
+    /// Concurrent inserts below capacity are never lost: every entry
+    /// written by any thread is present afterwards with its exact value.
+    #[test]
+    fn concurrent_inserts_below_capacity_not_lost() {
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 64;
+        let c = ShardedScoreCache::new(4096, 5);
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        c.put_key(t * 1000 + i, vec![(t * PER_THREAD + i) as f32]);
+                    }
+                });
+            }
+        });
+        for t in 0..THREADS {
+            for i in 0..PER_THREAD {
+                let v = c.peek(t * 1000 + i).expect("entry lost below capacity");
+                assert_eq!(v[0], (t * PER_THREAD + i) as f32);
+            }
+        }
+        assert_eq!(c.len(), (THREADS * PER_THREAD) as usize);
+        assert_eq!(c.stats().evictions.load(Ordering::Relaxed), 0);
+    }
+
     /// Property: against a reference model (hash map, unbounded), every
     /// cache hit returns exactly the last value stored under that key.
     #[test]

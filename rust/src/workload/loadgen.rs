@@ -1,0 +1,437 @@
+//! Closed/open-loop load generation against the real HTTP server.
+//!
+//! Each scenario gets a fresh Router + Server (so score-cache stats and
+//! route mixes are per-scenario), a pool of client threads speaking real
+//! HTTP/1.1 over real sockets with keep-alive (`KeepAliveClient`), and a
+//! deterministic request stream from [`super::generate`]. Open-loop
+//! scenarios honor the generated arrival schedule (late requests fire
+//! immediately — classic open-loop backpressure measurement); closed-loop
+//! scenarios fire back-to-back per client.
+//!
+//! Determinism contract (`rust/tests/workload.rs`): the request stream
+//! AND the routing decisions are bit-identical across runs with the same
+//! seed — decisions depend only on (tokens, τ) through deterministic QE
+//! forwards and byte-identical cache hits, never on timing or batch
+//! shape. Latency numbers are hardware-dependent; the CI gate compares
+//! routed p95 against `ci/bench_baseline.json` with a generous ratio.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::anyhow;
+use crate::coordinator::{Router, RouterConfig};
+use crate::registry::Registry;
+use crate::server::{KeepAliveClient, Server, ServerConfig};
+use crate::synth::{SynthWorld, SPLIT_LIVE};
+use crate::util::error::{Context, Result};
+use crate::util::hist::Histogram;
+use crate::util::json::{parse, Json};
+use crate::workload::{fold, generate, stream_digest, tokens_text, GenRequest, Scenario};
+
+/// Knobs shared by every scenario of one `ipr loadgen` run.
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    pub artifacts: String,
+    pub seed: u64,
+    /// Overrides each scenario's preset client count when > 0.
+    pub clients: usize,
+    /// Backend latency simulation factor (0 = meter only; loadgen default).
+    pub time_scale: f64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions { artifacts: "artifacts".into(), seed: 7, clients: 0, time_scale: 0.0 }
+    }
+}
+
+/// Everything measured for one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub seed: u64,
+    pub requests: usize,
+    pub clients: usize,
+    pub open_loop: bool,
+    pub wall_s: f64,
+    pub req_per_s: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    /// Non-200 or unparseable responses (must be 0; the CI gate fails on any).
+    pub errors: usize,
+    pub fallbacks: usize,
+    /// Metered requests (those that invoked the routed endpoint).
+    pub invoked: usize,
+    pub cache_hit_rate: f64,
+    /// Mean routed cost per metered request (USD); None when nothing invoked.
+    pub mean_cost_usd: Option<f64>,
+    /// Mean realized reward of routed models over the mean reward an
+    /// always-strongest policy would realize on the same prompts (the
+    /// quality-parity estimate of the paper's headline claim). None when
+    /// no metered request carried a generative identity.
+    pub quality_parity: Option<f64>,
+    pub route_mix: BTreeMap<String, u64>,
+    /// Digest of the generated request stream (python-mirrored goldens).
+    pub stream_digest: u64,
+    /// Digest of the per-request routing decisions, in stream order.
+    pub decision_digest: u64,
+}
+
+/// One parsed per-request observation, tagged with its stream index.
+struct Obs {
+    idx: usize,
+    latency_ns: u64,
+    ok: bool,
+    err: Option<String>,
+    model: String,
+    candidate: u64,
+    fallback: bool,
+    threshold_bits: u64,
+    cost_usd: Option<f64>,
+    reward: Option<f64>,
+}
+
+impl Obs {
+    fn failed(idx: usize, latency_ns: u64, err: String) -> Obs {
+        Obs {
+            idx,
+            latency_ns,
+            ok: false,
+            err: Some(err),
+            model: String::new(),
+            candidate: 0,
+            fallback: false,
+            threshold_bits: 0,
+            cost_usd: None,
+            reward: None,
+        }
+    }
+}
+
+fn parse_obs(idx: usize, latency_ns: u64, status: u16, body: &str) -> Obs {
+    if status != 200 {
+        return Obs::failed(idx, latency_ns, format!("status {status}: {body}"));
+    }
+    let parsed = (|| -> Result<Obs> {
+        let j = parse(body)?;
+        let inv = j.get("invoke");
+        Ok(Obs {
+            idx,
+            latency_ns,
+            ok: true,
+            err: None,
+            model: j.req("model")?.as_str()?.to_string(),
+            candidate: j.req("candidate")?.as_i64()? as u64,
+            fallback: j.req("fallback")?.as_bool()?,
+            threshold_bits: j.req("threshold")?.as_f64()?.to_bits(),
+            cost_usd: inv.and_then(|v| v.get("cost_usd")).and_then(|v| v.as_f64().ok()),
+            reward: inv.and_then(|v| v.get("reward")).and_then(|v| v.as_f64().ok()),
+        })
+    })();
+    parsed.unwrap_or_else(|e| Obs::failed(idx, latency_ns, format!("bad response body: {e}")))
+}
+
+/// Pre-rendered wire form of one request.
+struct Prepared {
+    path: &'static str,
+    body: String,
+}
+
+fn prepare(reqs: &[GenRequest]) -> Vec<Prepared> {
+    reqs.iter()
+        .map(|q| {
+            let path = if q.invoke { "/v1/invoke" } else { "/v1/route" };
+            let text = tokens_text(&q.tokens);
+            // Stretched prompts withhold the generative identity: their
+            // tokens no longer match the canonical SynthWorld prompt, so
+            // realized-quality metering would be wrong.
+            let body = if q.stretched {
+                format!("{{\"prompt\": \"{text}\", \"tau\": {}}}", q.tau)
+            } else {
+                format!(
+                    "{{\"prompt\": \"{text}\", \"tau\": {}, \"split\": {SPLIT_LIVE}, \"index\": {}}}",
+                    q.tau, q.index
+                )
+            };
+            Prepared { path, body }
+        })
+        .collect()
+}
+
+/// Run one scenario end to end: fresh router + server, client pool over
+/// real sockets, aggregate the observations into a [`ScenarioReport`].
+pub fn run_scenario(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioReport> {
+    let reg = Arc::new(Registry::load_or_reference(opts.artifacts.as_str())?);
+    let world = SynthWorld::new(reg.world_seed);
+    let reqs = generate(&world, sc, opts.seed);
+    let sdigest = stream_digest(sc.name, opts.seed, &reqs);
+    let prepared = prepare(&reqs);
+    let want = if opts.clients > 0 { opts.clients } else { sc.clients };
+    let clients = want.max(1).min(reqs.len().max(1));
+
+    let router_cfg = RouterConfig { time_scale: opts.time_scale, ..RouterConfig::default() };
+    let router = Arc::new(Router::new(reg, router_cfg)?);
+    let server = Server::start_with(
+        router.clone(),
+        "127.0.0.1:0",
+        ServerConfig { workers: clients, ..ServerConfig::default() },
+    )?;
+    let addr = server.addr.clone();
+
+    let n = reqs.len();
+    let start = Instant::now();
+    let mut per_client: Vec<Vec<Obs>> = Vec::with_capacity(clients);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|cid| {
+                let addr = addr.clone();
+                let reqs = &reqs;
+                let prepared = &prepared;
+                let open_loop = sc.open_loop;
+                s.spawn(move || {
+                    let mut kc = KeepAliveClient::new(&addr);
+                    let mut out = Vec::with_capacity(n / clients + 1);
+                    let mut i = cid;
+                    while i < n {
+                        if open_loop {
+                            let target = Duration::from_micros(reqs[i].t_offset_us);
+                            let elapsed = start.elapsed();
+                            if target > elapsed {
+                                std::thread::sleep(target - elapsed);
+                            }
+                        }
+                        let q0 = Instant::now();
+                        let resp = kc.post(prepared[i].path, &prepared[i].body);
+                        let lat = q0.elapsed().as_nanos() as u64;
+                        out.push(match resp {
+                            Ok((st, body)) => parse_obs(i, lat, st, &body),
+                            Err(e) => Obs::failed(i, lat, format!("transport: {e}")),
+                        });
+                        i += clients;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            per_client.push(h.join().unwrap_or_default());
+        }
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+    let (cache_hits, cache_misses) = router.qe.cache_stats();
+    server.stop();
+    router.qe.shutdown();
+
+    let mut obs: Vec<Obs> = per_client.into_iter().flatten().collect();
+    obs.sort_by_key(|o| o.idx);
+    if obs.len() != n {
+        return Err(anyhow!("lost observations: {} of {n} requests reported", obs.len()));
+    }
+
+    let mut hist = Histogram::new();
+    let mut ddigest = fold(0, sdigest);
+    let mut errors = 0usize;
+    let mut fallbacks = 0usize;
+    let mut route_mix: BTreeMap<String, u64> = BTreeMap::new();
+    let mut invoked = 0usize;
+    let mut cost_sum = 0.0f64;
+    let (mut realized_sum, mut strongest_sum, mut metered) = (0.0f64, 0.0f64, 0usize);
+    let strongest_global = router.cand_global[router.strongest_local];
+    for o in &obs {
+        hist.record_ns(o.latency_ns);
+        if !o.ok {
+            errors += 1;
+            if errors <= 3 {
+                eprintln!(
+                    "loadgen[{}] request {} failed: {}",
+                    sc.name,
+                    o.idx,
+                    o.err.as_deref().unwrap_or("?")
+                );
+            }
+            ddigest = fold(ddigest, u64::MAX);
+            continue;
+        }
+        ddigest = fold(ddigest, o.candidate);
+        ddigest = fold(ddigest, o.fallback as u64);
+        ddigest = fold(ddigest, o.threshold_bits);
+        if o.fallback {
+            fallbacks += 1;
+        }
+        *route_mix.entry(o.model.clone()).or_insert(0) += 1;
+        if let Some(c) = o.cost_usd {
+            invoked += 1;
+            cost_sum += c;
+        }
+        if let Some(r) = o.reward {
+            let p = world.sample_prompt(SPLIT_LIVE, reqs[o.idx].index);
+            realized_sum += r;
+            strongest_sum += world.reward(&p, strongest_global);
+            metered += 1;
+        }
+    }
+
+    Ok(ScenarioReport {
+        name: sc.name.to_string(),
+        seed: opts.seed,
+        requests: n,
+        clients,
+        open_loop: sc.open_loop,
+        wall_s,
+        req_per_s: n as f64 / wall_s.max(1e-9),
+        p50_us: hist.quantile_ns(0.5) as f64 / 1e3,
+        p95_us: hist.quantile_ns(0.95) as f64 / 1e3,
+        p99_us: hist.quantile_ns(0.99) as f64 / 1e3,
+        mean_us: hist.mean_ns() / 1e3,
+        errors,
+        fallbacks,
+        invoked,
+        cache_hit_rate: if cache_hits + cache_misses == 0 {
+            0.0
+        } else {
+            cache_hits as f64 / (cache_hits + cache_misses) as f64
+        },
+        mean_cost_usd: if invoked > 0 { Some(cost_sum / invoked as f64) } else { None },
+        quality_parity: if metered > 0 && strongest_sum > 0.0 {
+            Some((realized_sum / metered as f64) / (strongest_sum / metered as f64))
+        } else {
+            None
+        },
+        route_mix,
+        stream_digest: sdigest,
+        decision_digest: ddigest,
+    })
+}
+
+impl ScenarioReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("open_loop", Json::Bool(self.open_loop)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("req_per_s", Json::Num(self.req_per_s)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("fallbacks", Json::Num(self.fallbacks as f64)),
+            ("invoked", Json::Num(self.invoked as f64)),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate)),
+            (
+                "mean_cost_usd",
+                self.mean_cost_usd.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "quality_parity",
+                self.quality_parity.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "route_mix",
+                Json::Obj(
+                    self.route_mix
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            // u64 digests as hex strings: Json::Num is f64 and would lose
+            // the low bits.
+            ("stream_digest", Json::str(&format!("{:#018x}", self.stream_digest))),
+            ("decision_digest", Json::str(&format!("{:#018x}", self.decision_digest))),
+        ])
+    }
+}
+
+/// The `BENCH_workloads.json` document for one loadgen run.
+pub fn workloads_json(seed: u64, reports: &[ScenarioReport]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("ipr-bench-workloads/v1")),
+        ("seed", Json::Num(seed as f64)),
+        ("scenarios", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+/// CI gate over a `BENCH_workloads.json` document: every scenario must
+/// have finished error-free, and no scenario's routed p95 may exceed the
+/// baseline's `loadgen_routed_p95_us * max_ratio` ceiling (skipped when
+/// the baseline predates the field, so older baselines stay valid).
+pub fn check_workloads_regression(
+    current: &Json,
+    baseline_path: &str,
+    max_ratio: f64,
+) -> Result<String> {
+    let scenarios = current.req("scenarios")?.as_arr()?;
+    for s in scenarios {
+        let errors = s.req("errors")?.as_usize()?;
+        if errors > 0 {
+            return Err(anyhow!(
+                "workload scenario '{}' had {errors} failed requests",
+                s.req("name")?.as_str()?
+            ));
+        }
+    }
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let base = parse(&text)?;
+    let Some(b) = base.get("loadgen_routed_p95_us") else {
+        return Ok("workloads gate skipped: baseline has no loadgen fields".to_string());
+    };
+    let limit = b.as_f64()? * max_ratio;
+    let mut worst = ("", 0.0f64);
+    for s in scenarios {
+        let p95 = s.req("p95_us")?.as_f64()?;
+        let name = s.req("name")?.as_str()?;
+        if p95 > worst.1 {
+            worst = (name, p95);
+        }
+        if p95 > limit {
+            return Err(anyhow!(
+                "workload p95 regression: scenario '{name}' routed p95 {p95:.1}us > {limit:.1}us \
+                 (baseline {:.1}us x {max_ratio}); refresh with \
+                 `ipr loadgen --smoke --write-baseline ci/bench_baseline.json` if intended",
+                b.as_f64()?
+            ));
+        }
+    }
+    Ok(format!(
+        "workloads gate OK: worst routed p95 {:.1}us ('{}') <= {limit:.1}us",
+        worst.1, worst.0
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workloads_gate_logic() {
+        let file = std::env::temp_dir().join(format!("ipr-wl-baseline-{}", std::process::id()));
+        std::fs::write(&file, "{\"loadgen_routed_p95_us\": 1000.0}").unwrap();
+        let path = file.to_str().unwrap();
+        let doc = |p95: f64, errors: f64| {
+            Json::obj(vec![(
+                "scenarios",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("uniform")),
+                    ("p95_us", Json::Num(p95)),
+                    ("errors", Json::Num(errors)),
+                ])]),
+            )])
+        };
+        assert!(check_workloads_regression(&doc(1200.0, 0.0), path, 1.25).is_ok());
+        assert!(check_workloads_regression(&doc(1300.0, 0.0), path, 1.25).is_err());
+        assert!(check_workloads_regression(&doc(100.0, 1.0), path, 1.25).is_err());
+        // pre-loadgen baselines skip the p95 ceiling but still gate errors
+        std::fs::write(&file, "{\"routing_p50_us\": 100.0}").unwrap();
+        let msg = check_workloads_regression(&doc(9999.0, 0.0), path, 1.25).unwrap();
+        assert!(msg.contains("skipped"), "{msg}");
+        let _ = std::fs::remove_file(&file);
+    }
+}

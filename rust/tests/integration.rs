@@ -1,14 +1,13 @@
 //! Integration tests over real artifacts: registry → runtime → QE service
 //! → coordinator → eval, asserting the paper's *shape* claims.
 //!
-//! No silent skips: when `artifacts/` has not been built (`make
-//! artifacts`), the registry falls back to the self-generated reference
-//! artifacts served by the pure-rust engine, so every assertion below
-//! executes in a plain `cargo test -q` from a clean checkout. The only
-//! pjrt-specific case (corrupt-HLO loading) is feature-gated with a
-//! logged skip.
-
-use std::sync::Arc;
+//! Fixtures come from `ipr::testkit` (shared with `server_e2e`, the
+//! workload tests and the benches). No silent skips: when `artifacts/`
+//! has not been built (`make artifacts`), the registry falls back to the
+//! self-generated reference artifacts served by the pure-rust engine, so
+//! every assertion below executes in a plain `cargo test -q` from a clean
+//! checkout. The only pjrt-specific case (corrupt-HLO loading) is
+//! feature-gated with a logged skip.
 
 use ipr::coordinator::gating::GatingStrategy;
 use ipr::coordinator::{BatchItem, Router, RouterConfig};
@@ -19,13 +18,7 @@ use ipr::eval::metrics;
 use ipr::qe::{BatcherConfig, QeService};
 use ipr::registry::Registry;
 use ipr::runtime::{create_engine, Engine as _, QeModel as _};
-
-fn registry() -> Arc<Registry> {
-    Arc::new(
-        Registry::load_or_reference("artifacts")
-            .expect("real or reference artifacts must load"),
-    )
-}
+use ipr::testkit::registry;
 
 #[test]
 fn registry_has_full_model_grid() {
@@ -283,6 +276,32 @@ fn score_cache_hits_on_repeat() {
     let (hits, _misses) = svc.cache_stats();
     assert!(hits >= 1);
     svc.shutdown();
+}
+
+/// The τ contract below the HTTP layer: library callers hitting the
+/// router directly get an error for non-finite or out-of-[0,1]
+/// tolerances — never a silently clamped route (and nothing is metered).
+#[test]
+fn router_rejects_invalid_tau() {
+    let reg = registry();
+    let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
+    let rows = dataset::load(&reg, "test", 1).unwrap();
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.01, 1.01, 42.0] {
+        let err = router
+            .handle_tokens(&rows[0].tokens, Some(bad), false, None)
+            .expect_err("invalid tau must error");
+        assert!(format!("{err}").contains("tau"), "{err}");
+    }
+    assert_eq!(
+        router.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "rejected requests must not be metered"
+    );
+    // boundary values still route
+    for ok in [0.0, 1.0] {
+        router.handle_tokens(&rows[0].tokens, Some(ok), false, None).unwrap();
+    }
+    router.qe.shutdown();
 }
 
 #[test]

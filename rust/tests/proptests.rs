@@ -5,8 +5,8 @@
 
 use ipr::coordinator::gating::{route_decision, GatingStrategy};
 use ipr::eval::arqgc::{bounded_arqgc, CurvePoint};
-use ipr::registry::Registry;
 use ipr::runtime::{create_engine, Engine as _, QeModel as _};
+use ipr::testkit::registry;
 use ipr::synth::{SynthWorld, SPLIT_LIVE, VOCAB_SIZE};
 use ipr::tokenizer;
 use ipr::util::hist::Histogram;
@@ -91,6 +91,63 @@ fn prop_tau_monotone_cost() {
                     return false;
                 }
                 prev = costs[d.chosen];
+            }
+            true
+        },
+    );
+}
+
+/// The full τ-monotonicity contract of `route_decision`, fuzzed over
+/// random score/cost tables, safety margins and every strategy whose
+/// threshold bounds satisfy r_min ≤ r_max (the strategies for which the
+/// feasible sets are provably nested in τ): **lowering τ never lowers
+/// selected quality, raising τ never raises routed cost** — including
+/// across the empty-feasible fallback boundary. Both comparisons are
+/// exact (no epsilon): the invariant follows from feasible-set nesting
+/// under the (cost asc, score desc) selection order, so any slack would
+/// only mask real bugs.
+#[test]
+fn prop_tau_monotone_quality_and_cost_all_strategies() {
+    check(
+        37,
+        800,
+        |r, _| {
+            let n = 2 + r.next_range(8) as usize;
+            let scores = gen_scores(r, n);
+            let costs = gen_costs(r, n);
+            let delta = 0.1 * r.next_f64();
+            let smax = scores.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let strat = match r.next_range(4) {
+                0 => GatingStrategy::DynamicMax,
+                1 => GatingStrategy::DynamicMinMax,
+                // static_min below the per-prompt max keeps r_min <= r_max
+                2 => GatingStrategy::StaticDynamic { static_min: r.next_f64() * smax },
+                _ => GatingStrategy::Static {
+                    static_min: r.next_f64() * 0.5,
+                    static_max: 0.5 + r.next_f64() * 0.5,
+                },
+            };
+            (scores, costs, delta, strat)
+        },
+        |(scores, costs, delta, strat)| {
+            let mut prev_cost = f64::MAX;
+            let mut prev_quality = f32::MIN;
+            // τ ascending: cost must be nonincreasing; quality (the
+            // chosen candidate's score) must also be nonincreasing —
+            // i.e. read descending, lowering τ never lowers quality.
+            for i in 0..=24 {
+                let tau = i as f64 / 24.0;
+                let d = route_decision(scores, costs, tau, *strat, *delta);
+                let c = costs[d.chosen];
+                let q = scores[d.chosen];
+                if c > prev_cost {
+                    return false;
+                }
+                if i > 0 && q > prev_quality {
+                    return false;
+                }
+                prev_cost = c;
+                prev_quality = q;
             }
             true
         },
@@ -226,7 +283,7 @@ fn prop_arqgc_bounded_and_monotone() {
 /// chunking against the padded per-request path.
 #[test]
 fn prop_score_batch_matches_single() {
-    let reg = Registry::load_or_reference("artifacts").unwrap();
+    let reg = registry();
     let engine = create_engine().unwrap();
     let entry = reg.family_qe("claude", "stella_sim").unwrap().clone();
     let model = engine.load_model(&reg, &entry, &["xla"]).unwrap();

@@ -1,28 +1,19 @@
 //! End-to-end HTTP tests: full server (tokenize → QE → DO → backend) over
 //! a real artifact set, exercised through the wire protocol.
 //!
-//! No silent skips: without `make artifacts` the registry falls back to
-//! the self-generated reference artifacts and every assertion runs.
+//! All setup goes through `ipr::testkit::ServerFixture` — one line per
+//! stack, no hand-rolled registry/router/server plumbing. No silent
+//! skips: without `make artifacts` the registry falls back to the
+//! self-generated reference artifacts and every assertion runs.
 
-use std::sync::Arc;
-
-use ipr::coordinator::{Router, RouterConfig};
-use ipr::registry::Registry;
-use ipr::server::{HttpClient, Server};
-use ipr::synth::SynthWorld;
+use ipr::server::MAX_BODY_BYTES;
+use ipr::testkit::ServerFixture;
 use ipr::util::json::parse;
-
-fn start() -> (Server, HttpClient, Arc<Router>) {
-    let reg = Arc::new(Registry::load_or_reference("artifacts").unwrap());
-    let router = Arc::new(Router::new(reg, RouterConfig::default()).unwrap());
-    let server = Server::start(router.clone(), "127.0.0.1:0", 2).unwrap();
-    let client = HttpClient::new(&server.addr);
-    (server, client, router)
-}
 
 #[test]
 fn health_and_registry() {
-    let (server, client, _r) = start();
+    let fx = ServerFixture::start();
+    let client = fx.client();
     let (st, body) = client.get("/health").unwrap();
     assert_eq!(st, 200);
     assert_eq!(body, "ok\n");
@@ -31,13 +22,14 @@ fn health_and_registry() {
     let j = parse(&body).unwrap();
     assert_eq!(j.req("family").unwrap().as_str().unwrap(), "claude");
     assert_eq!(j.req("candidates").unwrap().as_arr().unwrap().len(), 4);
-    server.stop();
+    fx.stop();
 }
 
 #[test]
 fn route_and_invoke_roundtrip() {
-    let (server, client, router) = start();
-    let world = SynthWorld::new(router.registry.world_seed);
+    let fx = ServerFixture::start();
+    let client = fx.client();
+    let world = fx.world();
     let p = world.sample_prompt(2, 17);
 
     // τ=1 routes to the cheapest model
@@ -65,34 +57,119 @@ fn route_and_invoke_roundtrip() {
     assert_eq!(st, 200);
     assert!(m.contains("ipr_requests_total 2"), "{m}");
     assert!(m.contains("claude-3-haiku"));
-    server.stop();
+    fx.stop();
 }
 
 #[test]
 fn malformed_requests_rejected() {
-    let (server, client, _r) = start();
+    let fx = ServerFixture::start();
+    let client = fx.client();
     let (st, _) = client.post("/v1/route", "{not json").unwrap();
     assert_eq!(st, 400);
     let (st, _) = client.post("/v1/route", "{}").unwrap();
     assert_eq!(st, 400);
     let (st, _) = client.post("/v1/route", "{\"prompt\": \"\"}").unwrap();
     assert_eq!(st, 400);
+    // non-string prompt and truncated JSON are body errors, not panics
+    let (st, _) = client.post("/v1/route", "{\"prompt\": 42}").unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = client.post("/v1/route", "{\"prompt\": \"w1\", ").unwrap();
+    assert_eq!(st, 400);
     let (st, _) = client.get("/nope").unwrap();
     assert_eq!(st, 404);
-    server.stop();
+    fx.stop();
+}
+
+/// Boundary validation of the user's τ contract: non-finite or
+/// out-of-[0,1] tolerances are 400s, never silently clamped and routed.
+#[test]
+fn tau_validated_at_the_boundary() {
+    let fx = ServerFixture::start();
+    let client = fx.client();
+    for bad in ["1.5", "-0.2", "2", "-1e-9", "1e999", "-1e999"] {
+        let body = format!("{{\"prompt\": \"w100 w200\", \"tau\": {bad}}}");
+        let (st, resp) = client.post("/v1/route", &body).unwrap();
+        assert_eq!(st, 400, "tau={bad} must be rejected, got: {resp}");
+        assert!(resp.contains("tau"), "error should name tau: {resp}");
+    }
+    // a non-numeric τ is a parse-level 400
+    let (st, _) = client
+        .post("/v1/route", "{\"prompt\": \"w100 w200\", \"tau\": \"0.3\"}")
+        .unwrap();
+    assert_eq!(st, 400);
+    // the boundary values themselves are valid
+    for ok in ["0", "1", "0.0", "1.0", "0.5"] {
+        let body = format!("{{\"prompt\": \"w100 w200\", \"tau\": {ok}}}");
+        let (st, resp) = client.post("/v1/route", &body).unwrap();
+        assert_eq!(st, 200, "tau={ok} must route: {resp}");
+    }
+    // no invalid-τ request may have been metered as routed traffic
+    let (_, m) = client.get("/metrics").unwrap();
+    assert!(m.contains("ipr_requests_total 5"), "{m}");
+    fx.stop();
+}
+
+/// Oversized bodies are refused from the Content-Length header alone —
+/// before any body-sized allocation — with a 413 that closes the
+/// connection (the unread body would desynchronize it).
+#[test]
+fn oversized_body_rejected_without_reading_it() {
+    let fx = ServerFixture::start();
+    let claimed = MAX_BODY_BYTES + 1;
+    // Send only the head: the server must answer from the header without
+    // waiting for (or allocating) the claimed body.
+    let head = format!(
+        "POST /v1/route HTTP/1.1\r\nHost: x\r\nContent-Length: {claimed}\r\nConnection: keep-alive\r\n\r\n"
+    );
+    let (st, body) = fx.raw(head.as_bytes()).unwrap();
+    assert_eq!(st, 413, "{body}");
+    assert!(body.contains("exceeds"), "{body}");
+    // a sane request on a fresh connection still works
+    let (st, _) = fx.client().post("/v1/route", "{\"prompt\": \"w1 w2 w3\"}").unwrap();
+    assert_eq!(st, 200);
+    // a large-but-legal body (actually transmitted) is still served
+    let fill = "w1 ".repeat(200);
+    let body = format!("{{\"prompt\": \"{}\"}}", fill.trim_end());
+    assert!(body.len() <= MAX_BODY_BYTES);
+    let (st, _) = fx.client().post("/v1/route", &body).unwrap();
+    assert_eq!(st, 200);
+    fx.stop();
+}
+
+/// Keep-alive reuse after an error response: a 400 must leave the
+/// connection serving (HTTP framing was intact — only the body was bad),
+/// proven by `reconnects() == 0` across the error.
+#[test]
+fn keep_alive_survives_error_responses() {
+    let fx = ServerFixture::start();
+    let mut kc = fx.keep_alive_client();
+    let (st, _) = kc.post("/v1/route", "{\"prompt\": \"w5 w6 w7\"}").unwrap();
+    assert_eq!(st, 200);
+    let (st, _) = kc.post("/v1/route", "{not json").unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = kc.post("/v1/route", "{\"prompt\": \"w5 w6 w7\", \"tau\": 9.0}").unwrap();
+    assert_eq!(st, 400);
+    let (st, resp) = kc.post("/v1/route", "{\"prompt\": \"w5 w6 w7\", \"tau\": 0.2}").unwrap();
+    assert_eq!(st, 200, "{resp}");
+    assert_eq!(
+        kc.reconnects(),
+        0,
+        "the connection must have survived both error responses"
+    );
+    fx.stop();
 }
 
 #[test]
 fn concurrent_clients_batched() {
-    let (server, client, router) = start();
-    let world = SynthWorld::new(router.registry.world_seed);
-    let addr = server.addr.clone();
+    let fx = ServerFixture::start();
+    let world = fx.world();
+    let addr = fx.addr.clone();
     let mut handles = Vec::new();
     for i in 0..16u64 {
         let addr = addr.clone();
         let text = world.live_prompt(i).text();
         handles.push(std::thread::spawn(move || {
-            let c = HttpClient::new(&addr);
+            let c = ipr::server::HttpClient::new(&addr);
             let body = format!("{{\"prompt\": \"{text}\", \"tau\": 0.2}}");
             c.post("/v1/route", &body).unwrap()
         }));
@@ -101,14 +178,14 @@ fn concurrent_clients_batched() {
         let (st, resp) = h.join().unwrap();
         assert_eq!(st, 200, "{resp}");
     }
-    let sizes = router.qe.batch_sizes.lock().unwrap().clone();
+    let sizes = fx.router.qe.batch_sizes.lock().unwrap().clone();
     assert!(!sizes.is_empty());
-    // the server-side micro-batcher routed every request
-    let mb = server.micro_batch_sizes();
+    // the server-side micro-batcher routed every request (16 distinct
+    // prompts — no cache hit bypasses the batcher)
+    let mb = fx.micro_batch_sizes();
     assert!(!mb.is_empty());
     assert_eq!(mb.iter().sum::<usize>(), 16, "{mb:?}");
-    drop(client);
-    server.stop();
+    fx.stop();
 }
 
 /// Teardown regression (the `server_e2e` flake): an idle keep-alive
@@ -118,19 +195,18 @@ fn concurrent_clients_batched() {
 /// force-closed, stragglers are detached.
 #[test]
 fn stop_drains_promptly_with_idle_keepalive_conn() {
-    let (server, client, router) = start();
+    let fx = ServerFixture::start();
     // Park an idle connection that never sends a byte.
-    let idle = std::net::TcpStream::connect(&server.addr).unwrap();
+    let idle = std::net::TcpStream::connect(&fx.addr).unwrap();
     // Serve one real request so the pool is demonstrably working.
-    let (st, _) = client.post("/v1/route", "{\"prompt\": \"w100 w200 w300\"}").unwrap();
+    let (st, _) = fx.client().post("/v1/route", "{\"prompt\": \"w100 w200 w300\"}").unwrap();
     assert_eq!(st, 200);
     let t0 = std::time::Instant::now();
-    server.stop();
+    fx.stop();
     assert!(
         t0.elapsed() < std::time::Duration::from_secs(8),
         "stop() exceeded the drain deadline: {:?}",
         t0.elapsed()
     );
     drop(idle);
-    router.qe.shutdown();
 }

@@ -1,0 +1,127 @@
+//! Workload-simulation tests: cross-language golden snapshots of the
+//! generated streams, and end-to-end determinism of `ipr loadgen`
+//! against the real server.
+//!
+//! The golden digests below were derived *independently* by the python
+//! mirror (`python/tools/workload_golden.py`, built on the bit-exact
+//! `compile/synth.py` port) — they pin the generator contract across
+//! languages, not just across runs. Regenerate with
+//! `python3 python/tools/workload_golden.py` if the contract changes.
+
+use ipr::synth::SynthWorld;
+use ipr::testkit::assert_snapshot;
+use ipr::workload::loadgen::{run_scenario, LoadgenOptions};
+use ipr::workload::{generate, preset, stream_digest, PRESET_NAMES};
+
+/// Mirror of the python tool's parameters.
+const GOLDEN_SEED: u64 = 7;
+const GOLDEN_REQUESTS: usize = 64;
+
+/// Output of `python3 python/tools/workload_golden.py`:
+/// (name, stream_digest, token_total, invoked).
+const GOLDENS: [(&str, u64, usize, usize); 4] = [
+    ("uniform", 0x5cb74cb633387e46, 3664, 13),
+    ("bursty", 0x3a6e5bde4aaafb9e, 4811, 9),
+    ("hot_keys", 0xe7d3a7d6d91ec9f3, 3366, 8),
+    ("mixed_tau", 0x9d3296de99247605, 3868, 17),
+];
+
+#[test]
+fn preset_streams_match_python_goldens() {
+    assert_eq!(GOLDENS.len(), PRESET_NAMES.len(), "every preset needs a golden");
+    let world = SynthWorld::default();
+    for (name, want_digest, want_tokens, want_invoked) in GOLDENS {
+        let sc = preset(name, GOLDEN_REQUESTS).expect("golden preset exists");
+        let reqs = generate(&world, &sc, GOLDEN_SEED);
+        assert_eq!(reqs.len(), GOLDEN_REQUESTS);
+        assert_snapshot(name, stream_digest(name, GOLDEN_SEED, &reqs), want_digest);
+        let tokens: usize = reqs.iter().map(|q| q.tokens.len()).sum();
+        assert_eq!(tokens, want_tokens, "{name}: token total drifted");
+        let invoked = reqs.iter().filter(|q| q.invoke).count();
+        assert_eq!(invoked, want_invoked, "{name}: invoke count drifted");
+    }
+}
+
+/// The acceptance contract: two loadgen runs with the same seed produce
+/// identical request streams AND identical routing decisions — decisions
+/// depend only on (tokens, τ) through deterministic QE forwards and
+/// byte-identical cache hits, never on timing, batch shape, or which
+/// requests hit the cache.
+#[test]
+fn loadgen_is_bit_deterministic_end_to_end() {
+    let opts = LoadgenOptions { seed: 13, ..LoadgenOptions::default() };
+    let sc = preset("uniform", 48).unwrap();
+    let a = run_scenario(&opts, &sc).unwrap();
+    let b = run_scenario(&opts, &sc).unwrap();
+    assert_eq!(a.errors, 0, "run A had failed requests");
+    assert_eq!(b.errors, 0, "run B had failed requests");
+    assert_eq!(a.stream_digest, b.stream_digest, "request streams diverged");
+    assert_eq!(a.decision_digest, b.decision_digest, "routing decisions diverged");
+    assert_eq!(a.route_mix, b.route_mix);
+    // a different seed is a different stream
+    let opts2 = LoadgenOptions { seed: 14, ..LoadgenOptions::default() };
+    let c = run_scenario(&opts2, &sc).unwrap();
+    assert_ne!(a.stream_digest, c.stream_digest);
+    // report sanity
+    assert_eq!(a.requests, 48);
+    assert!(a.p95_us >= a.p50_us && a.p99_us >= a.p95_us);
+    assert!(a.req_per_s > 0.0);
+    assert!(a.invoked > 0, "uniform preset meters a quarter of requests");
+    assert!(a.mean_cost_usd.unwrap() > 0.0);
+}
+
+/// Hot-key skew is the score cache's target regime: the cache must
+/// actually absorb the repeats (and those hits still count as routed
+/// requests with full decisions).
+#[test]
+fn hot_key_skew_drives_cache_hits() {
+    let opts = LoadgenOptions { seed: 5, ..LoadgenOptions::default() };
+    let sc = preset("hot_keys", 80).unwrap();
+    let r = run_scenario(&opts, &sc).unwrap();
+    assert_eq!(r.errors, 0);
+    assert!(
+        r.cache_hit_rate > 0.25,
+        "hot-key traffic should hit the score cache: {}",
+        r.cache_hit_rate
+    );
+    let routed: u64 = r.route_mix.values().sum();
+    assert_eq!(routed as usize, r.requests, "every request routed exactly once");
+}
+
+/// A mixed-τ tenant population must spread across the model fleet —
+/// quality tenants pin the strong models, saver tenants the cheap ones —
+/// and the realized quality-parity estimate must be sane.
+#[test]
+fn mixed_tau_population_spreads_route_mix() {
+    let opts = LoadgenOptions { seed: 9, ..LoadgenOptions::default() };
+    let sc = preset("mixed_tau", 80).unwrap();
+    let r = run_scenario(&opts, &sc).unwrap();
+    assert_eq!(r.errors, 0);
+    assert!(
+        r.route_mix.len() >= 2,
+        "three τ populations must not collapse onto one model: {:?}",
+        r.route_mix
+    );
+    let parity = r.quality_parity.expect("mixed_tau meters with identity");
+    assert!(
+        (0.3..=1.3).contains(&parity),
+        "quality parity out of plausible range: {parity}"
+    );
+}
+
+/// The bursty preset exercises heavy-tail (stretched) prompts through
+/// the truncation path and still routes everything cleanly.
+#[test]
+fn bursty_heavy_tail_routes_cleanly() {
+    let opts = LoadgenOptions { seed: 21, ..LoadgenOptions::default() };
+    let sc = preset("bursty", 64).unwrap();
+    let world = SynthWorld::default();
+    let reqs = generate(&world, &sc, 21);
+    assert!(
+        reqs.iter().any(|q| q.tokens.len() >= sc.stretch_target),
+        "stream must contain heavy-tail prompts"
+    );
+    let r = run_scenario(&opts, &sc).unwrap();
+    assert_eq!(r.errors, 0, "stretched prompts must route, not error");
+    assert_eq!(r.requests, 64);
+}
