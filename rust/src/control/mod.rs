@@ -1,0 +1,570 @@
+//! Candidate-lifecycle control plane (DESIGN.md §14): the candidate set
+//! as a RUNTIME object instead of a boot-time constant.
+//!
+//! The paper's third headline innovation is the extensible adapter
+//! design — "reducing new model integration from days to hours" (IPR §1,
+//! §3.1) — and candidate-set churn is the operational reality of routing
+//! systems (RouteLLM; Varangot-Reille et al.). This module proves it end
+//! to end, under live load, without a restart:
+//!
+//! * [`FleetView`] — an epoch-numbered, IMMUTABLE snapshot of the
+//!   candidate set (membership, lifecycle state, prices, score-vector
+//!   columns) plus everything the routing hot path needs precomputed
+//!   (active costs/names/globals, strongest-active index, the score-cache
+//!   key seed). Published through the lock-free
+//!   [`crate::util::arcswap::ArcSwapCell`]: readers pin one view per
+//!   request/batch and never block on admin writes.
+//! * [`FleetController`] — the admin write side. Mutations are
+//!   serialized, applied to the engine-owned model through the QE
+//!   service's control channel, then published as a new epoch. Every
+//!   publish rotates the routing-score cache onto the new epoch's key
+//!   seed ([`crate::util::score_cache::ShardedScoreCache::rotate_seed`]),
+//!   so a cache hit can never cross a fleet epoch.
+//! * **Shadow scoring** — a newly added candidate is scored on live
+//!   traffic but EXCLUDED from routing decisions; its predicted-vs-oracle
+//!   error accumulates in [`ShadowStats`] until the [`PromotionGate`]
+//!   passes and `promote` atomically flips it into the routed set.
+//!
+//! Mutation/publication ordering (the invariants tests pin):
+//!
+//! * **add**: grow the model FIRST (the new column exists before any view
+//!   references it), then publish + rotate. Score-vector width only ever
+//!   grows, so pinned older views stay in bounds.
+//! * **retire**: publish the shrunken view + rotate FIRST, then tombstone
+//!   the bank (the column keeps its index and emits 0.0) — a batch still
+//!   pinned on the old view reads a well-formed vector to the end.
+//! * **promote**: a pure view flip — no model change at all.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::qe::QeService;
+use crate::registry::Registry;
+use crate::synth::{SynthWorld, CANDIDATES};
+use crate::util::arcswap::ArcSwapCell;
+use crate::util::error::Result;
+use crate::util::npz::Tensor;
+use crate::util::rng::mix64;
+use crate::util::score_cache::key_seed;
+use crate::{anyhow, bail};
+
+/// Lifecycle state of one fleet member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Participates in routing decisions (and metering).
+    Active,
+    /// Scored on live traffic, excluded from routing; accumulating
+    /// predicted-vs-oracle calibration toward the promotion gate.
+    Shadow,
+}
+
+impl Lifecycle {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lifecycle::Active => "active",
+            Lifecycle::Shadow => "shadow",
+        }
+    }
+}
+
+/// Shadow-calibration accumulators for one candidate. Lock-free
+/// (atomics only — this sits on the routing hot path) and shared across
+/// view republishes, so progress survives unrelated fleet mutations.
+#[derive(Default)]
+pub struct ShadowStats {
+    /// Times the shadow head was scored on live traffic.
+    pub scored: AtomicU64,
+    /// Samples with a generative identity, i.e. with an oracle to
+    /// compare against (the gate counts these).
+    pub calibrated: AtomicU64,
+    /// Σ |predicted − oracle| in micro-units (the `spend_microusd`
+    /// idiom: integer atomics, no float CAS loop).
+    abs_err_micro: AtomicU64,
+}
+
+impl ShadowStats {
+    /// Fold one predicted-vs-oracle observation in.
+    pub fn record(&self, predicted: f32, oracle: f64) {
+        self.calibrated.fetch_add(1, Ordering::Relaxed);
+        let err = (predicted as f64 - oracle).abs();
+        self.abs_err_micro.fetch_add((err * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Mean absolute predicted-vs-oracle error so far (∞ with no samples,
+    /// so an uncalibrated candidate can never pass the gate).
+    pub fn mae(&self) -> f64 {
+        let n = self.calibrated.load(Ordering::Relaxed);
+        if n == 0 {
+            return f64::INFINITY;
+        }
+        (self.abs_err_micro.load(Ordering::Relaxed) as f64 / 1e6) / n as f64
+    }
+}
+
+/// When a shadow candidate may be promoted into the routed set.
+#[derive(Clone, Copy, Debug)]
+pub struct PromotionGate {
+    /// Minimum oracle-calibrated samples before promotion.
+    pub min_samples: u64,
+    /// Maximum acceptable predicted-vs-oracle MAE.
+    pub max_mae: f64,
+}
+
+impl Default for PromotionGate {
+    fn default() -> Self {
+        PromotionGate { min_samples: 32, max_mae: 0.15 }
+    }
+}
+
+impl PromotionGate {
+    pub fn passes(&self, stats: &ShadowStats) -> bool {
+        stats.calibrated.load(Ordering::Relaxed) >= self.min_samples
+            && stats.mae() <= self.max_mae
+    }
+}
+
+/// One fleet member inside a [`FleetView`].
+#[derive(Clone)]
+pub struct FleetCandidate {
+    pub name: String,
+    pub family: String,
+    /// USD per 1k input/output tokens (defaults: the Table 8 prices).
+    pub price_in: f64,
+    pub price_out: f64,
+    /// Global SynthWorld candidate index (simulated endpoint + oracle).
+    pub global: usize,
+    /// Column in the QE score vector.
+    pub head: usize,
+    pub state: Lifecycle,
+    /// Hot-plugged (owns a dynamic bank) vs boot-time head.
+    pub dynamic: bool,
+    /// Calibration accumulators while in shadow.
+    pub stats: Option<Arc<ShadowStats>>,
+}
+
+impl FleetCandidate {
+    pub fn unit_cost(&self) -> f64 {
+        self.price_in + self.price_out
+    }
+}
+
+/// Epoch-numbered immutable snapshot of the fleet, with the routing hot
+/// path's working set precomputed. Cheap to pin (`Arc` clone via the
+/// lock-free cell) and NEVER mutated after publication.
+pub struct FleetView {
+    pub epoch: u64,
+    pub model_id: String,
+    /// Artifact kind the QE serves ("xla" | "pallas") — part of the
+    /// cache key identity.
+    pub kind: String,
+    /// Every member, shadow included, in score-column order.
+    pub candidates: Vec<FleetCandidate>,
+    /// Score-vector columns of the ACTIVE candidates, in routing order —
+    /// `RouteDecision` indices point into these parallel arrays.
+    pub active_heads: Vec<usize>,
+    pub active_global: Vec<usize>,
+    pub active_costs: Vec<f64>,
+    pub active_names: Vec<String>,
+    /// Index (into the active arrays) of the most expensive active
+    /// candidate — the "always-strongest" counterfactual for live CSR.
+    pub strongest_active: usize,
+    /// Score-cache key seed for THIS epoch (model identity + kind +
+    /// membership + epoch): rotated into the cache at publication so no
+    /// hit can cross epochs.
+    pub key_seed: u64,
+}
+
+impl FleetView {
+    /// Derive the hot-path arrays + epoch key seed from a membership
+    /// list. The seed folds the model identity, artifact kind, epoch
+    /// number and every member's (name, head, global, state) — any
+    /// mutation that publishes a view changes it.
+    fn build(
+        epoch: u64,
+        model_id: String,
+        kind: String,
+        candidates: Vec<FleetCandidate>,
+    ) -> FleetView {
+        let mut active_heads = Vec::new();
+        let mut active_global = Vec::new();
+        let mut active_costs = Vec::new();
+        let mut active_names = Vec::new();
+        for c in &candidates {
+            if c.state == Lifecycle::Active {
+                active_heads.push(c.head);
+                active_global.push(c.global);
+                active_costs.push(c.unit_cost());
+                active_names.push(c.name.clone());
+            }
+        }
+        let strongest_active = (0..active_costs.len())
+            .max_by(|&a, &b| active_costs[a].partial_cmp(&active_costs[b]).unwrap())
+            .unwrap_or(0);
+        let mut seed = key_seed(&model_id, &kind, &[]);
+        seed = mix64(seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for c in &candidates {
+            for b in c.name.bytes() {
+                seed = mix64(seed ^ b as u64);
+            }
+            let state_bit = (c.state == Lifecycle::Active) as u64;
+            seed = mix64(seed ^ ((c.head as u64) << 1) ^ ((c.global as u64) << 9) ^ state_bit);
+        }
+        FleetView {
+            epoch,
+            model_id,
+            kind,
+            candidates,
+            active_heads,
+            active_global,
+            active_costs,
+            active_names,
+            strongest_active,
+            key_seed: seed,
+        }
+    }
+
+    pub fn candidate(&self, name: &str) -> Option<&FleetCandidate> {
+        self.candidates.iter().find(|c| c.name == name)
+    }
+
+    /// Shadow members (hot path: shadow scoring in `Router::finish`).
+    pub fn shadows(&self) -> impl Iterator<Item = &FleetCandidate> {
+        self.candidates.iter().filter(|c| c.state == Lifecycle::Shadow)
+    }
+}
+
+/// Parameters of `add_candidate`. `tensors: None` synthesizes the expert
+/// adapter bank for the named SynthWorld candidate (the offline stand-in
+/// for the paper's hours-long adapter training run); prices default to
+/// the Table 8 entries.
+pub struct AddCandidate {
+    pub name: String,
+    pub price_in: Option<f64>,
+    pub price_out: Option<f64>,
+    pub tensors: Option<Vec<(String, Tensor)>>,
+}
+
+impl AddCandidate {
+    pub fn named(name: &str) -> AddCandidate {
+        AddCandidate { name: name.to_string(), price_in: None, price_out: None, tensors: None }
+    }
+}
+
+/// Result of a promotion, for the admin surface.
+pub struct Promotion {
+    pub view: Arc<FleetView>,
+    pub samples: u64,
+    pub mae: f64,
+    pub forced: bool,
+}
+
+/// The admin write side: serialized mutations, atomic publication.
+pub struct FleetController {
+    registry: Arc<Registry>,
+    qe: Arc<QeService>,
+    pub gate: PromotionGate,
+    view: ArcSwapCell<FleetView>,
+    /// Serializes mutations (read-modify-publish must not interleave);
+    /// readers never touch it.
+    admin: Mutex<()>,
+    /// Published epochs beyond boot (metrics: `ipr_fleet_swaps_total`).
+    pub swaps: AtomicU64,
+}
+
+impl FleetController {
+    /// Build the boot view (epoch 1) from the loaded QE's candidate set —
+    /// every boot candidate starts Active — and key the score cache to it.
+    pub fn boot(
+        registry: Arc<Registry>,
+        qe: Arc<QeService>,
+        gate: PromotionGate,
+    ) -> Arc<FleetController> {
+        let entry = qe.entry();
+        let candidates: Vec<FleetCandidate> = entry
+            .candidates
+            .iter()
+            .enumerate()
+            .map(|(head, &global)| {
+                let c = &registry.candidates[global];
+                FleetCandidate {
+                    name: c.name.clone(),
+                    family: c.family.clone(),
+                    price_in: c.price_in,
+                    price_out: c.price_out,
+                    global,
+                    head,
+                    state: Lifecycle::Active,
+                    dynamic: false,
+                    stats: None,
+                }
+            })
+            .collect();
+        let view = Arc::new(FleetView::build(1, entry.id.clone(), qe.cfg.kind.clone(), candidates));
+        qe.cache().rotate_seed(view.key_seed);
+        Arc::new(FleetController {
+            registry,
+            qe,
+            gate,
+            view: ArcSwapCell::new(view),
+            admin: Mutex::new(()),
+            swaps: AtomicU64::new(0),
+        })
+    }
+
+    /// Pin the current view (lock-free; one per request/batch).
+    pub fn view(&self) -> Arc<FleetView> {
+        self.view.load()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.view().epoch
+    }
+
+    /// Publish a new epoch and rotate the score cache onto its seed. The
+    /// rotation happens BEFORE the view store: every vector inserted
+    /// under the new seed was computed by the live model, whose column
+    /// set is always a superset of what the pinned views index.
+    fn publish(&self, old: &FleetView, candidates: Vec<FleetCandidate>) -> Arc<FleetView> {
+        let v = Arc::new(FleetView::build(
+            old.epoch + 1,
+            old.model_id.clone(),
+            old.kind.clone(),
+            candidates,
+        ));
+        self.qe.cache().rotate_seed(v.key_seed);
+        self.view.store(v.clone());
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        v
+    }
+
+    /// Hot-add a candidate in SHADOW state: bind its adapter + QP-head
+    /// bank into the engine-owned model (frozen encoder untouched), then
+    /// publish. The candidate sees live traffic immediately but receives
+    /// none until promoted.
+    pub fn add_candidate(&self, req: AddCandidate) -> Result<Arc<FleetView>> {
+        let _g = self.admin.lock().unwrap_or_else(|e| e.into_inner());
+        let old = self.view();
+        if old.candidate(&req.name).is_some() {
+            bail!("candidate '{}' is already in the fleet", req.name);
+        }
+        let global = CANDIDATES
+            .iter()
+            .position(|c| c.name == req.name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "'{}' is not a known endpoint (the simulated world serves: {})",
+                    req.name,
+                    CANDIDATES.iter().map(|c| c.name).collect::<Vec<_>>().join(", ")
+                )
+            })?;
+        let meta = &CANDIDATES[global];
+        let tensors = match req.tensors {
+            Some(t) => t,
+            None => {
+                let entry = self.qe.entry();
+                let world = SynthWorld::new(self.registry.world_seed);
+                crate::registry::reference::synth_adapter_bank(
+                    &world,
+                    entry.d,
+                    entry.heads,
+                    global,
+                )
+            }
+        };
+        // Model first: the column must exist before any view can name it.
+        let head = self.qe.add_dynamic_head(&req.name, tensors)?;
+        let mut candidates = old.candidates.clone();
+        candidates.push(FleetCandidate {
+            name: req.name,
+            family: meta.family.to_string(),
+            price_in: req.price_in.unwrap_or(meta.price_in),
+            price_out: req.price_out.unwrap_or(meta.price_out),
+            global,
+            head,
+            state: Lifecycle::Shadow,
+            dynamic: true,
+            stats: Some(Arc::new(ShadowStats::default())),
+        });
+        Ok(self.publish(&old, candidates))
+    }
+
+    /// Atomically flip a shadow candidate into the routed set, gated on
+    /// its live calibration (unless `force`).
+    pub fn promote_candidate(&self, name: &str, force: bool) -> Result<Promotion> {
+        let _g = self.admin.lock().unwrap_or_else(|e| e.into_inner());
+        let old = self.view();
+        let c = old
+            .candidate(name)
+            .ok_or_else(|| anyhow!("candidate '{name}' is not in the fleet"))?;
+        if c.state == Lifecycle::Active {
+            bail!("candidate '{name}' is already active");
+        }
+        let stats = c.stats.clone().unwrap_or_default();
+        let samples = stats.calibrated.load(Ordering::Relaxed);
+        let mae = stats.mae();
+        if !force && !self.gate.passes(&stats) {
+            bail!(
+                "candidate '{name}' has not passed the promotion gate: \
+                 {samples}/{} calibrated samples, shadow MAE {mae:.4} (max {:.4}) \
+                 — keep shadowing or pass force=true",
+                self.gate.min_samples,
+                self.gate.max_mae
+            );
+        }
+        let candidates: Vec<FleetCandidate> = old
+            .candidates
+            .iter()
+            .map(|x| {
+                let mut x = x.clone();
+                if x.name == name {
+                    x.state = Lifecycle::Active;
+                    x.stats = None; // calibration is done; drop the accumulators
+                }
+                x
+            })
+            .collect();
+        let view = self.publish(&old, candidates);
+        Ok(Promotion { view, samples, mae, forced: force })
+    }
+
+    /// Remove a candidate from the fleet. The new view publishes FIRST;
+    /// a dynamic member's bank is then tombstoned (column index stable,
+    /// emits 0.0) so batches pinned on the old view finish cleanly. Boot
+    /// members simply leave the view (their head keeps computing,
+    /// ignored). A retired name CAN be re-added later, but always as a
+    /// fresh dynamic bank — a retired boot head is never re-activated in
+    /// place, and each retire/re-add cycle leaves one tombstone column
+    /// behind (bounded by admin-rate churn, not traffic).
+    pub fn retire_candidate(&self, name: &str) -> Result<Arc<FleetView>> {
+        let _g = self.admin.lock().unwrap_or_else(|e| e.into_inner());
+        let old = self.view();
+        let target = old
+            .candidate(name)
+            .ok_or_else(|| anyhow!("candidate '{name}' is not in the fleet"))?
+            .clone();
+        if target.state == Lifecycle::Active && old.active_heads.len() <= 1 {
+            bail!("cannot retire '{name}': it is the last active candidate");
+        }
+        let candidates: Vec<FleetCandidate> =
+            old.candidates.iter().filter(|c| c.name != name).cloned().collect();
+        let view = self.publish(&old, candidates);
+        if target.dynamic {
+            // The publish above IS the retire — the candidate is out of
+            // every new view and the cache is re-keyed. Tombstoning the
+            // bank merely stops its (now ignored) column from computing,
+            // so a failure here (e.g. a dead engine thread) must not turn
+            // an already-effective retire into an error the operator
+            // would misread as "nothing happened".
+            if let Err(e) = self.qe.retire_dynamic_head(name) {
+                eprintln!("warn: retired '{name}' from the fleet, but tombstoning its bank failed: {e}");
+            }
+        }
+        Ok(view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qe::BatcherConfig;
+    use crate::testkit::registry;
+
+    fn controller() -> (Arc<FleetController>, Arc<QeService>) {
+        let reg = registry();
+        let qe =
+            QeService::start(reg.clone(), "qe_claude_stella_sim", BatcherConfig::default())
+                .unwrap();
+        let fleet = FleetController::boot(reg, qe.clone(), PromotionGate::default());
+        (fleet, qe)
+    }
+
+    #[test]
+    fn boot_view_mirrors_entry_and_keys_cache() {
+        let (fleet, qe) = controller();
+        let v = fleet.view();
+        assert_eq!(v.epoch, 1);
+        assert_eq!(v.candidates.len(), 4);
+        assert_eq!(v.active_heads, vec![0, 1, 2, 3]);
+        assert_eq!(v.active_names[0], "claude-3-haiku");
+        // strongest active = most expensive (a sonnet)
+        assert!(v.active_costs[v.strongest_active] >= 0.017);
+        assert_eq!(qe.cache().seed(), v.key_seed, "cache must be keyed to the boot epoch");
+        qe.shutdown();
+    }
+
+    #[test]
+    fn lifecycle_add_promote_retire_epochs_and_seeds() {
+        let (fleet, qe) = controller();
+        let mut seeds = vec![fleet.view().key_seed];
+
+        let v = fleet.add_candidate(AddCandidate::named("nova-pro")).unwrap();
+        assert_eq!(v.epoch, 2);
+        let c = v.candidate("nova-pro").unwrap();
+        assert_eq!(c.state, Lifecycle::Shadow);
+        assert_eq!(c.head, 4);
+        assert!(c.dynamic);
+        assert_eq!(v.active_heads.len(), 4, "shadow members receive no traffic");
+        seeds.push(v.key_seed);
+
+        // gate blocks an uncalibrated promote; force overrides
+        assert!(fleet.promote_candidate("nova-pro", false).is_err());
+        let p = fleet.promote_candidate("nova-pro", true).unwrap();
+        assert!(p.forced);
+        assert_eq!(p.view.epoch, 3);
+        assert_eq!(p.view.candidate("nova-pro").unwrap().state, Lifecycle::Active);
+        assert_eq!(p.view.active_heads.len(), 5);
+        seeds.push(p.view.key_seed);
+
+        let v = fleet.retire_candidate("nova-pro").unwrap();
+        assert_eq!(v.epoch, 4);
+        assert!(v.candidate("nova-pro").is_none());
+        seeds.push(v.key_seed);
+
+        // every mutation changed the cache seed, and the cache tracks it
+        for i in 0..seeds.len() {
+            for j in i + 1..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "epochs {i}/{j} share a key seed");
+            }
+        }
+        assert_eq!(qe.cache().seed(), *seeds.last().unwrap());
+        qe.shutdown();
+    }
+
+    #[test]
+    fn invalid_mutations_rejected() {
+        let (fleet, qe) = controller();
+        // duplicate member
+        assert!(fleet.add_candidate(AddCandidate::named("claude-3-haiku")).is_err());
+        // unknown endpoint
+        assert!(fleet.add_candidate(AddCandidate::named("gpt-99")).is_err());
+        // promote of an active boot member
+        assert!(fleet.promote_candidate("claude-3-haiku", true).is_err());
+        // retire of an unknown member
+        assert!(fleet.retire_candidate("nova-pro").is_err());
+        // cannot retire the last active candidate
+        for name in ["claude-3-haiku", "claude-3.5-haiku", "claude-3.5-sonnet-v1"] {
+            fleet.retire_candidate(name).unwrap();
+        }
+        let err = fleet.retire_candidate("claude-3.5-sonnet-v2").unwrap_err();
+        assert!(format!("{err}").contains("last active"), "{err}");
+        assert_eq!(fleet.view().epoch, 4, "failed mutations must not publish");
+        qe.shutdown();
+    }
+
+    #[test]
+    fn shadow_stats_gate_math() {
+        let gate = PromotionGate { min_samples: 3, max_mae: 0.1 };
+        let s = ShadowStats::default();
+        assert!(!gate.passes(&s));
+        assert_eq!(s.mae(), f64::INFINITY);
+        s.record(0.52, 0.5);
+        s.record(0.48, 0.5);
+        assert!(!gate.passes(&s), "too few samples");
+        s.record(0.5, 0.5);
+        assert!(gate.passes(&s));
+        assert!(s.mae() < 0.021);
+        // one wild sample pushes MAE over the gate
+        s.record(0.9, 0.1);
+        assert!(!gate.passes(&s));
+    }
+}

@@ -5,6 +5,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::control::FleetController;
 use crate::util::hist::Histogram;
 use crate::util::score_cache::ShardedScoreCache;
 
@@ -25,6 +26,9 @@ pub struct Metrics {
     /// Routing-score cache, attached by the router at construction so its
     /// hit/miss/eviction counters render in `GET /metrics`.
     score_cache: Mutex<Option<Arc<ShardedScoreCache>>>,
+    /// Fleet control plane, attached by the router so the epoch gauge and
+    /// shadow-calibration counters render in `GET /metrics`.
+    fleet: Mutex<Option<Arc<FleetController>>>,
 }
 
 impl Metrics {
@@ -36,6 +40,11 @@ impl Metrics {
     /// Attach the router's score cache for rendering.
     pub fn attach_score_cache(&self, cache: Arc<ShardedScoreCache>) {
         *self.score_cache.lock().unwrap() = Some(cache);
+    }
+
+    /// Attach the router's fleet control plane for rendering.
+    pub fn attach_fleet(&self, fleet: Arc<FleetController>) {
+        *self.fleet.lock().unwrap() = Some(fleet);
     }
 
     pub fn add_spend(&self, usd: f64, usd_best: f64) {
@@ -103,6 +112,40 @@ impl Metrics {
             ));
             out.push_str(&format!("ipr_score_cache_entries {}\n", cache.len()));
             out.push_str(&format!("ipr_score_cache_hit_ratio {:.4}\n", s.hit_ratio()));
+        }
+        if let Some(fleet) = self.fleet.lock().unwrap().as_ref() {
+            let v = fleet.view();
+            out.push_str(&format!("ipr_fleet_epoch {}\n", v.epoch));
+            let shadow = v.shadows().count();
+            out.push_str(&format!(
+                "ipr_fleet_candidates{{state=\"active\"}} {}\n",
+                v.active_heads.len()
+            ));
+            out.push_str(&format!("ipr_fleet_candidates{{state=\"shadow\"}} {shadow}\n"));
+            out.push_str(&format!(
+                "ipr_fleet_swaps_total {}\n",
+                fleet.swaps.load(Ordering::Relaxed)
+            ));
+            for c in v.shadows() {
+                let Some(s) = &c.stats else { continue };
+                out.push_str(&format!(
+                    "ipr_shadow_scored_total{{candidate=\"{}\"}} {}\n",
+                    c.name,
+                    s.scored.load(Ordering::Relaxed)
+                ));
+                let calibrated = s.calibrated.load(Ordering::Relaxed);
+                out.push_str(&format!(
+                    "ipr_shadow_calibrated_total{{candidate=\"{}\"}} {calibrated}\n",
+                    c.name
+                ));
+                if calibrated > 0 {
+                    out.push_str(&format!(
+                        "ipr_shadow_mae{{candidate=\"{}\"}} {:.4}\n",
+                        c.name,
+                        s.mae()
+                    ));
+                }
+            }
         }
         // Accumulated simulated spend vs the always-strongest
         // counterfactual — the numbers behind ipr_live_csr, needed by

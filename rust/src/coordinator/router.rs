@@ -9,6 +9,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backends::{Backend, InvokeResult};
+use crate::control::{FleetController, FleetView, PromotionGate};
 use crate::{anyhow, bail};
 use crate::util::error::Result;
 use crate::coordinator::gating::{route_decision, GatingStrategy, RouteDecision};
@@ -32,6 +33,9 @@ pub struct RouterConfig {
     pub batcher: BatcherConfig,
     /// Backend latency simulation factor (0 = meter only).
     pub time_scale: f64,
+    /// When a shadow candidate may be promoted into the routed set
+    /// (fleet control plane, DESIGN.md §14).
+    pub gate: PromotionGate,
 }
 
 impl Default for RouterConfig {
@@ -44,6 +48,7 @@ impl Default for RouterConfig {
             delta: 0.0,
             batcher: BatcherConfig::default(),
             time_scale: 0.0,
+            gate: PromotionGate::default(),
         }
     }
 }
@@ -86,12 +91,18 @@ pub struct BatchItem {
 #[derive(Clone, Debug)]
 pub struct RouteOutcome {
     pub decision: RouteDecision,
-    /// Local-head scores in the model's candidate order.
+    /// ACTIVE-candidate scores in the pinned fleet view's routing order —
+    /// `decision.chosen`/`decision.feasible` index into these. Shadow
+    /// candidates are scored internally but never surfaced here (the
+    /// client-visible contract is stable across shadow adds).
     pub scores: Vec<f32>,
     /// Global candidate index routed to.
     pub candidate_global: usize,
     pub model_name: String,
     pub tau: f64,
+    /// Fleet epoch this request was routed under (one pinned view per
+    /// request/batch — never torn across a swap).
+    pub epoch: u64,
     pub tokenize_us: u64,
     pub qe_us: u64,
     pub decide_us: u64,
@@ -100,56 +111,41 @@ pub struct RouteOutcome {
     pub invoke: Option<InvokeResult>,
 }
 
-/// One router instance = one family QE + DO + endpoint fleet.
+/// One router instance = one family QE + DO + endpoint fleet. Which
+/// candidates exist — and which of them receive traffic — is owned by
+/// the fleet control plane ([`FleetController`], DESIGN.md §14): every
+/// request pins one epoch's [`FleetView`] and routes entirely under it.
 pub struct Router {
     pub registry: Arc<Registry>,
     pub qe: Arc<QeService>,
     pub backend: Backend,
     pub metrics: Arc<Metrics>,
     pub cfg: RouterConfig,
-    /// Global candidate indices in local-head order.
-    pub cand_global: Vec<usize>,
-    /// Unit costs aligned with local heads.
-    pub costs: Vec<f64>,
-    pub names: Vec<String>,
-    /// Local index of the most expensive (reference "strongest") model.
-    pub strongest_local: usize,
+    /// Candidate-lifecycle control plane (admin API + `ipr admin`).
+    pub fleet: Arc<FleetController>,
 }
 
 impl Router {
-    /// Build a router for one family: spawns the QE engine thread and
-    /// loads the family's QE artifact.
+    /// Build a router for one family: spawns the QE engine thread, loads
+    /// the family's QE artifact, and boots the fleet control plane with
+    /// every boot candidate active.
     pub fn new(registry: Arc<Registry>, cfg: RouterConfig) -> Result<Router> {
         let entry = registry.family_qe(&cfg.family, &cfg.backbone)?.clone();
         let qe = QeService::start(registry.clone(), &entry.id, cfg.batcher.clone())?;
-
-        let cand_global = entry.candidates.clone();
-        let costs: Vec<f64> = cand_global
-            .iter()
-            .map(|&i| registry.candidates[i].unit_cost())
-            .collect();
-        let names: Vec<String> = cand_global
-            .iter()
-            .map(|&i| registry.candidates[i].name.clone())
-            .collect();
-        let strongest_local = (0..costs.len())
-            .max_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap())
-            .unwrap_or(0);
+        let fleet = FleetController::boot(registry.clone(), qe.clone(), cfg.gate);
         let world = SynthWorld::new(registry.world_seed);
         let metrics = Arc::new(Metrics::default());
-        // Surface the score cache's hit/miss/eviction counters through
-        // GET /metrics.
+        // Surface the score cache's hit/miss/eviction counters and the
+        // fleet epoch/shadow gauges through GET /metrics.
         metrics.attach_score_cache(qe.cache().clone());
+        metrics.attach_fleet(fleet.clone());
         Ok(Router {
             registry,
             qe,
             backend: Backend::new(world, cfg.time_scale),
             metrics,
             cfg,
-            cand_global,
-            costs,
-            names,
-            strongest_local,
+            fleet,
         })
     }
 
@@ -185,10 +181,15 @@ impl Router {
     /// Decision Optimization, invoke and metering. `qe_us` on a miss
     /// outcome is the shared batch-forward latency (those requests waited
     /// on it together); cache hits report 0.
+    ///
+    /// The WHOLE batch pins one fleet epoch up front: a fleet swap
+    /// landing mid-batch cannot tear the batch into half-old half-new
+    /// candidate sets (DESIGN.md §14).
     pub fn handle_batch(&self, items: &[BatchItem]) -> Result<Vec<RouteOutcome>> {
         if items.is_empty() {
             return Ok(Vec::new());
         }
+        let view = self.fleet.view();
         // Cache pass: collect per-item hits, gather misses for one batch
         // forward. Items whose submitter already did the counted lookup
         // (server fast path) carry their key; re-peek uncounted in case a
@@ -249,6 +250,7 @@ impl Router {
                 .zip(scored)
                 .map(|(it, (sc, qe))| {
                     self.finish(
+                        &view,
                         &it.tokens,
                         sc,
                         it.tau,
@@ -263,12 +265,14 @@ impl Router {
         }
         let mut outs: Vec<Result<RouteOutcome>> = Vec::with_capacity(items.len());
         std::thread::scope(|s| {
+            let view = &view;
             let handles: Vec<_> = items
                 .iter()
                 .zip(scored)
                 .map(|(it, (sc, qe))| {
                     s.spawn(move || {
                         self.finish(
+                            view,
                             &it.tokens,
                             sc,
                             it.tau,
@@ -303,7 +307,8 @@ impl Router {
         qe_us: u64,
         t_start: Instant,
     ) -> Result<RouteOutcome> {
-        self.finish(tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
+        let view = self.fleet.view();
+        self.finish(&view, tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
     }
 
     fn handle_tokens_timed(
@@ -315,9 +320,11 @@ impl Router {
         tokenize_us: u64,
         t_start: Instant,
     ) -> Result<RouteOutcome> {
-        // Score cache first: a hit skips the QE service (queue, engine
-        // thread, forward) entirely — `qe_us` then measures only the
-        // sharded-LRU lookup.
+        // Pin the fleet view for the whole request, then consult the
+        // score cache: a hit skips the QE service (queue, engine thread,
+        // forward) entirely — `qe_us` then measures only the sharded-LRU
+        // lookup.
+        let view = self.fleet.view();
         let t1 = Instant::now();
         let (key, hit) = self.qe.cache_lookup(tokens);
         let scores = match hit {
@@ -325,13 +332,16 @@ impl Router {
             None => self.qe.score_with_key(key, tokens)?,
         };
         let qe_us = t1.elapsed().as_micros() as u64;
-        self.finish(tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
+        self.finish(&view, tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
     }
 
     /// The per-request tail shared by the single and batched paths:
-    /// Decision Optimization → optional invoke → metering.
+    /// Decision Optimization over the pinned view's ACTIVE candidates →
+    /// shadow scoring → optional invoke → metering.
+    #[allow(clippy::too_many_arguments)]
     fn finish(
         &self,
+        view: &FleetView,
         tokens: &[u32],
         scores: Vec<f32>,
         tau: Option<f64>,
@@ -345,12 +355,48 @@ impl Router {
         // boundary check, so the τ contract is enforced here too.
         let tau = validate_tau(tau)?.unwrap_or(self.cfg.tau_default);
 
+        // Shadow scoring: candidates in shadow see live traffic but never
+        // routing; with a generative identity the prediction is compared
+        // against the reward oracle, accumulating toward the promotion
+        // gate. Stats-only — decisions (and digests) are unaffected.
+        // (Runs before the active gather below, which may take `scores`
+        // by move on the static-fleet fast path.)
+        for c in view.shadows() {
+            let (Some(stats), Some(&s)) = (&c.stats, scores.get(c.head)) else {
+                continue;
+            };
+            stats.scored.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if let Some(p) = identity {
+                stats.record(s, self.backend.world().reward(p, c.global));
+            }
+        }
+
         let t2 = Instant::now();
-        let decision = route_decision(&scores, &self.costs, tau, self.cfg.strategy, self.cfg.delta);
+        // Gather the pinned view's active columns out of the full score
+        // vector. The common static-fleet case (active heads are exactly
+        // 0..n) reuses the vector as-is — no allocation on that hot path.
+        // Widths only ever grow across epochs, so the gather index is in
+        // bounds except in one pathological window (a vector cached two
+        // swaps ago reaching a just-promoted head through the server's
+        // cache fast path) — read 0.0 there: routed around, never a panic.
+        let is_identity = view.active_heads.len() == scores.len()
+            && view.active_heads.iter().enumerate().all(|(i, &h)| h == i);
+        let active_scores: Vec<f32> = if is_identity {
+            scores
+        } else {
+            view.active_heads.iter().map(|&h| scores.get(h).copied().unwrap_or(0.0)).collect()
+        };
+        let decision = route_decision(
+            &active_scores,
+            &view.active_costs,
+            tau,
+            self.cfg.strategy,
+            self.cfg.delta,
+        );
         let decide_us = t2.elapsed().as_micros() as u64;
 
         let local = decision.chosen;
-        let global = self.cand_global[local];
+        let global = view.active_global[local];
         let inv = if invoke {
             Some(self.backend.invoke(global, tokens, identity))
         } else {
@@ -363,7 +409,7 @@ impl Router {
         if decision.fallback {
             m.fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
-        m.record_route(&self.names[local]);
+        m.record_route(&view.active_names[local]);
         m.tokenize.lock().unwrap().record(Duration::from_micros(tokenize_us));
         m.qe.lock().unwrap().record(Duration::from_micros(qe_us));
         m.decide.lock().unwrap().record(Duration::from_micros(decide_us));
@@ -372,17 +418,21 @@ impl Router {
         if let Some(inv) = &inv {
             // live CSR: compare against always-strongest on this prompt
             // (cost-only counterfactual, no latency simulation).
-            let best_cost =
-                self.backend.cost_of(self.cand_global[self.strongest_local], tokens, identity);
+            let best_cost = self.backend.cost_of(
+                view.active_global[view.strongest_active],
+                tokens,
+                identity,
+            );
             m.add_spend(inv.cost_usd, best_cost);
         }
 
         Ok(RouteOutcome {
             decision,
-            scores,
+            scores: active_scores,
             candidate_global: global,
-            model_name: self.names[local].clone(),
+            model_name: view.active_names[local].clone(),
             tau,
+            epoch: view.epoch,
             tokenize_us,
             qe_us,
             decide_us,

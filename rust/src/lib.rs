@@ -36,6 +36,10 @@
 //!   batcher → engine → per-candidate scores (+ multi-turn score cache).
 //! * [`coordinator`] — Decision Optimization: Algorithm 1, gating
 //!   strategies, feasible-set routing.
+//! * [`control`] — candidate-lifecycle control plane: epoch-numbered
+//!   [`control::FleetView`] snapshots published lock-free, adapter
+//!   hot-loading, shadow scoring with a promotion gate, and the
+//!   `/admin/v1/*` surface behind `ipr admin`.
 //! * [`backends`] — simulated candidate LLM endpoints (latency, output
 //!   length, realized quality, Eq. 11 cost metering).
 //! * [`server`] — minimal HTTP/1.1 front end (`/v1/route`, `/v1/invoke`,
@@ -61,6 +65,7 @@
 )]
 
 pub mod backends;
+pub mod control;
 pub mod coordinator;
 pub mod eval;
 pub mod qe;

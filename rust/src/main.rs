@@ -10,7 +10,12 @@
 //! * `loadgen`       — deterministic workload simulation against the real
 //!                     server → BENCH_workloads.json (per-scenario routed
 //!                     p50/p95/p99, throughput, cache hit rate, mean cost,
-//!                     quality parity; seeded, bit-reproducible streams).
+//!                     quality parity; seeded, bit-reproducible streams —
+//!                     incl. the fleet_churn mid-run add/promote/retire
+//!                     scenario).
+//! * `admin`         — drive a running server's fleet control plane:
+//!                     show the fleet, hot-add a candidate (shadow),
+//!                     promote it into the routed set, retire one.
 //! * `registry`      — show candidates, prices and deployable QE models.
 //! * `parity`        — golden-file + pallas-vs-xla numerical parity checks.
 //! * `gen-workload`  — print synthetic traffic (text + identity fields).
@@ -34,7 +39,7 @@ use ipr::util::error::{Context, Result};
 use ipr::util::json::Json;
 use ipr::workload;
 use ipr::workload::loadgen::{
-    check_workloads_regression, run_scenario, workloads_json, LoadgenOptions,
+    check_workloads_regression, run_scenario, run_scenario_churn, workloads_json, LoadgenOptions,
 };
 use ipr::{anyhow, bail};
 
@@ -54,25 +59,30 @@ USAGE:
               [--strategy dynamic_max] [--kind xla] [--time-scale 0]
               [--max-batch 8] [--max-wait-us 500] [--batch-workers 2]
               [--drain-ms 5000] [--score-cache-entries 4096]
-              [--no-score-cache]
+              [--no-score-cache] [--shadow-min-samples 32]
+              [--shadow-max-mae 0.15]
   ipr route   --prompt \"...\" [--tau 0.3] [--family claude] [--invoke]
   ipr eval    --table {1..12|D|fig3|fig45|all} [--limit N] [--artifacts DIR]
   ipr bench   [--artifacts DIR] [--out-dir .] [--smoke] [--batch-sizes 1,8,64]
               [--prompts N] [--repeats N] [--route-requests N]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
-  ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|all] [--seed 7]
-              [--requests N] [--clients N] [--smoke] [--time-scale 0]
-              [--out BENCH_workloads.json] [--artifacts DIR]
+  ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|fleet_churn|all]
+              [--seed 7] [--requests N] [--clients N] [--smoke]
+              [--time-scale 0] [--out BENCH_workloads.json] [--artifacts DIR]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
+  ipr admin   fleet              [--addr 127.0.0.1:8080]
+  ipr admin   add     --name X   [--weights BANK.npz] [--addr ...]
+  ipr admin   promote --name X   [--force] [--addr ...]
+  ipr admin   retire  --name X   [--addr ...]
   ipr registry [--artifacts DIR]
   ipr parity  [--artifacts DIR]
   ipr gen-workload [--n 10]
 ";
 
 fn run() -> Result<()> {
-    let args = Args::parse(&["invoke", "help", "smoke", "no-score-cache"]);
+    let args = Args::parse(&["invoke", "help", "smoke", "no-score-cache", "force"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
@@ -80,6 +90,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args),
         "bench" => cmd_bench(&args),
         "loadgen" => cmd_loadgen(&args),
+        "admin" => cmd_admin(&args),
         "registry" => cmd_registry(&args),
         "parity" => cmd_parity(&args),
         "gen-workload" => cmd_gen_workload(&args),
@@ -126,6 +137,10 @@ fn build_router(args: &Args) -> Result<Arc<Router>> {
             },
         },
         time_scale: args.f64_or("time-scale", 0.0)?,
+        gate: ipr::control::PromotionGate {
+            min_samples: args.usize_or("shadow-min-samples", 32)? as u64,
+            max_mae: args.f64_or("shadow-max-mae", 0.15)?,
+        },
     };
     println!(
         "loading router: family={} backbone={} strategy={} kind={}",
@@ -242,12 +257,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         time_scale: args.f64_or("time-scale", 0.0)?,
     };
     let scenarios = if which == "all" {
-        workload::presets(requests)
+        let mut all = workload::presets(requests);
+        // fleet_churn rides along with 'all' whenever the stream is long
+        // enough for its promotion gate (the --smoke default qualifies).
+        if requests >= workload::FLEET_CHURN_MIN_REQUESTS {
+            all.extend(workload::preset(workload::FLEET_CHURN, requests));
+        } else {
+            println!(
+                "note: skipping fleet_churn (needs --requests >= {}, got {requests})",
+                workload::FLEET_CHURN_MIN_REQUESTS
+            );
+        }
+        all
     } else {
         vec![workload::preset(&which, requests).ok_or_else(|| {
             anyhow!(
-                "unknown scenario '{which}' (have: {} or 'all')",
-                workload::PRESET_NAMES.join(", ")
+                "unknown scenario '{which}' (have: {}, {} or 'all')",
+                workload::PRESET_NAMES.join(", "),
+                workload::FLEET_CHURN
             )
         })?]
     };
@@ -261,10 +288,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         ],
     );
     for sc in &scenarios {
-        let r = run_scenario(&opts, sc)?;
+        // fleet_churn carries its canonical mid-run admin plan; every
+        // other scenario runs with a static fleet.
+        let r = if sc.name == workload::FLEET_CHURN {
+            if sc.requests < workload::FLEET_CHURN_MIN_REQUESTS {
+                bail!(
+                    "fleet_churn needs --requests >= {} (the add→promote window must \
+                     accumulate the 32-sample promotion gate), got {}",
+                    workload::FLEET_CHURN_MIN_REQUESTS,
+                    sc.requests
+                );
+            }
+            run_scenario_churn(&opts, sc, &workload::churn_plan(sc.requests))?
+        } else {
+            run_scenario(&opts, sc)?
+        };
         println!(
-            "{}: stream {:#018x}  decisions {:#018x}",
-            r.name, r.stream_digest, r.decision_digest
+            "{}: stream {:#018x}  decisions {:#018x}  (fleet epoch {}, {} admin actions)",
+            r.name, r.stream_digest, r.decision_digest, r.fleet_epoch, r.fleet_actions
         );
         t.row(vec![
             r.name.clone(),
@@ -321,6 +362,47 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         let ratio = args.f64_or("max-regress", 1.25)?;
         let msg = check_workloads_regression(&doc, b, ratio)?;
         println!("{msg}");
+    }
+    Ok(())
+}
+
+/// `ipr admin`: drive a running server's fleet control plane over the
+/// `/admin/v1/*` HTTP surface (DESIGN.md §14).
+fn cmd_admin(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:8080");
+    let action = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("usage: ipr admin {fleet|add|promote|retire} [--name X] [--addr HOST:PORT]")?;
+    let client = ipr::server::HttpClient::new(addr);
+    let name_of = || args.get("name").context("--name required");
+    let (status, body) = match action {
+        "fleet" => client.get("/admin/v1/fleet")?,
+        "add" => {
+            let name = name_of()?;
+            // Json::str escapes quotes/backslashes (e.g. Windows-style
+            // --weights paths) — never interpolate raw values into JSON.
+            let mut fields = vec![("name", Json::str(name))];
+            if let Some(w) = args.get("weights") {
+                fields.push(("weights", Json::str(w)));
+            }
+            client.post("/admin/v1/candidates", &Json::obj(fields).to_string())?
+        }
+        "promote" => {
+            let name = name_of()?;
+            let body = if args.flag("force") { "{\"force\": true}" } else { "{}" };
+            client.post(&format!("/admin/v1/candidates/{name}/promote"), body)?
+        }
+        "retire" => {
+            let name = name_of()?;
+            client.delete(&format!("/admin/v1/candidates/{name}"))?
+        }
+        other => bail!("unknown admin action '{other}' (fleet | add | promote | retire)"),
+    };
+    println!("{body}");
+    if status != 200 {
+        bail!("admin '{action}' failed with HTTP {status}");
     }
     Ok(())
 }

@@ -30,9 +30,10 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::registry::{ModelEntry, Registry};
-use crate::runtime::{create_engine, Engine as _, QeModel as _};
+use crate::runtime::{create_engine, Engine as _, QeModel};
 use crate::util::error::Result;
 use crate::util::hist::Histogram;
+use crate::util::npz::Tensor;
 use crate::util::score_cache::{key_seed, ShardedScoreCache};
 
 #[derive(Clone, Debug)]
@@ -65,10 +66,34 @@ struct Pending {
     tx: mpsc::Sender<Result<Vec<f32>>>,
 }
 
+/// Admin mutation executed ON the engine thread (it owns the model, so
+/// scoring can never observe a half-applied change). Controls act as
+/// batch barriers: the drain loop never coalesces scores across one.
+enum Control {
+    AddHead { name: String, tensors: Vec<(String, Tensor)>, reply: mpsc::Sender<Result<usize>> },
+    RetireHead { name: String, reply: mpsc::Sender<Result<()>> },
+}
+
+enum Job {
+    Score(Pending),
+    Control(Control),
+}
+
 struct Queue {
-    q: Mutex<VecDeque<Pending>>,
+    q: Mutex<VecDeque<Job>>,
     cv: Condvar,
     shutdown: AtomicBool,
+}
+
+/// Pop the next job only when it is a score request — a control at the
+/// queue front ends the current batch (it needs the model to itself).
+fn pop_score(q: &mut VecDeque<Job>) -> Option<Pending> {
+    if matches!(q.front(), Some(Job::Score(_))) {
+        if let Some(Job::Score(p)) = q.pop_front() {
+            return Some(p);
+        }
+    }
+    None
 }
 
 /// Model metadata surfaced from the engine thread at load time.
@@ -179,7 +204,7 @@ impl QeService {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.queue.q.lock().unwrap();
-            q.push_back(Pending { tokens: tokens.to_vec(), tx });
+            q.push_back(Job::Score(Pending { tokens: tokens.to_vec(), tx }));
         }
         self.queue.cv.notify_one();
         let scores = rx.recv().map_err(|_| anyhow!("QE engine dropped request"))??;
@@ -212,7 +237,7 @@ impl QeService {
                     continue;
                 }
                 let (tx, rx) = mpsc::channel();
-                q.push_back(Pending { tokens: p, tx });
+                q.push_back(Job::Score(Pending { tokens: p, tx }));
                 slots.push(Slot::Rx(key, rx));
             }
         }
@@ -246,7 +271,7 @@ impl QeService {
             let mut q = self.queue.q.lock().unwrap();
             for (key, tokens) in items {
                 let (tx, rx) = mpsc::channel();
-                q.push_back(Pending { tokens, tx });
+                q.push_back(Job::Score(Pending { tokens, tx }));
                 rxs.push((key, rx));
             }
         }
@@ -258,6 +283,32 @@ impl QeService {
                 Ok(s)
             })
             .collect()
+    }
+
+    /// Hot-plug a new candidate's adapter + QP-head bank (blocking): the
+    /// mutation is shipped to the engine thread and applied between
+    /// batches, so no forward ever sees a half-loaded bank. Returns the
+    /// score-vector column the new head occupies.
+    pub fn add_dynamic_head(&self, name: &str, tensors: Vec<(String, Tensor)>) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        {
+            let mut q = self.queue.q.lock().unwrap();
+            q.push_back(Job::Control(Control::AddHead { name: name.to_string(), tensors, reply }));
+        }
+        self.queue.cv.notify_all();
+        rx.recv().map_err(|_| anyhow!("QE engine dropped the add-head control request"))?
+    }
+
+    /// Tombstone a dynamically added head (blocking; see
+    /// `QeModel::retire_dynamic_head` for the column-stability contract).
+    pub fn retire_dynamic_head(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        {
+            let mut q = self.queue.q.lock().unwrap();
+            q.push_back(Job::Control(Control::RetireHead { name: name.to_string(), reply }));
+        }
+        self.queue.cv.notify_all();
+        rx.recv().map_err(|_| anyhow!("QE engine dropped the retire-head control request"))?
     }
 
     pub fn shutdown(&self) {
@@ -295,7 +346,7 @@ fn engine_thread(
         let model = engine.load_model(&reg, &entry, &kinds)?;
         Ok((engine.name(), model))
     })();
-    let model = match load {
+    let mut model = match load {
         Ok((engine_name, m)) => {
             let _ = ready_tx.send(Ok(LoadedInfo {
                 entry: m.entry().clone(),
@@ -318,23 +369,36 @@ fn engine_thread(
     // (§Perf iteration 2).
     let mut prev_batch_len = 0usize;
     loop {
-        // Phase 1: wait for the first request.
+        // Phase 1: wait for the first request. Control messages (dynamic
+        // head add/retire) are applied HERE, with the queue lock released
+        // and no batch in flight — the model mutation is invisible to
+        // scoring by construction.
         let mut batch: Vec<Pending> = Vec::with_capacity(cfg.max_batch);
         {
             let mut q = queue.q.lock().unwrap();
             loop {
-                if let Some(p) = q.pop_front() {
-                    batch.push(p);
-                    break;
-                }
-                if queue.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                q = queue.cv.wait(q).unwrap();
-            }
-            // Phase 2: take whatever is already queued.
-            while batch.len() < cfg.max_batch {
                 match q.pop_front() {
+                    Some(Job::Control(c)) => {
+                        drop(q);
+                        apply_control(&mut *model, c);
+                        q = queue.q.lock().unwrap();
+                    }
+                    Some(Job::Score(p)) => {
+                        batch.push(p);
+                        break;
+                    }
+                    None => {
+                        if queue.shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        q = queue.cv.wait(q).unwrap();
+                    }
+                }
+            }
+            // Phase 2: take whatever is already queued, up to the next
+            // control (a control is a batch barrier).
+            while batch.len() < cfg.max_batch {
+                match pop_score(&mut q) {
                     Some(p) => batch.push(p),
                     None => break,
                 }
@@ -350,13 +414,16 @@ fn engine_thread(
                     break;
                 }
                 let mut q = queue.q.lock().unwrap();
-                if let Some(p) = q.pop_front() {
+                if matches!(q.front(), Some(Job::Control(_))) {
+                    break; // serve this batch now; the control runs next
+                }
+                if let Some(p) = pop_score(&mut q) {
                     batch.push(p);
                     continue;
                 }
                 let (qq, _) = queue.cv.wait_timeout(q, deadline - now).unwrap();
-                q = qq;
-                if let Some(p) = q.pop_front() {
+                let mut q = qq;
+                if let Some(p) = pop_score(&mut q) {
                     batch.push(p);
                 }
             }
@@ -384,6 +451,19 @@ fn engine_thread(
                     let _ = tx.send(Err(anyhow!("QE forward failed: {e}")));
                 }
             }
+        }
+    }
+}
+
+/// Apply one admin mutation to the engine-owned model and ship the
+/// result back to the blocked caller.
+fn apply_control(model: &mut dyn QeModel, control: Control) {
+    match control {
+        Control::AddHead { name, tensors, reply } => {
+            let _ = reply.send(model.add_dynamic_head(&name, tensors));
+        }
+        Control::RetireHead { name, reply } => {
+            let _ = reply.send(model.retire_dynamic_head(&name));
         }
     }
 }

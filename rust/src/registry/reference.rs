@@ -984,6 +984,24 @@ fn routellm_head_tensors(
     ]
 }
 
+/// Synthesize the full `ada_*` adapter bank for hot-plugging one new
+/// candidate onto a FROZEN encoder of hyper-parameters `(d, heads)` —
+/// the runtime face of the §D "new model integration in hours" claim:
+/// what a short adapter-training run produces in production, the expert
+/// construction produces here from a least-squares calibration pass
+/// (`calibrate`) plus the candidate's analytic reward surface. Consumed
+/// by `QeModel::add_dynamic_head` through the fleet control plane
+/// (`POST /admin/v1/candidates`; DESIGN.md §14).
+pub fn synth_adapter_bank(
+    world: &SynthWorld,
+    d: usize,
+    heads: usize,
+    new_candidate: usize,
+) -> Vec<(String, Tensor)> {
+    let cal = calibrate(world, d, heads);
+    adapter_tensors(world, d, heads, new_candidate, cal)
+}
+
 /// §D adapter tensors for one new candidate: the PE adapter is exactly
 /// identity (`ada_pe_w2 = 0`), so old-candidate predictions are preserved
 /// bit-for-bit (the Eq. 10 consistency loss's fixed point); the new head
@@ -1114,6 +1132,86 @@ mod tests {
         }
         let mae = abs_err / n as f64;
         assert!(mae < 0.12, "expert-head MAE {mae} too high");
+    }
+
+    /// Hot-plugged bank contract: base columns are preserved BIT-FOR-BIT
+    /// when a dynamic head is added (frozen encoder, append-only
+    /// columns), the new column tracks the reward oracle well enough to
+    /// pass the promotion gate, and a tombstoned bank keeps its column
+    /// at a constant 0.0 without disturbing anything else.
+    #[test]
+    fn dynamic_head_appends_column_and_preserves_base() {
+        use crate::runtime::QeModel as _;
+        let (world, mut model) = build_test_model(1, "claude"); // stella: d=48, 3 enc heads
+        let (_, d, _, heads) = BACKBONES[1];
+        let prompts: Vec<Vec<u32>> = (0..16u64)
+            .map(|i| {
+                let p = world.sample_prompt(SPLIT_TEST, i);
+                p.tokens.iter().take(SEQ_LEN).copied().collect()
+            })
+            .collect();
+        let before = model.score_batch(&prompts, "xla").unwrap().scores;
+
+        let new_global = 10; // nova-pro: cross-family hot-plug
+        let bank = synth_adapter_bank(&world, d, heads, new_global);
+        let col = model.add_dynamic_head("nova-pro", bank).unwrap();
+        assert_eq!(col, 4, "claude family has 4 base heads");
+        assert_eq!(model.total_heads(), 5);
+        // duplicate adds are rejected
+        assert!(model
+            .add_dynamic_head("nova-pro", synth_adapter_bank(&world, d, heads, new_global))
+            .is_err());
+
+        let after = model.score_batch(&prompts, "xla").unwrap().scores;
+        let mut mae_new = 0f64;
+        for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+            assert_eq!(a.len(), b.len() + 1);
+            for j in 0..b.len() {
+                assert_eq!(
+                    a[j].to_bits(),
+                    b[j].to_bits(),
+                    "base column {j} drifted after hot-plug"
+                );
+            }
+            let p = world.sample_prompt(SPLIT_TEST, i as u64);
+            mae_new += (a[col] as f64 - world.reward(&p, new_global)).abs();
+        }
+        mae_new /= after.len() as f64;
+        assert!(mae_new < 0.12, "hot-plugged head not calibrated: MAE {mae_new}");
+
+        // retire: column index is stable, value tombstones to 0.0
+        model.retire_dynamic_head("nova-pro").unwrap();
+        assert!(model.retire_dynamic_head("nova-pro").is_err(), "double retire");
+        assert_eq!(model.total_heads(), 5, "tombstones keep the vector width");
+        let gone = model.score_batch(&prompts, "xla").unwrap().scores;
+        for (b, g) in before.iter().zip(&gone) {
+            assert_eq!(g.len(), 5);
+            assert_eq!(g[col], 0.0);
+            for j in 0..b.len() {
+                assert_eq!(g[j].to_bits(), b[j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_head_rejects_malformed_banks() {
+        use crate::runtime::QeModel as _;
+        let (world, mut model) = build_test_model(1, "claude");
+        let (_, d, _, heads) = BACKBONES[1];
+        // missing tensor
+        let mut bank = synth_adapter_bank(&world, d, heads, 9);
+        bank.retain(|(n, _)| n != "ada_qp_w2");
+        assert!(model.add_dynamic_head("nova-lite", bank).is_err());
+        // wrong encoder width
+        let bank = synth_adapter_bank(&world, d + 2, heads, 9);
+        assert!(model.add_dynamic_head("nova-lite", bank).is_err());
+        // unexpected extra tensor
+        let mut bank = synth_adapter_bank(&world, d, heads, 9);
+        bank.push(("zzz_extra".into(), Tensor::new(vec![1], vec![0.0])));
+        assert!(model.add_dynamic_head("nova-lite", bank).is_err());
+        // a clean bank still loads after the rejects
+        let bank = synth_adapter_bank(&world, d, heads, 9);
+        assert!(model.add_dynamic_head("nova-lite", bank).is_ok());
     }
 
     #[test]

@@ -38,6 +38,7 @@
 
 use crate::registry::{ModelEntry, Registry};
 use crate::util::error::Result;
+use crate::util::npz::Tensor;
 use crate::{anyhow, bail};
 
 pub mod reference;
@@ -144,6 +145,37 @@ pub trait QeModel {
 
     /// Number of per-candidate output heads.
     fn n_heads(&self) -> usize {
+        self.entry().candidates.len()
+    }
+
+    /// Hot-plug one new candidate's adapter + QP-head bank onto the
+    /// loaded model's FROZEN encoder (the paper's §3.1/§D extensibility
+    /// claim made live — see DESIGN.md §14). `tensors` follow the `ada_*`
+    /// contract of `registry::reference::adapter_tensors`: a residual PE
+    /// adapter (identity at expert init) plus exactly one QP head. The
+    /// encoder plan is untouched; the score vector grows by one column,
+    /// whose index is returned.
+    ///
+    /// Default: unsupported — engines that execute fixed compiled graphs
+    /// (PJRT AOT executables) cannot grow their output shape in place;
+    /// they re-lower through `make artifacts` instead.
+    fn add_dynamic_head(&mut self, name: &str, _tensors: Vec<(String, Tensor)>) -> Result<usize> {
+        bail!(
+            "engine cannot hot-plug candidate head '{name}': fixed-shape executables \
+             (re-lower via `make artifacts` and restart)"
+        )
+    }
+
+    /// Tombstone a dynamically added head: its column KEEPS its index
+    /// (pinned fleet views and cached score vectors stay well-formed —
+    /// score-vector width never shrinks) and emits a constant 0.0.
+    fn retire_dynamic_head(&mut self, name: &str) -> Result<()> {
+        bail!("engine has no dynamic candidate head '{name}' to retire")
+    }
+
+    /// Total score-vector width currently produced: base heads + static
+    /// adapter head + every dynamic bank, tombstones included.
+    fn total_heads(&self) -> usize {
         self.entry().candidates.len()
     }
 }

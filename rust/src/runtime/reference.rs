@@ -420,6 +420,22 @@ struct AdapterPlan {
     heads_new: HeadPlan,
 }
 
+/// One HOT-PLUGGED candidate bank (`QeModel::add_dynamic_head`): its own
+/// residual PE adapter over the frozen encoder's pooled features plus a
+/// single QP head, appended as one score column after the static plan's
+/// columns. `retired` tombstones the bank: the column keeps its index —
+/// pinned fleet views and cached score vectors stay well-formed because
+/// the score-vector width never shrinks — and emits a constant 0.0.
+struct DynBank {
+    name: String,
+    retired: bool,
+    pe_w1: PackedGemm,
+    pe_b1: Vec<f32>,
+    pe_w2: PackedGemm,
+    pe_b2: Vec<f32>,
+    heads: HeadPlan,
+}
+
 /// Everything the forward needs, typed and resolved.
 struct ExecutionPlan {
     tok_emb: Tensor,
@@ -435,6 +451,9 @@ struct ExecutionPlan {
 pub struct ReferenceModel {
     entry: ModelEntry,
     plan: ExecutionPlan,
+    /// Hot-plugged candidate banks in add order (tombstones included);
+    /// mutated only on the owning engine thread, between batches.
+    dyn_banks: Vec<DynBank>,
     buckets: Vec<(usize, usize, String)>,
     /// Encoder hyper-parameters, derived from entry + tensor shapes.
     d: usize,
@@ -576,6 +595,7 @@ impl ReferenceModel {
                 heads: heads_plan,
                 adapter,
             },
+            dyn_banks: Vec::new(),
             buckets,
             d,
             heads,
@@ -757,10 +777,18 @@ impl ReferenceModel {
         }
     }
 
+    /// Score-vector columns produced by the load-time plan alone (base
+    /// heads + the static §D adapter's appended head). Dynamic banks'
+    /// columns follow these, in add order.
+    fn static_cols(&self) -> usize {
+        self.plan.heads.c + if self.plan.adapter.is_some() { 1 } else { 0 }
+    }
+
     /// QP-head stage shared by the padded (`predict`) and packed ragged
     /// (`score_batch`) paths: pooled `[n, d]` → per-candidate scores,
-    /// including the §D adapter composition. All weights come prebound
-    /// from the plan; the only allocations are the returned score vectors.
+    /// including the §D adapter composition and any hot-plugged dynamic
+    /// banks. All weights come prebound from the plan; the only
+    /// allocations are the returned score vectors.
     fn heads_from_pooled_ar(
         &self,
         pooled: &[f32],
@@ -769,11 +797,13 @@ impl ReferenceModel {
     ) -> Vec<QualityVector> {
         let plan = &self.plan;
         let d = self.d;
-        let (flat, c) = if let Some(ap) = &plan.adapter {
+        let c_static = self.static_cols();
+        let c = c_static + self.dyn_banks.len();
+        let mut flat = vec![0f32; n * c];
+        if let Some(ap) = &plan.adapter {
             // §D adapter path: residual PE adapter, then base heads + new
             // head from the adapted representation (new candidate LAST).
             let c_old = plan.heads.c;
-            let c = c_old + 1;
             let nd = n * d;
             let hmid = slot(&mut hs.hmid, nd);
             ap.pe_w1.gemm(pooled, n, hmid, Epilogue::BiasRelu(&ap.pe_b1), &mut hs.gemm_tmp);
@@ -785,7 +815,6 @@ impl ReferenceModel {
                 Epilogue::StoreAddRowBias { other: pooled, bias: &ap.pe_b2 },
                 &mut hs.gemm_tmp,
             );
-            let mut flat = vec![0f32; n * c];
             run_heads(&plan.heads, pooled_new, n, &mut hs.pre, &mut hs.gemm_tmp, &mut flat, c, 0);
             run_heads(
                 &ap.heads_new,
@@ -797,13 +826,40 @@ impl ReferenceModel {
                 c,
                 c_old,
             );
-            (flat, c)
         } else {
-            let c = plan.heads.c;
-            let mut flat = vec![0f32; n * c];
             run_heads(&plan.heads, pooled, n, &mut hs.pre, &mut hs.gemm_tmp, &mut flat, c, 0);
-            (flat, c)
-        };
+        }
+        // Hot-plugged banks: each adapts the ORIGINAL pooled features
+        // through its own residual PE adapter (the frozen-encoder
+        // composition of qe_apply_with_adapter, one bank per candidate),
+        // then scores its single head into its fixed column. Tombstoned
+        // banks skip the compute — their column stays at the zeroed 0.0.
+        for (bi, bank) in self.dyn_banks.iter().enumerate() {
+            if bank.retired {
+                continue;
+            }
+            let nd = n * d;
+            let hmid = slot(&mut hs.hmid, nd);
+            bank.pe_w1.gemm(pooled, n, hmid, Epilogue::BiasRelu(&bank.pe_b1), &mut hs.gemm_tmp);
+            let pooled_bank = slot(&mut hs.pooled_new, nd);
+            bank.pe_w2.gemm(
+                hmid,
+                n,
+                pooled_bank,
+                Epilogue::StoreAddRowBias { other: pooled, bias: &bank.pe_b2 },
+                &mut hs.gemm_tmp,
+            );
+            run_heads(
+                &bank.heads,
+                pooled_bank,
+                n,
+                &mut hs.pre,
+                &mut hs.gemm_tmp,
+                &mut flat,
+                c,
+                c_static + bi,
+            );
+        }
         (0..n).map(|i| flat[i * c..(i + 1) * c].to_vec()).collect()
     }
 
@@ -1169,6 +1225,91 @@ impl QeModel for ReferenceModel {
         })?;
         self.calls.fetch_add(1, Ordering::Relaxed);
         Ok(Scores { scores, bucket: (b, s), kind: kind.to_string() })
+    }
+
+    /// Hot-plug one candidate bank (`ada_*` tensor contract, exactly one
+    /// head) onto the frozen encoder: weights are validated and packed
+    /// HERE, once — the forward then treats the bank like any prebound
+    /// plan. Runs on the owning engine thread between batches, so no
+    /// forward can observe a half-loaded bank.
+    fn add_dynamic_head(&mut self, name: &str, tensors: Vec<(String, Tensor)>) -> Result<usize> {
+        if self.dyn_banks.iter().any(|b| !b.retired && b.name == name) {
+            bail!("dynamic head '{name}' is already loaded");
+        }
+        let d = self.d;
+        let id = format!("{}+{name}", self.entry.id);
+        let mut params: BTreeMap<String, Tensor> = tensors.into_iter().collect();
+        let pe_w1 = take(&mut params, &id, "ada_pe_w1")?;
+        let pe_b1 = take(&mut params, &id, "ada_pe_b1")?.data;
+        let pe_w2 = take(&mut params, &id, "ada_pe_w2")?;
+        let pe_b2 = take(&mut params, &id, "ada_pe_b2")?.data;
+        if pe_w1.shape != vec![d, d] || pe_w2.shape != vec![d, d] {
+            bail!(
+                "model {id}: adapter MLP shapes {:?}/{:?} vs encoder d={d}",
+                pe_w1.shape,
+                pe_w2.shape
+            );
+        }
+        if pe_b1.len() != d || pe_b2.len() != d {
+            bail!("model {id}: adapter bias lengths {}/{} vs d={d}", pe_b1.len(), pe_b2.len());
+        }
+        let lie = take(&mut params, &id, "ada_lie_emb")?;
+        let d_id = lie.shape.get(1).copied().unwrap_or(0);
+        let lie_w = take(&mut params, &id, "ada_lie_w")?;
+        if lie.shape != vec![1, d_id] || lie_w.shape != vec![d_id, d_id] || d_id == 0 {
+            bail!("model {id}: identity-embedding shapes {:?}/{:?}", lie.shape, lie_w.shape);
+        }
+        let w1p = take(&mut params, &id, "ada_qp_w1p")?;
+        let hh = w1p.shape.last().copied().unwrap_or(0);
+        if w1p.shape != vec![1, d, hh] || hh == 0 {
+            bail!(
+                "model {id}: ada_qp_w1p shape {:?} — a dynamic bank carries exactly ONE head",
+                w1p.shape
+            );
+        }
+        let w1e = take(&mut params, &id, "ada_qp_w1e")?;
+        if w1e.shape != vec![1, d_id, hh] {
+            bail!("model {id}: ada_qp_w1e shape {:?} vs [1, {d_id}, {hh}]", w1e.shape);
+        }
+        let b1 = take(&mut params, &id, "ada_qp_b1")?.data;
+        let w2 = take(&mut params, &id, "ada_qp_w2")?.data;
+        let b2 = take(&mut params, &id, "ada_qp_b2")?.data;
+        if b1.len() != hh || w2.len() != hh || b2.len() != 1 {
+            bail!("model {id}: QP head tensor lengths {}/{}/{}", b1.len(), w2.len(), b2.len());
+        }
+        if !params.is_empty() {
+            let extra: Vec<&String> = params.keys().collect();
+            bail!("model {id}: unexpected tensors {extra:?}");
+        }
+        // e_new = ada_lie_emb @ ada_lie_w — prompt independent, folded
+        // into the bank head's `he` exactly like the static §D path.
+        let e_new = matmul(&lie.data, &lie_w.data, 1, d_id, d_id);
+        let heads = build_head_plan(&e_new, &w1e.data, &w1p, b1, w2, b2, d, d_id, hh);
+        let col = self.static_cols() + self.dyn_banks.len();
+        self.dyn_banks.push(DynBank {
+            name: name.to_string(),
+            retired: false,
+            pe_w1: PackedGemm::pack(&pe_w1.data, d, d),
+            pe_b1,
+            pe_w2: PackedGemm::pack(&pe_w2.data, d, d),
+            pe_b2,
+            heads,
+        });
+        Ok(col)
+    }
+
+    fn retire_dynamic_head(&mut self, name: &str) -> Result<()> {
+        match self.dyn_banks.iter_mut().find(|b| !b.retired && b.name == name) {
+            Some(b) => {
+                b.retired = true;
+                Ok(())
+            }
+            None => bail!("no live dynamic head '{name}' to retire"),
+        }
+    }
+
+    fn total_heads(&self) -> usize {
+        self.static_cols() + self.dyn_banks.len()
     }
 }
 

@@ -7,8 +7,23 @@
 //!   identity of generated traffic, enabling realized-quality metering).
 //! * `POST /v1/invoke` — same, but always invokes the routed endpoint.
 //! * `GET  /metrics`   — text metrics (stage latencies, route mix, CSR).
-//! * `GET  /v1/registry` — candidates + loaded model info.
+//! * `GET  /v1/registry` — fleet candidates (prices, lifecycle state,
+//!   epoch) + loaded model info.
 //! * `GET  /health`.
+//!
+//! Admin surface (fleet control plane, DESIGN.md §14; `ipr admin` fronts
+//! these):
+//! * `GET    /admin/v1/fleet` — current epoch + full membership with
+//!   shadow-calibration progress.
+//! * `POST   /admin/v1/candidates` — body `{"name": "nova-pro"}`
+//!   (optional `"weights"`: path to an `ada_*` npz bank; default
+//!   synthesizes the expert adapter) — hot-add in SHADOW state.
+//! * `POST   /admin/v1/candidates/{name}/promote` — body optional
+//!   `{"force": true}` — atomically flip into the routed set (gated).
+//! * `DELETE /admin/v1/candidates/{name}` — retire from the fleet.
+//!
+//! Unknown routes and unsupported methods get JSON error bodies (404 /
+//! 405), like every other error on this surface.
 //!
 //! Request path (DESIGN.md §11–§12): connection threads parse + tokenize
 //! (into a per-connection reusable buffer), consult the sharded routing-
@@ -443,6 +458,10 @@ fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
     }
 }
 
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
 fn dispatch(
     sh: &ServerShared,
     method: &str,
@@ -455,19 +474,138 @@ fn dispatch(
         ("GET", "/health") => ("200 OK", "text/plain", "ok\n".into()),
         ("GET", "/metrics") => ("200 OK", "text/plain", router.metrics.render()),
         ("GET", "/v1/registry") => ("200 OK", "application/json", registry_json(router)),
+        ("GET", "/admin/v1/fleet") => ("200 OK", "application/json", fleet_json(router)),
         ("POST", "/v1/route") | ("POST", "/v1/invoke") => {
             let force_invoke = path == "/v1/invoke";
             match handle_route(sh, body, force_invoke, tok_buf) {
                 Ok(j) => ("200 OK", "application/json", j),
-                Err(e) => (
-                    "400 Bad Request",
-                    "application/json",
-                    Json::obj(vec![("error", Json::str(&e.to_string()))]).to_string(),
-                ),
+                Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
             }
         }
-        _ => ("404 Not Found", "text/plain", "not found\n".into()),
+        ("POST", "/admin/v1/candidates") => match admin_add(router, body) {
+            Ok(j) => ("200 OK", "application/json", j),
+            Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
+        },
+        _ if path.starts_with("/admin/v1/candidates/") => {
+            admin_candidate(router, method, path, body)
+        }
+        // Known paths with the wrong method are 405s, everything else a
+        // 404 — both with JSON error bodies like the rest of the surface.
+        _ => {
+            let (known, allow) = match path {
+                "/health" | "/metrics" | "/v1/registry" | "/admin/v1/fleet" => (true, "GET"),
+                "/v1/route" | "/v1/invoke" | "/admin/v1/candidates" => (true, "POST"),
+                _ => (false, ""),
+            };
+            if known {
+                (
+                    "405 Method Not Allowed",
+                    "application/json",
+                    err_json(&format!("method {method} not allowed for {path} (use {allow})")),
+                )
+            } else {
+                ("404 Not Found", "application/json", err_json(&format!("no route for {path}")))
+            }
+        }
     }
+}
+
+/// `/admin/v1/candidates/{name}` (DELETE = retire) and
+/// `/admin/v1/candidates/{name}/promote` (POST).
+fn admin_candidate(
+    router: &Router,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (&'static str, &'static str, String) {
+    let rest = &path["/admin/v1/candidates/".len()..];
+    let (name, action) = match rest.split_once('/') {
+        None => (rest, None),
+        Some((n, "promote")) => (n, Some("promote")),
+        Some((_, other)) => {
+            return (
+                "404 Not Found",
+                "application/json",
+                err_json(&format!("no candidate action '{other}'")),
+            )
+        }
+    };
+    if name.is_empty() {
+        return ("404 Not Found", "application/json", err_json("empty candidate name"));
+    }
+    let result = match (method, action) {
+        ("POST", Some("promote")) => admin_promote(router, name, body),
+        ("DELETE", None) => admin_retire(router, name),
+        _ => {
+            return (
+                "405 Method Not Allowed",
+                "application/json",
+                err_json(&format!(
+                    "method {method} not allowed for {path} (DELETE retires, POST …/promote promotes)"
+                )),
+            )
+        }
+    };
+    match result {
+        Ok(j) => ("200 OK", "application/json", j),
+        Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
+    }
+}
+
+/// `POST /admin/v1/candidates`: hot-add a candidate in shadow state.
+fn admin_add(router: &Router, body: &str) -> Result<String> {
+    let j = parse(body).context("request body must be JSON")?;
+    let name = j.req("name")?.as_str()?.to_string();
+    let tensors = match j.get("weights") {
+        Some(w) => {
+            let path = w.as_str()?;
+            Some(
+                crate::util::npz::read_npz(std::path::Path::new(path))
+                    .with_context(|| format!("reading adapter bank {path}"))?,
+            )
+        }
+        None => None,
+    };
+    let req = crate::control::AddCandidate {
+        name,
+        price_in: j.get("price_in").map(|v| v.as_f64()).transpose()?,
+        price_out: j.get("price_out").map(|v| v.as_f64()).transpose()?,
+        tensors,
+    };
+    let view = router.fleet.add_candidate(req)?;
+    Ok(fleet_view_doc(&view, &router.fleet.gate).to_string())
+}
+
+/// `POST /admin/v1/candidates/{name}/promote`.
+fn admin_promote(router: &Router, name: &str, body: &str) -> Result<String> {
+    let force = if body.trim().is_empty() {
+        false
+    } else {
+        parse(body)
+            .context("request body must be JSON")?
+            .get("force")
+            .map(|v| v.as_bool())
+            .transpose()?
+            .unwrap_or(false)
+    };
+    let p = router.fleet.promote_candidate(name, force)?;
+    let mut fields = vec![
+        ("promoted", Json::str(name)),
+        ("forced", Json::Bool(p.forced)),
+        ("samples", Json::Num(p.samples as f64)),
+        ("epoch", Json::Num(p.view.epoch as f64)),
+    ];
+    if p.mae.is_finite() {
+        fields.push(("shadow_mae", Json::Num(p.mae)));
+    }
+    fields.push(("fleet", fleet_view_doc(&p.view, &router.fleet.gate)));
+    Ok(Json::obj(fields).to_string())
+}
+
+/// `DELETE /admin/v1/candidates/{name}`.
+fn admin_retire(router: &Router, name: &str) -> Result<String> {
+    let view = router.fleet.retire_candidate(name)?;
+    Ok(fleet_view_doc(&view, &router.fleet.gate).to_string())
 }
 
 /// Parse → tokenize into the connection's reusable buffer → score-cache
@@ -559,6 +697,7 @@ fn outcome_json(out: &RouteOutcome) -> String {
             "feasible",
             Json::Arr(out.decision.feasible.iter().map(|&i| Json::Num(i as f64)).collect()),
         ),
+        ("epoch", Json::Num(out.epoch as f64)),
         ("tokenize_us", Json::Num(out.tokenize_us as f64)),
         ("qe_us", Json::Num(out.qe_us as f64)),
         ("decide_us", Json::Num(out.decide_us as f64)),
@@ -582,17 +721,21 @@ fn outcome_json(out: &RouteOutcome) -> String {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect()).to_string()
 }
 
+/// `GET /v1/registry`: the FLEET view of the candidate set (runtime
+/// truth — boot + hot-added members, lifecycle state, epoch), plus the
+/// loaded model info.
 fn registry_json(router: &Router) -> String {
-    let cands: Vec<Json> = router
-        .cand_global
+    let view = router.fleet.view();
+    let cands: Vec<Json> = view
+        .candidates
         .iter()
-        .map(|&i| {
-            let c = &router.registry.candidates[i];
+        .map(|c| {
             Json::obj(vec![
                 ("name", Json::str(&c.name)),
                 ("family", Json::str(&c.family)),
                 ("price_in", Json::Num(c.price_in)),
                 ("price_out", Json::Num(c.price_out)),
+                ("state", Json::str(c.state.name())),
             ])
         })
         .collect();
@@ -601,9 +744,69 @@ fn registry_json(router: &Router) -> String {
         ("backbone", Json::str(&router.cfg.backbone)),
         ("model_id", Json::str(&router.qe.entry().id)),
         ("engine", Json::str(router.qe.info().engine)),
+        ("epoch", Json::Num(view.epoch as f64)),
         ("candidates", Json::Arr(cands)),
     ])
     .to_string()
+}
+
+/// One fleet member with full admin detail (shadow progress included).
+fn fleet_candidate_doc(
+    c: &crate::control::FleetCandidate,
+    gate: &crate::control::PromotionGate,
+) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(&c.name)),
+        ("family", Json::str(&c.family)),
+        ("state", Json::str(c.state.name())),
+        ("price_in", Json::Num(c.price_in)),
+        ("price_out", Json::Num(c.price_out)),
+        ("head", Json::Num(c.head as f64)),
+        ("global", Json::Num(c.global as f64)),
+        ("dynamic", Json::Bool(c.dynamic)),
+    ];
+    if let Some(s) = &c.stats {
+        use std::sync::atomic::Ordering::Relaxed;
+        let calibrated = s.calibrated.load(Relaxed);
+        let mae = s.mae();
+        fields.push((
+            "shadow",
+            Json::obj(vec![
+                ("scored", Json::Num(s.scored.load(Relaxed) as f64)),
+                ("calibrated", Json::Num(calibrated as f64)),
+                ("mae", if mae.is_finite() { Json::Num(mae) } else { Json::Null }),
+                ("gate_min_samples", Json::Num(gate.min_samples as f64)),
+                ("gate_max_mae", Json::Num(gate.max_mae)),
+                ("gate_passed", Json::Bool(gate.passes(s))),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// The full fleet document (`GET /admin/v1/fleet` and admin mutation
+/// responses).
+fn fleet_view_doc(
+    view: &crate::control::FleetView,
+    gate: &crate::control::PromotionGate,
+) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::Num(view.epoch as f64)),
+        ("model_id", Json::str(&view.model_id)),
+        ("kind", Json::str(&view.kind)),
+        ("key_seed", Json::str(&format!("{:#018x}", view.key_seed))),
+        ("active", Json::Num(view.active_heads.len() as f64)),
+        ("shadow", Json::Num(view.shadows().count() as f64)),
+        (
+            "candidates",
+            Json::Arr(view.candidates.iter().map(|c| fleet_candidate_doc(c, gate)).collect()),
+        ),
+    ])
+}
+
+fn fleet_json(router: &Router) -> String {
+    let view = router.fleet.view();
+    fleet_view_doc(&view, &router.fleet.gate).to_string()
 }
 
 // ---------------------------------------------------------------------------
@@ -625,6 +828,10 @@ impl HttpClient {
 
     pub fn get(&self, path: &str) -> Result<(u16, String)> {
         self.request("GET", path, "")
+    }
+
+    pub fn delete(&self, path: &str) -> Result<(u16, String)> {
+        self.request("DELETE", path, "")
     }
 
     fn request(&self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {

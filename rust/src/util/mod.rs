@@ -4,6 +4,7 @@
 //! used across the crate (the offline registry has no
 //! anyhow/serde/tokio/criterion/proptest).
 
+pub mod arcswap;
 pub mod arena;
 pub mod bench;
 pub mod cli;

@@ -159,7 +159,10 @@ pub struct ShardedScoreCache {
     shard_mask: usize,
     /// Per-shard capacity; 0 = cache disabled.
     shard_cap: usize,
-    seed: u64,
+    /// Key seed — atomic so the fleet control plane can rotate it on an
+    /// epoch change ([`ShardedScoreCache::rotate_seed`]) without pausing
+    /// reader threads.
+    seed: AtomicU64,
     stats: CacheStats,
 }
 
@@ -181,8 +184,41 @@ impl ShardedScoreCache {
             shards: (0..n_shards).map(|_| Mutex::new(Shard::new(shard_cap.min(64)))).collect(),
             shard_mask: n_shards - 1,
             shard_cap,
-            seed,
+            seed: AtomicU64::new(seed),
             stats: CacheStats::default(),
+        }
+    }
+
+    /// The current key seed (fleet-epoch keyed; see [`rotate_seed`]).
+    ///
+    /// [`rotate_seed`]: ShardedScoreCache::rotate_seed
+    pub fn seed(&self) -> u64 {
+        self.seed.load(Ordering::Acquire)
+    }
+
+    /// Re-key the cache under a new seed and drop every resident entry
+    /// (counted as evictions). This is the fleet-epoch invalidation
+    /// point (DESIGN.md §14): after a swap, keys computed under the new
+    /// seed can never match an entry inserted under the old one — a
+    /// lookup can therefore never return a pre-swap score — and any
+    /// in-flight insert still carrying an old-seed key lands unreachable
+    /// and ages out through the LRU tail.
+    pub fn rotate_seed(&self, new_seed: u64) {
+        self.seed.store(new_seed, Ordering::Release);
+        if self.shard_cap == 0 {
+            return;
+        }
+        let mut removed = 0u64;
+        for s in &self.shards {
+            let mut s = s.lock().unwrap();
+            removed += s.map.len() as u64;
+            s.map.clear();
+            s.slab.clear();
+            s.head = NIL;
+            s.tail = NIL;
+        }
+        if removed > 0 {
+            self.stats.evictions.fetch_add(removed, Ordering::Relaxed);
         }
     }
 
@@ -211,7 +247,7 @@ impl ShardedScoreCache {
 
     /// Key of a token sequence under this cache's seed.
     pub fn key_of(&self, tokens: &[u32]) -> u64 {
-        let mut h = self.seed;
+        let mut h = self.seed.load(Ordering::Acquire);
         for &t in tokens {
             h = mix64(h ^ t as u64);
         }
@@ -287,6 +323,7 @@ pub fn key_seed(model_id: &str, kind: &str, candidates: &[usize]) -> u64 {
 mod tests {
     use super::*;
     use crate::util::minitest::check;
+    use crate::util::rng::Rng;
     use std::collections::HashMap as StdMap;
 
     #[test]
@@ -438,6 +475,80 @@ mod tests {
         }
         assert_eq!(c.len(), (THREADS * PER_THREAD) as usize);
         assert_eq!(c.stats().evictions.load(Ordering::Relaxed), 0);
+    }
+
+    /// Seed rotation is the fleet-epoch invalidation point: the same
+    /// tokens key differently under the new seed, every resident entry is
+    /// dropped (counted as evictions), and a stale insert still carrying
+    /// a pre-rotation key is unreachable from post-rotation lookups.
+    #[test]
+    fn rotate_seed_invalidates_and_rekeys() {
+        let c = ShardedScoreCache::new(64, 11);
+        let toks = [7u32, 8, 9];
+        let (old_key, _) = c.lookup(&toks);
+        c.put_key(old_key, vec![1.0]);
+        assert!(c.lookup(&toks).1.is_some());
+        assert_eq!(c.len(), 1);
+
+        c.rotate_seed(12);
+        assert_eq!(c.seed(), 12);
+        let (new_key, hit) = c.lookup(&toks);
+        assert_ne!(new_key, old_key, "same tokens must key differently after rotation");
+        assert!(hit.is_none(), "a post-rotation lookup must never see a pre-rotation score");
+        assert_eq!(c.len(), 0, "rotation drops every resident entry");
+        assert_eq!(c.stats().evictions.load(Ordering::Relaxed), 1);
+
+        // A stale insert under the OLD key (an in-flight batch finishing
+        // after the swap) lands unreachable from the new-seed keys.
+        c.put_key(old_key, vec![2.0]);
+        assert!(c.lookup(&toks).1.is_none());
+        assert!(c.peek(new_key).is_none());
+        assert!(c.peek(old_key).is_some(), "the stale entry merely ages out via LRU");
+    }
+
+    /// Encode a key into exactly-representable f32 components so a hit
+    /// can verify it was stored under the SAME key the reader computed.
+    fn key_tag(key: u64) -> Vec<f32> {
+        (0..4).map(|i| ((key >> (16 * i)) & 0xFFFF) as f32).collect()
+    }
+
+    /// Concurrency: seed rotations overlapping lookups/inserts. Readers
+    /// tag every insert with its key; any hit whose tag does not match
+    /// the reader's own key would mean a value crossed a rotation (or
+    /// shards tore) — with a 64-bit keyspace that must never happen.
+    #[test]
+    fn concurrent_rotation_never_serves_cross_seed_values() {
+        const THREADS: u64 = 6;
+        const LOOKUPS: u64 = 3000;
+        const ROTATIONS: u64 = 40;
+        let c = ShardedScoreCache::new(512, 1);
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let c = &c;
+                s.spawn(move || {
+                    let mut r = Rng::new(500 + t);
+                    for _ in 0..LOOKUPS {
+                        let tokens = [r.next_range(48) as u32, t as u32];
+                        let (key, hit) = c.lookup(&tokens);
+                        match hit {
+                            Some(v) => assert_eq!(v, key_tag(key), "cross-seed or torn hit"),
+                            None => c.put_key(key, key_tag(key)),
+                        }
+                    }
+                });
+            }
+            let c = &c;
+            s.spawn(move || {
+                for gen in 1..=ROTATIONS {
+                    c.rotate_seed(1 + gen);
+                    std::thread::yield_now();
+                }
+            });
+        });
+        // post-storm: the final seed serves only matching tags
+        let (key, _) = c.lookup(&[1, 2]);
+        c.put_key(key, key_tag(key));
+        assert_eq!(c.lookup(&[1, 2]).1.unwrap(), key_tag(key));
     }
 
     /// Property: against a reference model (hash map, unbounded), every

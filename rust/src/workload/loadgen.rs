@@ -15,19 +15,21 @@
 //! shape. Latency numbers are hardware-dependent; the CI gate compares
 //! routed p95 against `ci/bench_baseline.json` with a generous ratio.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::coordinator::{Router, RouterConfig};
 use crate::registry::Registry;
-use crate::server::{KeepAliveClient, Server, ServerConfig};
+use crate::server::{HttpClient, KeepAliveClient, Server, ServerConfig};
 use crate::synth::{SynthWorld, SPLIT_LIVE};
 use crate::util::error::{Context, Result};
 use crate::util::hist::Histogram;
 use crate::util::json::{parse, Json};
-use crate::workload::{fold, generate, stream_digest, tokens_text, GenRequest, Scenario};
+use crate::workload::{
+    fold, generate, stream_digest, tokens_text, ChurnAction, ChurnOp, GenRequest, Scenario,
+};
 
 /// Knobs shared by every scenario of one `ipr loadgen` run.
 #[derive(Clone, Debug)]
@@ -74,6 +76,10 @@ pub struct ScenarioReport {
     /// no metered request carried a generative identity.
     pub quality_parity: Option<f64>,
     pub route_mix: BTreeMap<String, u64>,
+    /// Fleet epoch at the end of the run (1 = no churn).
+    pub fleet_epoch: u64,
+    /// Admin actions applied mid-run (the churn plan's length).
+    pub fleet_actions: usize,
     /// Digest of the generated request stream (python-mirrored goldens).
     pub stream_digest: u64,
     /// Digest of the per-request routing decisions, in stream order.
@@ -161,9 +167,81 @@ fn prepare(reqs: &[GenRequest]) -> Vec<Prepared> {
         .collect()
 }
 
+/// Drive requests `[lo, hi)` of the stream through a fresh client pool
+/// (client `cid` owns indices `lo+cid, lo+cid+clients, …`) and append
+/// the observations. Returns once EVERY request of the segment has a
+/// response — the phase barrier the churn driver relies on.
+#[allow(clippy::too_many_arguments)]
+fn run_segment(
+    lo: usize,
+    hi: usize,
+    clients: usize,
+    addr: &str,
+    open_loop: bool,
+    reqs: &[GenRequest],
+    prepared: &[Prepared],
+    start: Instant,
+    out: &mut Vec<Obs>,
+) {
+    if lo >= hi {
+        return;
+    }
+    let mut per_client: Vec<Vec<Obs>> = Vec::with_capacity(clients);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|cid| {
+                let addr = addr.to_string();
+                s.spawn(move || {
+                    let mut kc = KeepAliveClient::new(&addr);
+                    let mut seg = Vec::with_capacity((hi - lo) / clients + 1);
+                    let mut i = lo + cid;
+                    while i < hi {
+                        if open_loop {
+                            let target = Duration::from_micros(reqs[i].t_offset_us);
+                            let elapsed = start.elapsed();
+                            if target > elapsed {
+                                std::thread::sleep(target - elapsed);
+                            }
+                        }
+                        let q0 = Instant::now();
+                        let resp = kc.post(prepared[i].path, &prepared[i].body);
+                        let lat = q0.elapsed().as_nanos() as u64;
+                        seg.push(match resp {
+                            Ok((st, body)) => parse_obs(i, lat, st, &body),
+                            Err(e) => Obs::failed(i, lat, format!("transport: {e}")),
+                        });
+                        i += clients;
+                    }
+                    seg
+                })
+            })
+            .collect();
+        for h in handles {
+            per_client.push(h.join().unwrap_or_default());
+        }
+    });
+    out.extend(per_client.into_iter().flatten());
+}
+
 /// Run one scenario end to end: fresh router + server, client pool over
 /// real sockets, aggregate the observations into a [`ScenarioReport`].
 pub fn run_scenario(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioReport> {
+    run_scenario_churn(opts, sc, &[])
+}
+
+/// [`run_scenario`] with a candidate-lifecycle churn plan: each action
+/// fires THROUGH the live admin API at its deterministic stream position,
+/// with a phase barrier before it (all earlier requests complete, none
+/// later have started), so two runs with the same seed produce
+/// bit-identical request streams AND routing decisions across the swaps.
+/// Fails on any admin-action error and on any request routed to a
+/// candidate that was in shadow at the time — the fleet_churn acceptance
+/// contract (`rust/tests/fleet.rs`, CI smoke).
+pub fn run_scenario_churn(
+    opts: &LoadgenOptions,
+    sc: &Scenario,
+    plan: &[ChurnAction],
+) -> Result<ScenarioReport> {
     let reg = Arc::new(Registry::load_or_reference(opts.artifacts.as_str())?);
     let world = SynthWorld::new(reg.world_seed);
     let reqs = generate(&world, sc, opts.seed);
@@ -180,52 +258,93 @@ pub fn run_scenario(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioRepo
         ServerConfig { workers: clients, ..ServerConfig::default() },
     )?;
     let addr = server.addr.clone();
+    let admin = HttpClient::new(&addr);
 
     let n = reqs.len();
+    let mut actions: Vec<&ChurnAction> = plan.iter().collect();
+    actions.sort_by_key(|a| a.at);
+
     let start = Instant::now();
-    let mut per_client: Vec<Vec<Obs>> = Vec::with_capacity(clients);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..clients)
-            .map(|cid| {
-                let addr = addr.clone();
-                let reqs = &reqs;
-                let prepared = &prepared;
-                let open_loop = sc.open_loop;
-                s.spawn(move || {
-                    let mut kc = KeepAliveClient::new(&addr);
-                    let mut out = Vec::with_capacity(n / clients + 1);
-                    let mut i = cid;
-                    while i < n {
-                        if open_loop {
-                            let target = Duration::from_micros(reqs[i].t_offset_us);
-                            let elapsed = start.elapsed();
-                            if target > elapsed {
-                                std::thread::sleep(target - elapsed);
-                            }
-                        }
-                        let q0 = Instant::now();
-                        let resp = kc.post(prepared[i].path, &prepared[i].body);
-                        let lat = q0.elapsed().as_nanos() as u64;
-                        out.push(match resp {
-                            Ok((st, body)) => parse_obs(i, lat, st, &body),
-                            Err(e) => Obs::failed(i, lat, format!("transport: {e}")),
-                        });
-                        i += clients;
-                    }
-                    out
-                })
-            })
-            .collect();
-        for h in handles {
-            per_client.push(h.join().unwrap_or_default());
+    let mut obs: Vec<Obs> = Vec::with_capacity(n);
+    let mut shadow_violations = 0usize;
+    // The drive loop runs inside a closure so an admin-action failure
+    // still reaches the teardown below (server.stop + engine shutdown) —
+    // an early `return Err` here must not leak the listener, connection
+    // workers, or the QE engine thread.
+    let drive = (|| -> Result<()> {
+        // Names currently in shadow state: traffic in a segment may
+        // NEVER be routed to one of these (checked per segment, below).
+        let mut shadow_now: BTreeSet<&str> = BTreeSet::new();
+        let mut seg_start = 0usize;
+        let mut check_from = 0usize;
+        let check_segment = |obs: &[Obs], from: usize, shadow: &BTreeSet<&str>| -> usize {
+            obs[from..].iter().filter(|o| o.ok && shadow.contains(o.model.as_str())).count()
+        };
+        for action in actions {
+            let at = action.at.min(n);
+            run_segment(
+                seg_start,
+                at,
+                clients,
+                &addr,
+                sc.open_loop,
+                &reqs,
+                &prepared,
+                start,
+                &mut obs,
+            );
+            shadow_violations += check_segment(&obs, check_from, &shadow_now);
+            check_from = obs.len();
+            seg_start = at;
+            // Phase barrier passed — fire the admin action through the
+            // live HTTP surface, exactly as an operator would.
+            let (op_name, resp) = match action.op {
+                ChurnOp::Add(name) => (
+                    format!("add {name}"),
+                    admin.post("/admin/v1/candidates", &format!("{{\"name\": \"{name}\"}}"))?,
+                ),
+                ChurnOp::Promote(name) => (
+                    format!("promote {name}"),
+                    admin.post(&format!("/admin/v1/candidates/{name}/promote"), "{}")?,
+                ),
+                ChurnOp::Retire(name) => (
+                    format!("retire {name}"),
+                    admin.delete(&format!("/admin/v1/candidates/{name}"))?,
+                ),
+            };
+            if resp.0 != 200 {
+                return Err(anyhow!(
+                    "fleet action '{op_name}' before request {at} failed ({}): {}",
+                    resp.0,
+                    resp.1
+                ));
+            }
+            match action.op {
+                ChurnOp::Add(name) => {
+                    shadow_now.insert(name);
+                }
+                ChurnOp::Promote(name) | ChurnOp::Retire(name) => {
+                    shadow_now.remove(name);
+                }
+            }
         }
-    });
+        run_segment(seg_start, n, clients, &addr, sc.open_loop, &reqs, &prepared, start, &mut obs);
+        shadow_violations += check_segment(&obs, check_from, &shadow_now);
+        Ok(())
+    })();
+
     let wall_s = start.elapsed().as_secs_f64();
     let (cache_hits, cache_misses) = router.qe.cache_stats();
+    let fleet_epoch = router.fleet.view().epoch;
     server.stop();
     router.qe.shutdown();
+    drive?;
 
-    let mut obs: Vec<Obs> = per_client.into_iter().flatten().collect();
+    if shadow_violations > 0 {
+        return Err(anyhow!(
+            "{shadow_violations} request(s) were routed to a shadow candidate during the churn"
+        ));
+    }
     obs.sort_by_key(|o| o.idx);
     if obs.len() != n {
         return Err(anyhow!("lost observations: {} of {n} requests reported", obs.len()));
@@ -239,7 +358,11 @@ pub fn run_scenario(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioRepo
     let mut invoked = 0usize;
     let mut cost_sum = 0.0f64;
     let (mut realized_sum, mut strongest_sum, mut metered) = (0.0f64, 0.0f64, 0usize);
-    let strongest_global = router.cand_global[router.strongest_local];
+    // Quality parity compares against the END-of-run fleet's strongest
+    // active candidate (under churn, the counterfactual follows the
+    // fleet, like live CSR does).
+    let final_view = router.fleet.view();
+    let strongest_global = final_view.active_global[final_view.strongest_active];
     for o in &obs {
         hist.record_ns(o.latency_ns);
         if !o.ok {
@@ -301,6 +424,8 @@ pub fn run_scenario(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioRepo
             None
         },
         route_mix,
+        fleet_epoch,
+        fleet_actions: plan.len(),
         stream_digest: sdigest,
         decision_digest: ddigest,
     })
@@ -341,6 +466,8 @@ impl ScenarioReport {
                         .collect(),
                 ),
             ),
+            ("fleet_epoch", Json::Num(self.fleet_epoch as f64)),
+            ("fleet_actions", Json::Num(self.fleet_actions as f64)),
             // u64 digests as hex strings: Json::Num is f64 and would lose
             // the low bits.
             ("stream_digest", Json::str(&format!("{:#018x}", self.stream_digest))),

@@ -114,8 +114,60 @@ pub struct GenRequest {
     pub tokens: Vec<u32>,
 }
 
-/// The four shipped scenario presets, in canonical order.
+/// The four python-mirrored scenario presets, in canonical order. The
+/// fifth preset, [`FLEET_CHURN`], is rust-only (the python mirror has no
+/// fleet concept): its stream uses the same generator machinery, but its
+/// determinism is pinned by the double-run digest test in
+/// `rust/tests/fleet.rs` instead of a cross-language golden.
 pub const PRESET_NAMES: [&str; 4] = ["uniform", "bursty", "hot_keys", "mixed_tau"];
+
+/// Name of the candidate-lifecycle churn scenario (`ipr loadgen
+/// --scenario fleet_churn`): steady mixed-τ traffic with mild hot-key
+/// skew, interrupted by the admin actions of [`churn_plan`].
+pub const FLEET_CHURN: &str = "fleet_churn";
+
+/// One admin action the loadgen driver fires at a deterministic stream
+/// position (a phase barrier: all earlier requests complete first, so
+/// routed decisions stay bit-reproducible across runs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnAction {
+    /// Stream index BEFORE which the action fires.
+    pub at: usize,
+    pub op: ChurnOp,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnOp {
+    /// `POST /admin/v1/candidates` — hot-add in shadow state.
+    Add(&'static str),
+    /// `POST /admin/v1/candidates/{name}/promote`.
+    Promote(&'static str),
+    /// `DELETE /admin/v1/candidates/{name}`.
+    Retire(&'static str),
+}
+
+/// Smallest stream the canonical [`churn_plan`] works for: the
+/// add→promote window spans 35% of the stream and every one of those
+/// requests calibrates the shadow candidate, so the default 32-sample
+/// promotion gate needs ≥ ⌈32 / 0.35⌉ = 92 requests — rounded up with
+/// slack. `ipr loadgen` rejects smaller fleet_churn runs up front
+/// instead of failing at the promote barrier mid-run.
+pub const FLEET_CHURN_MIN_REQUESTS: usize = 100;
+
+/// The canonical churn plan for [`FLEET_CHURN`], scaled to the stream
+/// length (≥ [`FLEET_CHURN_MIN_REQUESTS`]): hot-add a CROSS-FAMILY
+/// candidate (nova-pro onto the claude router) at 25%, promote it at
+/// 60% — the 35% of requests in between all carry a SynthWorld identity,
+/// comfortably clearing the default 32-sample promotion gate — and
+/// retire the boot fleet's cheapest member at 85%, visibly shifting the
+/// route mix.
+pub fn churn_plan(requests: usize) -> Vec<ChurnAction> {
+    vec![
+        ChurnAction { at: requests / 4, op: ChurnOp::Add("nova-pro") },
+        ChurnAction { at: requests * 3 / 5, op: ChurnOp::Promote("nova-pro") },
+        ChurnAction { at: requests * 17 / 20, op: ChurnOp::Retire("claude-3-haiku") },
+    ]
+}
 
 /// Look up a preset by name, scaled to `requests` requests.
 pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
@@ -197,6 +249,29 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
                 Tenant { name: "saver", weight: 0.25, tau_lo: 0.7, tau_hi: 1.0 },
             ],
             invoke_frac: 0.3,
+        }),
+        // Candidate-lifecycle churn: steady closed-loop mixed-τ traffic
+        // with mild hot-key skew (the cache must survive the epoch
+        // rotations) and identity on every request (shadow calibration
+        // needs the oracle). The churn itself comes from `churn_plan`.
+        FLEET_CHURN => Some(Scenario {
+            name: FLEET_CHURN,
+            requests,
+            clients: 6,
+            open_loop: false,
+            base_rps: 500.0,
+            burst_rps: 500.0,
+            burst_len: 0,
+            hot_set: 8,
+            hot_frac: 0.3,
+            stretch_frac: 0.0,
+            stretch_target: 0,
+            tenants: vec![
+                Tenant { name: "quality", weight: 0.3, tau_lo: 0.0, tau_hi: 0.15 },
+                Tenant { name: "balanced", weight: 0.4, tau_lo: 0.25, tau_hi: 0.55 },
+                Tenant { name: "saver", weight: 0.3, tau_lo: 0.7, tau_hi: 1.0 },
+            ],
+            invoke_frac: 0.35,
         }),
         _ => None,
     }

@@ -1,0 +1,300 @@
+//! Fleet control-plane tests (DESIGN.md §14): the candidate set as a
+//! runtime object — hot-add, shadow scoring, gated promotion, retire —
+//! exercised end to end over the live HTTP admin surface, plus the
+//! epoch-invalidation and torn-batch invariants under concurrency.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ipr::control::{AddCandidate, Lifecycle, PromotionGate};
+use ipr::coordinator::{BatchItem, Router, RouterConfig};
+use ipr::testkit::{registry, FixtureBuilder};
+use ipr::util::json::parse;
+use ipr::workload::loadgen::{run_scenario_churn, LoadgenOptions};
+use ipr::workload::{churn_plan, preset, FLEET_CHURN};
+
+/// THE acceptance scenario: a candidate added at runtime via the admin
+/// API is shadow-scored on live traffic, passes the calibration gate,
+/// is atomically promoted, and receives routed traffic — all without
+/// restarting the server, with every request succeeding, and with the
+/// client-visible score vector always matching the ACTIVE set.
+#[test]
+fn admin_lifecycle_end_to_end() {
+    let fx = FixtureBuilder::new()
+        .router(|c| c.gate = PromotionGate { min_samples: 8, max_mae: 0.2 })
+        .start();
+    let client = fx.client();
+    let world = fx.world();
+
+    // Boot: epoch 1, four active claude candidates.
+    let (st, body) = client.get("/admin/v1/fleet").unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = parse(&body).unwrap();
+    assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(j.req("active").unwrap().as_usize().unwrap(), 4);
+
+    // Promote/retire of unknown members are clean 400s.
+    let (st, _) = client.post("/admin/v1/candidates/nova-pro/promote", "{}").unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = client.delete("/admin/v1/candidates/nova-pro").unwrap();
+    assert_eq!(st, 400);
+
+    // Hot-add nova-pro (cross-family) — lands in SHADOW at epoch 2.
+    let (st, body) = client.post("/admin/v1/candidates", "{\"name\": \"nova-pro\"}").unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = parse(&body).unwrap();
+    assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(j.req("shadow").unwrap().as_usize().unwrap(), 1);
+    let (_, body) = client.get("/v1/registry").unwrap();
+    let j = parse(&body).unwrap();
+    let cands = j.req("candidates").unwrap().as_arr().unwrap();
+    assert_eq!(cands.len(), 5);
+    assert!(cands
+        .iter()
+        .any(|c| c.req("name").unwrap().as_str().unwrap() == "nova-pro"
+            && c.req("state").unwrap().as_str().unwrap() == "shadow"));
+
+    // A premature promote is refused by the gate (no calibration yet).
+    let (st, body) = client.post("/admin/v1/candidates/nova-pro/promote", "{}").unwrap();
+    assert_eq!(st, 400, "{body}");
+    assert!(body.contains("promotion gate"), "{body}");
+
+    // Live identity-carrying traffic: shadow-scored, NEVER routed to,
+    // and the client-visible scores stay 4-wide (active set only).
+    for i in 0..10u64 {
+        let p = world.sample_prompt(2, i);
+        let body = format!(
+            "{{\"prompt\": \"{}\", \"tau\": 0.3, \"split\": 2, \"index\": {i}}}",
+            p.text()
+        );
+        let (st, resp) = client.post("/v1/route", &body).unwrap();
+        assert_eq!(st, 200, "{resp}");
+        let j = parse(&resp).unwrap();
+        assert_ne!(j.req("model").unwrap().as_str().unwrap(), "nova-pro");
+        assert_eq!(j.req("scores").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 2);
+    }
+    let (_, body) = client.get("/admin/v1/fleet").unwrap();
+    let j = parse(&body).unwrap();
+    let shadow = j
+        .req("candidates")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|c| c.req("name").unwrap().as_str().unwrap() == "nova-pro")
+        .unwrap()
+        .req("shadow")
+        .unwrap()
+        .clone();
+    assert_eq!(shadow.req("scored").unwrap().as_usize().unwrap(), 10);
+    assert_eq!(shadow.req("calibrated").unwrap().as_usize().unwrap(), 10);
+    assert!(shadow.req("mae").unwrap().as_f64().unwrap() < 0.2, "{shadow:?}");
+    assert!(shadow.req("gate_passed").unwrap().as_bool().unwrap());
+
+    // The calibration gate now passes: atomic promotion at epoch 3.
+    let (st, body) = client.post("/admin/v1/candidates/nova-pro/promote", "{}").unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = parse(&body).unwrap();
+    assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 3);
+    assert!(j.req("samples").unwrap().as_usize().unwrap() >= 8);
+    assert!(!j.req("forced").unwrap().as_bool().unwrap());
+
+    // Retire the two cheap claude members: nova-pro becomes the cheapest
+    // active candidate, so τ=1 traffic must now route to it.
+    for name in ["claude-3-haiku", "claude-3.5-haiku"] {
+        let (st, body) = client.delete(&format!("/admin/v1/candidates/{name}")).unwrap();
+        assert_eq!(st, 200, "{body}");
+    }
+    let p = world.sample_prompt(2, 99);
+    let body =
+        format!("{{\"prompt\": \"{}\", \"tau\": 1.0, \"split\": 2, \"index\": 99}}", p.text());
+    let (st, resp) = client.post("/v1/route", &body).unwrap();
+    assert_eq!(st, 200, "{resp}");
+    let j = parse(&resp).unwrap();
+    assert_eq!(
+        j.req("model").unwrap().as_str().unwrap(),
+        "nova-pro",
+        "the promoted candidate must receive routed traffic: {resp}"
+    );
+    assert_eq!(j.req("scores").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 5);
+
+    // Metrics carry the fleet gauges.
+    let (_, m) = client.get("/metrics").unwrap();
+    assert!(m.contains("ipr_fleet_epoch 5"), "{m}");
+    assert!(m.contains("ipr_fleet_swaps_total 4"), "{m}");
+    assert!(m.contains("ipr_fleet_candidates{state=\"active\"} 3"), "{m}");
+    fx.stop();
+}
+
+/// The fleet_churn loadgen scenario: mid-run add/promote/retire through
+/// the live admin API, zero failed requests across the swaps, and —
+/// because admin actions are phase barriers at fixed stream positions —
+/// bit-identical streams AND routing decisions across runs of one seed.
+#[test]
+fn fleet_churn_loadgen_deterministic_and_clean() {
+    let opts = LoadgenOptions { seed: 7, ..LoadgenOptions::default() };
+    let sc = preset(FLEET_CHURN, 120).unwrap();
+    let plan = churn_plan(sc.requests);
+    let a = run_scenario_churn(&opts, &sc, &plan).unwrap();
+    let b = run_scenario_churn(&opts, &sc, &plan).unwrap();
+    assert_eq!(a.errors, 0, "run A had failed requests during the churn");
+    assert_eq!(b.errors, 0, "run B had failed requests during the churn");
+    assert_eq!(a.fleet_epoch, 4, "boot + add + promote + retire");
+    assert_eq!(a.fleet_actions, 3);
+    assert_eq!(a.stream_digest, b.stream_digest, "request streams diverged");
+    assert_eq!(a.decision_digest, b.decision_digest, "routing decisions diverged across churn");
+    assert_eq!(a.route_mix, b.route_mix);
+    let routed: u64 = a.route_mix.values().sum();
+    assert_eq!(routed as usize, a.requests, "every request routed exactly once");
+    // The retired boot member must not dominate post-churn traffic; the
+    // promoted cross-family candidate must actually receive some (it is
+    // the cheapest active candidate for the whole final phase).
+    assert!(
+        a.route_mix.get("nova-pro").copied().unwrap_or(0) > 0,
+        "promoted candidate never routed: {:?}",
+        a.route_mix
+    );
+    // A different seed is a different stream (and different decisions).
+    let opts2 = LoadgenOptions { seed: 8, ..LoadgenOptions::default() };
+    let c = run_scenario_churn(&opts2, &sc, &plan).unwrap();
+    assert_ne!(a.stream_digest, c.stream_digest);
+}
+
+/// Property (satellite): EVERY fleet mutation — add, promote, retire —
+/// publishes a new epoch whose score-cache key seed differs from every
+/// seed that came before it, and the live cache tracks the latest seed.
+#[test]
+fn every_fleet_mutation_rotates_the_key_seed() {
+    let reg = registry();
+    let router = Router::new(reg, RouterConfig::default()).unwrap();
+    let fleet = &router.fleet;
+    let mut seeds = vec![fleet.view().key_seed];
+    let pool = ["nova-pro", "nova-lite", "llama-3.1-8b"];
+    // Three full add→promote→retire cycles per candidate: 27 mutations.
+    for round in 0..3 {
+        for name in pool {
+            let v = fleet.add_candidate(AddCandidate::named(name)).unwrap();
+            assert_eq!(v.candidate(name).unwrap().state, Lifecycle::Shadow);
+            seeds.push(v.key_seed);
+            let p = fleet.promote_candidate(name, true).unwrap();
+            seeds.push(p.view.key_seed);
+            let v = fleet.retire_candidate(name).unwrap();
+            assert!(v.candidate(name).is_none());
+            seeds.push(v.key_seed);
+        }
+        assert_eq!(fleet.view().epoch, 1 + 9 * (round as u64 + 1));
+    }
+    for i in 0..seeds.len() {
+        for j in i + 1..seeds.len() {
+            assert_ne!(seeds[i], seeds[j], "mutations {i} and {j} share a key seed");
+        }
+    }
+    assert_eq!(router.qe.cache().seed(), *seeds.last().unwrap());
+    router.qe.shutdown();
+}
+
+/// Post-swap lookups never serve pre-swap scores at the ROUTER layer:
+/// warm the cache, mutate the fleet, and the same prompt must re-score
+/// (a counted miss) with the new epoch's wider vector.
+#[test]
+fn fleet_swap_invalidates_router_cache() {
+    let reg = registry();
+    let router = Router::new(reg, RouterConfig::default()).unwrap();
+    let tokens: Vec<u32> = (1..40u32).collect();
+    let warm = router.handle_tokens(&tokens, Some(0.2), false, None).unwrap();
+    let hit = router.handle_tokens(&tokens, Some(0.2), false, None).unwrap();
+    assert_eq!(router.qe.cache_stats(), (1, 1));
+    assert_eq!(warm.scores, hit.scores);
+
+    router.fleet.add_candidate(AddCandidate::named("nova-pro")).unwrap();
+    let after = router.handle_tokens(&tokens, Some(0.2), false, None).unwrap();
+    let (hits, misses) = router.qe.cache_stats();
+    assert_eq!(
+        (hits, misses),
+        (1, 2),
+        "the post-swap request must MISS (epoch-keyed cache), not reuse the old entry"
+    );
+    assert_eq!(after.epoch, 2);
+    // Active scores are unchanged bit-for-bit (frozen encoder, appended
+    // column) — the swap invalidates the cache, not the math.
+    for (a, b) in warm.scores.iter().zip(&after.scores) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // The full cached vector now carries the shadow column too.
+    let (_, cached) = router.qe.cache_lookup(&tokens);
+    assert_eq!(cached.expect("re-scored entry resident").len(), 5);
+    router.qe.shutdown();
+}
+
+/// Concurrency (satellite): fleet swaps overlapping in-flight batch
+/// scoring. Batches pin one epoch each — no request may fail, and after
+/// the storm the cache serves exactly what a fresh forward computes.
+#[test]
+fn fleet_swap_overlaps_inflight_batches() {
+    let reg = registry();
+    let router = Arc::new(Router::new(reg.clone(), RouterConfig::default()).unwrap());
+    let prompts = ipr::testkit::live_prompts(&reg, 24);
+
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let router = router.clone();
+            let prompts = prompts.clone();
+            s.spawn(move || {
+                for round in 0..30usize {
+                    let items: Vec<BatchItem> = prompts
+                        .iter()
+                        .skip((t + round) % 3)
+                        .take(6)
+                        .map(|p| BatchItem {
+                            tokens: p.clone(),
+                            tau: Some(0.25),
+                            invoke: false,
+                            identity: None,
+                            tokenize_us: 0,
+                            t_start: Instant::now(),
+                            cache_key: None,
+                        })
+                        .collect();
+                    let outs = router.handle_batch(&items).expect("batch must survive swaps");
+                    assert_eq!(outs.len(), items.len());
+                    let epoch = outs[0].epoch;
+                    for o in &outs {
+                        assert_eq!(o.epoch, epoch, "torn batch: mixed epochs in one batch");
+                        assert!(!o.model_name.is_empty());
+                        assert!(!o.scores.is_empty());
+                    }
+                }
+            });
+        }
+        // Admin storm: two full add→promote→retire cycles while batches
+        // are in flight (short sleeps spread the swaps across the
+        // scoring threads' rounds).
+        let fleet = &router.fleet;
+        for _ in 0..2 {
+            for name in ["nova-pro", "nova-lite"] {
+                fleet.add_candidate(AddCandidate::named(name)).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                fleet.promote_candidate(name, true).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                fleet.retire_candidate(name).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            }
+        }
+    });
+
+    // Steady state after the storm: cached hits equal fresh forwards
+    // bit-for-bit, at the final epoch's width.
+    let final_epoch = router.fleet.view().epoch;
+    assert_eq!(final_epoch, 13, "boot + 12 mutations");
+    for p in prompts.iter().take(6) {
+        let a = router.handle_tokens(p, Some(0.25), false, None).unwrap();
+        let b = router.handle_tokens(p, Some(0.25), false, None).unwrap();
+        assert_eq!(a.epoch, final_epoch);
+        for (x, y) in a.scores.iter().zip(&b.scores) {
+            assert_eq!(x.to_bits(), y.to_bits(), "cache hit diverged from fresh forward");
+        }
+    }
+    router.qe.shutdown();
+}

@@ -309,8 +309,9 @@ fn router_tau_extremes_and_monotonicity() {
     let reg = registry();
     let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
     let rows = dataset::load(&reg, "test", 12).unwrap();
-    let cheapest = router
-        .costs
+    let view = router.fleet.view();
+    let costs = &view.active_costs;
+    let cheapest = costs
         .iter()
         .enumerate()
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -319,8 +320,8 @@ fn router_tau_extremes_and_monotonicity() {
     for r in &rows {
         let at0 = router.handle_tokens(&r.tokens, Some(0.0), false, None).unwrap();
         let at1 = router.handle_tokens(&r.tokens, Some(1.0), false, None).unwrap();
-        let c0 = router.costs[at0.decision.chosen];
-        let c1 = router.costs[at1.decision.chosen];
+        let c0 = costs[at0.decision.chosen];
+        let c1 = costs[at1.decision.chosen];
         assert!(c1 <= c0, "τ=1 must not cost more than τ=0");
         assert_eq!(at1.decision.chosen, cheapest, "τ=1 routes to the cheapest model");
         // monotone in τ
@@ -328,7 +329,7 @@ fn router_tau_extremes_and_monotonicity() {
         for i in 0..=4 {
             let t = i as f64 / 4.0;
             let o = router.handle_tokens(&r.tokens, Some(t), false, None).unwrap();
-            let c = router.costs[o.decision.chosen];
+            let c = costs[o.decision.chosen];
             assert!(c <= prev + 1e-12);
             prev = c;
         }

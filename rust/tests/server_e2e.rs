@@ -21,7 +21,50 @@ fn health_and_registry() {
     assert_eq!(st, 200);
     let j = parse(&body).unwrap();
     assert_eq!(j.req("family").unwrap().as_str().unwrap(), "claude");
-    assert_eq!(j.req("candidates").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 1, "boot fleet epoch");
+    let cands = j.req("candidates").unwrap().as_arr().unwrap();
+    assert_eq!(cands.len(), 4);
+    for c in cands {
+        assert_eq!(c.req("state").unwrap().as_str().unwrap(), "active");
+        assert!(c.req("price_in").unwrap().as_f64().unwrap() > 0.0);
+        assert!(c.req("price_out").unwrap().as_f64().unwrap() > 0.0);
+        assert!(!c.req("family").unwrap().as_str().unwrap().is_empty());
+    }
+    fx.stop();
+}
+
+/// Unknown routes and known routes hit with the wrong method both get
+/// machine-readable JSON error bodies (404 / 405), like every other
+/// error on this surface.
+#[test]
+fn unknown_routes_and_methods_get_json_errors() {
+    let fx = ServerFixture::start();
+    let client = fx.client();
+    let (st, body) = client.get("/nope").unwrap();
+    assert_eq!(st, 404, "{body}");
+    let j = parse(&body).expect("404 body must be JSON");
+    assert!(j.req("error").unwrap().as_str().unwrap().contains("/nope"));
+
+    let (st, body) = client.get("/v1/route").unwrap();
+    assert_eq!(st, 405, "{body}");
+    let j = parse(&body).expect("405 body must be JSON");
+    assert!(j.req("error").unwrap().as_str().unwrap().contains("POST"));
+
+    let (st, body) = client.post("/metrics", "").unwrap();
+    assert_eq!(st, 405, "{body}");
+    assert!(parse(&body).is_ok());
+
+    let (st, body) = client.get("/admin/v1/candidates").unwrap();
+    assert_eq!(st, 405, "{body}");
+    assert!(parse(&body).is_ok());
+
+    let (st, body) = client.post("/admin/v1/candidates/x/frobnicate", "{}").unwrap();
+    assert_eq!(st, 404, "{body}");
+    assert!(parse(&body).is_ok());
+
+    // the error surface leaves connections serving
+    let (st, _) = client.post("/v1/route", "{\"prompt\": \"w1 w2\"}").unwrap();
+    assert_eq!(st, 200);
     fx.stop();
 }
 
