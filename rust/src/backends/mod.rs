@@ -11,9 +11,10 @@
 //! only, never sleep) so benches can run the full path without waiting for
 //! simulated decode times.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use crate::synth::{Candidate, Prompt, SynthWorld, CANDIDATES};
+use crate::synth::{Candidate, Prompt, SynthWorld, CANDIDATES, N_CANDIDATES};
 use crate::util::rng::{mix64, Rng};
 
 /// (TTFT ms, decode tokens/s) per candidate — scaled from public serving
@@ -31,6 +32,64 @@ pub const LATENCY_PROFILES: [(f64, f64); 11] = [
     (220.0, 150.0), // nova-lite
     (550.0, 70.0),  // nova-pro
 ];
+
+/// Factor stored as micro-units so it fits an atomic (1_000_000 = ×1.0).
+const FACTOR_ONE_MICRO: u64 = 1_000_000;
+
+/// Runtime latency state of the simulated fleet, split into two
+/// independently controlled multiplicative factors per candidate:
+///
+/// * **fault** — what the endpoint *actually* does: realized invoke
+///   latency is multiplied by it. Fault injection flips this mid-run.
+/// * **published** — what the router *believes*: `predicted_ms` (and
+///   therefore budget feasibility and hedge deadlines) multiplies by it.
+///
+/// Separating the two is what makes the recovery path testable: injecting
+/// a fault without publishing it forces hedged escalation (predictions are
+/// stale), publishing it restores prediction accuracy and moves the
+/// candidate out of the feasible set. Both are only mutated at
+/// deterministic workload barriers, so routing decisions never depend on
+/// observed timing.
+#[derive(Debug)]
+pub struct LatencyModel {
+    fault_micro: [AtomicU64; N_CANDIDATES],
+    published_micro: [AtomicU64; N_CANDIDATES],
+}
+
+impl Default for LatencyModel {
+    fn default() -> LatencyModel {
+        LatencyModel {
+            fault_micro: std::array::from_fn(|_| AtomicU64::new(FACTOR_ONE_MICRO)),
+            published_micro: std::array::from_fn(|_| AtomicU64::new(FACTOR_ONE_MICRO)),
+        }
+    }
+}
+
+impl LatencyModel {
+    /// Set the *realized* latency multiplier of candidate `idx` (what the
+    /// endpoint actually does from now on).
+    pub fn inject(&self, idx: usize, factor: f64) {
+        self.fault_micro[idx]
+            .store((factor.max(0.0) * FACTOR_ONE_MICRO as f64) as u64, Ordering::SeqCst);
+    }
+
+    /// Set the *published* latency multiplier of candidate `idx` (what
+    /// predictions — and therefore budget gating — believe).
+    pub fn publish(&self, idx: usize, factor: f64) {
+        self.published_micro[idx]
+            .store((factor.max(0.0) * FACTOR_ONE_MICRO as f64) as u64, Ordering::SeqCst);
+    }
+
+    /// Current realized-latency multiplier of candidate `idx`.
+    pub fn fault(&self, idx: usize) -> f64 {
+        self.fault_micro[idx].load(Ordering::SeqCst) as f64 / FACTOR_ONE_MICRO as f64
+    }
+
+    /// Current published (prediction-side) multiplier of candidate `idx`.
+    pub fn published(&self, idx: usize) -> f64 {
+        self.published_micro[idx].load(Ordering::SeqCst) as f64 / FACTOR_ONE_MICRO as f64
+    }
+}
 
 /// Result of invoking one simulated endpoint.
 #[derive(Clone, Debug)]
@@ -54,11 +113,46 @@ pub struct Backend {
     world: SynthWorld,
     /// 0.0 => meter latency but never sleep; 1.0 => real-time simulation.
     pub time_scale: f64,
+    /// Runtime fault/published latency factors (latency-aware routing).
+    pub latency: LatencyModel,
 }
 
 impl Backend {
     pub fn new(world: SynthWorld, time_scale: f64) -> Backend {
-        Backend { world, time_scale }
+        Backend { world, time_scale, latency: LatencyModel::default() }
+    }
+
+    /// Deterministic out-token estimate shared by cost, latency and
+    /// invoke paths: the SynthWorld output-length model when the prompt's
+    /// generative identity is known, a content-hashed verbosity model for
+    /// opaque external text.
+    fn out_tokens_est(&self, idx: usize, tokens: &[u32], identity: Option<&Prompt>) -> usize {
+        let c = &CANDIDATES[idx];
+        match identity {
+            Some(p) => self.world.output_length(p, idx) as usize,
+            None => {
+                let mut h = 0u64;
+                for &t in tokens {
+                    h = mix64(h ^ t as u64);
+                }
+                let mut rng = Rng::new(h ^ idx as u64);
+                let jitter = 0.8 + 0.4 * rng.next_f64();
+                ((c.verbosity * (30.0 + 0.6 * tokens.len() as f64) * jitter) as i64).max(4)
+                    as usize
+            }
+        }
+    }
+
+    /// Router-visible latency prediction for candidate `idx` on this
+    /// prompt (ms): base profile × the candidate's deterministic decode
+    /// personality × the *published* factor. Budget gating and hedge
+    /// deadlines are built on this — never on observed timings — so a
+    /// given (prompt, published-state) pair always predicts identically.
+    pub fn predicted_ms(&self, idx: usize, tokens: &[u32], identity: Option<&Prompt>) -> f64 {
+        let out_tokens = self.out_tokens_est(idx, tokens, identity);
+        let (ttft, tps) = LATENCY_PROFILES[idx];
+        let decode_ms = out_tokens as f64 / tps * 1000.0 * self.world.latency_scale(idx);
+        (ttft + decode_ms) * self.latency.published(idx)
     }
 
     pub fn candidate(&self, idx: usize) -> &'static Candidate {
@@ -73,18 +167,7 @@ impl Backend {
     /// counterfactual accounting such as live CSR vs the strongest model.
     pub fn cost_of(&self, idx: usize, tokens: &[u32], identity: Option<&Prompt>) -> f64 {
         let c = &CANDIDATES[idx];
-        let out_tokens = match identity {
-            Some(p) => self.world.output_length(p, idx) as usize,
-            None => {
-                let mut h = 0u64;
-                for &t in tokens {
-                    h = mix64(h ^ t as u64);
-                }
-                let mut rng = Rng::new(h ^ idx as u64);
-                let jitter = 0.8 + 0.4 * rng.next_f64();
-                ((c.verbosity * (30.0 + 0.6 * tokens.len() as f64) * jitter) as i64).max(4) as usize
-            }
-        };
+        let out_tokens = self.out_tokens_est(idx, tokens, identity);
         tokens.len() as f64 / 1000.0 * c.price_in + out_tokens as f64 / 1000.0 * c.price_out
     }
 
@@ -93,25 +176,11 @@ impl Backend {
     /// plain external text gets a deterministic verbosity model instead.
     pub fn invoke(&self, idx: usize, tokens: &[u32], identity: Option<&Prompt>) -> InvokeResult {
         let c = &CANDIDATES[idx];
-        let (out_tokens, reward) = match identity {
-            Some(p) => (
-                self.world.output_length(p, idx) as usize,
-                Some(self.world.reward(p, idx)),
-            ),
-            None => {
-                // deterministic verbosity from the token content
-                let mut h = 0u64;
-                for &t in tokens {
-                    h = mix64(h ^ t as u64);
-                }
-                let mut rng = Rng::new(h ^ idx as u64);
-                let jitter = 0.8 + 0.4 * rng.next_f64();
-                let o = c.verbosity * (30.0 + 0.6 * tokens.len() as f64) * jitter;
-                ((o as i64).max(4) as usize, None)
-            }
-        };
+        let out_tokens = self.out_tokens_est(idx, tokens, identity);
+        let reward = identity.map(|p| self.world.reward(p, idx));
         let (ttft, tps) = LATENCY_PROFILES[idx];
-        let latency_ms = ttft + out_tokens as f64 / tps * 1000.0;
+        let decode_ms = out_tokens as f64 / tps * 1000.0 * self.world.latency_scale(idx);
+        let latency_ms = (ttft + decode_ms) * self.latency.fault(idx);
         if self.time_scale > 0.0 {
             std::thread::sleep(Duration::from_micros(
                 (latency_ms * 1000.0 * self.time_scale) as u64,
@@ -156,6 +225,45 @@ mod tests {
         let c = b.invoke(2, &toks, None);
         assert_eq!(a.out_tokens, c.out_tokens);
         assert!(a.reward.is_none());
+    }
+
+    /// With no fault injected and nothing published, the router's
+    /// prediction IS the realized latency — so hedge deadlines never fire
+    /// spuriously under healthy conditions.
+    #[test]
+    fn prediction_matches_realization_when_healthy() {
+        let w = SynthWorld::default();
+        let b = Backend::new(w, 0.0);
+        let p = w.sample_prompt(SPLIT_TEST, 11);
+        for idx in [0, 3, 9] {
+            let r = b.invoke(idx, &p.tokens, Some(&p));
+            assert_eq!(b.predicted_ms(idx, &p.tokens, Some(&p)), r.latency_ms);
+        }
+        // opaque text too
+        let toks = vec![7, 800, 1500, 42];
+        let r = b.invoke(2, &toks, None);
+        assert_eq!(b.predicted_ms(2, &toks, None), r.latency_ms);
+    }
+
+    /// Fault and published factors are independent: injecting a fault
+    /// slows realized invokes but leaves predictions stale; publishing
+    /// moves the prediction without touching realization.
+    #[test]
+    fn fault_and_published_factors_are_independent() {
+        let w = SynthWorld::default();
+        let b = Backend::new(w, 0.0);
+        let p = w.sample_prompt(SPLIT_TEST, 5);
+        let base_real = b.invoke(1, &p.tokens, Some(&p)).latency_ms;
+        let base_pred = b.predicted_ms(1, &p.tokens, Some(&p));
+        b.latency.inject(1, 8.0);
+        assert_eq!(b.invoke(1, &p.tokens, Some(&p)).latency_ms, base_real * 8.0);
+        assert_eq!(b.predicted_ms(1, &p.tokens, Some(&p)), base_pred, "prediction must be stale");
+        b.latency.publish(1, 8.0);
+        assert_eq!(b.predicted_ms(1, &p.tokens, Some(&p)), base_pred * 8.0);
+        b.latency.inject(1, 1.0);
+        b.latency.publish(1, 1.0);
+        assert_eq!(b.invoke(1, &p.tokens, Some(&p)).latency_ms, base_real);
+        assert_eq!(b.predicted_ms(1, &p.tokens, Some(&p)), base_pred);
     }
 
     #[test]

@@ -101,6 +101,75 @@ impl ShadowStats {
     }
 }
 
+/// Log₂-ms histogram bucket count: bucket i counts observations in
+/// [2^i, 2^(i+1)) ms, with the last bucket absorbing everything ≥ 2^15 ms.
+pub const LATENCY_BUCKETS: usize = 16;
+
+/// Per-candidate realized-latency accumulators (EWMA + log-bucketed
+/// histogram), exported as `ipr_candidate_latency_*`.
+///
+/// Lock-free like [`ShadowStats`] and shared across view republishes via
+/// `Arc`, so observations survive unrelated fleet mutations while every
+/// published [`FleetView`] stays immutable. These are OBSERVABILITY ONLY:
+/// routing and hedge decisions are built exclusively on the backend's
+/// published latency factors (updated at deterministic barriers), never
+/// on these concurrently-ordered observations — that is the determinism
+/// contract (DESIGN.md §15).
+#[derive(Default)]
+pub struct LatencyStats {
+    /// Observations folded in so far.
+    pub samples: AtomicU64,
+    /// EWMA of realized latency, stored in micro-ms (integer atomics).
+    ewma_micro_ms: AtomicU64,
+    /// Log₂-ms histogram counts.
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl LatencyStats {
+    /// Fold one realized latency in with smoothing factor `alpha`
+    /// (`--latency-ewma-alpha`); the first observation seeds the EWMA.
+    pub fn record(&self, ms: f64, alpha: f64) {
+        let n = self.samples.fetch_add(1, Ordering::Relaxed);
+        self.buckets[Self::bucket_of(ms)].fetch_add(1, Ordering::Relaxed);
+        if n == 0 {
+            self.ewma_micro_ms.store((ms.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+        } else {
+            let _ = self.ewma_micro_ms.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |old| {
+                    let cur = old as f64 / 1e6;
+                    Some((((1.0 - alpha) * cur + alpha * ms.max(0.0)) * 1e6) as u64)
+                },
+            );
+        }
+    }
+
+    /// Current EWMA in ms (0.0 before the first observation).
+    pub fn ewma_ms(&self) -> f64 {
+        self.ewma_micro_ms.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Count in histogram bucket `i` ∈ [0, [`LATENCY_BUCKETS`]).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+
+    /// Upper bound (ms) of bucket `i` — the Prometheus `le` label.
+    pub fn bucket_le_ms(i: usize) -> u64 {
+        1u64 << (i + 1)
+    }
+
+    fn bucket_of(ms: f64) -> usize {
+        let v = ms.max(0.0) as u64;
+        if v < 1 {
+            0
+        } else {
+            (63 - v.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+        }
+    }
+}
+
 /// When a shadow candidate may be promoted into the routed set.
 #[derive(Clone, Copy, Debug)]
 pub struct PromotionGate {
@@ -140,6 +209,9 @@ pub struct FleetCandidate {
     pub dynamic: bool,
     /// Calibration accumulators while in shadow.
     pub stats: Option<Arc<ShadowStats>>,
+    /// Realized-latency accumulators (EWMA + histogram); shared across
+    /// republishes like `stats`, observability-only (never routing input).
+    pub latency: Arc<LatencyStats>,
 }
 
 impl FleetCandidate {
@@ -296,6 +368,7 @@ impl FleetController {
                     state: Lifecycle::Active,
                     dynamic: false,
                     stats: None,
+                    latency: Arc::new(LatencyStats::default()),
                 }
             })
             .collect();
@@ -384,6 +457,7 @@ impl FleetController {
             state: Lifecycle::Shadow,
             dynamic: true,
             stats: Some(Arc::new(ShadowStats::default())),
+            latency: Arc::new(LatencyStats::default()),
         });
         Ok(self.publish(&old, candidates))
     }
@@ -548,6 +622,40 @@ mod tests {
         let err = fleet.retire_candidate("claude-3.5-sonnet-v2").unwrap_err();
         assert!(format!("{err}").contains("last active"), "{err}");
         assert_eq!(fleet.view().epoch, 4, "failed mutations must not publish");
+        qe.shutdown();
+    }
+
+    #[test]
+    fn latency_stats_ewma_and_buckets() {
+        let s = LatencyStats::default();
+        assert_eq!(s.ewma_ms(), 0.0);
+        s.record(100.0, 0.2);
+        assert_eq!(s.ewma_ms(), 100.0, "first observation seeds the EWMA");
+        s.record(200.0, 0.2);
+        assert!((s.ewma_ms() - 120.0).abs() < 1e-3, "{}", s.ewma_ms());
+        // 100ms → [64,128) = bucket 6; 200ms → [128,256) = bucket 7
+        assert_eq!(s.bucket(6), 1);
+        assert_eq!(s.bucket(7), 1);
+        assert_eq!(LatencyStats::bucket_le_ms(6), 128);
+        // sub-ms lands in bucket 0; an absurd value saturates the last
+        s.record(0.5, 0.2);
+        assert_eq!(s.bucket(0), 1);
+        s.record(1e9, 0.2);
+        assert_eq!(s.bucket(LATENCY_BUCKETS - 1), 1);
+        assert_eq!(s.samples.load(Ordering::Relaxed), 4);
+    }
+
+    /// Latency accumulators ride the shared Arc across republishes (same
+    /// contract as ShadowStats): a fleet mutation must not reset them.
+    #[test]
+    fn latency_stats_survive_republish() {
+        let (fleet, qe) = controller();
+        fleet.view().candidates[0].latency.record(42.0, 0.2);
+        fleet.add_candidate(AddCandidate::named("nova-pro")).unwrap();
+        let v2 = fleet.view();
+        assert_eq!(v2.epoch, 2);
+        assert_eq!(v2.candidates[0].latency.samples.load(Ordering::Relaxed), 1);
+        assert!((v2.candidates[0].latency.ewma_ms() - 42.0).abs() < 1e-6);
         qe.shutdown();
     }
 

@@ -102,6 +102,119 @@ pub fn route_decision(
     RouteDecision { chosen, threshold: r_th, feasible, fallback }
 }
 
+/// Outcome of the latency-budgeted Algorithm 1 extension on one prompt:
+/// the base decision, the precomputed hedge chain, and the candidates the
+/// budget excluded before the τ-gate ever saw them.
+#[derive(Clone, Debug)]
+pub struct BudgetedDecision {
+    /// The Algorithm 1 decision over the budget-admissible candidates.
+    pub decision: RouteDecision,
+    /// Escalation order for hedged dispatch: the selection pool sorted by
+    /// (cost asc, score desc). `chain[0]` is always `decision.chosen`;
+    /// each later entry is the next-cheapest admissible candidate that
+    /// met the quality gate. A single-link chain additionally carries the
+    /// best-scored remaining admissible candidate as a last-resort
+    /// backstop, so hedged dispatch always has somewhere to go when its
+    /// only quality-gated candidate overruns its deadline.
+    pub chain: Vec<usize>,
+    /// Length of the quality-gated prefix of `chain`: entries past it are
+    /// deadline backstops only — quality-miss escalation never enters
+    /// them (a candidate predicted below the quality bar cannot fix a
+    /// quality miss; it exists to salvage the latency SLA).
+    pub pool_len: usize,
+    /// Indices whose predicted latency exceeded the budget (ascending).
+    pub excluded: Vec<usize>,
+}
+
+/// Latency-budgeted routing: Algorithm 1 with a third axis.
+///
+/// `predicted_ms[i]` is the router's latency prediction for candidate i;
+/// `budget_ms = None` is the legacy two-axis contract and is **bit
+/// identical** to [`route_decision`] (same chosen / threshold / feasible /
+/// fallback). With a budget, candidates predicted over it are removed
+/// from the admissible set *before* the τ-gate; the τ-threshold itself is
+/// still computed over the FULL score vector, so for fixed τ a tighter
+/// budget shrinks the feasible set monotonically (exact nesting — the
+/// two-axis property test depends on this) rather than re-normalising
+/// quality against a diminished fleet. Returns `None` when no candidate
+/// fits the budget at all (the caller maps this to a structured 422).
+pub fn route_decision_budgeted(
+    scores: &[f32],
+    costs: &[f64],
+    predicted_ms: &[f64],
+    budget_ms: Option<f64>,
+    tau: f64,
+    strategy: GatingStrategy,
+    delta: f64,
+) -> Option<BudgetedDecision> {
+    assert_eq!(scores.len(), costs.len());
+    assert_eq!(scores.len(), predicted_ms.len());
+    assert!(!scores.is_empty());
+    let tau = tau.clamp(0.0, 1.0);
+    let r_th = strategy.threshold(scores, tau) - delta;
+
+    let (admissible, excluded): (Vec<usize>, Vec<usize>) = match budget_ms {
+        Some(b) => (0..scores.len()).partition(|&i| predicted_ms[i] <= b),
+        None => ((0..scores.len()).collect(), Vec::new()),
+    };
+    if admissible.is_empty() {
+        return None;
+    }
+
+    let feasible: Vec<usize> =
+        admissible.iter().copied().filter(|&i| scores[i] as f64 >= r_th).collect();
+
+    let (pool, fallback): (Vec<usize>, bool) = if feasible.is_empty() {
+        // Fall back to the predicted-best candidate *that fits the
+        // budget* (same max_by tie-behavior as the legacy fallback).
+        let best = admissible
+            .iter()
+            .copied()
+            .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+            .unwrap();
+        (vec![best], true)
+    } else {
+        (feasible.clone(), false)
+    };
+
+    // Stable sort under the legacy selection order: chain[0] is exactly
+    // what `route_decision`'s min_by would pick (first minimal element).
+    let mut chain = pool;
+    chain.sort_by(|&a, &b| {
+        costs[a]
+            .partial_cmp(&costs[b])
+            .unwrap()
+            .then(scores[b].partial_cmp(&scores[a]).unwrap())
+    });
+    let chosen = chain[0];
+    let pool_len = chain.len();
+
+    // A single-link chain has no escape hatch: if its only candidate is
+    // silently degraded, hedged dispatch would have to accept a budget
+    // violation it saw coming at the deadline. Append the best-scored
+    // remaining admissible candidate as a last-resort backstop (same
+    // arg-max tie-behavior as the fallback; predictions and scores only,
+    // so escalation stays deterministic). Multi-link chains need none:
+    // the budget cap already bounds every escalation they can take.
+    if chain.len() == 1 {
+        if let Some(backstop) = admissible
+            .iter()
+            .copied()
+            .filter(|&i| i != chosen)
+            .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+        {
+            chain.push(backstop);
+        }
+    }
+
+    Some(BudgetedDecision {
+        decision: RouteDecision { chosen, threshold: r_th, feasible, fallback },
+        chain,
+        pool_len,
+        excluded,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +372,184 @@ mod tests {
             let d = route_decision(&[0.42], &[0.01], tau, GatingStrategy::DynamicMax, 0.0);
             assert_eq!(d.chosen, 0);
             assert!(!d.fallback);
+        }
+    }
+
+    // -- latency-budgeted decisions ---------------------------------------
+
+    const PRED_MS: [f64; 4] = [500.0, 800.0, 2000.0, 1800.0];
+
+    #[test]
+    fn budget_none_is_bit_identical_to_legacy() {
+        let scores = [0.5f32, 0.7, 0.8, 0.85];
+        for tau in [0.0, 0.2, 0.5, 1.0] {
+            let legacy = route_decision(&scores, &COSTS, tau, GatingStrategy::DynamicMax, 0.01);
+            let b = route_decision_budgeted(
+                &scores,
+                &COSTS,
+                &PRED_MS,
+                None,
+                tau,
+                GatingStrategy::DynamicMax,
+                0.01,
+            )
+            .expect("budget=None is always feasible");
+            assert_eq!(b.decision.chosen, legacy.chosen);
+            assert_eq!(b.decision.threshold.to_bits(), legacy.threshold.to_bits());
+            assert_eq!(b.decision.feasible, legacy.feasible);
+            assert_eq!(b.decision.fallback, legacy.fallback);
+            assert_eq!(b.chain[0], b.decision.chosen);
+            assert!(b.excluded.is_empty());
+        }
+    }
+
+    #[test]
+    fn budget_excludes_before_the_tau_gate() {
+        let scores = [0.5f32, 0.7, 0.8, 0.85];
+        // τ=0.2 would route to 1 (cheapest feasible of {1,2,3}); a budget
+        // excluding 1 escalates to the next-cheapest feasible candidate.
+        let b = route_decision_budgeted(
+            &scores,
+            &COSTS,
+            &[500.0, 9000.0, 2000.0, 1800.0],
+            Some(2500.0),
+            0.2,
+            GatingStrategy::DynamicMax,
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(b.excluded, vec![1]);
+        assert_eq!(b.decision.feasible, vec![2, 3]);
+        assert_eq!(b.decision.chosen, 3, "equal cost -> higher score wins");
+        assert!(!b.decision.fallback);
+    }
+
+    #[test]
+    fn tightening_budget_nests_feasible_sets() {
+        let scores = [0.5f32, 0.7, 0.8, 0.85];
+        let mut prev: Option<Vec<usize>> = None;
+        // descending budgets: every feasible set must contain the next
+        for budget in [3000.0, 1900.0, 900.0, 600.0] {
+            let b = route_decision_budgeted(
+                &scores,
+                &COSTS,
+                &PRED_MS,
+                Some(budget),
+                0.9,
+                GatingStrategy::DynamicMax,
+                0.0,
+            )
+            .unwrap();
+            if let Some(p) = &prev {
+                assert!(
+                    b.decision.feasible.iter().all(|i| p.contains(i)),
+                    "feasible sets must nest: {:?} ⊄ {:?}",
+                    b.decision.feasible,
+                    p
+                );
+            }
+            prev = Some(b.decision.feasible);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let scores = [0.5f32, 0.7, 0.8, 0.85];
+        assert!(route_decision_budgeted(
+            &scores,
+            &COSTS,
+            &PRED_MS,
+            Some(100.0),
+            0.5,
+            GatingStrategy::DynamicMax,
+            0.0,
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn budget_fallback_restricted_to_admissible() {
+        // Static bounds above every score force the fallback; the
+        // predicted-best candidate (idx 3) is over budget, so the
+        // fallback must pick the best *admissible* one instead.
+        let scores = [0.4f32, 0.3, 0.45, 0.9];
+        let b = route_decision_budgeted(
+            &scores,
+            &COSTS,
+            &[500.0, 800.0, 900.0, 9000.0],
+            Some(1000.0),
+            0.3,
+            GatingStrategy::Static { static_min: 0.95, static_max: 0.99 },
+            0.0,
+        )
+        .unwrap();
+        assert!(b.decision.fallback);
+        assert!(b.decision.feasible.is_empty());
+        assert_eq!(b.decision.chosen, 2, "arg-max score over admissible only");
+        // The singleton fallback pool gains the best-scored remaining
+        // admissible candidate as its hedge backstop; the pool itself
+        // stays length 1 so quality misses cannot escalate into it.
+        assert_eq!(b.chain, vec![2, 0]);
+        assert_eq!(b.pool_len, 1);
+        assert_eq!(b.excluded, vec![3]);
+    }
+
+    #[test]
+    fn singleton_chain_gains_a_backstop() {
+        // τ=0 admits only the arg-max; the chain still carries the
+        // best-scored other admissible candidate as a last resort, so a
+        // deadline overrun on the sole survivor can escalate instead of
+        // accepting a foreseeable budget violation.
+        let scores = [0.85f32, 0.7, 0.8, 0.6];
+        let b = route_decision_budgeted(
+            &scores,
+            &COSTS,
+            &PRED_MS,
+            Some(3000.0),
+            0.0,
+            GatingStrategy::DynamicMax,
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(b.decision.feasible, vec![0]);
+        assert_eq!(b.chain, vec![0, 2], "backstop = best-scored other admissible");
+        assert_eq!(b.pool_len, 1, "backstop sits outside the quality-gated pool");
+
+        // With no other admissible candidate there is nothing to append.
+        let lone = route_decision_budgeted(
+            &scores,
+            &COSTS,
+            &[500.0, 9000.0, 9000.0, 9000.0],
+            Some(1000.0),
+            0.0,
+            GatingStrategy::DynamicMax,
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(lone.chain, vec![0]);
+    }
+
+    #[test]
+    fn chain_is_cost_ascending_from_chosen() {
+        let scores = [0.85f32, 0.8, 0.7, 0.86];
+        let b = route_decision_budgeted(
+            &scores,
+            &COSTS,
+            &PRED_MS,
+            Some(3000.0),
+            1.0,
+            GatingStrategy::DynamicMax,
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(b.chain[0], b.decision.chosen);
+        for w in b.chain.windows(2) {
+            assert!(
+                COSTS[w[0]] < COSTS[w[1]]
+                    || (COSTS[w[0]] == COSTS[w[1]] && scores[w[0]] >= scores[w[1]]),
+                "chain must escalate by (cost asc, score desc): {:?}",
+                b.chain
+            );
         }
     }
 

@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::control::FleetController;
+use crate::control::{FleetController, LatencyStats, LATENCY_BUCKETS};
 use crate::util::hist::Histogram;
 use crate::util::score_cache::ShardedScoreCache;
 
@@ -13,6 +13,16 @@ use crate::util::score_cache::ShardedScoreCache;
 pub struct Metrics {
     pub requests: AtomicU64,
     pub fallbacks: AtomicU64,
+    /// Requests that carried a `latency_budget_ms` and were routed.
+    pub budget_requests: AtomicU64,
+    /// Budgeted, invoked requests whose hedged dispatch still overran.
+    pub budget_violations: AtomicU64,
+    /// Requests rejected because no candidate fit the budget (422s).
+    pub budget_infeasible: AtomicU64,
+    /// Invoked requests that escalated at least once.
+    pub hedge_requests: AtomicU64,
+    /// Total hedged escalations across all requests.
+    pub hedge_escalations: AtomicU64,
     pub tokenize: Mutex<Histogram>,
     pub qe: Mutex<Histogram>,
     pub decide: Mutex<Histogram>,
@@ -72,6 +82,26 @@ impl Metrics {
         out.push_str(&format!(
             "ipr_fallbacks_total {}\n",
             self.fallbacks.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_latency_budget_requests_total {}\n",
+            self.budget_requests.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_latency_budget_violations_total {}\n",
+            self.budget_violations.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_latency_budget_infeasible_total {}\n",
+            self.budget_infeasible.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_hedge_requests_total {}\n",
+            self.hedge_requests.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_hedge_escalations_total {}\n",
+            self.hedge_escalations.load(Ordering::Relaxed)
         ));
         for (name, h) in [
             ("tokenize", &self.tokenize),
@@ -146,6 +176,36 @@ impl Metrics {
                     ));
                 }
             }
+            // Per-candidate realized-latency EWMAs + cumulative log₂-ms
+            // histograms (observability only — see DESIGN.md §15).
+            for c in &v.candidates {
+                let samples = c.latency.samples.load(Ordering::Relaxed);
+                if samples == 0 {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "ipr_candidate_latency_samples_total{{candidate=\"{}\"}} {samples}\n",
+                    c.name
+                ));
+                out.push_str(&format!(
+                    "ipr_candidate_latency_ewma_ms{{candidate=\"{}\"}} {:.3}\n",
+                    c.name,
+                    c.latency.ewma_ms()
+                ));
+                let mut cum = 0u64;
+                for i in 0..LATENCY_BUCKETS {
+                    cum += c.latency.bucket(i);
+                    let le = if i + 1 == LATENCY_BUCKETS {
+                        "+Inf".to_string()
+                    } else {
+                        LatencyStats::bucket_le_ms(i).to_string()
+                    };
+                    out.push_str(&format!(
+                        "ipr_candidate_latency_ms_bucket{{candidate=\"{}\",le=\"{le}\"}} {cum}\n",
+                        c.name
+                    ));
+                }
+            }
         }
         // Accumulated simulated spend vs the always-strongest
         // counterfactual — the numbers behind ipr_live_csr, needed by
@@ -173,6 +233,21 @@ mod tests {
         m.add_spend(0.5, 1.0);
         m.add_spend(0.2, 1.0);
         assert!((m.live_csr() - 0.65).abs() < 1e-6);
+    }
+
+    #[test]
+    fn render_contains_hedge_and_budget_counters() {
+        let m = Metrics::default();
+        m.budget_requests.fetch_add(3, Ordering::Relaxed);
+        m.budget_violations.fetch_add(1, Ordering::Relaxed);
+        m.hedge_requests.fetch_add(1, Ordering::Relaxed);
+        m.hedge_escalations.fetch_add(2, Ordering::Relaxed);
+        let text = m.render();
+        assert!(text.contains("ipr_latency_budget_requests_total 3"), "{text}");
+        assert!(text.contains("ipr_latency_budget_violations_total 1"), "{text}");
+        assert!(text.contains("ipr_latency_budget_infeasible_total 0"), "{text}");
+        assert!(text.contains("ipr_hedge_requests_total 1"), "{text}");
+        assert!(text.contains("ipr_hedge_escalations_total 2"), "{text}");
     }
 
     #[test]

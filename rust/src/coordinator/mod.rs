@@ -11,5 +11,10 @@ pub mod gating;
 pub mod metrics;
 pub mod router;
 
-pub use gating::{route_decision, GatingStrategy, RouteDecision};
-pub use router::{validate_tau, BatchItem, Router, RouterConfig, RouteOutcome};
+pub use gating::{
+    route_decision, route_decision_budgeted, BudgetedDecision, GatingStrategy, RouteDecision,
+};
+pub use router::{
+    validate_latency_budget, validate_tau, BatchItem, Router, RouterConfig, RouteOutcome,
+    INFEASIBLE_BUDGET_MARKER, MAX_LATENCY_BUDGET_MS,
+};

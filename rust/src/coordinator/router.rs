@@ -9,10 +9,12 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backends::{Backend, InvokeResult};
-use crate::control::{FleetController, FleetView, PromotionGate};
+use crate::control::{FleetController, FleetView, Lifecycle, PromotionGate};
 use crate::{anyhow, bail};
 use crate::util::error::Result;
-use crate::coordinator::gating::{route_decision, GatingStrategy, RouteDecision};
+use crate::coordinator::gating::{
+    route_decision, route_decision_budgeted, GatingStrategy, RouteDecision,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::qe::{BatcherConfig, QeService};
 use crate::registry::Registry;
@@ -36,6 +38,14 @@ pub struct RouterConfig {
     /// When a shadow candidate may be promoted into the routed set
     /// (fleet control plane, DESIGN.md §14).
     pub gate: PromotionGate,
+    /// Hedged dispatch (`--hedge`): on an invoked request, escalate along
+    /// the precomputed fallback chain when an attempt overruns its
+    /// predicted deadline or realizes below-threshold quality
+    /// (DESIGN.md §15).
+    pub hedge: bool,
+    /// EWMA smoothing factor for the per-candidate realized-latency
+    /// accumulators (`--latency-ewma-alpha`); observability-only.
+    pub latency_ewma_alpha: f64,
 }
 
 impl Default for RouterConfig {
@@ -49,6 +59,8 @@ impl Default for RouterConfig {
             batcher: BatcherConfig::default(),
             time_scale: 0.0,
             gate: PromotionGate::default(),
+            hedge: false,
+            latency_ewma_alpha: 0.2,
         }
     }
 }
@@ -67,6 +79,32 @@ pub fn validate_tau(tau: Option<f64>) -> Result<Option<f64>> {
     Ok(tau)
 }
 
+/// Upper bound for a request's `latency_budget_ms` (10 minutes): budgets
+/// beyond it are caller errors, not SLOs.
+pub const MAX_LATENCY_BUDGET_MS: f64 = 600_000.0;
+
+/// Root-cause marker of the "no candidate fits the latency budget" error:
+/// the server greps the error chain for it to map the failure to a
+/// structured 422 (semantically valid request, unsatisfiable constraint)
+/// instead of a generic 400.
+pub const INFEASIBLE_BUDGET_MARKER: &str = "latency budget infeasible";
+
+/// Validate a request-supplied latency budget, mirroring the τ contract
+/// ([`validate_tau`]): non-finite, non-positive or absurd values are
+/// caller errors (the server maps them to 400s), never silently clamped.
+/// `None` (no budget constraint) passes through.
+pub fn validate_latency_budget(budget_ms: Option<f64>) -> Result<Option<f64>> {
+    if let Some(b) = budget_ms {
+        if !b.is_finite() || b <= 0.0 || b > MAX_LATENCY_BUDGET_MS {
+            bail!(
+                "latency_budget_ms must be a finite number in (0, {MAX_LATENCY_BUDGET_MS}] \
+                 milliseconds, got {b}"
+            );
+        }
+    }
+    Ok(budget_ms)
+}
+
 /// One pre-tokenized request inside a batched routing call
 /// ([`Router::handle_batch`]). The server's micro-batcher builds these on
 /// its connection threads and hands whole batches to a drain worker.
@@ -74,6 +112,9 @@ pub fn validate_tau(tau: Option<f64>) -> Result<Option<f64>> {
 pub struct BatchItem {
     pub tokens: Vec<u32>,
     pub tau: Option<f64>,
+    /// Per-request latency budget (ms): constrains the admissible
+    /// candidate set before the τ-gate. `None` = unconstrained.
+    pub latency_budget_ms: Option<f64>,
     pub invoke: bool,
     pub identity: Option<Prompt>,
     /// Tokenization time already spent on this request (µs).
@@ -107,8 +148,26 @@ pub struct RouteOutcome {
     pub qe_us: u64,
     pub decide_us: u64,
     pub total_us: u64,
-    /// Present when the request asked for endpoint invocation.
+    /// Present when the request asked for endpoint invocation. On a
+    /// hedged request this is the FINAL (accepted) attempt; the primary
+    /// decision stays in `decision` and the attempt trail in
+    /// `attempt_path`.
     pub invoke: Option<InvokeResult>,
+    /// The request's validated latency budget, if it carried one.
+    pub latency_budget_ms: Option<f64>,
+    /// Hedged escalations taken (0 = the primary attempt was accepted).
+    pub hedges: u32,
+    /// Local (active-array) candidate indices attempted in order;
+    /// `attempt_path[0] == decision.chosen`, the last entry answered.
+    pub attempt_path: Vec<usize>,
+    /// End-to-end simulated latency of the (possibly hedged) dispatch in
+    /// ms: abandoned attempts contribute their predicted deadline,
+    /// quality-missed and accepted attempts their realized latency.
+    /// `None` when the request did not invoke.
+    pub sla_latency_ms: Option<f64>,
+    /// True when a budgeted, invoked request's `sla_latency_ms` overran
+    /// its budget even after hedging.
+    pub budget_violated: bool,
 }
 
 /// One router instance = one family QE + DO + endpoint fleet. Which
@@ -161,7 +220,7 @@ impl Router {
         let t0 = Instant::now();
         let tokens = tokenizer::tokenize(text);
         let tokenize_us = t0.elapsed().as_micros() as u64;
-        self.handle_tokens_timed(&tokens, tau, invoke, identity, tokenize_us, t_start)
+        self.handle_tokens_timed(&tokens, tau, None, invoke, identity, tokenize_us, t_start)
     }
 
     /// Route an already-tokenized prompt (server fast path / eval).
@@ -172,7 +231,21 @@ impl Router {
         invoke: bool,
         identity: Option<&Prompt>,
     ) -> Result<RouteOutcome> {
-        self.handle_tokens_timed(tokens, tau, invoke, identity, 0, Instant::now())
+        self.handle_tokens_timed(tokens, tau, None, invoke, identity, 0, Instant::now())
+    }
+
+    /// Route an already-tokenized prompt under a per-request latency
+    /// budget (the three-axis contract). `budget_ms = None` is exactly
+    /// [`Router::handle_tokens`].
+    pub fn handle_tokens_budgeted(
+        &self,
+        tokens: &[u32],
+        tau: Option<f64>,
+        budget_ms: Option<f64>,
+        invoke: bool,
+        identity: Option<&Prompt>,
+    ) -> Result<RouteOutcome> {
+        self.handle_tokens_timed(tokens, tau, budget_ms, invoke, identity, 0, Instant::now())
     }
 
     /// Route a coalesced batch of requests. The score cache is consulted
@@ -254,6 +327,7 @@ impl Router {
                         &it.tokens,
                         sc,
                         it.tau,
+                        it.latency_budget_ms,
                         it.invoke,
                         it.identity.as_ref(),
                         it.tokenize_us,
@@ -276,6 +350,7 @@ impl Router {
                             &it.tokens,
                             sc,
                             it.tau,
+                            it.latency_budget_ms,
                             it.invoke,
                             it.identity.as_ref(),
                             it.tokenize_us,
@@ -301,6 +376,7 @@ impl Router {
         tokens: &[u32],
         scores: Vec<f32>,
         tau: Option<f64>,
+        latency_budget_ms: Option<f64>,
         invoke: bool,
         identity: Option<&Prompt>,
         tokenize_us: u64,
@@ -308,13 +384,26 @@ impl Router {
         t_start: Instant,
     ) -> Result<RouteOutcome> {
         let view = self.fleet.view();
-        self.finish(&view, tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
+        self.finish(
+            &view,
+            tokens,
+            scores,
+            tau,
+            latency_budget_ms,
+            invoke,
+            identity,
+            tokenize_us,
+            qe_us,
+            t_start,
+        )
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn handle_tokens_timed(
         &self,
         tokens: &[u32],
         tau: Option<f64>,
+        latency_budget_ms: Option<f64>,
         invoke: bool,
         identity: Option<&Prompt>,
         tokenize_us: u64,
@@ -332,12 +421,33 @@ impl Router {
             None => self.qe.score_with_key(key, tokens)?,
         };
         let qe_us = t1.elapsed().as_micros() as u64;
-        self.finish(&view, tokens, scores, tau, invoke, identity, tokenize_us, qe_us, t_start)
+        self.finish(
+            &view,
+            tokens,
+            scores,
+            tau,
+            latency_budget_ms,
+            invoke,
+            identity,
+            tokenize_us,
+            qe_us,
+            t_start,
+        )
+    }
+
+    /// Record one realized latency on the local (active-array) candidate's
+    /// shared accumulators — observability only, never a routing input.
+    fn record_latency(&self, view: &FleetView, local: usize, ms: f64) {
+        if let Some(c) =
+            view.candidates.iter().filter(|c| c.state == Lifecycle::Active).nth(local)
+        {
+            c.latency.record(ms, self.cfg.latency_ewma_alpha);
+        }
     }
 
     /// The per-request tail shared by the single and batched paths:
     /// Decision Optimization over the pinned view's ACTIVE candidates →
-    /// shadow scoring → optional invoke → metering.
+    /// shadow scoring → optional (hedged) invoke → metering.
     #[allow(clippy::too_many_arguments)]
     fn finish(
         &self,
@@ -345,6 +455,7 @@ impl Router {
         tokens: &[u32],
         scores: Vec<f32>,
         tau: Option<f64>,
+        latency_budget_ms: Option<f64>,
         invoke: bool,
         identity: Option<&Prompt>,
         tokenize_us: u64,
@@ -352,8 +463,9 @@ impl Router {
         t_start: Instant,
     ) -> Result<RouteOutcome> {
         // Library callers reach `finish` without passing the server's
-        // boundary check, so the τ contract is enforced here too.
+        // boundary checks, so both request contracts are enforced here too.
         let tau = validate_tau(tau)?.unwrap_or(self.cfg.tau_default);
+        let budget = validate_latency_budget(latency_budget_ms)?;
 
         // Shadow scoring: candidates in shadow see live traffic but never
         // routing; with a generative identity the prediction is compared
@@ -386,51 +498,170 @@ impl Router {
         } else {
             view.active_heads.iter().map(|&h| scores.get(h).copied().unwrap_or(0.0)).collect()
         };
-        let decision = route_decision(
-            &active_scores,
-            &view.active_costs,
-            tau,
-            self.cfg.strategy,
-            self.cfg.delta,
-        );
+        let m = &self.metrics;
+        // Budgeted path when the request carries a budget or hedged
+        // dispatch is on (the hedge chain comes from the budgeted
+        // decision). Otherwise: the legacy two-axis decision — no
+        // predicted-latency computation on that hot path, and the
+        // budgeted form is bit-identical to it by construction anyway.
+        let (decision, chain) = if budget.is_some() || self.cfg.hedge {
+            let predicted: Vec<f64> = view
+                .active_global
+                .iter()
+                .map(|&g| self.backend.predicted_ms(g, tokens, identity))
+                .collect();
+            match route_decision_budgeted(
+                &active_scores,
+                &view.active_costs,
+                &predicted,
+                budget,
+                tau,
+                self.cfg.strategy,
+                self.cfg.delta,
+            ) {
+                Some(b) => {
+                    let chain: Vec<(usize, f64)> =
+                        b.chain.iter().map(|&l| (l, predicted[l])).collect();
+                    (b.decision, Some((chain, b.pool_len)))
+                }
+                None => {
+                    m.budget_infeasible.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    bail!(
+                        "{INFEASIBLE_BUDGET_MARKER}: no active candidate's predicted \
+                         latency fits within {} ms",
+                        budget.unwrap_or(0.0)
+                    );
+                }
+            }
+        } else {
+            let d = route_decision(
+                &active_scores,
+                &view.active_costs,
+                tau,
+                self.cfg.strategy,
+                self.cfg.delta,
+            );
+            (d, None)
+        };
         let decide_us = t2.elapsed().as_micros() as u64;
 
+        // Dispatch. Hedged: walk the precomputed chain cheapest-first;
+        // abandon an attempt at its predicted deadline when it overruns
+        // (charging the deadline, not the realized tail), escalate on a
+        // realized-quality miss (charging the realized latency — the
+        // response had to be seen to be judged; quality misses stay
+        // within the quality-gated pool and never enter the backstop
+        // tail), and ALWAYS accept the
+        // last link rather than fail. Escalations are budget-capped: a
+        // hedge is only taken when the next link's prediction still fits
+        // the remaining budget — hedging past the deadline cannot help.
+        // Every branch depends only on (prompt, published latency state,
+        // budget, seeded realization) — same seed ⇒ identical escalation
+        // path.
         let local = decision.chosen;
-        let global = view.active_global[local];
-        let inv = if invoke {
-            Some(self.backend.invoke(global, tokens, identity))
-        } else {
+        let mut final_local = local;
+        let mut hedges = 0u32;
+        let mut attempt_path = vec![local];
+        let mut sla_latency_ms: Option<f64> = None;
+        let mut spend_usd = 0.0f64;
+        let inv = if !invoke {
             None
+        } else if let (Some((chain, pool_len)), true) = (&chain, self.cfg.hedge) {
+            let mut elapsed = 0.0f64;
+            let mut accepted: Option<InvokeResult> = None;
+            for (pos, &(l, predicted_ms)) in chain.iter().enumerate() {
+                if pos > 0 {
+                    hedges += 1;
+                    attempt_path.push(l);
+                }
+                let r = self.backend.invoke(view.active_global[l], tokens, identity);
+                spend_usd += r.cost_usd;
+                self.record_latency(view, l, r.latency_ms);
+                let last = pos + 1 == chain.len();
+                // Budget-capped escalation: hedging past the deadline
+                // cannot help, so an escalation is only taken when the
+                // next link's predicted latency still fits what would
+                // remain of the budget after charging this attempt.
+                // (Deterministic: depends only on predictions + budget.)
+                let headroom = |spent: f64| match budget {
+                    Some(b) => spent + chain[pos + 1].1 <= b,
+                    None => true,
+                };
+                if !last && r.latency_ms > predicted_ms && headroom(elapsed + predicted_ms) {
+                    elapsed += predicted_ms;
+                    continue;
+                }
+                // A quality miss only escalates within the quality-gated
+                // pool: the backstop tail is predicted BELOW the bar, so
+                // retrying there cannot fix quality — it exists solely to
+                // salvage the SLA on a deadline overrun.
+                if !last
+                    && pos + 1 < *pool_len
+                    && matches!(r.reward, Some(q) if q < decision.threshold)
+                    && headroom(elapsed + r.latency_ms)
+                {
+                    elapsed += r.latency_ms;
+                    continue;
+                }
+                elapsed += r.latency_ms;
+                final_local = l;
+                accepted = Some(r);
+                break;
+            }
+            sla_latency_ms = Some(elapsed);
+            accepted
+        } else {
+            let r = self.backend.invoke(view.active_global[local], tokens, identity);
+            spend_usd += r.cost_usd;
+            self.record_latency(view, local, r.latency_ms);
+            sla_latency_ms = Some(r.latency_ms);
+            Some(r)
+        };
+        let global = view.active_global[final_local];
+        let budget_violated = match (budget, sla_latency_ms) {
+            (Some(b), Some(ms)) => ms > b,
+            _ => false,
         };
 
-        // Metering.
-        let m = &self.metrics;
+        // Metering (the ANSWERING candidate is what's metered/reported;
+        // the primary decision stays in `decision`).
         m.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if decision.fallback {
             m.fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
-        m.record_route(&view.active_names[local]);
+        if budget.is_some() {
+            m.budget_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if budget_violated {
+                m.budget_violations.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        if hedges > 0 {
+            m.hedge_requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            m.hedge_escalations.fetch_add(hedges as u64, std::sync::atomic::Ordering::Relaxed);
+        }
+        m.record_route(&view.active_names[final_local]);
         m.tokenize.lock().unwrap().record(Duration::from_micros(tokenize_us));
         m.qe.lock().unwrap().record(Duration::from_micros(qe_us));
         m.decide.lock().unwrap().record(Duration::from_micros(decide_us));
         let total_us = t_start.elapsed().as_micros() as u64;
         m.total.lock().unwrap().record(Duration::from_micros(total_us));
-        if let Some(inv) = &inv {
+        if inv.is_some() {
             // live CSR: compare against always-strongest on this prompt
-            // (cost-only counterfactual, no latency simulation).
+            // (cost-only counterfactual, no latency simulation). Hedged
+            // requests charge the SUM of their attempts.
             let best_cost = self.backend.cost_of(
                 view.active_global[view.strongest_active],
                 tokens,
                 identity,
             );
-            m.add_spend(inv.cost_usd, best_cost);
+            m.add_spend(spend_usd, best_cost);
         }
 
         Ok(RouteOutcome {
             decision,
             scores: active_scores,
             candidate_global: global,
-            model_name: view.active_names[local].clone(),
+            model_name: view.active_names[final_local].clone(),
             tau,
             epoch: view.epoch,
             tokenize_us,
@@ -438,6 +669,11 @@ impl Router {
             decide_us,
             total_us,
             invoke: inv,
+            latency_budget_ms: budget,
+            hedges,
+            attempt_path,
+            sla_latency_ms,
+            budget_violated,
         })
     }
 }
@@ -468,6 +704,35 @@ mod tests {
             let err = validate_tau(Some(bad)).unwrap_err();
             assert!(
                 format!("{err}").contains("tau must be a finite number in [0, 1]"),
+                "unexpected message for {bad}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_latency_budget_accepts_the_contract_range() {
+        for ok in [0.001, 1.0, 150.0, 5500.0, MAX_LATENCY_BUDGET_MS] {
+            assert_eq!(validate_latency_budget(Some(ok)).unwrap(), Some(ok));
+        }
+        assert_eq!(validate_latency_budget(None).unwrap(), None);
+    }
+
+    #[test]
+    fn validate_latency_budget_rejects_bad_values() {
+        for bad in [
+            0.0,
+            -0.0,
+            -1.0,
+            -250.0,
+            MAX_LATENCY_BUDGET_MS + 0.001,
+            1e18,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ] {
+            let err = validate_latency_budget(Some(bad)).unwrap_err();
+            assert!(
+                format!("{err}").contains("latency_budget_ms"),
                 "unexpected message for {bad}: {err}"
             );
         }

@@ -39,7 +39,8 @@ use ipr::util::error::{Context, Result};
 use ipr::util::json::Json;
 use ipr::workload;
 use ipr::workload::loadgen::{
-    check_workloads_regression, run_scenario, run_scenario_churn, workloads_json, LoadgenOptions,
+    check_workloads_regression, run_scenario, run_scenario_churn, run_scenario_sla,
+    workloads_json, LoadgenOptions,
 };
 use ipr::{anyhow, bail};
 
@@ -60,15 +61,17 @@ USAGE:
               [--max-batch 8] [--max-wait-us 500] [--batch-workers 2]
               [--drain-ms 5000] [--score-cache-entries 4096]
               [--no-score-cache] [--shadow-min-samples 32]
-              [--shadow-max-mae 0.15]
+              [--shadow-max-mae 0.15] [--hedge]
+              [--latency-ewma-alpha 0.2]
   ipr route   --prompt \"...\" [--tau 0.3] [--family claude] [--invoke]
   ipr eval    --table {1..12|D|fig3|fig45|all} [--limit N] [--artifacts DIR]
   ipr bench   [--artifacts DIR] [--out-dir .] [--smoke] [--batch-sizes 1,8,64]
               [--prompts N] [--repeats N] [--route-requests N]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
-  ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|fleet_churn|all]
-              [--seed 7] [--requests N] [--clients N] [--smoke]
+  ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|fleet_churn|
+               latency_sla|all]
+              [--seed 7] [--requests N] [--clients N] [--smoke] [--hedge]
               [--time-scale 0] [--out BENCH_workloads.json] [--artifacts DIR]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
@@ -82,7 +85,7 @@ USAGE:
 ";
 
 fn run() -> Result<()> {
-    let args = Args::parse(&["invoke", "help", "smoke", "no-score-cache", "force"]);
+    let args = Args::parse(&["invoke", "help", "smoke", "no-score-cache", "force", "hedge"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
@@ -137,6 +140,8 @@ fn build_router(args: &Args) -> Result<Arc<Router>> {
             },
         },
         time_scale: args.f64_or("time-scale", 0.0)?,
+        hedge: args.flag("hedge"),
+        latency_ewma_alpha: args.f64_or("latency-ewma-alpha", 0.2)?,
         gate: ipr::control::PromotionGate {
             min_samples: args.usize_or("shadow-min-samples", 32)? as u64,
             max_mae: args.f64_or("shadow-max-mae", 0.15)?,
@@ -255,6 +260,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         seed,
         clients: args.usize_or("clients", 0)?,
         time_scale: args.f64_or("time-scale", 0.0)?,
+        hedge: args.flag("hedge"),
     };
     let scenarios = if which == "all" {
         let mut all = workload::presets(requests);
@@ -268,13 +274,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 workload::FLEET_CHURN_MIN_REQUESTS
             );
         }
+        // latency_sla rides along the same way (its spike plan needs
+        // enough requests on each side of the barriers).
+        if requests >= workload::LATENCY_SLA_MIN_REQUESTS {
+            all.extend(workload::preset(workload::LATENCY_SLA, requests));
+        } else {
+            println!(
+                "note: skipping latency_sla (needs --requests >= {}, got {requests})",
+                workload::LATENCY_SLA_MIN_REQUESTS
+            );
+        }
         all
     } else {
         vec![workload::preset(&which, requests).ok_or_else(|| {
             anyhow!(
-                "unknown scenario '{which}' (have: {}, {} or 'all')",
+                "unknown scenario '{which}' (have: {}, {}, {} or 'all')",
                 workload::PRESET_NAMES.join(", "),
-                workload::FLEET_CHURN
+                workload::FLEET_CHURN,
+                workload::LATENCY_SLA
             )
         })?]
     };
@@ -284,12 +301,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "Workload simulation — seeded scenarios against the real server",
         &[
             "scenario", "reqs", "clients", "loop", "req/s", "p50 (us)", "p95 (us)", "p99 (us)",
-            "cache hit", "mean $(1k)", "parity", "err",
+            "cache hit", "mean $(1k)", "parity", "hedges", "viol", "err",
         ],
     );
     for sc in &scenarios {
-        // fleet_churn carries its canonical mid-run admin plan; every
-        // other scenario runs with a static fleet.
+        // fleet_churn carries its canonical mid-run admin plan and
+        // latency_sla its canonical fault plan (hedging forced on —
+        // escaping the spike is the point); every other scenario runs
+        // with a static fleet and healthy latencies.
         let r = if sc.name == workload::FLEET_CHURN {
             if sc.requests < workload::FLEET_CHURN_MIN_REQUESTS {
                 bail!(
@@ -300,12 +319,25 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 );
             }
             run_scenario_churn(&opts, sc, &workload::churn_plan(sc.requests))?
+        } else if sc.name == workload::LATENCY_SLA {
+            if sc.requests < workload::LATENCY_SLA_MIN_REQUESTS {
+                bail!(
+                    "latency_sla needs --requests >= {} (the spike plan's barriers need \
+                     requests on both sides), got {}",
+                    workload::LATENCY_SLA_MIN_REQUESTS,
+                    sc.requests
+                );
+            }
+            let sla_opts = LoadgenOptions { hedge: true, ..opts.clone() };
+            run_scenario_sla(&sla_opts, sc, &workload::latency_plan(sc.requests))?
         } else {
             run_scenario(&opts, sc)?
         };
         println!(
-            "{}: stream {:#018x}  decisions {:#018x}  (fleet epoch {}, {} admin actions)",
-            r.name, r.stream_digest, r.decision_digest, r.fleet_epoch, r.fleet_actions
+            "{}: stream {:#018x}  decisions {:#018x}  (fleet epoch {}, {} admin actions, \
+             {} fault actions)",
+            r.name, r.stream_digest, r.decision_digest, r.fleet_epoch, r.fleet_actions,
+            r.fault_actions
         );
         t.row(vec![
             r.name.clone(),
@@ -319,6 +351,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             format!("{:.1}%", r.cache_hit_rate * 100.0),
             r.mean_cost_usd.map(|c| format!("{:.4}", c * 1000.0)).unwrap_or_else(|| "-".into()),
             r.quality_parity.map(|q| format!("{:.3}", q)).unwrap_or_else(|| "-".into()),
+            r.hedges.to_string(),
+            r.budget_violations.to_string(),
             r.errors.to_string(),
         ]);
         reports.push(r);
@@ -343,20 +377,34 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         // Merge into the existing baseline (the bench subcommand owns the
         // routing/kernel fields) rather than clobbering it.
         let worst_p95 = reports.iter().map(|r| r.p95_us).fold(0.0f64, f64::max);
+        // The violation-rate ceiling keeps a 5% floor: a clean run would
+        // otherwise record 0.0 and make ANY future violation a hard CI
+        // failure, defeating the ratio-based gate.
+        let sla_rate = reports
+            .iter()
+            .filter(|r| r.budgeted > 0)
+            .map(|r| r.budget_violations as f64 / r.budgeted as f64)
+            .fold(0.05f64, f64::max);
         let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(bp) {
             Ok(text) => ipr::util::json::parse(&text)?
                 .as_obj()?
                 .iter()
                 .map(|(k, v)| (k.clone(), v.clone()))
                 .collect(),
-            Err(_) => vec![("schema".to_string(), Json::str("ipr-bench-baseline/v3"))],
+            Err(_) => vec![("schema".to_string(), Json::str("ipr-bench-baseline/v4"))],
         };
-        pairs.retain(|(k, _)| k != "loadgen_routed_p95_us" && k != "schema");
-        pairs.push(("schema".to_string(), Json::str("ipr-bench-baseline/v3")));
+        pairs.retain(|(k, _)| {
+            k != "loadgen_routed_p95_us" && k != "latency_sla_violation_rate" && k != "schema"
+        });
+        pairs.push(("schema".to_string(), Json::str("ipr-bench-baseline/v4")));
         pairs.push(("loadgen_routed_p95_us".to_string(), Json::Num(worst_p95)));
+        pairs.push(("latency_sla_violation_rate".to_string(), Json::Num(sla_rate)));
         let base_doc = Json::Obj(pairs.into_iter().collect());
         std::fs::write(bp, base_doc.to_string()).with_context(|| format!("writing {bp}"))?;
-        println!("wrote baseline {bp} (loadgen_routed_p95_us {worst_p95:.1})");
+        println!(
+            "wrote baseline {bp} (loadgen_routed_p95_us {worst_p95:.1}, \
+             latency_sla_violation_rate {sla_rate:.3})"
+        );
     }
     if let Some(b) = args.get("baseline") {
         let ratio = args.f64_or("max-regress", 1.25)?;

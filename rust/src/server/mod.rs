@@ -43,7 +43,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{validate_tau, BatchItem, RouteOutcome, Router};
+use crate::coordinator::{
+    validate_latency_budget, validate_tau, BatchItem, RouteOutcome, Router,
+    INFEASIBLE_BUDGET_MARKER,
+};
 use crate::tokenizer;
 use crate::util::error::{Context, Result};
 use crate::util::json::{parse, Json};
@@ -479,6 +482,12 @@ fn dispatch(
             let force_invoke = path == "/v1/invoke";
             match handle_route(sh, body, force_invoke, tok_buf) {
                 Ok(j) => ("200 OK", "application/json", j),
+                // An unsatisfiable latency budget is a well-formed request
+                // the fleet cannot serve: 422, distinct from caller-error
+                // 400s (the client can retry with a looser budget).
+                Err(e) if format!("{e:#}").contains(INFEASIBLE_BUDGET_MARKER) => {
+                    ("422 Unprocessable Entity", "application/json", err_json(&e.to_string()))
+                }
                 Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
             }
         }
@@ -626,6 +635,11 @@ fn handle_route(
     // Boundary validation: a non-finite or out-of-[0,1] τ is a client
     // error (400), never something to silently clamp and route with.
     let tau = validate_tau(j.get("tau").map(|v| v.as_f64()).transpose()?)?;
+    // Same boundary discipline for the optional latency budget: reject
+    // non-finite, non-positive, or absurd values before routing.
+    let latency_budget_ms = validate_latency_budget(
+        j.get("latency_budget_ms").map(|v| v.as_f64()).transpose()?,
+    )?;
     let invoke = force_invoke
         || j.get("invoke").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
     let identity = match (j.get("split"), j.get("index")) {
@@ -653,6 +667,7 @@ fn handle_route(
             tok_buf,
             scores,
             tau,
+            latency_budget_ms,
             invoke,
             identity.as_ref(),
             tokenize_us,
@@ -668,6 +683,7 @@ fn handle_route(
     let item = BatchItem {
         tokens: tok_buf.clone(),
         tau,
+        latency_budget_ms,
         invoke,
         identity,
         tokenize_us,
@@ -702,7 +718,15 @@ fn outcome_json(out: &RouteOutcome) -> String {
         ("qe_us", Json::Num(out.qe_us as f64)),
         ("decide_us", Json::Num(out.decide_us as f64)),
         ("total_us", Json::Num(out.total_us as f64)),
+        ("hedges", Json::Num(out.hedges as f64)),
     ];
+    if let Some(b) = out.latency_budget_ms {
+        fields.push(("latency_budget_ms", Json::Num(b)));
+        fields.push(("budget_violated", Json::Bool(out.budget_violated)));
+    }
+    if let Some(ms) = out.sla_latency_ms {
+        fields.push(("sla_latency_ms", Json::Num(ms)));
+    }
     if let Some(inv) = &out.invoke {
         fields.push((
             "invoke",

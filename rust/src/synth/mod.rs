@@ -96,6 +96,9 @@ const AFFINITY_AMPL: f64 = 0.08;
 const STREAM_PROMPT: u64 = 1;
 const STREAM_REWARD: u64 = 2;
 const STREAM_AFFINITY: u64 = 3;
+/// Rust-only stream (never drawn by the python mirror): per-candidate
+/// deterministic latency personality for the serving-side latency model.
+const STREAM_LATENCY: u64 = 4;
 
 pub fn family_candidate_indices(family: &str) -> Vec<usize> {
     CANDIDATES
@@ -256,6 +259,15 @@ impl SynthWorld {
         let jitter = 0.8 + 0.4 * rng.next_f64();
         let o = c.verbosity * (30.0 + 100.0 * prompt.difficulty + 50.0 * prompt.reasoning) * jitter;
         (o as i64).max(4) as u32
+    }
+
+    /// Deterministic per-candidate decode-speed personality in
+    /// [0.9, 1.1] (rust-only stream; the serving latency model scales a
+    /// candidate's decode time by this, so two candidates with the same
+    /// published profile still have distinct, reproducible latencies).
+    pub fn latency_scale(&self, cand_idx: usize) -> f64 {
+        let mut r = Rng::new(substream(self.seed, STREAM_LATENCY, cand_idx as u64));
+        0.9 + 0.2 * r.next_f64()
     }
 
     /// Live-traffic prompt (rust-only stream; used by server benches).

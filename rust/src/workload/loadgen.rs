@@ -29,6 +29,7 @@ use crate::util::hist::Histogram;
 use crate::util::json::{parse, Json};
 use crate::workload::{
     fold, generate, stream_digest, tokens_text, ChurnAction, ChurnOp, GenRequest, Scenario,
+    SpikeAction, SpikeOp,
 };
 
 /// Knobs shared by every scenario of one `ipr loadgen` run.
@@ -40,11 +41,20 @@ pub struct LoadgenOptions {
     pub clients: usize,
     /// Backend latency simulation factor (0 = meter only; loadgen default).
     pub time_scale: f64,
+    /// Enable hedged dispatch on the router under test (the latency_sla
+    /// scenario forces this on).
+    pub hedge: bool,
 }
 
 impl Default for LoadgenOptions {
     fn default() -> Self {
-        LoadgenOptions { artifacts: "artifacts".into(), seed: 7, clients: 0, time_scale: 0.0 }
+        LoadgenOptions {
+            artifacts: "artifacts".into(),
+            seed: 7,
+            clients: 0,
+            time_scale: 0.0,
+            hedge: false,
+        }
     }
 }
 
@@ -80,6 +90,19 @@ pub struct ScenarioReport {
     pub fleet_epoch: u64,
     /// Admin actions applied mid-run (the churn plan's length).
     pub fleet_actions: usize,
+    /// Latency-fault actions applied mid-run (the spike plan's length).
+    pub fault_actions: usize,
+    /// Requests that carried a latency budget.
+    pub budgeted: usize,
+    /// Budgeted requests whose SLA latency still overran the budget.
+    pub budget_violations: usize,
+    /// Requests that escalated at least once under hedged dispatch.
+    pub hedged: usize,
+    /// Total hedge escalations across all requests.
+    pub hedges: u64,
+    /// p99 of the simulated SLA latency (ms) over invoked requests;
+    /// None when nothing reported one.
+    pub sla_p99_ms: Option<f64>,
     /// Digest of the generated request stream (python-mirrored goldens).
     pub stream_digest: u64,
     /// Digest of the per-request routing decisions, in stream order.
@@ -98,6 +121,10 @@ struct Obs {
     threshold_bits: u64,
     cost_usd: Option<f64>,
     reward: Option<f64>,
+    hedges: u64,
+    budget_ms: Option<f64>,
+    sla_ms: Option<f64>,
+    violated: bool,
 }
 
 impl Obs {
@@ -113,6 +140,10 @@ impl Obs {
             threshold_bits: 0,
             cost_usd: None,
             reward: None,
+            hedges: 0,
+            budget_ms: None,
+            sla_ms: None,
+            violated: false,
         }
     }
 }
@@ -135,6 +166,10 @@ fn parse_obs(idx: usize, latency_ns: u64, status: u16, body: &str) -> Obs {
             threshold_bits: j.req("threshold")?.as_f64()?.to_bits(),
             cost_usd: inv.and_then(|v| v.get("cost_usd")).and_then(|v| v.as_f64().ok()),
             reward: inv.and_then(|v| v.get("reward")).and_then(|v| v.as_f64().ok()),
+            hedges: j.get("hedges").and_then(|v| v.as_i64().ok()).unwrap_or(0) as u64,
+            budget_ms: j.get("latency_budget_ms").and_then(|v| v.as_f64().ok()),
+            sla_ms: j.get("sla_latency_ms").and_then(|v| v.as_f64().ok()),
+            violated: j.get("budget_violated").and_then(|v| v.as_bool().ok()).unwrap_or(false),
         })
     })();
     parsed.unwrap_or_else(|e| Obs::failed(idx, latency_ns, format!("bad response body: {e}")))
@@ -151,14 +186,19 @@ fn prepare(reqs: &[GenRequest]) -> Vec<Prepared> {
         .map(|q| {
             let path = if q.invoke { "/v1/invoke" } else { "/v1/route" };
             let text = tokens_text(&q.tokens);
+            // Budgeted requests carry the drawn latency budget on the wire.
+            let budget = q
+                .latency_budget_ms
+                .map(|b| format!(", \"latency_budget_ms\": {b}"))
+                .unwrap_or_default();
             // Stretched prompts withhold the generative identity: their
             // tokens no longer match the canonical SynthWorld prompt, so
             // realized-quality metering would be wrong.
             let body = if q.stretched {
-                format!("{{\"prompt\": \"{text}\", \"tau\": {}}}", q.tau)
+                format!("{{\"prompt\": \"{text}\", \"tau\": {}{budget}}}", q.tau)
             } else {
                 format!(
-                    "{{\"prompt\": \"{text}\", \"tau\": {}, \"split\": {SPLIT_LIVE}, \"index\": {}}}",
+                    "{{\"prompt\": \"{text}\", \"tau\": {}, \"split\": {SPLIT_LIVE}, \"index\": {}{budget}}}",
                     q.tau, q.index
                 )
             };
@@ -226,7 +266,7 @@ fn run_segment(
 /// Run one scenario end to end: fresh router + server, client pool over
 /// real sockets, aggregate the observations into a [`ScenarioReport`].
 pub fn run_scenario(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioReport> {
-    run_scenario_churn(opts, sc, &[])
+    run_scenario_plan(opts, sc, &[], &[])
 }
 
 /// [`run_scenario`] with a candidate-lifecycle churn plan: each action
@@ -242,6 +282,36 @@ pub fn run_scenario_churn(
     sc: &Scenario,
     plan: &[ChurnAction],
 ) -> Result<ScenarioReport> {
+    run_scenario_plan(opts, sc, plan, &[])
+}
+
+/// [`run_scenario`] with a latency-fault plan: each [`SpikeAction`] is
+/// applied directly to the backend's latency model at its deterministic
+/// stream position behind the same phase barrier the churn driver uses,
+/// so hedge/escalation decisions are bit-reproducible across runs — the
+/// latency_sla acceptance contract (`rust/tests/latency_sla.rs`, CI
+/// smoke).
+pub fn run_scenario_sla(
+    opts: &LoadgenOptions,
+    sc: &Scenario,
+    plan: &[SpikeAction],
+) -> Result<ScenarioReport> {
+    run_scenario_plan(opts, sc, &[], plan)
+}
+
+/// One merged mid-run action (churn or latency fault) at a phase barrier.
+#[derive(Clone, Copy)]
+enum PlanOp {
+    Churn(ChurnOp),
+    Spike(SpikeOp),
+}
+
+fn run_scenario_plan(
+    opts: &LoadgenOptions,
+    sc: &Scenario,
+    plan: &[ChurnAction],
+    spikes: &[SpikeAction],
+) -> Result<ScenarioReport> {
     let reg = Arc::new(Registry::load_or_reference(opts.artifacts.as_str())?);
     let world = SynthWorld::new(reg.world_seed);
     let reqs = generate(&world, sc, opts.seed);
@@ -250,7 +320,11 @@ pub fn run_scenario_churn(
     let want = if opts.clients > 0 { opts.clients } else { sc.clients };
     let clients = want.max(1).min(reqs.len().max(1));
 
-    let router_cfg = RouterConfig { time_scale: opts.time_scale, ..RouterConfig::default() };
+    let router_cfg = RouterConfig {
+        time_scale: opts.time_scale,
+        hedge: opts.hedge,
+        ..RouterConfig::default()
+    };
     let router = Arc::new(Router::new(reg, router_cfg)?);
     let server = Server::start_with(
         router.clone(),
@@ -261,8 +335,12 @@ pub fn run_scenario_churn(
     let admin = HttpClient::new(&addr);
 
     let n = reqs.len();
-    let mut actions: Vec<&ChurnAction> = plan.iter().collect();
-    actions.sort_by_key(|a| a.at);
+    let mut actions: Vec<(usize, PlanOp)> = plan
+        .iter()
+        .map(|a| (a.at, PlanOp::Churn(a.op)))
+        .chain(spikes.iter().map(|a| (a.at, PlanOp::Spike(a.op))))
+        .collect();
+    actions.sort_by_key(|&(at, _)| at);
 
     let start = Instant::now();
     let mut obs: Vec<Obs> = Vec::with_capacity(n);
@@ -280,8 +358,8 @@ pub fn run_scenario_churn(
         let check_segment = |obs: &[Obs], from: usize, shadow: &BTreeSet<&str>| -> usize {
             obs[from..].iter().filter(|o| o.ok && shadow.contains(o.model.as_str())).count()
         };
-        for action in actions {
-            let at = action.at.min(n);
+        for &(action_at, op) in &actions {
+            let at = action_at.min(n);
             run_segment(
                 seg_start,
                 at,
@@ -296,9 +374,23 @@ pub fn run_scenario_churn(
             shadow_violations += check_segment(&obs, check_from, &shadow_now);
             check_from = obs.len();
             seg_start = at;
+            let churn_op = match op {
+                PlanOp::Churn(c) => c,
+                // Latency faults hit the backend's latency model
+                // directly — there is no operator surface for "the
+                // network got slow"; the spike IS the environment.
+                PlanOp::Spike(SpikeOp::Inject { candidate, factor }) => {
+                    router.backend.latency.inject(candidate, factor);
+                    continue;
+                }
+                PlanOp::Spike(SpikeOp::Publish { candidate, factor }) => {
+                    router.backend.latency.publish(candidate, factor);
+                    continue;
+                }
+            };
             // Phase barrier passed — fire the admin action through the
             // live HTTP surface, exactly as an operator would.
-            let (op_name, resp) = match action.op {
+            let (op_name, resp) = match churn_op {
                 ChurnOp::Add(name) => (
                     format!("add {name}"),
                     admin.post("/admin/v1/candidates", &format!("{{\"name\": \"{name}\"}}"))?,
@@ -319,7 +411,7 @@ pub fn run_scenario_churn(
                     resp.1
                 ));
             }
-            match action.op {
+            match churn_op {
                 ChurnOp::Add(name) => {
                     shadow_now.insert(name);
                 }
@@ -357,6 +449,9 @@ pub fn run_scenario_churn(
     let mut route_mix: BTreeMap<String, u64> = BTreeMap::new();
     let mut invoked = 0usize;
     let mut cost_sum = 0.0f64;
+    let (mut budgeted, mut budget_violations) = (0usize, 0usize);
+    let (mut hedged, mut hedges_total) = (0usize, 0u64);
+    let mut sla_ms: Vec<f64> = Vec::new();
     let (mut realized_sum, mut strongest_sum, mut metered) = (0.0f64, 0.0f64, 0usize);
     // Quality parity compares against the END-of-run fleet's strongest
     // active candidate (under churn, the counterfactual follows the
@@ -381,6 +476,22 @@ pub fn run_scenario_churn(
         ddigest = fold(ddigest, o.candidate);
         ddigest = fold(ddigest, o.fallback as u64);
         ddigest = fold(ddigest, o.threshold_bits);
+        // Budgeted requests also fold their hedge count and violation
+        // flag, so the digest pins escalation behavior too. Gated on the
+        // budget so budget-free scenarios keep their historical digests.
+        if o.budget_ms.is_some() {
+            budgeted += 1;
+            budget_violations += o.violated as usize;
+            ddigest = fold(ddigest, o.hedges);
+            ddigest = fold(ddigest, o.violated as u64);
+        }
+        if o.hedges > 0 {
+            hedged += 1;
+            hedges_total += o.hedges;
+        }
+        if let Some(ms) = o.sla_ms {
+            sla_ms.push(ms);
+        }
         if o.fallback {
             fallbacks += 1;
         }
@@ -426,6 +537,20 @@ pub fn run_scenario_churn(
         route_mix,
         fleet_epoch,
         fleet_actions: plan.len(),
+        fault_actions: spikes.len(),
+        budgeted,
+        budget_violations,
+        hedged,
+        hedges: hedges_total,
+        sla_p99_ms: {
+            sla_ms.sort_by(f64::total_cmp);
+            if sla_ms.is_empty() {
+                None
+            } else {
+                let rank = ((sla_ms.len() as f64 * 0.99).ceil() as usize).max(1) - 1;
+                Some(sla_ms[rank.min(sla_ms.len() - 1)])
+            }
+        },
         stream_digest: sdigest,
         decision_digest: ddigest,
     })
@@ -468,6 +593,28 @@ impl ScenarioReport {
             ),
             ("fleet_epoch", Json::Num(self.fleet_epoch as f64)),
             ("fleet_actions", Json::Num(self.fleet_actions as f64)),
+            ("fault_actions", Json::Num(self.fault_actions as f64)),
+            ("budgeted", Json::Num(self.budgeted as f64)),
+            ("budget_violations", Json::Num(self.budget_violations as f64)),
+            (
+                "budget_violation_rate",
+                Json::Num(if self.budgeted > 0 {
+                    self.budget_violations as f64 / self.budgeted as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("hedged", Json::Num(self.hedged as f64)),
+            ("hedges", Json::Num(self.hedges as f64)),
+            (
+                "hedge_rate",
+                Json::Num(if self.requests > 0 {
+                    self.hedged as f64 / self.requests as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("sla_p99_ms", self.sla_p99_ms.map(Json::Num).unwrap_or(Json::Null)),
             // u64 digests as hex strings: Json::Num is f64 and would lose
             // the low bits.
             ("stream_digest", Json::str(&format!("{:#018x}", self.stream_digest))),
@@ -486,9 +633,12 @@ pub fn workloads_json(seed: u64, reports: &[ScenarioReport]) -> Json {
 }
 
 /// CI gate over a `BENCH_workloads.json` document: every scenario must
-/// have finished error-free, and no scenario's routed p95 may exceed the
-/// baseline's `loadgen_routed_p95_us * max_ratio` ceiling (skipped when
-/// the baseline predates the field, so older baselines stay valid).
+/// have finished error-free, no scenario's routed p95 may exceed the
+/// baseline's `loadgen_routed_p95_us * max_ratio` ceiling, and no
+/// budgeted scenario's violation rate may exceed the baseline's
+/// `latency_sla_violation_rate * max_ratio` ceiling (each ceiling is
+/// skipped when the baseline predates its field, so older baselines
+/// stay valid).
 pub fn check_workloads_regression(
     current: &Json,
     baseline_path: &str,
@@ -507,6 +657,29 @@ pub fn check_workloads_regression(
     let text = std::fs::read_to_string(baseline_path)
         .with_context(|| format!("reading baseline {baseline_path}"))?;
     let base = parse(&text)?;
+    if let Some(bv) = base.get("latency_sla_violation_rate") {
+        let vlimit = bv.as_f64()? * max_ratio;
+        for s in scenarios {
+            let budgeted = s.get("budgeted").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            if budgeted <= 0.0 {
+                continue;
+            }
+            let rate = s
+                .get("budget_violation_rate")
+                .and_then(|v| v.as_f64().ok())
+                .unwrap_or(0.0);
+            if rate > vlimit {
+                return Err(anyhow!(
+                    "latency-SLA regression: scenario '{}' violated its budget on {:.2}% of \
+                     budgeted requests > {:.2}% ceiling (baseline {:.2}% x {max_ratio})",
+                    s.req("name")?.as_str()?,
+                    rate * 100.0,
+                    vlimit * 100.0,
+                    bv.as_f64()? * 100.0
+                ));
+            }
+        }
+    }
     let Some(b) = base.get("loadgen_routed_p95_us") else {
         return Ok("workloads gate skipped: baseline has no loadgen fields".to_string());
     };
@@ -559,6 +732,36 @@ mod tests {
         std::fs::write(&file, "{\"routing_p50_us\": 100.0}").unwrap();
         let msg = check_workloads_regression(&doc(9999.0, 0.0), path, 1.25).unwrap();
         assert!(msg.contains("skipped"), "{msg}");
+        let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn workloads_gate_budget_violation_rate() {
+        let file = std::env::temp_dir().join(format!("ipr-sla-baseline-{}", std::process::id()));
+        std::fs::write(
+            &file,
+            "{\"loadgen_routed_p95_us\": 1e9, \"latency_sla_violation_rate\": 0.05}",
+        )
+        .unwrap();
+        let path = file.to_str().unwrap();
+        let doc = |budgeted: f64, rate: f64| {
+            Json::obj(vec![(
+                "scenarios",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("latency_sla")),
+                    ("p95_us", Json::Num(100.0)),
+                    ("errors", Json::Num(0.0)),
+                    ("budgeted", Json::Num(budgeted)),
+                    ("budget_violation_rate", Json::Num(rate)),
+                ])]),
+            )])
+        };
+        assert!(check_workloads_regression(&doc(100.0, 0.0), path, 1.25).is_ok());
+        assert!(check_workloads_regression(&doc(100.0, 0.06), path, 1.25).is_ok());
+        let err = check_workloads_regression(&doc(100.0, 0.07), path, 1.25).unwrap_err();
+        assert!(format!("{err:#}").contains("latency-SLA regression"), "{err:#}");
+        // budget-free scenarios never trip the violation ceiling
+        assert!(check_workloads_regression(&doc(0.0, 1.0), path, 1.25).is_ok());
         let _ = std::fs::remove_file(&file);
     }
 }

@@ -92,6 +92,13 @@ pub struct Scenario {
     /// Fraction of requests that invoke the routed endpoint (metered:
     /// realized cost + reward flow back into the summary).
     pub invoke_frac: f64,
+    /// Per-request latency-budget band (ms). `budget_hi_ms <= 0`
+    /// disables the budget draw entirely — the python-mirrored presets
+    /// keep it at 0.0 so their RNG draw sequence (and thus every golden
+    /// digest) is unchanged. Rust-only scenarios ([`LATENCY_SLA`]) set a
+    /// positive band and every request carries a uniform draw from it.
+    pub budget_lo_ms: f64,
+    pub budget_hi_ms: f64,
 }
 
 /// One generated request of a scenario stream.
@@ -110,6 +117,9 @@ pub struct GenRequest {
     /// Whether the prompt was stretched (identity is then withheld —
     /// the tokens no longer match the canonical SynthWorld prompt).
     pub stretched: bool,
+    /// Per-request latency budget (ms), drawn from the scenario's
+    /// budget band; `None` when the scenario disables budgets.
+    pub latency_budget_ms: Option<f64>,
     /// The prompt token sequence actually sent.
     pub tokens: Vec<u32>,
 }
@@ -169,6 +179,65 @@ pub fn churn_plan(requests: usize) -> Vec<ChurnAction> {
     ]
 }
 
+/// Name of the latency-SLA scenario (`ipr loadgen --scenario
+/// latency_sla`): every request carries a `latency_budget_ms` drawn from
+/// the scenario's budget band and invokes the routed endpoint under
+/// hedged dispatch, while [`latency_plan`] injects a seeded latency
+/// spike on the cheapest candidate mid-run. Rust-only (the python mirror
+/// has no latency model); determinism is pinned by the double-run digest
+/// test in `rust/tests/latency_sla.rs`.
+pub const LATENCY_SLA: &str = "latency_sla";
+
+/// Smallest stream the canonical [`latency_plan`] works for: the
+/// unannounced-spike window spans 20% of the stream and the plan's
+/// barrier positions need enough requests on each side to make hedging
+/// observable.
+pub const LATENCY_SLA_MIN_REQUESTS: usize = 100;
+
+/// One latency-fault action the loadgen driver applies at a
+/// deterministic stream position (a phase barrier, exactly like
+/// [`ChurnAction`]): all earlier requests complete first, so hedge
+/// decisions stay bit-reproducible across runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpikeAction {
+    /// Stream index BEFORE which the action fires.
+    pub at: usize,
+    pub op: SpikeOp,
+}
+
+/// A latency-fault operation on the backend's [`LatencyModel`]
+/// (`crate::backends::LatencyModel`). `Inject` changes only REALIZED
+/// latency (what invocations experience); `Publish` changes only the
+/// PUBLISHED factor (what predictions — and therefore routing and hedge
+/// deadlines — see). Separating the two is what makes an *unannounced*
+/// spike observable: between Inject and Publish the router still
+/// predicts healthy latencies, overruns its deadlines, and hedges.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpikeOp {
+    /// Scale the realized-latency fault factor of candidate `candidate`.
+    Inject { candidate: usize, factor: f64 },
+    /// Scale the published (routing-visible) factor of candidate
+    /// `candidate`.
+    Publish { candidate: usize, factor: f64 },
+}
+
+/// The canonical fault plan for [`LATENCY_SLA`], scaled to the stream
+/// length (≥ [`LATENCY_SLA_MIN_REQUESTS`]): at 50% the cheapest
+/// candidate (local index 0 in the boot fleet's cost order) suffers an
+/// unannounced 8× latency spike — requests routed to it overrun their
+/// hedge deadline and escalate along the chain. At 70% the control
+/// plane "notices" and publishes the 8× factor, so routing excludes the
+/// slow candidate up front and hedging subsides. At 80%/85% the spike
+/// clears in the same order (realized first, then published).
+pub fn latency_plan(requests: usize) -> Vec<SpikeAction> {
+    vec![
+        SpikeAction { at: requests / 2, op: SpikeOp::Inject { candidate: 0, factor: 8.0 } },
+        SpikeAction { at: requests * 7 / 10, op: SpikeOp::Publish { candidate: 0, factor: 8.0 } },
+        SpikeAction { at: requests * 4 / 5, op: SpikeOp::Inject { candidate: 0, factor: 1.0 } },
+        SpikeAction { at: requests * 17 / 20, op: SpikeOp::Publish { candidate: 0, factor: 1.0 } },
+    ]
+}
+
 /// Look up a preset by name, scaled to `requests` requests.
 pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
     let one = |lo: f64, hi: f64| {
@@ -191,6 +260,8 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
             stretch_target: 0,
             tenants: one(0.1, 0.6),
             invoke_frac: 0.25,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
         }),
         // Alternating calm/burst phases (8x rate inside bursts) with a
         // heavy-tail stretch fraction: stresses the micro-batcher's
@@ -209,6 +280,8 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
             stretch_target: 320,
             tenants: one(0.2, 0.5),
             invoke_frac: 0.2,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
         }),
         // 75% of traffic re-routes 32 Zipf-popular prompts: the
         // routing-score cache's target regime (hit rate should be high
@@ -227,6 +300,8 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
             stretch_target: 0,
             tenants: one(0.1, 0.4),
             invoke_frac: 0.2,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
         }),
         // Three tenant populations at different points of the τ curve
         // plus mild skew: the user-controlled trade-off exercised as a
@@ -249,6 +324,8 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
                 Tenant { name: "saver", weight: 0.25, tau_lo: 0.7, tau_hi: 1.0 },
             ],
             invoke_frac: 0.3,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
         }),
         // Candidate-lifecycle churn: steady closed-loop mixed-τ traffic
         // with mild hot-key skew (the cache must survive the epoch
@@ -272,6 +349,39 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
                 Tenant { name: "saver", weight: 0.3, tau_lo: 0.7, tau_hi: 1.0 },
             ],
             invoke_frac: 0.35,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
+        }),
+        // Latency-SLA: closed-loop traffic where EVERY request invokes
+        // under a latency budget drawn from [5500, 8000] ms. The band
+        // floor clears the worst single healthy attempt (~2.9 s at
+        // seed 7) AND the worst deadline-charged spike hedge (stale
+        // healthy haiku prediction plus one healthy escalation,
+        // ~4.7 s), and budget-capped escalation bounds every deeper
+        // chain by the budget itself — so violations stay at zero even
+        // while `latency_plan` spikes the cheapest candidate. The floor
+        // also clears every candidate's healthy prediction, so no
+        // request is 422-rejected mid-run.
+        LATENCY_SLA => Some(Scenario {
+            name: LATENCY_SLA,
+            requests,
+            clients: 6,
+            open_loop: false,
+            base_rps: 500.0,
+            burst_rps: 500.0,
+            burst_len: 0,
+            hot_set: 8,
+            hot_frac: 0.3,
+            stretch_frac: 0.0,
+            stretch_target: 0,
+            tenants: vec![
+                Tenant { name: "quality", weight: 0.3, tau_lo: 0.0, tau_hi: 0.15 },
+                Tenant { name: "balanced", weight: 0.4, tau_lo: 0.25, tau_hi: 0.55 },
+                Tenant { name: "saver", weight: 0.3, tau_lo: 0.7, tau_hi: 1.0 },
+            ],
+            invoke_frac: 1.0,
+            budget_lo_ms: 5500.0,
+            budget_hi_ms: 8000.0,
         }),
         _ => None,
     }
@@ -321,7 +431,9 @@ fn pick_tenant(r: &mut Rng, tenants: &[Tenant], total_w: f64) -> usize {
 ///
 /// Draw order per request (the python mirror replicates it exactly):
 /// hot-key draw, (Zipf rank iff hot), tenant draw, τ draw, invoke draw,
-/// stretch draw. Arrival gaps come from one sequential substream.
+/// stretch draw, then — ONLY when the scenario's budget band is enabled
+/// (`budget_hi_ms > 0`, never true for mirrored presets) — the budget
+/// draw. Arrival gaps come from one sequential substream.
 pub fn generate(world: &SynthWorld, sc: &Scenario, seed: u64) -> Vec<GenRequest> {
     let total_w: f64 = sc.tenants.iter().map(|t| t.weight).sum();
     let mut arrivals = Rng::new(substream(seed, STREAM_ARRIVAL, 0));
@@ -345,6 +457,14 @@ pub fn generate(world: &SynthWorld, sc: &Scenario, seed: u64) -> Vec<GenRequest>
         let tau = tn.tau_lo + (tn.tau_hi - tn.tau_lo) * r.next_f64();
         let invoke = r.next_f64() < sc.invoke_frac;
         let stretched = r.next_f64() < sc.stretch_frac;
+        // Budget draw LAST and gated: disabled scenarios consume the
+        // exact same draw sequence as before budgets existed, keeping
+        // the python-mirrored golden digests byte-stable.
+        let latency_budget_ms = if sc.budget_hi_ms > 0.0 {
+            Some(sc.budget_lo_ms + (sc.budget_hi_ms - sc.budget_lo_ms) * r.next_f64())
+        } else {
+            None
+        };
 
         let p = world.sample_prompt(SPLIT_LIVE, index);
         let mut tokens = p.tokens.clone();
@@ -353,7 +473,16 @@ pub fn generate(world: &SynthWorld, sc: &Scenario, seed: u64) -> Vec<GenRequest>
                 tokens.extend_from_slice(&p.tokens);
             }
         }
-        out.push(GenRequest { index, t_offset_us: t_us, tau, tenant, invoke, stretched, tokens });
+        out.push(GenRequest {
+            index,
+            t_offset_us: t_us,
+            tau,
+            tenant,
+            invoke,
+            stretched,
+            latency_budget_ms,
+            tokens,
+        });
     }
     out
 }
@@ -419,6 +548,38 @@ mod tests {
         );
         let c = generate(&world, &sc, 8);
         assert_ne!(stream_digest(sc.name, 7, &a), stream_digest(sc.name, 8, &c));
+    }
+
+    #[test]
+    fn latency_sla_budgets_within_band_and_presets_budgetless() {
+        let world = SynthWorld::default();
+        let sc = preset(LATENCY_SLA, 120).expect("latency_sla preset exists");
+        assert!(
+            !PRESET_NAMES.contains(&LATENCY_SLA),
+            "rust-only scenario stays out of the mirrored preset table"
+        );
+        let reqs = generate(&world, &sc, 7);
+        for q in &reqs {
+            let b = q.latency_budget_ms.expect("every latency_sla request carries a budget");
+            assert!(
+                (sc.budget_lo_ms..=sc.budget_hi_ms).contains(&b),
+                "budget {b} outside [{}, {}]",
+                sc.budget_lo_ms,
+                sc.budget_hi_ms
+            );
+            assert!(q.invoke, "latency_sla invokes every request");
+        }
+        // The mirrored presets must stay budget-free AND keep consuming
+        // the exact pre-budget draw sequence (pinned by the golden
+        // digests in rust/tests/workload.rs).
+        for name in PRESET_NAMES {
+            let sc = preset(name, 20).unwrap();
+            assert!(generate(&world, &sc, 7).iter().all(|q| q.latency_budget_ms.is_none()));
+        }
+        // Plan sanity: barriers are sorted, in range, and spike before clearing.
+        let plan = latency_plan(sc.requests);
+        assert!(plan.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(plan.iter().all(|a| a.at < sc.requests));
     }
 
     #[test]

@@ -250,6 +250,7 @@ fn fleet_swap_overlaps_inflight_batches() {
                         .map(|p| BatchItem {
                             tokens: p.clone(),
                             tau: Some(0.25),
+                            latency_budget_ms: None,
                             invoke: false,
                             identity: None,
                             tokenize_us: 0,

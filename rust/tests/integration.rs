@@ -10,7 +10,9 @@
 //! feature-gated with a logged skip.
 
 use ipr::coordinator::gating::GatingStrategy;
-use ipr::coordinator::{BatchItem, Router, RouterConfig};
+use ipr::coordinator::{
+    BatchItem, Router, RouterConfig, INFEASIBLE_BUDGET_MARKER, MAX_LATENCY_BUDGET_MS,
+};
 use ipr::eval::arqgc::{bounded_arqgc, csr_at_quality, tau_sweep};
 use ipr::eval::baselines;
 use ipr::eval::dataset::{self, FamilyView};
@@ -239,6 +241,7 @@ fn handle_batch_mixes_hits_and_misses() {
         .map(|r| BatchItem {
             tokens: r.tokens.clone(),
             tau: Some(0.2),
+            latency_budget_ms: None,
             invoke: false,
             identity: None,
             tokenize_us: 0,
@@ -301,6 +304,92 @@ fn router_rejects_invalid_tau() {
     for ok in [0.0, 1.0] {
         router.handle_tokens(&rows[0].tokens, Some(ok), false, None).unwrap();
     }
+    router.qe.shutdown();
+}
+
+/// The latency-budget contract below the HTTP layer, mirroring the τ
+/// contract: non-finite, non-positive or beyond-cap budgets are caller
+/// errors — never silently clamped and routed with (and nothing is
+/// metered for them).
+#[test]
+fn router_rejects_invalid_budget() {
+    let reg = registry();
+    let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
+    let rows = dataset::load(&reg, "test", 1).unwrap();
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, 0.0, 600_001.0] {
+        let err = router
+            .handle_tokens_budgeted(&rows[0].tokens, Some(0.2), Some(bad), false, None)
+            .expect_err("invalid latency budget must error");
+        assert!(format!("{err}").contains("latency_budget_ms"), "{err}");
+    }
+    assert_eq!(
+        router.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "rejected requests must not be metered"
+    );
+    // the cap itself and a generous-but-sane budget still route
+    for ok in [MAX_LATENCY_BUDGET_MS, 60_000.0] {
+        router
+            .handle_tokens_budgeted(&rows[0].tokens, Some(0.2), Some(ok), false, None)
+            .unwrap();
+    }
+    router.qe.shutdown();
+}
+
+/// The score-cache fast path must not bypass budget gating: a cached
+/// score vector re-enters Decision Optimization under the request's own
+/// budget, constraining (or structurally failing) the route exactly as a
+/// cache miss would.
+#[test]
+fn cache_hit_honors_latency_budget() {
+    let reg = registry();
+    let router = Router::new(reg.clone(), RouterConfig::default()).unwrap();
+    let rows = dataset::load(&reg, "test", 1).unwrap();
+    let tokens = &rows[0].tokens;
+    // warm the cache through the unbudgeted path (τ=0: quality-first, so
+    // the chosen candidate is unlikely to also be the latency-fastest)
+    let unbudgeted = router.handle_tokens(tokens, Some(0.0), false, None).unwrap();
+    assert_eq!(router.qe.cache_stats(), (0, 1));
+    let view = router.fleet.view();
+    let predicted: Vec<f64> = view
+        .active_global
+        .iter()
+        .map(|&g| router.backend.predicted_ms(g, tokens, None))
+        .collect();
+    // tightest satisfiable budget: only the fastest candidate(s) fit
+    let pmin = predicted.iter().cloned().fold(f64::INFINITY, f64::min);
+    let out = router
+        .handle_tokens_budgeted(tokens, Some(0.0), Some(pmin), false, None)
+        .unwrap();
+    assert_eq!(router.qe.cache_stats().0, 1, "budgeted request must hit the cache");
+    assert!(
+        predicted[out.decision.chosen] <= pmin,
+        "cache hit bypassed the budget: predicted {} > budget {}",
+        predicted[out.decision.chosen],
+        pmin
+    );
+    if predicted[unbudgeted.decision.chosen] > pmin {
+        assert_ne!(
+            out.decision.chosen,
+            unbudgeted.decision.chosen,
+            "budget had no effect on the cache-hit route"
+        );
+    }
+    // an infeasible (but syntactically valid) budget fails structurally
+    // on the hit path too — and is not metered as a routed request
+    let err = router
+        .handle_tokens_budgeted(tokens, Some(0.0), Some(0.001), false, None)
+        .expect_err("no candidate fits a 1µs budget");
+    assert!(format!("{err:#}").contains(INFEASIBLE_BUDGET_MARKER), "{err:#}");
+    assert_eq!(
+        router.metrics.budget_infeasible.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    assert_eq!(
+        router.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+        2,
+        "the infeasible request must not be metered as routed"
+    );
     router.qe.shutdown();
 }
 

@@ -1,0 +1,51 @@
+//! Latency-fault-injection tier (DESIGN.md §15): the `latency_sla`
+//! scenario under the canonical spike plan — an unannounced 8× latency
+//! spike on the cheapest candidate mid-run — must keep every request
+//! succeeding, keep budget violations at zero through hedged dispatch,
+//! and stay bit-deterministic across runs of one seed.
+
+use ipr::workload::loadgen::{run_scenario_sla, LoadgenOptions};
+use ipr::workload::{latency_plan, preset, LATENCY_SLA};
+
+#[test]
+fn latency_sla_spike_recovers_within_budget_and_is_deterministic() {
+    let opts = LoadgenOptions { seed: 7, hedge: true, ..LoadgenOptions::default() };
+    let sc = preset(LATENCY_SLA, 120).unwrap();
+    let plan = latency_plan(sc.requests);
+    let a = run_scenario_sla(&opts, &sc, &plan).unwrap();
+    let b = run_scenario_sla(&opts, &sc, &plan).unwrap();
+
+    // Zero failures across the spike — no 422s, no dropped requests.
+    assert_eq!(a.errors, 0, "run A had failed requests during the spike");
+    assert_eq!(b.errors, 0, "run B had failed requests during the spike");
+    assert_eq!(a.fault_actions, 4, "spike + publish + heal + re-publish");
+    assert_eq!(a.fleet_epoch, 1, "latency faults are not fleet churn");
+
+    // Every request carried a budget, and hedged dispatch kept each one
+    // inside it despite the unannounced spike window.
+    assert_eq!(a.budgeted, a.requests);
+    assert_eq!(a.budget_violations, 0, "budget violations during the spike");
+    assert!(a.hedged > 0, "the unannounced spike window must force escalations");
+    assert!(a.hedges >= a.hedged as u64);
+    let p99 = a.sla_p99_ms.expect("every request invoked, so an SLA p99 exists");
+    assert!(
+        p99 <= sc.budget_hi_ms,
+        "p99 SLA latency {p99} ms exceeds the budget ceiling {} ms",
+        sc.budget_hi_ms
+    );
+
+    // Bit-determinism: same seed ⇒ identical stream AND identical
+    // hedge/escalation decisions.
+    assert_eq!(a.stream_digest, b.stream_digest, "request streams diverged");
+    assert_eq!(a.decision_digest, b.decision_digest, "hedge decisions diverged");
+    assert_eq!(a.route_mix, b.route_mix);
+    assert_eq!((a.hedged, a.hedges), (b.hedged, b.hedges));
+    assert_eq!(a.budget_violations, b.budget_violations);
+    let routed: u64 = a.route_mix.values().sum();
+    assert_eq!(routed as usize, a.requests, "every request routed exactly once");
+
+    // A different seed is a different stream (and different decisions).
+    let opts2 = LoadgenOptions { seed: 8, hedge: true, ..LoadgenOptions::default() };
+    let c = run_scenario_sla(&opts2, &sc, &plan).unwrap();
+    assert_ne!(a.stream_digest, c.stream_digest);
+}

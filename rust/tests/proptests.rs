@@ -3,7 +3,7 @@
 //! the histogram, the tokenizer, the ARQGC metric, and the batched-QE
 //! equivalence contract.
 
-use ipr::coordinator::gating::{route_decision, GatingStrategy};
+use ipr::coordinator::gating::{route_decision, route_decision_budgeted, GatingStrategy};
 use ipr::eval::arqgc::{bounded_arqgc, CurvePoint};
 use ipr::runtime::{create_engine, Engine as _, QeModel as _};
 use ipr::testkit::registry;
@@ -150,6 +150,105 @@ fn prop_tau_monotone_quality_and_cost_all_strategies() {
                 prev_quality = q;
             }
             true
+        },
+    );
+}
+
+/// The two-axis (τ × latency-budget) contract of `route_decision_budgeted`,
+/// fuzzed over random score/cost/latency tables, margins and every
+/// strategy of the τ-monotonicity property:
+///
+/// 1. `budget = None` is **bit-identical** to `route_decision` — same
+///    chosen index, same threshold bit pattern, same feasible set, same
+///    fallback flag — and the hedge chain starts at the chosen candidate.
+/// 2. At fixed τ, tightening the budget shrinks the feasible set
+///    monotonically (exact nesting, no epsilon): every candidate feasible
+///    under a tighter budget was feasible under every looser one.
+/// 3. Infeasibility is absorbing: once no candidate fits, no tighter
+///    budget ever routes again.
+/// 4. The chosen candidate is always admissible (never budget-excluded).
+#[test]
+fn prop_budget_two_axis_monotone_all_strategies() {
+    check(
+        43,
+        800,
+        |r, _| {
+            let n = 2 + r.next_range(8) as usize;
+            let scores = gen_scores(r, n);
+            let costs = gen_costs(r, n);
+            let predicted: Vec<f64> = (0..n).map(|_| 100.0 + 4900.0 * r.next_f64()).collect();
+            let tau = r.next_f64();
+            let delta = 0.1 * r.next_f64();
+            let smax = scores.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let strat = match r.next_range(4) {
+                0 => GatingStrategy::DynamicMax,
+                1 => GatingStrategy::DynamicMinMax,
+                2 => GatingStrategy::StaticDynamic { static_min: r.next_f64() * smax },
+                _ => GatingStrategy::Static {
+                    static_min: r.next_f64() * 0.5,
+                    static_max: 0.5 + r.next_f64() * 0.5,
+                },
+            };
+            (scores, costs, predicted, tau, delta, strat)
+        },
+        |(scores, costs, predicted, tau, delta, strat)| {
+            // 1. budget=None is bit-identical to the legacy decision.
+            let legacy = route_decision(scores, costs, *tau, *strat, *delta);
+            let Some(unb) =
+                route_decision_budgeted(scores, costs, predicted, None, *tau, *strat, *delta)
+            else {
+                return false;
+            };
+            if unb.decision.chosen != legacy.chosen
+                || unb.decision.threshold.to_bits() != legacy.threshold.to_bits()
+                || unb.decision.feasible != legacy.feasible
+                || unb.decision.fallback != legacy.fallback
+                || unb.chain[0] != unb.decision.chosen
+                || !unb.excluded.is_empty()
+            {
+                return false;
+            }
+            // 2-4. Fixed τ, budgets swept strictly tighter each step:
+            // nesting, absorbing infeasibility, admissible chosen.
+            let mut budgets: Vec<f64> = predicted.clone();
+            budgets.push(predicted.iter().cloned().fold(0.0, f64::max) + 1.0);
+            budgets.push(predicted.iter().cloned().fold(f64::MAX, f64::min) - 1.0);
+            budgets.sort_by(f64::total_cmp);
+            budgets.reverse(); // descending = tightening
+            let mut prev_feasible: Option<Vec<usize>> = None;
+            let mut dead = false;
+            for &b in &budgets {
+                match route_decision_budgeted(
+                    scores,
+                    costs,
+                    predicted,
+                    Some(b),
+                    *tau,
+                    *strat,
+                    *delta,
+                ) {
+                    Some(d) => {
+                        if dead {
+                            return false; // came back from infeasible
+                        }
+                        if predicted[d.decision.chosen] > b {
+                            return false; // routed over budget
+                        }
+                        if d.chain[0] != d.decision.chosen {
+                            return false;
+                        }
+                        if let Some(p) = &prev_feasible {
+                            if !d.decision.feasible.iter().all(|i| p.contains(i)) {
+                                return false; // nesting violated
+                            }
+                        }
+                        prev_feasible = Some(d.decision.feasible);
+                    }
+                    None => dead = true,
+                }
+            }
+            // the below-min budget must have been infeasible
+            dead
         },
     );
 }

@@ -202,6 +202,67 @@ fn keep_alive_survives_error_responses() {
     fx.stop();
 }
 
+/// Boundary validation of the per-request latency budget, mirroring the
+/// τ contract: non-finite, non-positive or beyond-cap budgets are 400s
+/// naming the field, while a well-formed budget no candidate can meet is
+/// a structured 422 (the fleet, not the request, is the problem — the
+/// client can retry with a looser budget). Both leave the keep-alive
+/// connection serving.
+#[test]
+fn latency_budget_validated_at_the_boundary() {
+    let fx = ServerFixture::start();
+    let client = fx.client();
+    for bad in ["0", "-5", "1e999", "-1e999", "600001"] {
+        let body =
+            format!("{{\"prompt\": \"w100 w200\", \"tau\": 0.2, \"latency_budget_ms\": {bad}}}");
+        let (st, resp) = client.post("/v1/route", &body).unwrap();
+        assert_eq!(st, 400, "budget={bad} must be rejected, got: {resp}");
+        assert!(resp.contains("latency_budget_ms"), "error should name the field: {resp}");
+    }
+    // a non-numeric budget is a parse-level 400
+    let (st, _) = client
+        .post("/v1/route", "{\"prompt\": \"w100 w200\", \"latency_budget_ms\": \"fast\"}")
+        .unwrap();
+    assert_eq!(st, 400);
+    // the cap itself routes, and the outcome echoes the budget contract
+    let (st, resp) = client
+        .post(
+            "/v1/route",
+            "{\"prompt\": \"w100 w200\", \"tau\": 0.2, \"latency_budget_ms\": 600000}",
+        )
+        .unwrap();
+    assert_eq!(st, 200, "{resp}");
+    let j = parse(&resp).unwrap();
+    assert_eq!(j.req("latency_budget_ms").unwrap().as_f64().unwrap(), 600000.0);
+    assert!(!j.req("budget_violated").unwrap().as_bool().unwrap());
+    // an unbudgeted request does NOT carry the budget fields
+    let (st, resp) = client.post("/v1/route", "{\"prompt\": \"w100 w200\"}").unwrap();
+    assert_eq!(st, 200, "{resp}");
+    let j = parse(&resp).unwrap();
+    assert!(j.get("latency_budget_ms").is_none(), "{resp}");
+    assert!(j.get("budget_violated").is_none(), "{resp}");
+
+    // valid-but-unsatisfiable budget: structured 422 on a keep-alive
+    // connection, which must keep serving afterwards
+    let mut kc = fx.keep_alive_client();
+    let (st, resp) = kc
+        .post("/v1/route", "{\"prompt\": \"w5 w6 w7\", \"latency_budget_ms\": 0.001}")
+        .unwrap();
+    assert_eq!(st, 422, "{resp}");
+    assert!(resp.contains("latency budget infeasible"), "{resp}");
+    let (st, resp) = kc.post("/v1/route", "{\"prompt\": \"w5 w6 w7\", \"tau\": 0.2}").unwrap();
+    assert_eq!(st, 200, "{resp}");
+    assert_eq!(kc.reconnects(), 0, "the connection must have survived the 422");
+
+    // metering: the infeasible request is counted on its own counter,
+    // never as routed traffic (3 requests routed above)
+    let (_, m) = client.get("/metrics").unwrap();
+    assert!(m.contains("ipr_requests_total 3"), "{m}");
+    assert!(m.contains("ipr_latency_budget_infeasible_total 1"), "{m}");
+    assert!(m.contains("ipr_latency_budget_requests_total 1"), "{m}");
+    fx.stop();
+}
+
 #[test]
 fn concurrent_clients_batched() {
     let fx = ServerFixture::start();
