@@ -23,6 +23,17 @@ pub struct Metrics {
     pub hedge_requests: AtomicU64,
     /// Total hedged escalations across all requests.
     pub hedge_escalations: AtomicU64,
+    /// Currently-open HTTP connections (gauge; both server backends).
+    pub conns_open: AtomicU64,
+    /// Connections accepted since start (including ones refused with
+    /// `503` at the `max_connections` cap).
+    pub conns_accepted: AtomicU64,
+    /// High-water mark of `conns_open` (what the c10k gate reads).
+    pub conns_max: AtomicU64,
+    /// Epoll-reactor event-loop wakeups (epoll_wait returns, including
+    /// the 500ms safety-net timeouts). An idle server must barely move
+    /// this — the busy-wait regression gate.
+    pub reactor_wakeups: AtomicU64,
     pub tokenize: Mutex<Histogram>,
     pub qe: Mutex<Histogram>,
     pub decide: Mutex<Histogram>,
@@ -42,6 +53,29 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// One connection adopted: bump the gauge and its high-water mark.
+    /// (`conns_accepted` is counted separately at the accept site, so
+    /// `503`-refused connections show up there but never here.)
+    pub fn conn_opened(&self) {
+        let now_open = self.conns_open.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut max = self.conns_max.load(Ordering::Relaxed);
+        while now_open > max {
+            match self.conns_max.compare_exchange_weak(
+                max,
+                now_open,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => max = seen,
+            }
+        }
+    }
+
+    pub fn conn_closed(&self) {
+        self.conns_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
     pub fn record_route(&self, model: &str) {
         let mut m = self.routes.lock().unwrap();
         *m.entry(model.to_string()).or_insert(0) += 1;
@@ -102,6 +136,22 @@ impl Metrics {
         out.push_str(&format!(
             "ipr_hedge_escalations_total {}\n",
             self.hedge_escalations.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_connections_open {}\n",
+            self.conns_open.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_connections_accepted_total {}\n",
+            self.conns_accepted.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_connections_max {}\n",
+            self.conns_max.load(Ordering::Relaxed)
+        ));
+        out.push_str(&format!(
+            "ipr_reactor_wakeups_total {}\n",
+            self.reactor_wakeups.load(Ordering::Relaxed)
         ));
         for (name, h) in [
             ("tokenize", &self.tokenize),
@@ -248,6 +298,21 @@ mod tests {
         assert!(text.contains("ipr_latency_budget_infeasible_total 0"), "{text}");
         assert!(text.contains("ipr_hedge_requests_total 1"), "{text}");
         assert!(text.contains("ipr_hedge_escalations_total 2"), "{text}");
+    }
+
+    #[test]
+    fn connection_gauges_track_open_and_peak() {
+        let m = Metrics::default();
+        m.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        m.conn_opened();
+        m.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        m.conn_opened();
+        m.conn_closed();
+        let text = m.render();
+        assert!(text.contains("ipr_connections_open 1"), "{text}");
+        assert!(text.contains("ipr_connections_accepted_total 2"), "{text}");
+        assert!(text.contains("ipr_connections_max 2"), "{text}");
+        assert!(text.contains("ipr_reactor_wakeups_total 0"), "{text}");
     }
 
     #[test]

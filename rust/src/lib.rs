@@ -42,16 +42,23 @@
 //!   `/admin/v1/*` surface behind `ipr admin`.
 //! * [`backends`] — simulated candidate LLM endpoints (latency, output
 //!   length, realized quality, Eq. 11 cost metering).
-//! * [`server`] — minimal HTTP/1.1 front end (`/v1/route`, `/v1/invoke`,
-//!   `/metrics`).
+//! * [`server`] — HTTP/1.1 front end (`/v1/route`, `/v1/invoke`,
+//!   `/metrics`, `/admin/v1/*`): on Linux an epoll-driven reactor with a
+//!   zero-copy request path (DESIGN.md §16), elsewhere a blocking
+//!   thread-per-connection fallback.
 //! * [`eval`] — metrics (MAE, Top-K, Bounded-ARQGC, CSR), baselines and
 //!   the per-table/figure reproduction harness.
 //! * [`workload`] — deterministic workload simulation: seeded arrival
 //!   processes, hot-key skew, heavy-tail lengths, mixed-τ tenant
-//!   populations, plus the `ipr loadgen` closed/open-loop driver.
+//!   populations, plus the `ipr loadgen` closed/open-loop driver (and
+//!   the Linux-only c10k connection-scale scenario).
 //! * [`testkit`] — shared in-process fixtures (server builder, workload
 //!   presets, golden loaders, snapshot assertions) for tests and benches.
 
+// Docs are an operator surface here (OPERATIONS.md, DESIGN.md and the
+// rustdoc all cross-reference): a link that silently rots would point an
+// operator at nothing, so broken intra-doc links are a build error.
+#![deny(rustdoc::broken_intra_doc_links)]
 // The numeric kernels and parity ports are written with explicit index
 // loops on purpose (loop order IS the f32 accumulation contract — see
 // runtime::reference); these style lints would push toward iterator

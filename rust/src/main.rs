@@ -39,8 +39,8 @@ use ipr::util::error::{Context, Result};
 use ipr::util::json::Json;
 use ipr::workload;
 use ipr::workload::loadgen::{
-    check_workloads_regression, run_scenario, run_scenario_churn, run_scenario_sla,
-    workloads_json, LoadgenOptions,
+    check_workloads_regression, run_scenario, run_scenario_c10k, run_scenario_churn,
+    run_scenario_sla, workloads_json, LoadgenOptions,
 };
 use ipr::{anyhow, bail};
 
@@ -63,6 +63,8 @@ USAGE:
               [--no-score-cache] [--shadow-min-samples 32]
               [--shadow-max-mae 0.15] [--hedge]
               [--latency-ewma-alpha 0.2]
+              [--backend auto|epoll|blocking] [--reactor-threads 4]
+              [--max-connections 16384]
   ipr route   --prompt \"...\" [--tau 0.3] [--family claude] [--invoke]
   ipr eval    --table {1..12|D|fig3|fig45|all} [--limit N] [--artifacts DIR]
   ipr bench   [--artifacts DIR] [--out-dir .] [--smoke] [--batch-sizes 1,8,64]
@@ -70,9 +72,10 @@ USAGE:
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
   ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|fleet_churn|
-               latency_sla|all]
+               latency_sla|c10k|all]
               [--seed 7] [--requests N] [--clients N] [--smoke] [--hedge]
-              [--time-scale 0] [--out BENCH_workloads.json] [--artifacts DIR]
+              [--time-scale 0] [--reactor-threads 4]
+              [--out BENCH_workloads.json] [--artifacts DIR]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
   ipr admin   fleet              [--addr 127.0.0.1:8080]
@@ -167,9 +170,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_micros(args.usize_or("max-wait-us", 500)? as u64),
         batch_workers: args.usize_or("batch-workers", 2)?,
         drain: std::time::Duration::from_millis(args.usize_or("drain-ms", 5000)? as u64),
+        backend: ipr::server::Backend::parse(args.get_or("backend", "auto"))?,
+        reactor_threads: args.usize_or("reactor-threads", 4)?,
+        max_connections: args.usize_or("max-connections", 16_384)?,
     };
     let server = Server::start_with(router, bind, cfg)?;
-    println!("ipr serving on http://{}  (Ctrl-C to stop)", server.addr);
+    println!(
+        "ipr serving on http://{}  (backend: {:?}, Ctrl-C to stop)",
+        server.addr,
+        server.backend()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -225,12 +235,30 @@ fn cmd_bench(args: &Args) -> Result<()> {
     println!("wrote {path}");
 
     if let Some(bp) = args.get("write-baseline") {
-        let doc = Json::obj(vec![
-            ("schema", Json::str("ipr-bench-baseline/v2")),
-            ("routing_p50_us", Json::Num(p50)),
-            ("encode_ns_per_row", Json::Num(kernels.req("encode_ns_per_row")?.as_f64()?)),
-            ("min_cache_hit_speedup", Json::Num(10.0)),
-        ]);
+        // Merge into the existing baseline: loadgen owns the workload and
+        // c10k fields; clobbering them here would disarm those CI gates.
+        let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(bp) {
+            Ok(text) => ipr::util::json::parse(&text)?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        pairs.retain(|(k, _)| {
+            k != "schema"
+                && k != "routing_p50_us"
+                && k != "encode_ns_per_row"
+                && k != "min_cache_hit_speedup"
+        });
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v5")));
+        pairs.push(("routing_p50_us".to_string(), Json::Num(p50)));
+        pairs.push((
+            "encode_ns_per_row".to_string(),
+            Json::Num(kernels.req("encode_ns_per_row")?.as_f64()?),
+        ));
+        pairs.push(("min_cache_hit_speedup".to_string(), Json::Num(10.0)));
+        let doc = Json::Obj(pairs.into_iter().collect());
         std::fs::write(bp, doc.to_string()).with_context(|| format!("writing {bp}"))?;
         println!("wrote baseline {bp}");
     }
@@ -252,8 +280,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let smoke = args.flag("smoke");
     let seed = args.usize_or("seed", 7)? as u64;
-    let requests = args.usize_or("requests", if smoke { 120 } else { 600 })?;
     let which = args.get_or("scenario", "all").to_string();
+    // c10k measures connection scale, so its stream default is sized for
+    // a meaningful p99 rather than the quick per-scenario smoke default.
+    let default_requests = if which == workload::C10K {
+        if smoke { 2_000 } else { 10_000 }
+    } else if smoke {
+        120
+    } else {
+        600
+    };
+    let requests = args.usize_or("requests", default_requests)?;
     let out = args.get_or("out", "BENCH_workloads.json").to_string();
     let opts = LoadgenOptions {
         artifacts: artifacts_dir(args),
@@ -261,6 +298,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         clients: args.usize_or("clients", 0)?,
         time_scale: args.f64_or("time-scale", 0.0)?,
         hedge: args.flag("hedge"),
+        reactor_threads: args.usize_or("reactor-threads", 4)?,
     };
     let scenarios = if which == "all" {
         let mut all = workload::presets(requests);
@@ -288,10 +326,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     } else {
         vec![workload::preset(&which, requests).ok_or_else(|| {
             anyhow!(
-                "unknown scenario '{which}' (have: {}, {}, {} or 'all')",
+                "unknown scenario '{which}' (have: {}, {}, {}, {} or 'all'; c10k never \
+                 rides along with 'all' — it holds 10k connections and must be asked for)",
                 workload::PRESET_NAMES.join(", "),
                 workload::FLEET_CHURN,
-                workload::LATENCY_SLA
+                workload::LATENCY_SLA,
+                workload::C10K
             )
         })?]
     };
@@ -330,6 +370,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             }
             let sla_opts = LoadgenOptions { hedge: true, ..opts.clone() };
             run_scenario_sla(&sla_opts, sc, &workload::latency_plan(sc.requests))?
+        } else if sc.name == workload::C10K {
+            if sc.requests < workload::C10K_MIN_REQUESTS {
+                bail!(
+                    "c10k needs --requests >= {} (the routed-p99 gate needs real tail \
+                     mass), got {}",
+                    workload::C10K_MIN_REQUESTS,
+                    sc.requests
+                );
+            }
+            run_scenario_c10k(&opts, sc)?
         } else {
             run_scenario(&opts, sc)?
         };
@@ -364,47 +414,63 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     println!("wrote {out}");
 
     if let Some(bp) = args.get("write-baseline") {
-        // The stored ceiling gates EVERY scenario, so it must be measured
-        // from a full run — a partial run (e.g. uniform only) would
-        // record an unrepresentatively low p95 and fail the next full CI
-        // run spuriously.
-        if which != "all" {
+        // The stored p95 ceiling gates every ordinary scenario, so it
+        // must be measured from a full run — a partial run (e.g. uniform
+        // only) would record an unrepresentatively low p95 and fail the
+        // next full CI run spuriously. The c10k fields are owned by a
+        // c10k-only run instead (c10k never rides along with 'all').
+        if which != "all" && which != workload::C10K {
             bail!(
                 "--write-baseline requires a full run: the p95 ceiling gates every \
-                 scenario, but only '{which}' ran (drop --scenario or use 'all')"
+                 scenario, but only '{which}' ran (drop --scenario, or use --scenario \
+                 c10k to refresh just the c10k fields)"
             );
         }
         // Merge into the existing baseline (the bench subcommand owns the
-        // routing/kernel fields) rather than clobbering it.
-        let worst_p95 = reports.iter().map(|r| r.p95_us).fold(0.0f64, f64::max);
-        // The violation-rate ceiling keeps a 5% floor: a clean run would
-        // otherwise record 0.0 and make ANY future violation a hard CI
-        // failure, defeating the ratio-based gate.
-        let sla_rate = reports
-            .iter()
-            .filter(|r| r.budgeted > 0)
-            .map(|r| r.budget_violations as f64 / r.budgeted as f64)
-            .fold(0.05f64, f64::max);
+        // routing/kernel fields, a c10k run owns the c10k fields, a full
+        // run owns the rest) rather than clobbering it.
         let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(bp) {
             Ok(text) => ipr::util::json::parse(&text)?
                 .as_obj()?
                 .iter()
                 .map(|(k, v)| (k.clone(), v.clone()))
                 .collect(),
-            Err(_) => vec![("schema".to_string(), Json::str("ipr-bench-baseline/v4"))],
+            Err(_) => Vec::new(),
         };
-        pairs.retain(|(k, _)| {
-            k != "loadgen_routed_p95_us" && k != "latency_sla_violation_rate" && k != "schema"
-        });
-        pairs.push(("schema".to_string(), Json::str("ipr-bench-baseline/v4")));
-        pairs.push(("loadgen_routed_p95_us".to_string(), Json::Num(worst_p95)));
-        pairs.push(("latency_sla_violation_rate".to_string(), Json::Num(sla_rate)));
+        pairs.retain(|(k, _)| k != "schema");
+        if which == workload::C10K {
+            let p99 = reports.iter().map(|r| r.p99_us).fold(0.0f64, f64::max);
+            pairs.retain(|(k, _)| k != "c10k_routed_p99_us" && k != "c10k_min_connections");
+            pairs.push(("c10k_routed_p99_us".to_string(), Json::Num(p99)));
+            pairs.push((
+                "c10k_min_connections".to_string(),
+                Json::Num(workload::C10K_CONNECTIONS as f64),
+            ));
+            println!("refreshing baseline {bp} (c10k_routed_p99_us {p99:.1})");
+        } else {
+            let worst_p95 = reports.iter().map(|r| r.p95_us).fold(0.0f64, f64::max);
+            // The violation-rate ceiling keeps a 5% floor: a clean run
+            // would otherwise record 0.0 and make ANY future violation a
+            // hard CI failure, defeating the ratio-based gate.
+            let sla_rate = reports
+                .iter()
+                .filter(|r| r.budgeted > 0)
+                .map(|r| r.budget_violations as f64 / r.budgeted as f64)
+                .fold(0.05f64, f64::max);
+            pairs.retain(|(k, _)| {
+                k != "loadgen_routed_p95_us" && k != "latency_sla_violation_rate"
+            });
+            pairs.push(("loadgen_routed_p95_us".to_string(), Json::Num(worst_p95)));
+            pairs.push(("latency_sla_violation_rate".to_string(), Json::Num(sla_rate)));
+            println!(
+                "refreshing baseline {bp} (loadgen_routed_p95_us {worst_p95:.1}, \
+                 latency_sla_violation_rate {sla_rate:.3})"
+            );
+        }
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v5")));
         let base_doc = Json::Obj(pairs.into_iter().collect());
         std::fs::write(bp, base_doc.to_string()).with_context(|| format!("writing {bp}"))?;
-        println!(
-            "wrote baseline {bp} (loadgen_routed_p95_us {worst_p95:.1}, \
-             latency_sla_violation_rate {sla_rate:.3})"
-        );
+        println!("wrote baseline {bp}");
     }
     if let Some(b) = args.get("baseline") {
         let ratio = args.f64_or("max-regress", 1.25)?;

@@ -25,16 +25,34 @@
 //! Unknown routes and unsupported methods get JSON error bodies (404 /
 //! 405), like every other error on this surface.
 //!
-//! Request path (DESIGN.md §11–§12): connection threads parse + tokenize
-//! (into a per-connection reusable buffer), consult the sharded routing-
-//! score cache — hits are routed inline and never enter the batcher —
-//! then submit misses to the server-side [`MicroBatcher`] — a queue that
-//! coalesces concurrent requests (≤ `max_batch` or `max_wait`, whichever
-//! first) into single [`Router::handle_batch`] calls executed by
-//! dedicated drain workers on the in-repo thread pool. Teardown is
+//! Request path (DESIGN.md §11–§12, §16): requests are parsed and
+//! tokenized into a per-connection reusable buffer, the sharded routing-
+//! score cache is consulted — hits are routed inline and never enter the
+//! batcher — and misses go to the server-side [`MicroBatcher`] — a queue
+//! that coalesces concurrent requests (≤ `max_batch` or `max_wait`,
+//! whichever first) into single [`Router::handle_batch`] calls executed
+//! by dedicated drain workers on the in-repo thread pool. Teardown is
 //! bounded: `stop()` waits a drain deadline for in-flight requests, then
 //! force-closes idle connections and detaches stragglers instead of
 //! hanging forever on a parked keep-alive reader.
+//!
+//! Connection layer (DESIGN.md §16): two interchangeable backends behind
+//! one [`Server`] facade, selected by [`ServerConfig::backend`].
+//!
+//! * **Epoll reactor** (Linux, the default there): `reactor_threads`
+//!   nonblocking event loops, each owning an epoll instance and a set of
+//!   connections driven through a per-connection state machine
+//!   (ReadHeaders → ReadBody → Route → Write → KeepAlive). Idle
+//!   keep-alive connections cost a registered fd and nothing else — no
+//!   parked thread, no steady-state allocation — which is what lets one
+//!   process hold 10k+ open connections (`ipr loadgen --scenario c10k`).
+//!   Cache hits and admin/metrics routes are served inline on the
+//!   reactor; cache misses park the *connection* (not a thread) in the
+//!   batcher and completions come back via an eventfd doorbell.
+//! * **Blocking fallback** (non-Linux, or `--backend blocking`): the
+//!   PR-1 thread-per-connection path — one pool thread parks per live
+//!   connection. The accept loop blocks in `accept()` (no poll/sleep
+//!   busy-wait); `stop()` wakes it with a loopback connect.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -53,17 +71,48 @@ use crate::util::json::{parse, Json};
 use crate::util::threadpool::ThreadPool;
 use crate::{anyhow, bail};
 
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
+
 /// Request bodies past this size are rejected with `413 Payload Too
 /// Large` *before* the body buffer is allocated — a hostile
 /// Content-Length header must not drive an allocation.
 pub const MAX_BODY_BYTES: usize = 1 << 20;
 
+/// Request heads (request line + headers) past this size are rejected
+/// with `431` — the reactor buffers the head, so it must be bounded.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Which connection layer a [`Server`] runs (DESIGN.md §16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Epoll reactor on Linux, blocking fallback elsewhere.
+    Auto,
+    /// Force the epoll reactor; `start` errors off-Linux.
+    Epoll,
+    /// Force the PR-1 thread-per-connection path (any OS).
+    Blocking,
+}
+
+impl Backend {
+    /// Parse a `--backend` CLI value.
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "epoll" => Ok(Backend::Epoll),
+            "blocking" => Ok(Backend::Blocking),
+            other => Err(anyhow!("unknown backend '{other}' (auto|epoll|blocking)")),
+        }
+    }
+}
+
 /// Server tuning knobs; `Server::start` uses the defaults with the
 /// micro-batch size mirroring the router's QE batcher.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Connection-handler threads (parse/serialize; they park cheaply on
-    /// the micro-batcher while drain workers own the QE forwards).
+    /// Blocking backend only: connection-handler threads (parse/serialize;
+    /// they park cheaply on the micro-batcher while drain workers own the
+    /// QE forwards). The reactor backend ignores this.
     pub workers: usize,
     /// Micro-batch coalescing cap. 0 = mirror the router's
     /// `BatcherConfig::max_batch` (one knob tunes both layers).
@@ -75,6 +124,15 @@ pub struct ServerConfig {
     /// `stop()` deadline: how long to wait for in-flight requests before
     /// force-closing connections and detaching worker threads.
     pub drain: Duration,
+    /// Reactor backend only: number of epoll event loops. Each owns its
+    /// connections outright, so there is no cross-reactor locking on the
+    /// request path.
+    pub reactor_threads: usize,
+    /// Open-connection cap (both backends): accepts past this are
+    /// answered `503` and closed immediately, bounding fd usage.
+    pub max_connections: usize,
+    /// Connection-layer selection (see [`Backend`]).
+    pub backend: Backend,
 }
 
 impl Default for ServerConfig {
@@ -85,6 +143,9 @@ impl Default for ServerConfig {
             max_wait: Duration::from_micros(500),
             batch_workers: 2,
             drain: Duration::from_secs(5),
+            reactor_threads: 4,
+            max_connections: 16_384,
+            backend: Backend::Auto,
         }
     }
 }
@@ -105,9 +166,15 @@ pub struct MicroBatcher {
     pub batch_sizes: Mutex<Vec<usize>>,
 }
 
+/// Completion callback for one submitted request. The blocking backend
+/// wraps an `mpsc::Sender` (the connection thread parks on the paired
+/// receiver); the reactor pushes onto the owning event loop's completion
+/// queue and rings its eventfd — the connection parks, not a thread.
+pub(crate) type Reply = Box<dyn FnOnce(Result<RouteOutcome>) + Send + 'static>;
+
 struct PendingRoute {
     item: BatchItem,
-    tx: mpsc::Sender<Result<RouteOutcome>>,
+    reply: Reply,
 }
 
 impl MicroBatcher {
@@ -138,25 +205,36 @@ impl MicroBatcher {
 
     fn submit(&self, item: BatchItem) -> mpsc::Receiver<Result<RouteOutcome>> {
         let (tx, rx) = mpsc::channel();
+        self.submit_with(
+            item,
+            Box::new(move |res| {
+                let _ = tx.send(res);
+            }),
+        );
+        rx
+    }
+
+    /// Submit with an arbitrary completion callback (the reactor's entry
+    /// point — no channel, no parked thread).
+    fn submit_with(&self, item: BatchItem, reply: Reply) {
         if self.shutdown.load(Ordering::SeqCst) {
-            let _ = tx.send(Err(anyhow!("server is stopping")));
-            return rx;
+            reply(Err(anyhow!("server is stopping")));
+            return;
         }
         {
             let mut q = self.q.lock().unwrap();
-            q.push_back(PendingRoute { item, tx });
+            q.push_back(PendingRoute { item, reply });
         }
         self.cv.notify_one();
         // Close the race with shutdown: if the stop signal landed between
         // the check above and the push, the drain workers may already be
         // gone — fail whatever is still queued (including our own entry)
-        // instead of leaving a receiver parked forever.
+        // instead of leaving a completion parked forever.
         if self.shutdown.load(Ordering::SeqCst) {
             for p in self.q.lock().unwrap().drain(..) {
-                let _ = p.tx.send(Err(anyhow!("server is stopping")));
+                (p.reply)(Err(anyhow!("server is stopping")));
             }
         }
-        rx
     }
 
     /// Phase 1: block for the first request. Phase 2: take what's queued.
@@ -213,17 +291,18 @@ impl MicroBatcher {
             }
             prev = batch.len();
             crate::util::push_bounded(&mut self.batch_sizes.lock().unwrap(), batch.len());
-            let (items, txs): (Vec<BatchItem>, Vec<mpsc::Sender<Result<RouteOutcome>>>) =
-                batch.into_iter().map(|p| (p.item, p.tx)).unzip();
+            let (items, replies): (Vec<BatchItem>, Vec<Reply>) =
+                batch.into_iter().map(|p| (p.item, p.reply)).unzip();
             match router.handle_batch(&items) {
                 Ok(outs) => {
-                    for (tx, o) in txs.iter().zip(outs) {
-                        let _ = tx.send(Ok(o));
+                    for (reply, o) in replies.into_iter().zip(outs) {
+                        reply(Ok(o));
                     }
                 }
                 Err(e) => {
-                    for tx in &txs {
-                        let _ = tx.send(Err(anyhow!("batched route failed: {e}")));
+                    let msg = format!("batched route failed: {e}");
+                    for reply in replies {
+                        reply(Err(anyhow!("{msg}")));
                     }
                 }
             }
@@ -236,26 +315,56 @@ impl MicroBatcher {
     }
 }
 
-/// Shared state the accept loop hands to every connection handler.
+/// State shared by both backends and every connection handler.
 struct ServerShared {
     router: Arc<Router>,
     batcher: Arc<MicroBatcher>,
     stop: Arc<AtomicBool>,
     /// Requests currently between full parse and response write.
     active: AtomicUsize,
-    /// Open connections by id, force-closable at `stop()` to unblock
-    /// parked keep-alive readers.
+    /// Blocking backend: open connections by id, force-closable at
+    /// `stop()` to unblock parked keep-alive readers. (The reactor owns
+    /// its connections per event loop and never uses this map.)
     conns: Mutex<HashMap<u64, TcpStream>>,
     next_conn: AtomicU64,
+    /// Blocking backend: accept-loop iterations. An idle listener must
+    /// not spin — see `Server::wakeups` and the idle-CPU regression test.
+    accept_wakeups: AtomicU64,
 }
 
+/// The HTTP front end: an epoll reactor on Linux, the blocking
+/// thread-per-connection path elsewhere (or on request) — same routes,
+/// same drain semantics, selected by [`ServerConfig::backend`].
 pub struct Server {
     pub addr: String,
-    stop: Arc<AtomicBool>,
+    inner: Inner,
+}
+
+enum Inner {
+    Blocking(BlockingServer),
+    #[cfg(target_os = "linux")]
+    Reactor(reactor::ReactorServer),
+}
+
+/// The retained thread-per-connection backend (non-Linux, and
+/// `--backend blocking` everywhere — the e2e suite runs both).
+struct BlockingServer {
+    addr: String,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     shared: Arc<ServerShared>,
     pool: Arc<ThreadPool>,
     drain: Duration,
+}
+
+/// Resolve `Auto` to the platform default; reject `Epoll` off-Linux.
+fn resolve_backend(b: Backend) -> Result<Backend> {
+    match b {
+        Backend::Blocking => Ok(Backend::Blocking),
+        Backend::Auto if cfg!(target_os = "linux") => Ok(Backend::Epoll),
+        Backend::Auto => Ok(Backend::Blocking),
+        Backend::Epoll if cfg!(target_os = "linux") => Ok(Backend::Epoll),
+        Backend::Epoll => Err(anyhow!("the epoll backend is Linux-only (use backend=blocking)")),
+    }
 }
 
 impl Server {
@@ -270,32 +379,134 @@ impl Server {
     pub fn start_with(router: Arc<Router>, bind: &str, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?.to_string();
-        let stop = Arc::new(AtomicBool::new(false));
         let max_batch =
             if cfg.max_batch == 0 { router.cfg.batcher.max_batch } else { cfg.max_batch };
         let batcher = MicroBatcher::start(router.clone(), max_batch, cfg.max_wait, cfg.batch_workers);
         let shared = Arc::new(ServerShared {
             router,
             batcher,
-            stop: stop.clone(),
+            stop: Arc::new(AtomicBool::new(false)),
             active: AtomicUsize::new(0),
             conns: Mutex::new(HashMap::new()),
             next_conn: AtomicU64::new(0),
+            accept_wakeups: AtomicU64::new(0),
         });
+        match resolve_backend(cfg.backend)? {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll => {
+                let r = reactor::ReactorServer::start(listener, shared, &cfg)?;
+                Ok(Server { addr, inner: Inner::Reactor(r) })
+            }
+            _ => {
+                let b = BlockingServer::start(listener, addr.clone(), shared, &cfg)?;
+                Ok(Server { addr, inner: Inner::Blocking(b) })
+            }
+        }
+    }
+
+    fn shared(&self) -> &Arc<ServerShared> {
+        match &self.inner {
+            Inner::Blocking(b) => &b.shared,
+            #[cfg(target_os = "linux")]
+            Inner::Reactor(r) => r.shared(),
+        }
+    }
+
+    /// Realized micro-batch sizes so far (observability/tests).
+    pub fn micro_batch_sizes(&self) -> Vec<usize> {
+        self.shared().batcher.batch_sizes.lock().unwrap().clone()
+    }
+
+    /// Event-loop wakeups so far: epoll returns on the reactor backend,
+    /// accept-loop iterations on the blocking one. An *idle* server must
+    /// keep this near zero — the regression gate for the PR-1 accept
+    /// busy-wait (2ms sleep per poll ≈ 500 wakeups/s doing nothing).
+    pub fn wakeups(&self) -> u64 {
+        match &self.inner {
+            Inner::Blocking(b) => b.shared.accept_wakeups.load(Ordering::Relaxed),
+            #[cfg(target_os = "linux")]
+            Inner::Reactor(_) => {
+                self.shared().router.metrics.reactor_wakeups.load(Ordering::Relaxed)
+            }
+        }
+    }
+
+    /// Which backend this server actually runs (after `Auto` resolution).
+    pub fn backend(&self) -> Backend {
+        match &self.inner {
+            Inner::Blocking(_) => Backend::Blocking,
+            #[cfg(target_os = "linux")]
+            Inner::Reactor(_) => Backend::Epoll,
+        }
+    }
+
+    /// Graceful stop with a drain deadline: stop accepting, wait for
+    /// in-flight requests to finish, serve whatever the micro-batcher has
+    /// queued, then close idle keep-alive connections and join the
+    /// workers. Stragglers past the deadline are detached rather than
+    /// hanging the caller.
+    pub fn stop(mut self) {
+        match &mut self.inner {
+            Inner::Blocking(b) => b.stop_graceful(),
+            #[cfg(target_os = "linux")]
+            Inner::Reactor(r) => r.stop_graceful(),
+        }
+    }
+}
+
+/// Connect-and-drop to our own listener: wakes a thread blocked in
+/// `accept()` so it can observe the stop flag (no polling loop needed).
+fn wake_accept(addr: &str) {
+    if let Ok(s) = TcpStream::connect(addr) {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+/// Answer-and-close for connections over [`ServerConfig::max_connections`]
+/// (both backends).
+fn refuse_over_capacity(mut stream: TcpStream) {
+    let msg = err_json("server at max_connections");
+    let _ = write!(
+        stream,
+        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{msg}",
+        msg.len(),
+    );
+    let _ = stream.flush();
+}
+
+impl BlockingServer {
+    fn start(
+        listener: TcpListener,
+        addr: String,
+        shared: Arc<ServerShared>,
+        cfg: &ServerConfig,
+    ) -> Result<BlockingServer> {
         let pool = Arc::new(ThreadPool::new(cfg.workers));
+        let max_conns = cfg.max_connections;
         let accept_thread = {
-            let stop = stop.clone();
             let shared = shared.clone();
             let pool = pool.clone();
             std::thread::Builder::new().name("ipr-accept".into()).spawn(move || {
-                // Nonblocking + poll so the stop flag is honored promptly.
-                listener.set_nonblocking(true).expect("nonblocking");
+                // Blocking accept: zero CPU while idle. `stop()` (and
+                // Drop) wake it with a loopback connect, which lands here
+                // as a normal accept that observes the stop flag.
                 loop {
-                    if stop.load(Ordering::SeqCst) {
+                    shared.accept_wakeups.fetch_add(1, Ordering::Relaxed);
+                    if shared.stop.load(Ordering::SeqCst) {
                         break;
                     }
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            let metrics = &shared.router.metrics;
+                            metrics.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                            if shared.stop.load(Ordering::SeqCst) {
+                                break; // the wake-up connect itself
+                            }
+                            if shared.conns.lock().unwrap().len() >= max_conns {
+                                refuse_over_capacity(stream);
+                                continue;
+                            }
+                            metrics.conn_opened();
                             let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
                             if let Ok(dup) = stream.try_clone() {
                                 shared.conns.lock().unwrap().insert(id, dup);
@@ -304,33 +515,21 @@ impl Server {
                             pool.execute(move || {
                                 let _ = handle_conn(stream, &sh);
                                 sh.conns.lock().unwrap().remove(&id);
+                                sh.router.metrics.conn_closed();
                             });
                         }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                         Err(_) => break,
                     }
                 }
             })?
         };
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread), shared, pool, drain: cfg.drain })
+        Ok(BlockingServer { addr, accept_thread: Some(accept_thread), shared, pool, drain: cfg.drain })
     }
 
-    /// Realized micro-batch sizes so far (observability/tests).
-    pub fn micro_batch_sizes(&self) -> Vec<usize> {
-        self.shared.batcher.batch_sizes.lock().unwrap().clone()
-    }
-
-    /// Graceful stop with a drain deadline: stop accepting, wait for
-    /// in-flight requests to finish, serve whatever the micro-batcher has
-    /// queued, then unblock parked keep-alive readers by shutting their
-    /// sockets and join the workers. Stragglers past the deadline are
-    /// detached rather than hanging the caller (the old teardown joined
-    /// the pool unconditionally and an idle keep-alive connection could
-    /// block it forever — the `server_e2e` flake).
-    pub fn stop(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+    fn stop_graceful(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        wake_accept(&self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -351,16 +550,22 @@ impl Server {
         if let Some(p) = self.shared.batcher.pool.lock().unwrap().take() {
             p.join_deadline(Duration::from_millis(500));
         }
-        // Anything still queued was never picked up: fail it loudly.
-        for p in self.shared.batcher.q.lock().unwrap().drain(..) {
-            let _ = p.tx.send(Err(anyhow!("server stopped before this request was routed")));
-        }
+        fail_leftover_queue(&self.shared);
     }
 }
 
-impl Drop for Server {
+/// Anything still queued in the batcher was never picked up: fail it
+/// loudly (shared by both backends' stop and Drop paths; idempotent).
+fn fail_leftover_queue(shared: &ServerShared) {
+    for p in shared.batcher.q.lock().unwrap().drain(..) {
+        (p.reply)(Err(anyhow!("server stopped before this request was routed")));
+    }
+}
+
+impl Drop for BlockingServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.shared.stop.store(true, Ordering::SeqCst);
+        wake_accept(&self.addr);
         self.shared.batcher.signal_stop();
         // Unblock parked readers so the pool's own teardown is bounded
         // even when the server is dropped without a graceful stop().
@@ -369,9 +574,7 @@ impl Drop for Server {
         }
         // Mirror stop()'s final sweep: a request enqueued while the drain
         // workers were exiting must get an error, not a parked receiver.
-        for p in self.shared.batcher.q.lock().unwrap().drain(..) {
-            let _ = p.tx.send(Err(anyhow!("server stopped before this request was routed")));
-        }
+        fail_leftover_queue(&self.shared);
     }
 }
 
@@ -465,6 +668,31 @@ fn err_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
 
+/// Serialize a response head into a byte buffer (shared with the
+/// reactor, which writes from a retained per-connection `Vec<u8>`).
+pub(crate) fn finish_http_head(
+    out: &mut Vec<u8>,
+    status: &str,
+    ctype: &str,
+    body_len: usize,
+    keep_alive: bool,
+) {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {body_len}\r\nConnection: {}\r\n\r\n",
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    out.extend_from_slice(head.as_bytes());
+}
+
+/// True for the two endpoints that go through the routing pipeline
+/// (everything else is served inline by [`dispatch_control`]).
+pub(crate) fn is_route_path(method: &str, path: &str) -> bool {
+    method == "POST" && (path == "/v1/route" || path == "/v1/invoke")
+}
+
+/// Blocking-backend dispatch: control plane inline, route path through
+/// a parked `submit().recv()`. The reactor composes the same pieces but
+/// parks the connection instead (see `reactor`).
 fn dispatch(
     sh: &ServerShared,
     method: &str,
@@ -472,25 +700,66 @@ fn dispatch(
     body: &str,
     tok_buf: &mut Vec<u32>,
 ) -> (&'static str, &'static str, String) {
-    let router = &*sh.router;
+    if is_route_path(method, path) {
+        let force_invoke = path == "/v1/invoke";
+        return match route_stage(&sh.router, body, force_invoke, tok_buf) {
+            RouteStage::Done(res) => route_http(res),
+            RouteStage::Miss(item) => {
+                let res = sh
+                    .batcher
+                    .submit(item)
+                    .recv()
+                    .map_err(|_| anyhow!("micro-batcher dropped request"))
+                    .and_then(|r| r)
+                    .map(|out| outcome_json(&out));
+                route_http(res)
+            }
+        };
+    }
+    dispatch_control(&sh.router, method, path, body)
+        .expect("dispatch_control handles every non-route request")
+}
+
+/// Map a routing result to its HTTP response. An unsatisfiable latency
+/// budget is a well-formed request the fleet cannot serve: 422, distinct
+/// from caller-error 400s (the client can retry with a looser budget).
+pub(crate) fn route_http(res: Result<String>) -> (&'static str, &'static str, String) {
+    match res {
+        Ok(j) => ("200 OK", "application/json", j),
+        Err(e) if format!("{e:#}").contains(INFEASIBLE_BUDGET_MARKER) => {
+            ("422 Unprocessable Entity", "application/json", err_json(&e.to_string()))
+        }
+        Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
+    }
+}
+
+/// Serve every endpoint *except* the route path inline (health, metrics,
+/// registry, the admin surface, 404/405). Returns `None` exactly when
+/// [`is_route_path`] — the caller owns that flow (it may need to park).
+/// These are all µs-scale, so the reactor runs them on the event loop.
+pub(crate) fn dispatch_control(
+    router: &Router,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Option<(&'static str, &'static str, String)> {
+    if is_route_path(method, path) {
+        return None;
+    }
+    Some(dispatch_control_inner(router, method, path, body))
+}
+
+fn dispatch_control_inner(
+    router: &Router,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (&'static str, &'static str, String) {
     match (method, path) {
         ("GET", "/health") => ("200 OK", "text/plain", "ok\n".into()),
         ("GET", "/metrics") => ("200 OK", "text/plain", router.metrics.render()),
         ("GET", "/v1/registry") => ("200 OK", "application/json", registry_json(router)),
         ("GET", "/admin/v1/fleet") => ("200 OK", "application/json", fleet_json(router)),
-        ("POST", "/v1/route") | ("POST", "/v1/invoke") => {
-            let force_invoke = path == "/v1/invoke";
-            match handle_route(sh, body, force_invoke, tok_buf) {
-                Ok(j) => ("200 OK", "application/json", j),
-                // An unsatisfiable latency budget is a well-formed request
-                // the fleet cannot serve: 422, distinct from caller-error
-                // 400s (the client can retry with a looser budget).
-                Err(e) if format!("{e:#}").contains(INFEASIBLE_BUDGET_MARKER) => {
-                    ("422 Unprocessable Entity", "application/json", err_json(&e.to_string()))
-                }
-                Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
-            }
-        }
         ("POST", "/admin/v1/candidates") => match admin_add(router, body) {
             Ok(j) => ("200 OK", "application/json", j),
             Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
@@ -617,15 +886,37 @@ fn admin_retire(router: &Router, name: &str) -> Result<String> {
     Ok(fleet_view_doc(&view, &router.fleet.gate).to_string())
 }
 
+/// Outcome of the synchronous half of the route path: either a finished
+/// response (cache hit routed inline, or a validation error) or a
+/// cache-miss [`BatchItem`] the caller must hand to the micro-batcher.
+pub(crate) enum RouteStage {
+    Done(Result<String>),
+    Miss(BatchItem),
+}
+
 /// Parse → tokenize into the connection's reusable buffer → score-cache
-/// lookup (hits route inline, skipping the batcher entirely) → submit
-/// misses to the micro-batcher → wait for the routed outcome.
-fn handle_route(
-    sh: &ServerShared,
+/// lookup. Hits are routed inline and return `Done` (skipping the
+/// batcher entirely); misses return the prepared `BatchItem`. Shared by
+/// both backends — only *how the caller waits* on a miss differs
+/// (blocking: `submit().recv()`; reactor: park the connection).
+pub(crate) fn route_stage(
+    router: &Router,
     body: &str,
     force_invoke: bool,
     tok_buf: &mut Vec<u32>,
-) -> Result<String> {
+) -> RouteStage {
+    match route_stage_inner(router, body, force_invoke, tok_buf) {
+        Ok(stage) => stage,
+        Err(e) => RouteStage::Done(Err(e)),
+    }
+}
+
+fn route_stage_inner(
+    router: &Router,
+    body: &str,
+    force_invoke: bool,
+    tok_buf: &mut Vec<u32>,
+) -> Result<RouteStage> {
     let t_start = Instant::now();
     let j = parse(body).context("request body must be JSON")?;
     let prompt = j.req("prompt")?.as_str()?.to_string();
@@ -644,7 +935,7 @@ fn handle_route(
         || j.get("invoke").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
     let identity = match (j.get("split"), j.get("index")) {
         (Some(s), Some(i)) => Some(
-            sh.router
+            router
                 .backend
                 .world()
                 .sample_prompt(s.as_i64()? as u64, i.as_i64()? as u64),
@@ -656,14 +947,14 @@ fn handle_route(
     let tokenize_us = t0.elapsed().as_micros() as u64;
 
     // Score-cache fast path: the request's ONE counted lookup. A hit is
-    // routed inline on the connection thread (DO + metering are µs-scale)
-    // — the micro-batcher only ever forwards cache misses, and the hit
-    // path moves no token buffer (zero-alloc repeat traffic).
+    // routed inline (DO + metering are µs-scale) — the micro-batcher
+    // only ever forwards cache misses, and the hit path moves no token
+    // buffer (zero-alloc repeat traffic).
     let t1 = Instant::now();
-    let (key, hit) = sh.router.qe.cache_lookup(tok_buf);
+    let (key, hit) = router.qe.cache_lookup(tok_buf);
     if let Some(scores) = hit {
         let qe_us = t1.elapsed().as_micros() as u64;
-        let out = sh.router.handle_cached_scores(
+        let out = router.handle_cached_scores(
             tok_buf,
             scores,
             tau,
@@ -674,13 +965,13 @@ fn handle_route(
             qe_us,
             t_start,
         )?;
-        return Ok(outcome_json(&out));
+        return Ok(RouteStage::Done(Ok(outcome_json(&out))));
     }
     // Clone (not mem::take) so the connection buffer keeps its capacity:
     // the clone is ONE right-sized allocation — the unavoidable ownership
     // hand-off to the batcher queue — while `tokenize_into` into the
     // retained buffer stays allocation-free on every subsequent request.
-    let item = BatchItem {
+    Ok(RouteStage::Miss(BatchItem {
         tokens: tok_buf.clone(),
         tau,
         latency_budget_ms,
@@ -689,13 +980,7 @@ fn handle_route(
         tokenize_us,
         t_start,
         cache_key: Some(key),
-    };
-    let out = sh
-        .batcher
-        .submit(item)
-        .recv()
-        .map_err(|_| anyhow!("micro-batcher dropped request"))??;
-    Ok(outcome_json(&out))
+    }))
 }
 
 fn outcome_json(out: &RouteOutcome) -> String {

@@ -1,0 +1,728 @@
+//! The epoll-driven connection layer (Linux; DESIGN.md §16).
+//!
+//! `reactor_threads` event loops, each owning one [`Epoll`] instance and
+//! its connections outright — no cross-reactor locking on the request
+//! path. Reactor 0 additionally owns the listener and deals accepted
+//! sockets round-robin to every loop through a per-reactor inbox +
+//! eventfd doorbell.
+//!
+//! Per-connection state machine (one `Conn`, no thread):
+//!
+//! ```text
+//! ReadHeaders ──"\r\n\r\n"──▶ ReadBody ──complete──▶ (route)
+//!      ▲                                             │
+//!      │                              cache hit / control route
+//!      │                                             ├────────────▶ Write
+//!      │                              cache miss     │               │
+//!      │                                             ▼               │
+//!      │                                          Routing ──eventfd─▶│
+//!      └────────────── keep-alive (pipelined bytes kept) ────────────┘
+//! ```
+//!
+//! A cache miss parks the *connection* in the [`MicroBatcher`]: the
+//! reactor MODs its interest down to `EPOLLRDHUP` (peer-gone detection
+//! only) and moves on; the drain worker's completion callback pushes the
+//! serialized outcome onto the owning reactor's completion queue and
+//! rings its eventfd. Idle keep-alive connections are a registered fd
+//! and a parked `Conn` struct — zero threads, zero steady-state
+//! allocations — which is what the `c10k` workload scenario measures.
+//!
+//! [`MicroBatcher`]: super::MicroBatcher
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::epoll::{Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
+use crate::util::error::Result;
+
+use super::{
+    dispatch_control, err_json, fail_leftover_queue, finish_http_head, is_route_path,
+    outcome_json, refuse_over_capacity, route_http, route_stage, RouteStage, ServerConfig,
+    ServerShared, MAX_BODY_BYTES, MAX_HEAD_BYTES,
+};
+
+/// Token for a reactor's own eventfd doorbell.
+const TOK_WAKE: u64 = 0;
+/// Token for the listener (reactor 0 only).
+const TOK_LISTEN: u64 = 1;
+/// First connection token (monotonic per reactor, never reused).
+const FIRST_CONN_TOKEN: u64 = 16;
+/// Read-buffer growth quantum; buffers are retained across keep-alive
+/// requests, so steady-state reads allocate nothing.
+const READ_CHUNK: usize = 16 * 1024;
+/// Safety-net `epoll_wait` timeout: bounds how stale a missed doorbell
+/// could ever make a reactor (normally wakeups are event-driven).
+const WAIT_TIMEOUT_MS: i32 = 500;
+
+/// Cross-thread face of one reactor: everything another thread may
+/// touch. The event loop's own state (epoll set, connection map) lives
+/// on its stack.
+struct Core {
+    wake: EventFd,
+    /// Accepted connections dealt to this reactor by reactor 0.
+    inbox: Mutex<Vec<TcpStream>>,
+    /// `(conn token, serialized outcome)` from micro-batcher drain
+    /// workers, consumed on the next wakeup.
+    completions: Mutex<Vec<(u64, Result<String>)>>,
+}
+
+/// Handle owned by [`super::Server`]: spawns the reactor threads at
+/// `start`, coordinates drain at `stop_graceful`, force-stops on Drop.
+pub(crate) struct ReactorServer {
+    shared: Arc<ServerShared>,
+    cores: Vec<Arc<Core>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    force: Arc<AtomicBool>,
+    drain: Duration,
+}
+
+impl ReactorServer {
+    pub(super) fn start(
+        listener: TcpListener,
+        shared: Arc<ServerShared>,
+        cfg: &ServerConfig,
+    ) -> Result<ReactorServer> {
+        listener.set_nonblocking(true)?;
+        let n = cfg.reactor_threads.max(1);
+        let force = Arc::new(AtomicBool::new(false));
+        let mut cores = Vec::with_capacity(n);
+        for _ in 0..n {
+            cores.push(Arc::new(Core {
+                wake: EventFd::new()?,
+                inbox: Mutex::new(Vec::new()),
+                completions: Mutex::new(Vec::new()),
+            }));
+        }
+        let mut threads = Vec::with_capacity(n);
+        let mut listener = Some(listener);
+        for i in 0..n {
+            let ep = Epoll::new()?;
+            ep.add(cores[i].wake.raw(), EPOLLIN, TOK_WAKE)?;
+            let l = if i == 0 {
+                let l = listener.take().expect("listener consumed once");
+                ep.add(l.as_raw_fd(), EPOLLIN, TOK_LISTEN)?;
+                Some(l)
+            } else {
+                None
+            };
+            let ctx = RunCtx {
+                index: i,
+                ep,
+                cores: cores.clone(),
+                shared: shared.clone(),
+                force: force.clone(),
+                max_conns: cfg.max_connections,
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("ipr-reactor-{i}"))
+                    .spawn(move || run(ctx, l))?,
+            );
+        }
+        Ok(ReactorServer { shared, cores, threads, force, drain: cfg.drain })
+    }
+
+    pub(super) fn shared(&self) -> &Arc<ServerShared> {
+        &self.shared
+    }
+
+    fn notify_all(&self) {
+        for c in &self.cores {
+            c.wake.notify();
+        }
+    }
+
+    /// Mirror of the blocking backend's graceful stop: stop accepting +
+    /// reap idle connections (immediate, via the stop flag), wait the
+    /// drain deadline for in-flight requests, let the micro-batcher
+    /// serve its queue, then force whatever is left.
+    pub(super) fn stop_graceful(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.notify_all();
+        let deadline = Instant::now() + self.drain;
+        while self.shared.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.shared.batcher.signal_stop();
+        self.notify_all();
+        if let Some(p) = self.shared.batcher.pool.lock().unwrap().take() {
+            p.join_deadline(Duration::from_millis(500));
+        }
+        fail_leftover_queue(&self.shared);
+        self.notify_all();
+        // Reactors exit once their last in-flight response is written.
+        let end = deadline.max(Instant::now() + Duration::from_millis(250));
+        let threads = std::mem::take(&mut self.threads);
+        while Instant::now() < end && threads.iter().any(|t| !t.is_finished()) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.force.store(true, Ordering::SeqCst);
+        self.notify_all();
+        for t in threads {
+            // Finished threads are joined; stragglers are detached (the
+            // force flag makes them exit on their next wakeup).
+            if t.is_finished() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+impl Drop for ReactorServer {
+    fn drop(&mut self) {
+        // Non-graceful teardown (server dropped without stop()): force
+        // every loop out on its next wakeup and fail queued requests.
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.force.store(true, Ordering::SeqCst);
+        self.shared.batcher.signal_stop();
+        self.notify_all();
+        for t in std::mem::take(&mut self.threads) {
+            let _ = t.join();
+        }
+        fail_leftover_queue(&self.shared);
+    }
+}
+
+/// Everything one event loop needs, moved onto its thread.
+struct RunCtx {
+    index: usize,
+    ep: Epoll,
+    cores: Vec<Arc<Core>>,
+    shared: Arc<ServerShared>,
+    force: Arc<AtomicBool>,
+    max_conns: usize,
+}
+
+impl RunCtx {
+    fn core(&self) -> &Arc<Core> {
+        &self.cores[self.index]
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.shared.router.metrics
+    }
+}
+
+enum State {
+    ReadHead,
+    ReadBody { head_end: usize, content_len: usize, method: String, path: String },
+    /// Parked in the micro-batcher; interest is `EPOLLRDHUP` only, so a
+    /// pipelining client cannot make the level-triggered loop spin.
+    Routing,
+    Write,
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Read buffer; `[..filled]` is valid. Retained across keep-alive
+    /// requests (as is `tok_buf`), so repeat traffic reads, tokenizes
+    /// and cache-probes without allocating.
+    buf: Vec<u8>,
+    filled: usize,
+    /// Head-terminator scan resume point (no re-scanning on short reads).
+    scanned: usize,
+    state: State,
+    keep_alive: bool,
+    close_after: bool,
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    /// Reused by `tokenize_into` — the zero-copy contract with the
+    /// score-cache probe (DESIGN.md §12).
+    tok_buf: Vec<u32>,
+    /// Holds a slot in `ServerShared::active` (full parse → response
+    /// written); released on teardown if the response never finished.
+    active: bool,
+    interest: u32,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            filled: 0,
+            scanned: 0,
+            state: State::ReadHead,
+            keep_alive: true,
+            close_after: false,
+            write_buf: Vec::new(),
+            write_pos: 0,
+            tok_buf: Vec::new(),
+            active: false,
+            interest: EPOLLIN | EPOLLRDHUP,
+        }
+    }
+}
+
+enum Flow {
+    Keep,
+    Drop,
+}
+
+enum Step {
+    Progressed,
+    NeedMore,
+    Dead,
+}
+
+enum Fill {
+    Got,
+    WouldBlock,
+    Closed,
+}
+
+enum WriteRes {
+    Done,
+    Blocked,
+    Dead,
+}
+
+fn run(ctx: RunCtx, mut listener: Option<TcpListener>) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token: u64 = FIRST_CONN_TOKEN;
+    let mut events = vec![EpollEvent::default(); 256];
+    loop {
+        let n = ctx.ep.wait(&mut events, WAIT_TIMEOUT_MS).unwrap_or(0);
+        ctx.metrics().reactor_wakeups.fetch_add(1, Ordering::Relaxed);
+        if ctx.force.load(Ordering::SeqCst) {
+            for (_, c) in conns.drain() {
+                teardown(&ctx, c);
+            }
+            return;
+        }
+        let stopping = ctx.shared.stop.load(Ordering::SeqCst);
+        if stopping {
+            // Stop accepting: deregister + drop the listener (releases
+            // the port) before touching existing connections.
+            if let Some(l) = listener.take() {
+                ctx.ep.delete(l.as_raw_fd());
+            }
+        }
+        let mut accept_ready = false;
+        for ev in events.iter().take(n) {
+            let tok = ev.data;
+            let evs = ev.events;
+            match tok {
+                TOK_WAKE => ctx.core().wake.drain(),
+                TOK_LISTEN => accept_ready = true,
+                _ => {
+                    let Some(conn) = conns.get_mut(&tok) else { continue };
+                    let dead = if evs & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0 {
+                        true // peer gone (or error): reap, even mid-Routing
+                    } else {
+                        matches!(pump(&ctx, tok, conn), Flow::Drop)
+                    };
+                    if dead {
+                        if let Some(c) = conns.remove(&tok) {
+                            teardown(&ctx, c);
+                        }
+                    }
+                }
+            }
+        }
+        if accept_ready && !stopping {
+            if let Some(l) = &listener {
+                do_accept(&ctx, &mut conns, &mut next_token, l);
+            }
+        }
+        // Adopt connections dealt to this reactor by reactor 0.
+        let newbies: Vec<TcpStream> = std::mem::take(&mut *ctx.core().inbox.lock().unwrap());
+        for s in newbies {
+            if stopping {
+                ctx.metrics().conn_closed();
+                continue;
+            }
+            adopt(&ctx, &mut conns, &mut next_token, s);
+        }
+        // Deliver micro-batcher completions to their parked connections.
+        let comps: Vec<(u64, Result<String>)> =
+            std::mem::take(&mut *ctx.core().completions.lock().unwrap());
+        for (tok, res) in comps {
+            let Some(conn) = conns.get_mut(&tok) else { continue };
+            if !matches!(conn.state, State::Routing) {
+                continue; // stale completion for a token in a new life
+            }
+            let (status, ctype, body) = route_http(res);
+            finish_response(conn, status, ctype, &body);
+            if matches!(pump(&ctx, tok, conn), Flow::Drop) {
+                if let Some(c) = conns.remove(&tok) {
+                    teardown(&ctx, c);
+                }
+            }
+        }
+        if stopping {
+            // Reap connections with no response in flight (idle
+            // keep-alive and half-read requests); in-flight Routing /
+            // Write connections finish first — drain semantics.
+            let reap: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| matches!(c.state, State::ReadHead | State::ReadBody { .. }))
+                .map(|(t, _)| *t)
+                .collect();
+            for t in reap {
+                if let Some(c) = conns.remove(&t) {
+                    teardown(&ctx, c);
+                }
+            }
+            if conns.is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+fn do_accept(
+    ctx: &RunCtx,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    listener: &TcpListener,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let m = ctx.metrics();
+                m.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                if m.conns_open.load(Ordering::Relaxed) >= ctx.max_conns as u64 {
+                    refuse_over_capacity(stream);
+                    continue;
+                }
+                m.conn_opened();
+                let id = ctx.shared.next_conn.fetch_add(1, Ordering::Relaxed);
+                let target = (id % ctx.cores.len() as u64) as usize;
+                if target == ctx.index {
+                    adopt(ctx, conns, next_token, stream);
+                } else {
+                    let core = &ctx.cores[target];
+                    core.inbox.lock().unwrap().push(stream);
+                    core.wake.notify();
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+fn adopt(ctx: &RunCtx, conns: &mut HashMap<u64, Conn>, next_token: &mut u64, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    if stream.set_nonblocking(true).is_err() {
+        ctx.metrics().conn_closed();
+        return;
+    }
+    let tok = *next_token;
+    *next_token += 1;
+    if ctx.ep.add(stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, tok).is_err() {
+        ctx.metrics().conn_closed();
+        return;
+    }
+    conns.insert(tok, Conn::new(stream));
+    // Level-triggered: if the client's first request already landed, the
+    // next epoll_wait reports it — no need to speculatively read here.
+}
+
+fn teardown(ctx: &RunCtx, conn: Conn) {
+    ctx.ep.delete(conn.stream.as_raw_fd());
+    if conn.active {
+        ctx.shared.active.fetch_sub(1, Ordering::SeqCst);
+    }
+    ctx.metrics().conn_closed();
+    // `conn.stream` drops here, closing the fd.
+}
+
+/// Drive one connection as far as it can go without blocking, leaving
+/// its epoll interest consistent with the state it parks in.
+fn pump(ctx: &RunCtx, tok: u64, conn: &mut Conn) -> Flow {
+    loop {
+        match conn.state {
+            State::ReadHead | State::ReadBody { .. } => match advance(ctx, tok, conn) {
+                Step::Progressed => continue,
+                Step::Dead => return Flow::Drop,
+                Step::NeedMore => match fill(conn) {
+                    Fill::Got => continue,
+                    Fill::Closed => return Flow::Drop,
+                    Fill::WouldBlock => {
+                        if set_interest(ctx, tok, conn, EPOLLIN | EPOLLRDHUP).is_err() {
+                            return Flow::Drop;
+                        }
+                        return Flow::Keep;
+                    }
+                },
+            },
+            State::Routing => {
+                if set_interest(ctx, tok, conn, EPOLLRDHUP).is_err() {
+                    return Flow::Drop;
+                }
+                return Flow::Keep;
+            }
+            State::Write => match drive_write(conn) {
+                WriteRes::Done => {
+                    if conn.active {
+                        ctx.shared.active.fetch_sub(1, Ordering::SeqCst);
+                        conn.active = false;
+                    }
+                    if conn.close_after || !conn.keep_alive
+                        || ctx.shared.stop.load(Ordering::SeqCst)
+                    {
+                        return Flow::Drop;
+                    }
+                    conn.state = State::ReadHead;
+                    continue; // pipelined bytes may already be buffered
+                }
+                WriteRes::Blocked => {
+                    if set_interest(ctx, tok, conn, EPOLLOUT).is_err() {
+                        return Flow::Drop;
+                    }
+                    return Flow::Keep;
+                }
+                WriteRes::Dead => return Flow::Drop,
+            },
+        }
+    }
+}
+
+/// Read once into the retained buffer (growing it in `READ_CHUNK` steps
+/// only when a request is larger than anything seen on this connection).
+fn fill(conn: &mut Conn) -> Fill {
+    if conn.buf.len() - conn.filled < 1024 {
+        conn.buf.resize(conn.filled + READ_CHUNK, 0);
+    }
+    loop {
+        let filled = conn.filled;
+        match (&conn.stream).read(&mut conn.buf[filled..]) {
+            Ok(0) => return Fill::Closed,
+            Ok(n) => {
+                conn.filled += n;
+                return Fill::Got;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return Fill::WouldBlock,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Fill::Closed,
+        }
+    }
+}
+
+fn advance(ctx: &RunCtx, tok: u64, conn: &mut Conn) -> Step {
+    if matches!(conn.state, State::ReadHead) {
+        advance_head(conn)
+    } else {
+        advance_body(ctx, tok, conn)
+    }
+}
+
+/// Scan for the head terminator; on a full head, parse it and move to
+/// `ReadBody` (or answer 413/431 without reading further).
+fn advance_head(conn: &mut Conn) -> Step {
+    let start = conn.scanned.saturating_sub(3);
+    let Some(rel) = find_crlfcrlf(&conn.buf[start..conn.filled]) else {
+        conn.scanned = conn.filled;
+        if conn.filled > MAX_HEAD_BYTES {
+            conn.close_after = true;
+            let msg = err_json(&format!(
+                "request head exceeds the {MAX_HEAD_BYTES}-byte limit"
+            ));
+            finish_response(conn, "431 Request Header Fields Too Large", "application/json", &msg);
+            conn.filled = 0;
+            conn.scanned = 0;
+            return Step::Progressed;
+        }
+        return Step::NeedMore;
+    };
+    let head_end = start + rel + 4;
+    let (method, path, content_len, keep_alive) = parse_head(&conn.buf[..head_end]);
+    if method.is_empty() {
+        return Step::Dead;
+    }
+    conn.keep_alive = keep_alive;
+    // Oversized-body guard: refuse before allocating, exactly like the
+    // blocking path. The unread body would desynchronize the
+    // connection, so this response always closes it.
+    if content_len > MAX_BODY_BYTES {
+        conn.close_after = true;
+        let msg = format!(
+            "{{\"error\": \"body of {content_len} bytes exceeds the {MAX_BODY_BYTES}-byte limit\"}}"
+        );
+        finish_response(conn, "413 Payload Too Large", "application/json", &msg);
+        conn.filled = 0;
+        conn.scanned = 0;
+        return Step::Progressed;
+    }
+    conn.state = State::ReadBody { head_end, content_len, method, path };
+    Step::Progressed
+}
+
+/// Wait for the full body, then run the request: control routes and
+/// cache hits answer inline (→ `Write`); cache misses park (→
+/// `Routing`). Consumed bytes are compacted out so pipelined requests
+/// parse next.
+fn advance_body(ctx: &RunCtx, tok: u64, conn: &mut Conn) -> Step {
+    let (head_end, content_len, method, path) = match &conn.state {
+        State::ReadBody { head_end, content_len, method, path } => {
+            (*head_end, *content_len, method.clone(), path.clone())
+        }
+        _ => return Step::NeedMore,
+    };
+    let req_end = head_end + content_len;
+    if conn.filled < req_end {
+        return Step::NeedMore;
+    }
+    process_request(ctx, tok, conn, head_end, req_end, &method, &path);
+    conn.buf.copy_within(req_end..conn.filled, 0);
+    conn.filled -= req_end;
+    conn.scanned = 0;
+    Step::Progressed
+}
+
+/// In-flight from full parse to response write (`ServerShared::active`),
+/// mirroring the blocking path's drain-window accounting.
+fn process_request(
+    ctx: &RunCtx,
+    tok: u64,
+    conn: &mut Conn,
+    head_end: usize,
+    req_end: usize,
+    method: &str,
+    path: &str,
+) {
+    ctx.shared.active.fetch_add(1, Ordering::SeqCst);
+    conn.active = true;
+    if is_route_path(method, path) {
+        let force_invoke = path == "/v1/invoke";
+        let stage = {
+            let body = String::from_utf8_lossy(&conn.buf[head_end..req_end]);
+            route_stage(&ctx.shared.router, &body, force_invoke, &mut conn.tok_buf)
+        };
+        match stage {
+            RouteStage::Done(res) => {
+                let (status, ctype, body) = route_http(res);
+                finish_response(conn, status, ctype, &body);
+            }
+            RouteStage::Miss(item) => {
+                conn.state = State::Routing;
+                let core = ctx.core().clone();
+                ctx.shared.batcher.submit_with(
+                    item,
+                    Box::new(move |res| {
+                        // Runs on a drain worker: serialize there, keep
+                        // the reactor's share of the work minimal.
+                        let res = res.map(|out| outcome_json(&out));
+                        core.completions.lock().unwrap().push((tok, res));
+                        core.wake.notify();
+                    }),
+                );
+            }
+        }
+    } else {
+        let (status, ctype, body) = {
+            let body = String::from_utf8_lossy(&conn.buf[head_end..req_end]);
+            dispatch_control(&ctx.shared.router, method, path, &body)
+                .expect("dispatch_control handles every non-route request")
+        };
+        finish_response(conn, status, ctype, &body);
+    }
+}
+
+/// Serialize a response into the connection's retained write buffer and
+/// move to `Write` (the caller pumps it).
+fn finish_response(conn: &mut Conn, status: &str, ctype: &str, body: &str) {
+    if !conn.keep_alive {
+        conn.close_after = true;
+    }
+    conn.write_buf.clear();
+    finish_http_head(&mut conn.write_buf, status, ctype, body.len(), !conn.close_after);
+    conn.write_buf.extend_from_slice(body.as_bytes());
+    conn.write_pos = 0;
+    conn.state = State::Write;
+}
+
+fn drive_write(conn: &mut Conn) -> WriteRes {
+    while conn.write_pos < conn.write_buf.len() {
+        let pos = conn.write_pos;
+        match (&conn.stream).write(&conn.write_buf[pos..]) {
+            Ok(0) => return WriteRes::Dead,
+            Ok(n) => conn.write_pos += n,
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return WriteRes::Blocked,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return WriteRes::Dead,
+        }
+    }
+    WriteRes::Done
+}
+
+/// MOD the epoll interest only when it actually changes (syscall-free
+/// steady state for a connection that stays in one mode).
+fn set_interest(ctx: &RunCtx, tok: u64, conn: &mut Conn, want: u32) -> std::result::Result<(), ()> {
+    if conn.interest == want {
+        return Ok(());
+    }
+    match ctx.ep.modify(conn.stream.as_raw_fd(), want, tok) {
+        Ok(()) => {
+            conn.interest = want;
+            Ok(())
+        }
+        Err(_) => Err(()),
+    }
+}
+
+fn parse_head(head: &[u8]) -> (String, String, usize, bool) {
+    let text = String::from_utf8_lossy(head);
+    let mut lines = text.split("\r\n");
+    let mut parts = lines.next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_len = 0usize;
+    let mut keep_alive = true;
+    for h in lines {
+        let lower = h.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+        if lower.starts_with("connection:") && lower.contains("close") {
+            keep_alive = false;
+        }
+    }
+    (method, path, content_len, keep_alive)
+}
+
+fn find_crlfcrlf(hay: &[u8]) -> Option<usize> {
+    hay.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_parser_extracts_fields() {
+        let head = b"POST /v1/route HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\nConnection: close\r\n\r\n";
+        let (method, path, len, ka) = parse_head(head);
+        assert_eq!(method, "POST");
+        assert_eq!(path, "/v1/route");
+        assert_eq!(len, 12);
+        assert!(!ka);
+    }
+
+    #[test]
+    fn terminator_scan_resumes_without_missing_splits() {
+        // The terminator may arrive split across reads; the scan resumes
+        // from `scanned - 3` so every split position is found.
+        let full = b"GET /health HTTP/1.1\r\nHost: x\r\n\r\n";
+        let end = find_crlfcrlf(full).unwrap();
+        assert_eq!(&full[end..end + 4], b"\r\n\r\n");
+        for cut in 1..full.len() {
+            let scanned = if find_crlfcrlf(&full[..cut]).is_some() { 0 } else { cut };
+            let start = scanned.saturating_sub(3);
+            assert_eq!(
+                find_crlfcrlf(&full[start..]).map(|p| p + start),
+                Some(end),
+                "split at {cut}"
+            );
+        }
+    }
+}

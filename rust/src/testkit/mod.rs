@@ -5,12 +5,15 @@
 //! build a `Router`, start a `Server` on an ephemeral port, make a
 //! client. That boilerplate is now one line —
 //!
-//! ```ignore
-//! let fx = testkit::ServerFixture::start();               // defaults
-//! let fx = testkit::FixtureBuilder::new()                 // tuned
+//! ```no_run
+//! use ipr::testkit::{FixtureBuilder, ServerFixture};
+//!
+//! let fx = ServerFixture::start();                        // defaults
+//! let tuned = FixtureBuilder::new()                       // tuned
 //!     .router(|c| c.tau_default = 0.3)
 //!     .server(|c| c.workers = 8)
 //!     .start();
+//! # drop((fx, tuned));
 //! ```
 //!
 //! — so every future PR gets cluster-style e2e scenarios for free. The
@@ -169,6 +172,19 @@ impl ServerFixture {
     /// Realized server-side micro-batch sizes so far.
     pub fn micro_batch_sizes(&self) -> Vec<usize> {
         self.server.as_ref().map(|s| s.micro_batch_sizes()).unwrap_or_default()
+    }
+
+    /// Accept-loop (blocking backend) or reactor (epoll backend) wakeups
+    /// so far — the idle-CPU regression tests assert this stays near
+    /// zero while nothing connects.
+    pub fn wakeups(&self) -> u64 {
+        self.server.as_ref().map(|s| s.wakeups()).unwrap_or(0)
+    }
+
+    /// The connection backend actually serving this fixture (after
+    /// `Backend::Auto` resolution).
+    pub fn backend(&self) -> crate::server::Backend {
+        self.server.as_ref().expect("fixture is running").backend()
     }
 
     /// Write raw bytes to a fresh connection and read one HTTP response —

@@ -1,0 +1,272 @@
+//! Thin Linux-only wrapper over the `epoll(7)` + `eventfd(2)` syscalls
+//! (the offline registry has no `libc`/`mio`/`tokio` — the reactor talks
+//! to the kernel through these raw `extern "C"` declarations, which
+//! resolve against the libc every Linux Rust binary already links).
+//!
+//! Three small abstractions, all used by [`crate::server`]'s reactor:
+//!
+//! * [`Epoll`] — one epoll instance: `add`/`modify`/`delete` interest and
+//!   `wait` for readiness (level-triggered; `wait` retries `EINTR`).
+//! * [`EventFd`] — a cross-thread wakeup channel: `notify()` from any
+//!   thread makes the owning reactor's `wait` return; `drain()` resets it.
+//! * [`raise_nofile_limit`] — best-effort `RLIMIT_NOFILE` bump so a c10k
+//!   run is not killed by the default 1024-fd soft limit.
+
+use crate::util::error::Result;
+use crate::anyhow;
+
+// The kernel packs `struct epoll_event` on x86_64 only (a 12-byte
+// struct); every other architecture uses natural alignment.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+#[repr(C)]
+struct RLimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write half — lets idle keep-alive connections be
+/// reaped without a read() round-trip.
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EFD_NONBLOCK: i32 = 0o4000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const RLIMIT_NOFILE: i32 = 7;
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+fn os_err(what: &str) -> crate::util::error::Error {
+    anyhow!("{what}: {}", std::io::Error::last_os_error())
+}
+
+/// One epoll instance (level-triggered). `data` is an opaque caller
+/// token carried back in each ready [`EpollEvent`].
+pub struct Epoll {
+    fd: i32,
+}
+
+impl Epoll {
+    pub fn new() -> Result<Epoll> {
+        // Safety: plain syscall, no pointers involved.
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(os_err("epoll_create1"));
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: i32, fd: i32, interest: u32, token: u64) -> Result<()> {
+        let mut ev = EpollEvent { events: interest, data: token };
+        // Safety: `ev` outlives the call; the kernel copies it out.
+        let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(os_err("epoll_ctl"));
+        }
+        Ok(())
+    }
+
+    /// Register `fd` with the given interest mask and token.
+    pub fn add(&self, fd: i32, interest: u32, token: u64) -> Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Change an already-registered fd's interest mask.
+    pub fn modify(&self, fd: i32, interest: u32, token: u64) -> Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Deregister `fd`. Harmless to call on an fd the kernel already
+    /// dropped from the set (close() auto-removes) — errors are ignored.
+    pub fn delete(&self, fd: i32) {
+        let mut ev = EpollEvent::default();
+        // Safety: pre-2.6.9 kernels demand a non-null event even for DEL.
+        unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) };
+    }
+
+    /// Block until at least one registered fd is ready (or `timeout_ms`
+    /// elapses; -1 = forever). Retries `EINTR`. Returns how many entries
+    /// of `events` were filled.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> Result<usize> {
+        loop {
+            // Safety: `events` is a valid, writable slice for the call.
+            let n = unsafe {
+                epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(anyhow!("epoll_wait: {e}"));
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        // Safety: fd is owned by this struct and closed exactly once.
+        unsafe { close(self.fd) };
+    }
+}
+
+/// Nonblocking eventfd used as a cross-thread doorbell: worker threads
+/// `notify()` after pushing onto a reactor's completion/inbox queue, the
+/// reactor `drain()`s it when its epoll reports the fd readable.
+pub struct EventFd {
+    fd: i32,
+}
+
+impl EventFd {
+    pub fn new() -> Result<EventFd> {
+        // Safety: plain syscall.
+        let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(os_err("eventfd"));
+        }
+        Ok(EventFd { fd })
+    }
+
+    pub fn raw(&self) -> i32 {
+        self.fd
+    }
+
+    /// Wake the reactor. EAGAIN (counter saturated) is fine — the
+    /// pending wakeup is already observable.
+    pub fn notify(&self) {
+        let one: u64 = 1;
+        // Safety: writes 8 bytes from a valid stack location.
+        unsafe { write(self.fd, &one as *const u64 as *const u8, 8) };
+    }
+
+    /// Reset the counter so the level-triggered epoll stops reporting
+    /// the fd readable.
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        // Safety: reads 8 bytes into a valid stack location.
+        unsafe { read(self.fd, &mut buf as *mut u64 as *mut u8, 8) };
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        // Safety: fd is owned by this struct and closed exactly once.
+        unsafe { close(self.fd) };
+    }
+}
+
+/// Best-effort bump of the soft `RLIMIT_NOFILE` to at least `min` (capped
+/// at the hard limit). Returns the resulting soft limit — callers decide
+/// whether a c10k run can proceed. Never fails: on any syscall error the
+/// current (or assumed-1024) limit is returned unchanged.
+pub fn raise_nofile_limit(min: u64) -> u64 {
+    let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
+    // Safety: `lim` is a valid out-pointer for the call.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 1024;
+    }
+    if lim.rlim_cur >= min {
+        return lim.rlim_cur;
+    }
+    let want = min.min(lim.rlim_max);
+    let new = RLimit { rlim_cur: want, rlim_max: lim.rlim_max };
+    // Safety: `new` is a valid in-pointer for the call.
+    if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+        want
+    } else {
+        lim.rlim_cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn eventfd_roundtrip_through_epoll() {
+        let ep = Epoll::new().unwrap();
+        let ev = EventFd::new().unwrap();
+        ep.add(ev.raw(), EPOLLIN, 7).unwrap();
+        let mut out = [EpollEvent::default(); 4];
+        // Nothing pending: a zero-timeout wait reports no readiness.
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+        ev.notify();
+        let n = ep.wait(&mut out, 1000).unwrap();
+        assert_eq!(n, 1);
+        let (events, data) = (out[0].events, out[0].data);
+        assert_ne!(events & EPOLLIN, 0);
+        assert_eq!(data, 7);
+        // Drain resets the level-triggered readiness.
+        ev.drain();
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+        // Notify is cheap and idempotent from the waker's point of view:
+        // two notifies still mean one readable fd.
+        ev.notify();
+        ev.notify();
+        assert_eq!(ep.wait(&mut out, 1000).unwrap(), 1);
+        ev.drain();
+    }
+
+    #[test]
+    fn socket_readiness_and_interest_mod() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(listener.as_raw_fd(), EPOLLIN, 1).unwrap();
+        let mut out = [EpollEvent::default(); 4];
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0, "idle listener not ready");
+        let _client = std::net::TcpStream::connect(addr).unwrap();
+        let n = ep.wait(&mut out, 2000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(out[0].data, 1);
+        // MOD to an interest that cannot fire for a listener, then back.
+        ep.modify(listener.as_raw_fd(), EPOLLRDHUP, 1).unwrap();
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+        ep.modify(listener.as_raw_fd(), EPOLLIN, 1).unwrap();
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 1);
+        ep.delete(listener.as_raw_fd());
+        assert_eq!(ep.wait(&mut out, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable_and_monotone() {
+        let cur = raise_nofile_limit(0);
+        assert!(cur >= 1, "soft NOFILE limit should be at least 1, got {cur}");
+        // Asking for what we already have is a no-op.
+        assert_eq!(raise_nofile_limit(cur), cur);
+    }
+}

@@ -8,6 +8,8 @@ pub mod arcswap;
 pub mod arena;
 pub mod bench;
 pub mod cli;
+#[cfg(target_os = "linux")]
+pub mod epoll;
 pub mod error;
 pub mod hist;
 pub mod json;

@@ -29,7 +29,7 @@ use crate::util::hist::Histogram;
 use crate::util::json::{parse, Json};
 use crate::workload::{
     fold, generate, stream_digest, tokens_text, ChurnAction, ChurnOp, GenRequest, Scenario,
-    SpikeAction, SpikeOp,
+    SpikeAction, SpikeOp, C10K,
 };
 
 /// Knobs shared by every scenario of one `ipr loadgen` run.
@@ -44,6 +44,9 @@ pub struct LoadgenOptions {
     /// Enable hedged dispatch on the router under test (the latency_sla
     /// scenario forces this on).
     pub hedge: bool,
+    /// Reactor threads for the epoll backend (c10k scenario only; the
+    /// thread-per-connection scenarios ignore it).
+    pub reactor_threads: usize,
 }
 
 impl Default for LoadgenOptions {
@@ -54,6 +57,7 @@ impl Default for LoadgenOptions {
             clients: 0,
             time_scale: 0.0,
             hedge: false,
+            reactor_threads: 4,
         }
     }
 }
@@ -107,6 +111,10 @@ pub struct ScenarioReport {
     pub stream_digest: u64,
     /// Digest of the per-request routing decisions, in stream order.
     pub decision_digest: u64,
+    /// High-water mark of the server's open-connection gauge during the
+    /// run (`ipr_connections_max`); 0 for scenarios that don't scrape it.
+    /// The c10k CI gate requires this to clear `c10k_min_connections`.
+    pub peak_connections: u64,
 }
 
 /// One parsed per-request observation, tagged with its stream index.
@@ -299,6 +307,259 @@ pub fn run_scenario_sla(
     run_scenario_plan(opts, sc, &[], plan)
 }
 
+/// Run the connection-scale [`super::C10K`] scenario: hold the
+/// scenario's `clients` (default 10 000) keep-alive connections open
+/// against the server's **epoll reactor** backend while the request
+/// stream routes closed-loop over a rotating subset of them. The driver
+/// verifies — via the live `/metrics` surface — that the server's
+/// open-connection high-water mark (`ipr_connections_max`) reached the
+/// requested connection count; the report carries it as
+/// `peak_connections` for the CI gate. Linux-only: the point of the
+/// scenario is the reactor (EXPERIMENTS.md §C10k), and the
+/// thread-per-connection fallback would need one OS thread per held
+/// connection.
+pub fn run_scenario_c10k(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioReport> {
+    #[cfg(target_os = "linux")]
+    {
+        run_c10k_linux(opts, sc)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = (opts, sc);
+        Err(anyhow!("the c10k scenario requires Linux (it drives the epoll reactor backend)"))
+    }
+}
+
+/// Read one un-labelled numeric series from the live `/metrics` surface.
+#[cfg(target_os = "linux")]
+fn scrape_metric(admin: &HttpClient, series: &str) -> Result<u64> {
+    let (status, text) = admin.get("/metrics")?;
+    if status != 200 {
+        return Err(anyhow!("/metrics returned HTTP {status}"));
+    }
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(series) {
+            if let Ok(v) = rest.trim().parse::<f64>() {
+                return Ok(v as u64);
+            }
+        }
+    }
+    Err(anyhow!("/metrics exposes no '{series}' series"))
+}
+
+#[cfg(target_os = "linux")]
+fn run_c10k_linux(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioReport> {
+    use std::io::{BufReader, Write};
+    use std::net::TcpStream;
+
+    use crate::server::{read_response, Backend};
+    use crate::util::epoll::raise_nofile_limit;
+
+    let reg = Arc::new(Registry::load_or_reference(opts.artifacts.as_str())?);
+    let world = SynthWorld::new(reg.world_seed);
+    let reqs = generate(&world, sc, opts.seed);
+    let sdigest = stream_digest(sc.name, opts.seed, &reqs);
+    let prepared = prepare(&reqs);
+    let conns = if opts.clients > 0 { opts.clients } else { sc.clients };
+    if conns < 64 {
+        return Err(anyhow!(
+            "c10k is a connection-scale scenario: --clients must be at least 64 (got {conns})"
+        ));
+    }
+
+    // Every held connection is TWO fds in this process (the dialer's end
+    // and the server's accepted end), plus listener/epoll/eventfd slack.
+    let need = conns as u64 * 2 + 512;
+    let got = raise_nofile_limit(need);
+    if got < need {
+        return Err(anyhow!(
+            "c10k needs an NOFILE limit of {need} (2 fds per held connection + slack) but \
+             only {got} is available; raise the hard limit (`ulimit -Hn`) or pass a \
+             smaller --clients"
+        ));
+    }
+
+    let router_cfg = RouterConfig {
+        time_scale: opts.time_scale,
+        hedge: opts.hedge,
+        ..RouterConfig::default()
+    };
+    let router = Arc::new(Router::new(reg, router_cfg)?);
+    let server = Server::start_with(
+        router.clone(),
+        "127.0.0.1:0",
+        ServerConfig {
+            backend: Backend::Epoll,
+            reactor_threads: opts.reactor_threads.max(1),
+            // Headroom over the held connections for the admin scrapes.
+            max_connections: conns + 256,
+            ..ServerConfig::default()
+        },
+    )?;
+    let addr = server.addr.clone();
+    let admin = HttpClient::new(&addr);
+
+    let n = reqs.len();
+    let start = Instant::now();
+    let mut obs: Vec<Obs> = Vec::with_capacity(n);
+    let mut peak = 0u64;
+    // As in run_scenario_plan: the drive runs in a closure so an error
+    // still reaches the server/engine teardown below.
+    let drive = (|| -> Result<()> {
+        // Phase 1 — dial every connection. Parallel dialers with a retry
+        // loop: a connect burst of this size can transiently overflow the
+        // listen backlog, which surfaces as refused/reset connects.
+        const DIALERS: usize = 16;
+        let mut sockets: Vec<TcpStream> = Vec::with_capacity(conns);
+        std::thread::scope(|s| -> Result<()> {
+            let handles: Vec<_> = (0..DIALERS)
+                .map(|d| {
+                    let addr = addr.clone();
+                    let share = conns / DIALERS + usize::from(d < conns % DIALERS);
+                    s.spawn(move || -> Result<Vec<TcpStream>> {
+                        let mut out = Vec::with_capacity(share);
+                        for _ in 0..share {
+                            let mut tries = 0;
+                            loop {
+                                match TcpStream::connect(&addr) {
+                                    Ok(st) => {
+                                        st.set_nodelay(true).ok();
+                                        out.push(st);
+                                        break;
+                                    }
+                                    Err(_) if tries < 200 => {
+                                        tries += 1;
+                                        std::thread::sleep(Duration::from_millis(2));
+                                    }
+                                    Err(e) => {
+                                        return Err(anyhow!("dialing connection: {e}"));
+                                    }
+                                }
+                            }
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let dialed = h.join().map_err(|_| anyhow!("dialer thread panicked"))??;
+                sockets.extend(dialed);
+            }
+            Ok(())
+        })?;
+
+        // The TCP handshake completes in the kernel before accept(2):
+        // wait for the reactors to actually adopt every connection.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let open = scrape_metric(&admin, "ipr_connections_open")?;
+            if open >= conns as u64 {
+                break;
+            }
+            if Instant::now() > deadline {
+                return Err(anyhow!(
+                    "only {open} of {conns} connections were accepted within 30s"
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        // Phase 2 — route the stream over the held connections. Each of
+        // the M sender threads owns a disjoint socket slice and the
+        // stream indices congruent to its id mod M, rotating across its
+        // sockets so keep-alive reuse spans many connections while the
+        // rest stay open and idle (the load the reactor must carry).
+        const SENDERS: usize = 8;
+        let mut slices: Vec<Vec<TcpStream>> = Vec::with_capacity(SENDERS);
+        for sid in 0..SENDERS {
+            let share = conns / SENDERS + usize::from(sid < conns % SENDERS);
+            let rest = sockets.split_off(share.min(sockets.len()));
+            slices.push(std::mem::replace(&mut sockets, rest));
+        }
+        let mut per: Vec<Vec<Obs>> = Vec::with_capacity(SENDERS);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = slices
+                .into_iter()
+                .enumerate()
+                .map(|(sid, mut socks)| {
+                    let addr = addr.clone();
+                    let prepared = &prepared;
+                    s.spawn(move || {
+                        let mut seg = Vec::with_capacity(n / SENDERS + 1);
+                        let mut i = sid;
+                        let mut j = 0usize;
+                        while i < n {
+                            let sock = &mut socks[j % socks.len().max(1)];
+                            let q0 = Instant::now();
+                            let res = (|| -> Result<(u16, String)> {
+                                write!(
+                                    sock,
+                                    "POST {} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+                                     Connection: keep-alive\r\n\r\n{}",
+                                    prepared[i].path,
+                                    prepared[i].body.len(),
+                                    prepared[i].body
+                                )?;
+                                sock.flush()?;
+                                let mut r = BufReader::new(sock.try_clone()?);
+                                let (status, body, _close) = read_response(&mut r)?;
+                                Ok((status, body))
+                            })();
+                            let lat = q0.elapsed().as_nanos() as u64;
+                            seg.push(match res {
+                                Ok((st, body)) => parse_obs(i, lat, st, &body),
+                                Err(e) => Obs::failed(i, lat, format!("transport: {e}")),
+                            });
+                            i += SENDERS;
+                            j += 1;
+                        }
+                        // The sockets stay open until every sender is
+                        // done — dropping them here (after the last
+                        // response) cannot deflate the peak below.
+                        drop(socks);
+                        seg
+                    })
+                })
+                .collect();
+            for h in handles {
+                per.push(h.join().unwrap_or_default());
+            }
+        });
+        obs.extend(per.into_iter().flatten());
+
+        peak = scrape_metric(&admin, "ipr_connections_max")?;
+        if peak < conns as u64 {
+            return Err(anyhow!(
+                "server never held all {conns} connections concurrently \
+                 (ipr_connections_max peaked at {peak})"
+            ));
+        }
+        Ok(())
+    })();
+
+    let wall_s = start.elapsed().as_secs_f64();
+    let fleet_epoch = router.fleet.view().epoch;
+    server.stop();
+    router.qe.shutdown();
+    drive?;
+
+    aggregate_report(AggregateInput {
+        sc,
+        seed: opts.seed,
+        world: &world,
+        reqs: &reqs,
+        obs,
+        wall_s,
+        router: &router,
+        fleet_epoch,
+        fleet_actions: 0,
+        fault_actions: 0,
+        clients: conns,
+        sdigest,
+        peak_connections: peak,
+    })
+}
+
 /// One merged mid-run action (churn or latency fault) at a phase barrier.
 #[derive(Clone, Copy)]
 enum PlanOp {
@@ -426,7 +687,6 @@ fn run_scenario_plan(
     })();
 
     let wall_s = start.elapsed().as_secs_f64();
-    let (cache_hits, cache_misses) = router.qe.cache_stats();
     let fleet_epoch = router.fleet.view().epoch;
     server.stop();
     router.qe.shutdown();
@@ -437,6 +697,60 @@ fn run_scenario_plan(
             "{shadow_violations} request(s) were routed to a shadow candidate during the churn"
         ));
     }
+    aggregate_report(AggregateInput {
+        sc,
+        seed: opts.seed,
+        world: &world,
+        reqs: &reqs,
+        obs,
+        wall_s,
+        router: &router,
+        fleet_epoch,
+        fleet_actions: plan.len(),
+        fault_actions: spikes.len(),
+        clients,
+        sdigest,
+        peak_connections: 0,
+    })
+}
+
+/// Everything [`aggregate_report`] folds into a [`ScenarioReport`] —
+/// bundled so the c10k driver and the thread-per-client driver share one
+/// aggregation (and one definition of errors, digests, parity, …).
+struct AggregateInput<'a> {
+    sc: &'a Scenario,
+    seed: u64,
+    world: &'a SynthWorld,
+    reqs: &'a [GenRequest],
+    obs: Vec<Obs>,
+    wall_s: f64,
+    router: &'a Router,
+    fleet_epoch: u64,
+    fleet_actions: usize,
+    fault_actions: usize,
+    clients: usize,
+    sdigest: u64,
+    peak_connections: u64,
+}
+
+fn aggregate_report(input: AggregateInput<'_>) -> Result<ScenarioReport> {
+    let AggregateInput {
+        sc,
+        seed,
+        world,
+        reqs,
+        mut obs,
+        wall_s,
+        router,
+        fleet_epoch,
+        fleet_actions,
+        fault_actions,
+        clients,
+        sdigest,
+        peak_connections,
+    } = input;
+    let n = reqs.len();
+    let (cache_hits, cache_misses) = router.qe.cache_stats();
     obs.sort_by_key(|o| o.idx);
     if obs.len() != n {
         return Err(anyhow!("lost observations: {} of {n} requests reported", obs.len()));
@@ -510,7 +824,7 @@ fn run_scenario_plan(
 
     Ok(ScenarioReport {
         name: sc.name.to_string(),
-        seed: opts.seed,
+        seed,
         requests: n,
         clients,
         open_loop: sc.open_loop,
@@ -536,8 +850,8 @@ fn run_scenario_plan(
         },
         route_mix,
         fleet_epoch,
-        fleet_actions: plan.len(),
-        fault_actions: spikes.len(),
+        fleet_actions,
+        fault_actions,
         budgeted,
         budget_violations,
         hedged,
@@ -553,6 +867,7 @@ fn run_scenario_plan(
         },
         stream_digest: sdigest,
         decision_digest: ddigest,
+        peak_connections,
     })
 }
 
@@ -615,6 +930,7 @@ impl ScenarioReport {
                 }),
             ),
             ("sla_p99_ms", self.sla_p99_ms.map(Json::Num).unwrap_or(Json::Null)),
+            ("peak_connections", Json::Num(self.peak_connections as f64)),
             // u64 digests as hex strings: Json::Num is f64 and would lose
             // the low bits.
             ("stream_digest", Json::str(&format!("{:#018x}", self.stream_digest))),
@@ -680,14 +996,47 @@ pub fn check_workloads_regression(
             }
         }
     }
+    // c10k gates its own fields: the connection floor is absolute (the
+    // whole point of the scenario) and the p99 ceiling is separate from
+    // the generic p95 ceiling below, which is measured at ordinary
+    // client counts and would be unrepresentative at 10k connections.
+    for s in scenarios {
+        if s.req("name")?.as_str()? != C10K {
+            continue;
+        }
+        if let Some(minc) = base.get("c10k_min_connections") {
+            let floor = minc.as_f64()?;
+            let peak = s.get("peak_connections").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            if peak < floor {
+                return Err(anyhow!(
+                    "c10k regression: peak_connections {peak:.0} below the {floor:.0} floor"
+                ));
+            }
+        }
+        if let Some(bc) = base.get("c10k_routed_p99_us") {
+            let climit = bc.as_f64()? * max_ratio;
+            let p99 = s.req("p99_us")?.as_f64()?;
+            if p99 > climit {
+                return Err(anyhow!(
+                    "c10k p99 regression: routed p99 {p99:.1}us > {climit:.1}us (baseline \
+                     {:.1}us x {max_ratio}); refresh with `ipr loadgen --scenario c10k --smoke \
+                     --write-baseline ci/bench_baseline.json` if intended",
+                    bc.as_f64()?
+                ));
+            }
+        }
+    }
     let Some(b) = base.get("loadgen_routed_p95_us") else {
         return Ok("workloads gate skipped: baseline has no loadgen fields".to_string());
     };
     let limit = b.as_f64()? * max_ratio;
     let mut worst = ("", 0.0f64);
     for s in scenarios {
-        let p95 = s.req("p95_us")?.as_f64()?;
         let name = s.req("name")?.as_str()?;
+        if name == C10K {
+            continue;
+        }
+        let p95 = s.req("p95_us")?.as_f64()?;
         if p95 > worst.1 {
             worst = (name, p95);
         }
@@ -732,6 +1081,41 @@ mod tests {
         std::fs::write(&file, "{\"routing_p50_us\": 100.0}").unwrap();
         let msg = check_workloads_regression(&doc(9999.0, 0.0), path, 1.25).unwrap();
         assert!(msg.contains("skipped"), "{msg}");
+        let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn workloads_gate_c10k_connection_floor_and_p99() {
+        let file = std::env::temp_dir().join(format!("ipr-c10k-baseline-{}", std::process::id()));
+        std::fs::write(
+            &file,
+            "{\"loadgen_routed_p95_us\": 1000.0, \"c10k_min_connections\": 10000, \
+             \"c10k_routed_p99_us\": 2000.0}",
+        )
+        .unwrap();
+        let path = file.to_str().unwrap();
+        let doc = |peak: f64, p99: f64| {
+            Json::obj(vec![(
+                "scenarios",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("c10k")),
+                    // Far over the generic p95 ceiling: c10k must be
+                    // exempt from it (it has its own p99 ceiling).
+                    ("p95_us", Json::Num(50_000.0)),
+                    ("p99_us", Json::Num(p99)),
+                    ("errors", Json::Num(0.0)),
+                    ("peak_connections", Json::Num(peak)),
+                ])]),
+            )])
+        };
+        assert!(check_workloads_regression(&doc(10_000.0, 2400.0), path, 1.25).is_ok());
+        let err = check_workloads_regression(&doc(9_999.0, 100.0), path, 1.25).unwrap_err();
+        assert!(format!("{err:#}").contains("peak_connections"), "{err:#}");
+        let err = check_workloads_regression(&doc(10_000.0, 2600.0), path, 1.25).unwrap_err();
+        assert!(format!("{err:#}").contains("c10k p99 regression"), "{err:#}");
+        // Baselines without the c10k fields skip both gates.
+        std::fs::write(&file, "{\"loadgen_routed_p95_us\": 1e9}").unwrap();
+        assert!(check_workloads_regression(&doc(0.0, 9e9), path, 1.25).is_ok());
         let _ = std::fs::remove_file(&file);
     }
 

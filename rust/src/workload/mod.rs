@@ -238,6 +238,24 @@ pub fn latency_plan(requests: usize) -> Vec<SpikeAction> {
     ]
 }
 
+/// Name of the connection-scale scenario (`ipr loadgen --scenario
+/// c10k`): [`C10K_CONNECTIONS`] keep-alive connections held open
+/// concurrently against the epoll reactor while a modest request stream
+/// routes over them. Rust-only and Linux-only (it exists to exercise the
+/// [`crate::server`] reactor backend — the blocking backend would need
+/// one thread per connection); the loadgen driver verifies the
+/// `ipr_connections_*` gauges rather than a cross-language golden.
+pub const C10K: &str = "c10k";
+
+/// Connections the [`C10K`] scenario holds open (the scenario's
+/// `clients` field; `--clients` overrides it).
+pub const C10K_CONNECTIONS: usize = 10_000;
+
+/// Smallest request stream a [`C10K`] run accepts: the routed-p99 gate
+/// needs enough samples for the 99th percentile to be a real order
+/// statistic rather than the max of a handful of requests.
+pub const C10K_MIN_REQUESTS: usize = 1_000;
+
 /// Look up a preset by name, scaled to `requests` requests.
 pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
     let one = |lo: f64, hi: f64| {
@@ -382,6 +400,29 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
             invoke_frac: 1.0,
             budget_lo_ms: 5500.0,
             budget_hi_ms: 8000.0,
+        }),
+        // Connection scale: 10k keep-alive connections held open while a
+        // modest closed-loop stream routes over a rotating subset of
+        // them. Heavy hot-key skew keeps the per-request cost dominated
+        // by the connection layer (cache hits route inline on the
+        // reactor), which is what this scenario measures; budgets stay
+        // off and invoke_frac low so the stream is cheap at scale.
+        C10K => Some(Scenario {
+            name: C10K,
+            requests,
+            clients: C10K_CONNECTIONS,
+            open_loop: false,
+            base_rps: 2000.0,
+            burst_rps: 2000.0,
+            burst_len: 0,
+            hot_set: 64,
+            hot_frac: 0.9,
+            stretch_frac: 0.0,
+            stretch_target: 0,
+            tenants: one(0.1, 0.6),
+            invoke_frac: 0.05,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
         }),
         _ => None,
     }
@@ -580,6 +621,25 @@ mod tests {
         let plan = latency_plan(sc.requests);
         assert!(plan.windows(2).all(|w| w[0].at <= w[1].at));
         assert!(plan.iter().all(|a| a.at < sc.requests));
+    }
+
+    #[test]
+    fn c10k_is_rust_only_and_connection_heavy() {
+        let sc = preset(C10K, C10K_MIN_REQUESTS).expect("c10k preset exists");
+        assert!(
+            !PRESET_NAMES.contains(&C10K),
+            "rust-only scenario stays out of the mirrored preset table"
+        );
+        assert_eq!(sc.clients, C10K_CONNECTIONS);
+        assert!(!sc.open_loop, "c10k drives closed-loop (arrival pacing is irrelevant)");
+        assert_eq!(sc.budget_hi_ms, 0.0, "c10k stays budget-free");
+        // The stream itself is ordinary generator output: deterministic
+        // and cheap per request (heavy hot-key skew).
+        let world = SynthWorld::default();
+        let reqs = generate(&world, &sc, 7);
+        let hot = reqs.iter().filter(|q| q.index < sc.hot_set).count();
+        assert!(hot * 10 > reqs.len() * 8, "c10k traffic must be cache-dominated");
+        assert_eq!(generate(&world, &sc, 7), reqs);
     }
 
     #[test]
