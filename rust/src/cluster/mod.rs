@@ -1,0 +1,1318 @@
+//! Multi-node cluster tier: queue-depth-aware proxy over N `ipr serve`
+//! backends (DESIGN.md §17, OPERATIONS.md "Running a cluster").
+//!
+//! One `ipr serve` process — however fast — is not the "millions of
+//! users" story. [`Cluster`] spawns (or attaches to) N backend stacks
+//! and fronts them with a thin HTTP/1.1 proxy that adds *placement*,
+//! never *routing*: every backend shares the same artifacts and world
+//! seed, so decisions depend only on (tokens, τ, budget, pinned fleet
+//! view) and are bit-identical regardless of which node answers. That
+//! determinism is what makes mid-request replay sound.
+//!
+//! The proxy's four jobs:
+//!
+//! 1. **Health.** A probe loop drives each node through
+//!    Healthy → Suspect → Down → Recovering on consecutive `/healthz`
+//!    failures; every transition is counted in `/metrics` as
+//!    `ipr_cluster_node_state{node,state}`.
+//! 2. **Load-aware placement.** Requests go to the healthy node with
+//!    the least effective load (`2·in_flight + scraped
+//!    ipr_connections_open`). When every healthy node is at
+//!    `max_inflight`, the proxy answers `429` + `Retry-After`
+//!    (backpressure); under *sustained* saturation it sheds low-τ
+//!    traffic first (`ipr_cluster_shed_total{tier}`), never τ ≥
+//!    `shed_tau`.
+//! 3. **Replay.** Connect failures and mid-request node death retry
+//!    with capped backoff against the next-best node. Only idempotent
+//!    requests are replayed — which, under the determinism contract,
+//!    is all of them: a replayed `/v1/route` returns bit-identical
+//!    bytes, so the client never observes the kill.
+//! 4. **Fleet epochs.** Admin mutations fan out version-gated to all
+//!    healthy nodes under a write lock (`fleet_gate`) that excludes
+//!    data-path picks, and a rejoining node is held in Recovering
+//!    until its `/admin/v1/fleet` epoch matches the cluster target —
+//!    no request ever observes a torn fleet.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Router, RouterConfig};
+use crate::registry::Registry;
+use crate::server::{HttpClient, KeepAliveClient, Server, ServerConfig, RETRY_AFTER_SECS};
+use crate::util::error::Result;
+use crate::util::json::parse;
+use crate::{anyhow, bail};
+
+/// Per-node health state. The numeric codes are stable (exported as
+/// `ipr_cluster_node_state_current`); keep them in declaration order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Probing clean and fleet epoch matches the cluster target.
+    Healthy = 0,
+    /// At least `suspect_after` consecutive failures (or one data-path
+    /// error); excluded from placement until a probe succeeds.
+    Suspect = 1,
+    /// `down_after` consecutive probe failures.
+    Down = 2,
+    /// Answering probes again but held out of placement until its
+    /// fleet epoch catches up to the cluster target.
+    Recovering = 3,
+}
+
+impl NodeState {
+    fn from_u8(v: u8) -> NodeState {
+        match v {
+            0 => NodeState::Healthy,
+            1 => NodeState::Suspect,
+            2 => NodeState::Down,
+            _ => NodeState::Recovering,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeState::Healthy => "healthy",
+            NodeState::Suspect => "suspect",
+            NodeState::Down => "down",
+            NodeState::Recovering => "recovering",
+        }
+    }
+}
+
+/// Cluster knobs. Defaults suit in-process tests; `ipr cluster`
+/// exposes the operator-facing subset (OPERATIONS.md).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Backends to spawn in-process (ignored when `addrs` is set).
+    pub nodes: usize,
+    /// Attach to already-running backends instead of spawning. Attached
+    /// nodes boot as Down and are promoted by probes; they can not be
+    /// killed/restarted through the cluster handle.
+    pub addrs: Vec<String>,
+    /// Artifact directory for spawned backends (shared: all nodes must
+    /// route under the same world or replay is unsound).
+    pub artifacts: String,
+    /// Router config for spawned backends.
+    pub router: RouterConfig,
+    /// Server config for spawned backends.
+    pub server: ServerConfig,
+    /// Proxy bind address (`127.0.0.1:0` = ephemeral).
+    pub bind: String,
+    /// Per-node in-flight cap; when every healthy node is at the cap
+    /// the proxy backpressures (429 + Retry-After).
+    pub max_inflight: usize,
+    /// Health-probe cadence.
+    pub probe_interval: Duration,
+    /// Consecutive probe failures before Healthy → Suspect.
+    pub suspect_after: u32,
+    /// Consecutive probe failures before → Down.
+    pub down_after: u32,
+    /// Saturated picks in a row before τ-tier shedding kicks in
+    /// (plain backpressure until then).
+    pub shed_after: u32,
+    /// Never shed requests with τ ≥ this threshold.
+    pub shed_tau: f64,
+    /// Proxy-internal replay attempts per request.
+    pub retry_max: u32,
+    /// First replay backoff; doubles per attempt, capped.
+    pub retry_base_ms: u64,
+    /// Replay backoff ceiling.
+    pub retry_cap_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 3,
+            addrs: Vec::new(),
+            artifacts: "artifacts".into(),
+            router: RouterConfig::default(),
+            server: ServerConfig { workers: 2, ..ServerConfig::default() },
+            bind: "127.0.0.1:0".into(),
+            max_inflight: 64,
+            probe_interval: Duration::from_millis(25),
+            suspect_after: 1,
+            down_after: 3,
+            shed_after: 8,
+            shed_tau: 0.5,
+            retry_max: 3,
+            retry_base_ms: 2,
+            retry_cap_ms: 50,
+        }
+    }
+}
+
+/// A spawned backend stack (absent for attached nodes).
+struct NodeStack {
+    server: Server,
+    router: Arc<Router>,
+}
+
+struct Node {
+    /// Fixed address: spawned nodes keep it across kill/restart so the
+    /// proxy's routing table never changes shape.
+    addr: String,
+    state: AtomicU8,
+    /// Proxy-side in-flight gauge (requests currently forwarded).
+    inflight: AtomicUsize,
+    /// Last scraped `ipr_connections_open` (the node's own queue depth).
+    depth: AtomicU64,
+    probe_fails: AtomicU32,
+    /// Last known fleet epoch (scraped, or set by a gated fan-out).
+    epoch: AtomicU64,
+    stack: Mutex<Option<NodeStack>>,
+}
+
+impl Node {
+    fn new(addr: String, stack: Option<NodeStack>) -> Node {
+        Node {
+            addr,
+            state: AtomicU8::new(NodeState::Down as u8),
+            inflight: AtomicUsize::new(0),
+            depth: AtomicU64::new(0),
+            probe_fails: AtomicU32::new(0),
+            epoch: AtomicU64::new(if stack.is_some() { 1 } else { 0 }),
+            stack: Mutex::new(stack),
+        }
+    }
+}
+
+/// An admin mutation in the replicated log; a recovering node replays
+/// its suffix to catch up.
+#[derive(Clone, Debug)]
+struct Mutation {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Cluster-level counters, rendered by the proxy's own `/metrics`.
+#[derive(Default)]
+struct ClusterMetrics {
+    requests: AtomicU64,
+    replays: AtomicU64,
+    backpressure: AtomicU64,
+    admin_fanout: AtomicU64,
+    /// Shed counts by τ tier (quartiles "0".."3").
+    shed: Mutex<BTreeMap<usize, u64>>,
+    /// State-transition counts by (node, entered-state).
+    transitions: Mutex<BTreeMap<(usize, &'static str), u64>>,
+}
+
+impl ClusterMetrics {
+    fn count_shed(&self, tier: usize) {
+        *self.shed.lock().unwrap().entry(tier).or_insert(0) += 1;
+    }
+}
+
+struct Inner {
+    cfg: ClusterConfig,
+    nodes: Vec<Node>,
+    metrics: ClusterMetrics,
+    /// Ordered admin mutations applied cluster-wide. Epoch arithmetic:
+    /// boot epoch is 1 (zero mutations applied), each mutation is +1,
+    /// so the cluster target epoch is `1 + log.len()` and a node at
+    /// epoch `e` applies `log[e-1]` next.
+    admin_log: Mutex<Vec<Mutation>>,
+    /// Torn-fleet gate: admin fan-out holds the write half while it
+    /// mutates every healthy node; data-path picks and the final
+    /// Healthy promotion hold the read half. A request therefore sees
+    /// either the whole fleet before a mutation or the whole fleet
+    /// after it, never a mix.
+    fleet_gate: RwLock<()>,
+    stop: AtomicBool,
+    /// Consecutive all-healthy-nodes-saturated picks; shedding starts
+    /// once this exceeds `shed_after`.
+    saturated_streak: AtomicU32,
+    /// Shared registry for restarts (spawned mode only).
+    registry: Option<Arc<Registry>>,
+}
+
+impl Inner {
+    fn state(&self, i: usize) -> NodeState {
+        NodeState::from_u8(self.nodes[i].state.load(Ordering::SeqCst))
+    }
+
+    fn set_state(&self, i: usize, s: NodeState) {
+        let prev = self.nodes[i].state.swap(s as u8, Ordering::SeqCst);
+        if prev != s as u8 {
+            let mut t = self.metrics.transitions.lock().unwrap();
+            *t.entry((i, s.name())).or_insert(0) += 1;
+        }
+    }
+
+    fn target_epoch(&self) -> u64 {
+        1 + self.admin_log.lock().unwrap().len() as u64
+    }
+
+    fn note_probe_failure(&self, i: usize) {
+        let fails = self.nodes[i].probe_fails.fetch_add(1, Ordering::SeqCst) + 1;
+        if fails >= self.cfg.down_after {
+            self.set_state(i, NodeState::Down);
+        } else if fails >= self.cfg.suspect_after && self.state(i) == NodeState::Healthy {
+            self.set_state(i, NodeState::Suspect);
+        }
+    }
+
+    /// A data-path error is stronger evidence than a missed probe:
+    /// demote immediately so the next pick avoids the node, and let
+    /// the probe loop decide between Down and recovery.
+    fn note_data_failure(&self, i: usize) {
+        self.nodes[i].probe_fails.fetch_add(1, Ordering::SeqCst);
+        if self.state(i) == NodeState::Healthy {
+            self.set_state(i, NodeState::Suspect);
+        }
+    }
+
+    /// Promote to Healthy only while holding the fleet gate and only
+    /// if the epoch still matches — a catch-up racing a fan-out must
+    /// not admit a stale node.
+    fn promote_healthy(&self, i: usize) {
+        let _gate = self.fleet_gate.read().unwrap();
+        if self.nodes[i].epoch.load(Ordering::SeqCst) == self.target_epoch() {
+            self.set_state(i, NodeState::Healthy);
+        }
+    }
+
+    /// Replay the admin-log suffix to node `i` until its epoch matches
+    /// the target, re-reading the target each round so a concurrent
+    /// fan-out cannot be skipped. Bails (to retry next probe tick) on
+    /// any transport error or lack of progress.
+    fn catch_up(&self, i: usize) {
+        loop {
+            let target = self.target_epoch();
+            let e = self.nodes[i].epoch.load(Ordering::SeqCst);
+            if e == 0 {
+                return; // epoch unknown; wait for a scrape
+            }
+            if e >= target {
+                self.promote_healthy(i);
+                return;
+            }
+            let m = {
+                let log = self.admin_log.lock().unwrap();
+                match log.get((e - 1) as usize) {
+                    Some(m) => m.clone(),
+                    None => return,
+                }
+            };
+            let client = HttpClient::new(&self.nodes[i].addr);
+            let sent = match m.method.as_str() {
+                "DELETE" => client.delete(&m.path),
+                _ => client.post(&m.path, &m.body),
+            };
+            if sent.is_err() {
+                self.note_probe_failure(i);
+                return;
+            }
+            // The node's own epoch is authoritative: a mutation it had
+            // already applied answers 4xx but the epoch still moved.
+            match client.get("/admin/v1/fleet") {
+                Ok((200, body)) => {
+                    let ep = parse(&body)
+                        .ok()
+                        .and_then(|j| j.get("epoch").and_then(|v| v.as_f64().ok()))
+                        .map(|f| f as u64);
+                    match ep {
+                        Some(ep) if ep > e => self.nodes[i].epoch.store(ep, Ordering::SeqCst),
+                        _ => return, // no progress; retry next tick
+                    }
+                }
+                _ => {
+                    self.note_probe_failure(i);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// One probe: `GET /healthz`, then one `/metrics` scrape for both
+    /// queue depth (`ipr_connections_open`) and fleet epoch
+    /// (`ipr_fleet_epoch`). A failed scrape counts as a failed probe.
+    fn probe_node(&self, i: usize) {
+        let node = &self.nodes[i];
+        let client = HttpClient::new(&node.addr);
+        let ok = match client.get("/healthz") {
+            Ok((200, _)) => match client.get("/metrics") {
+                Ok((200, text)) => {
+                    if let Some(d) = scrape_u64(&text, "ipr_connections_open") {
+                        node.depth.store(d, Ordering::SeqCst);
+                    }
+                    if let Some(e) = scrape_u64(&text, "ipr_fleet_epoch") {
+                        node.epoch.store(e, Ordering::SeqCst);
+                    }
+                    true
+                }
+                _ => false,
+            },
+            _ => false, // includes 503 "draining": stop sending work
+        };
+        if !ok {
+            self.note_probe_failure(i);
+            return;
+        }
+        node.probe_fails.store(0, Ordering::SeqCst);
+        let target = self.target_epoch();
+        let epoch = node.epoch.load(Ordering::SeqCst);
+        match self.state(i) {
+            NodeState::Down => {
+                self.set_state(i, NodeState::Recovering);
+                self.catch_up(i);
+            }
+            NodeState::Recovering | NodeState::Suspect => {
+                if epoch == target {
+                    self.promote_healthy(i);
+                } else {
+                    self.set_state(i, NodeState::Recovering);
+                    self.catch_up(i);
+                }
+            }
+            NodeState::Healthy => {
+                if epoch != target {
+                    self.set_state(i, NodeState::Recovering);
+                    self.catch_up(i);
+                }
+            }
+        }
+    }
+
+    fn probe_round(&self) {
+        for i in 0..self.nodes.len() {
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            self.probe_node(i);
+        }
+    }
+
+    /// Least-effective-load pick among healthy, non-saturated nodes
+    /// not yet tried this request. Effective load = 2·in_flight +
+    /// scraped depth; ties break to the lowest index (determinism).
+    fn pick_node(&self, tried: &[usize]) -> Pick {
+        let mut best: Option<(u64, usize)> = None;
+        let mut any_healthy = false;
+        let mut any_free = false;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if NodeState::from_u8(n.state.load(Ordering::SeqCst)) != NodeState::Healthy {
+                continue;
+            }
+            any_healthy = true;
+            if n.inflight.load(Ordering::SeqCst) >= self.cfg.max_inflight {
+                continue;
+            }
+            any_free = true;
+            if tried.contains(&i) {
+                continue;
+            }
+            let load =
+                2 * n.inflight.load(Ordering::SeqCst) as u64 + n.depth.load(Ordering::SeqCst);
+            if best.map(|(b, _)| load < b).unwrap_or(true) {
+                best = Some((load, i));
+            }
+        }
+        match best {
+            Some((_, i)) => Pick::Node(i),
+            None if any_free => Pick::AllTried,
+            None if any_healthy => Pick::Saturated,
+            None => Pick::NoHealthy,
+        }
+    }
+
+    fn render_metrics(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("ipr_cluster_nodes {}\n", self.nodes.len()));
+        out.push_str(&format!("ipr_cluster_epoch {}\n", self.target_epoch()));
+        out.push_str(&format!(
+            "ipr_cluster_requests_total {}\n",
+            self.metrics.requests.load(Ordering::SeqCst)
+        ));
+        out.push_str(&format!(
+            "ipr_cluster_replays_total {}\n",
+            self.metrics.replays.load(Ordering::SeqCst)
+        ));
+        out.push_str(&format!(
+            "ipr_cluster_backpressure_total {}\n",
+            self.metrics.backpressure.load(Ordering::SeqCst)
+        ));
+        out.push_str(&format!(
+            "ipr_cluster_admin_fanout_total {}\n",
+            self.metrics.admin_fanout.load(Ordering::SeqCst)
+        ));
+        {
+            let shed = self.metrics.shed.lock().unwrap();
+            for tier in 0..4usize {
+                let count = shed.get(&tier).copied().unwrap_or(0);
+                out.push_str(&format!("ipr_cluster_shed_total{{tier=\"{tier}\"}} {count}\n"));
+            }
+        }
+        {
+            let t = self.metrics.transitions.lock().unwrap();
+            for ((node, state), count) in t.iter() {
+                out.push_str(&format!(
+                    "ipr_cluster_node_state{{node=\"{node}\",state=\"{state}\"}} {count}\n"
+                ));
+            }
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            out.push_str(&format!(
+                "ipr_cluster_node_state_current{{node=\"{i}\"}} {}\n",
+                n.state.load(Ordering::SeqCst)
+            ));
+            out.push_str(&format!(
+                "ipr_cluster_node_inflight{{node=\"{i}\"}} {}\n",
+                n.inflight.load(Ordering::SeqCst)
+            ));
+            out.push_str(&format!(
+                "ipr_cluster_node_depth{{node=\"{i}\"}} {}\n",
+                n.depth.load(Ordering::SeqCst)
+            ));
+            out.push_str(&format!(
+                "ipr_cluster_node_epoch{{node=\"{i}\"}} {}\n",
+                n.epoch.load(Ordering::SeqCst)
+            ));
+        }
+        out
+    }
+
+    #[cfg(test)]
+    fn for_test(n: usize) -> Inner {
+        let nodes: Vec<Node> =
+            (0..n).map(|_| Node::new("127.0.0.1:1".into(), None)).collect();
+        for node in &nodes {
+            node.epoch.store(1, Ordering::SeqCst); // as if freshly booted
+        }
+        Inner {
+            cfg: ClusterConfig::default(),
+            nodes,
+            metrics: ClusterMetrics::default(),
+            admin_log: Mutex::new(Vec::new()),
+            fleet_gate: RwLock::new(()),
+            stop: AtomicBool::new(false),
+            saturated_streak: AtomicU32::new(0),
+            registry: None,
+        }
+    }
+}
+
+enum Pick {
+    Node(usize),
+    /// Free capacity exists but every free node was already tried —
+    /// widen the retry set.
+    AllTried,
+    /// Every healthy node is at `max_inflight`.
+    Saturated,
+    NoHealthy,
+}
+
+// ---------------------------------------------------------------------------
+// Proxy data path
+// ---------------------------------------------------------------------------
+
+/// Proxy-side request body cap (the backends enforce their own).
+const MAX_PROXY_BODY: usize = 1 << 20;
+/// Client-socket read timeout so idle keep-alive connection threads
+/// observe the stop flag.
+const CONN_IDLE_TICK: Duration = Duration::from_millis(200);
+
+struct ProxyReq {
+    method: String,
+    path: String,
+    body: String,
+    keep_alive: bool,
+}
+
+enum ReadOutcome {
+    Req(ProxyReq),
+    Eof,
+    /// Read timeout with zero bytes consumed: the connection is idle,
+    /// not broken — poll the stop flag and keep waiting.
+    Idle,
+    TooLarge,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Read one HTTP/1.1 request off the client socket. A timeout before
+/// any byte arrives is `Idle`; a timeout mid-request is a hard error
+/// (the proxy closes; a well-behaved client retries).
+fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<ReadOutcome> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(ReadOutcome::Eof),
+        Ok(_) => {}
+        Err(e) if is_timeout(&e) && line.is_empty() => return Ok(ReadOutcome::Idle),
+        Err(e) => return Err(e),
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "bad request line"));
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    loop {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header)?;
+        if n == 0 {
+            return Ok(ReadOutcome::Eof);
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length = value.parse().unwrap_or(0);
+            } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            }
+        }
+    }
+    if content_length > MAX_PROXY_BODY {
+        return Ok(ReadOutcome::TooLarge);
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8_lossy(&body).into_owned();
+    Ok(ReadOutcome::Req(ProxyReq { method, path, body, keep_alive }))
+}
+
+fn status_line_for(code: u16) -> String {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        _ => "Status",
+    };
+    format!("{code} {reason}")
+}
+
+/// Write one response; 429/503 carry `Retry-After` so well-behaved
+/// clients back off (mirrors `server::finish_http_head`).
+fn write_response(
+    w: &mut TcpStream,
+    code: u16,
+    ctype: &str,
+    body: &str,
+    keep: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        status_line_for(code),
+        body.len(),
+        if keep { "keep-alive" } else { "close" }
+    );
+    if code == 429 || code == 503 {
+        head.push_str(&format!("Retry-After: {RETRY_AFTER_SECS}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn err_body(msg: &str) -> String {
+    format!("{{\"error\":\"{msg}\"}}")
+}
+
+fn is_admin_mutation(method: &str, path: &str) -> bool {
+    (method == "POST" && path.starts_with("/admin/v1/candidates"))
+        || (method == "DELETE" && path.starts_with("/admin/v1/candidates/"))
+}
+
+/// τ of a route/invoke body, for shed-tier classification. Absent or
+/// malformed τ reads as 0.0 (most sheddable): unclassifiable traffic
+/// must not ride out a saturation event ahead of explicit high-τ work.
+fn parse_tau(body: &str) -> f64 {
+    parse(body)
+        .ok()
+        .and_then(|j| j.get("tau").and_then(|v| v.as_f64().ok()))
+        .unwrap_or(0.0)
+}
+
+/// τ quartile: tier 0 = [0,0.25) … tier 3 = [0.75,1].
+fn shed_tier(tau: f64) -> usize {
+    ((tau.clamp(0.0, 1.0) * 4.0) as usize).min(3)
+}
+
+/// Deterministic capped-doubling backoff (no jitter: the proxy is a
+/// single choke point, so thundering-herd desync does not apply and
+/// determinism keeps double runs bit-identical).
+fn backoff_ms(cfg: &ClusterConfig, attempt: u32) -> u64 {
+    cfg.retry_base_ms
+        .saturating_mul(1u64 << (attempt.saturating_sub(1)).min(16))
+        .min(cfg.retry_cap_ms)
+        .max(1)
+}
+
+/// Forward to a node over this connection thread's cached keep-alive
+/// client (one-shot for DELETE, which `KeepAliveClient` does not carry).
+fn send_to(
+    inner: &Inner,
+    conns: &mut [Option<KeepAliveClient>],
+    i: usize,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, String)> {
+    if method == "DELETE" {
+        return HttpClient::new(&inner.nodes[i].addr).delete(path);
+    }
+    if conns[i].is_none() {
+        conns[i] = Some(KeepAliveClient::new(&inner.nodes[i].addr));
+    }
+    let c = conns[i].as_mut().unwrap();
+    let res = if method == "GET" { c.get(path) } else { c.post(path, body) };
+    if res.is_err() {
+        conns[i] = None;
+    }
+    res
+}
+
+/// The placement loop: pick least-loaded → forward → on failure or
+/// 429/503 replay against the next-best node with capped backoff; on
+/// sustained all-saturated, shed low-τ traffic.
+fn forward(
+    inner: &Inner,
+    conns: &mut [Option<KeepAliveClient>],
+    req: &ProxyReq,
+) -> (u16, String) {
+    inner.metrics.requests.fetch_add(1, Ordering::SeqCst);
+    let tau = parse_tau(&req.body);
+    // Read half of the torn-fleet gate: picks and forwards never
+    // interleave with an admin fan-out.
+    let _gate = inner.fleet_gate.read().unwrap();
+    let mut tried: Vec<usize> = Vec::new();
+    let mut attempt: u32 = 0;
+    loop {
+        match inner.pick_node(&tried) {
+            Pick::Node(i) => {
+                inner.saturated_streak.store(0, Ordering::SeqCst);
+                inner.nodes[i].inflight.fetch_add(1, Ordering::SeqCst);
+                let res = send_to(inner, conns, i, &req.method, &req.path, &req.body);
+                inner.nodes[i].inflight.fetch_sub(1, Ordering::SeqCst);
+                match res {
+                    Ok((code, resp)) => {
+                        if (code == 429 || code == 503) && attempt < inner.cfg.retry_max {
+                            attempt += 1;
+                            inner.metrics.replays.fetch_add(1, Ordering::SeqCst);
+                            tried.push(i);
+                            thread::sleep(Duration::from_millis(backoff_ms(&inner.cfg, attempt)));
+                            continue;
+                        }
+                        return (code, resp);
+                    }
+                    Err(_) => {
+                        // Mid-request death or connect failure. The
+                        // request is idempotent under the determinism
+                        // contract, so replay is always sound.
+                        inner.note_data_failure(i);
+                        if attempt < inner.cfg.retry_max {
+                            attempt += 1;
+                            inner.metrics.replays.fetch_add(1, Ordering::SeqCst);
+                            tried.push(i);
+                            thread::sleep(Duration::from_millis(backoff_ms(&inner.cfg, attempt)));
+                            continue;
+                        }
+                        return (502, err_body("backend request failed after retries"));
+                    }
+                }
+            }
+            Pick::AllTried => tried.clear(),
+            Pick::Saturated => {
+                let streak = inner.saturated_streak.fetch_add(1, Ordering::SeqCst) + 1;
+                if streak > inner.cfg.shed_after && tau < inner.cfg.shed_tau {
+                    inner.metrics.count_shed(shed_tier(tau));
+                    return (429, err_body("shed: cluster saturated"));
+                }
+                inner.metrics.backpressure.fetch_add(1, Ordering::SeqCst);
+                return (429, err_body("all healthy backends saturated"));
+            }
+            Pick::NoHealthy => {
+                if attempt < inner.cfg.retry_max {
+                    attempt += 1;
+                    tried.clear();
+                    thread::sleep(Duration::from_millis(backoff_ms(&inner.cfg, attempt)));
+                    continue;
+                }
+                return (503, err_body("no healthy backend"));
+            }
+        }
+    }
+}
+
+/// Fan an admin mutation out to every healthy node, version-gated:
+/// holds the write half of `fleet_gate` for the whole fan-out, checks
+/// each node lands on the expected epoch, demotes any that do not, and
+/// appends to the replicated log only if at least one node accepted.
+fn admin_fanout(inner: &Inner, req: &ProxyReq) -> (u16, String) {
+    let _gate = inner.fleet_gate.write().unwrap();
+    let mut log = inner.admin_log.lock().unwrap();
+    let expected = 2 + log.len() as u64;
+    inner.metrics.admin_fanout.fetch_add(1, Ordering::SeqCst);
+    let mut relay: Option<(u16, String)> = None;
+    let mut accepted = 0usize;
+    for i in 0..inner.nodes.len() {
+        if inner.state(i) != NodeState::Healthy {
+            continue;
+        }
+        let client = HttpClient::new(&inner.nodes[i].addr);
+        let res = match req.method.as_str() {
+            "DELETE" => client.delete(&req.path),
+            _ => client.post(&req.path, &req.body),
+        };
+        match res {
+            Ok((code, resp)) if code < 300 => {
+                let ep = parse(&resp)
+                    .ok()
+                    .and_then(|j| j.get("epoch").and_then(|v| v.as_f64().ok()))
+                    .map(|f| f as u64);
+                if ep == Some(expected) {
+                    inner.nodes[i].epoch.store(expected, Ordering::SeqCst);
+                    accepted += 1;
+                    if relay.is_none() {
+                        relay = Some((code, resp));
+                    }
+                } else {
+                    // Unexpected epoch: hold the node out until the
+                    // probe loop reconciles it.
+                    inner.set_state(i, NodeState::Recovering);
+                }
+            }
+            // Deterministic nodes reject identically (e.g. duplicate
+            // name): relay the first rejection, nothing enters the log.
+            Ok((code, resp)) => {
+                if relay.is_none() {
+                    relay = Some((code, resp));
+                }
+            }
+            Err(_) => inner.note_data_failure(i),
+        }
+    }
+    if accepted > 0 {
+        log.push(Mutation {
+            method: req.method.clone(),
+            path: req.path.clone(),
+            body: req.body.clone(),
+        });
+    }
+    relay.unwrap_or((503, err_body("no healthy backend for admin mutation")))
+}
+
+fn dispatch(
+    inner: &Inner,
+    conns: &mut [Option<KeepAliveClient>],
+    req: &ProxyReq,
+) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => (200, "text/plain", "ok\n".into()),
+        ("GET", "/healthz") => {
+            if inner.stop.load(Ordering::SeqCst) {
+                (503, "text/plain", "draining\n".into())
+            } else {
+                (200, "text/plain", "ready\n".into())
+            }
+        }
+        ("GET", "/metrics") => (200, "text/plain", inner.render_metrics()),
+        _ if is_admin_mutation(&req.method, &req.path) => {
+            let (code, body) = admin_fanout(inner, req);
+            (code, "application/json", body)
+        }
+        ("GET", _) | ("POST", _) | ("DELETE", _) => {
+            let (code, body) = forward(inner, conns, req);
+            (code, "application/json", body)
+        }
+        _ => (405, "application/json", err_body("method not allowed")),
+    }
+}
+
+fn conn_loop(inner: Arc<Inner>, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(CONN_IDLE_TICK)).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut conns: Vec<Option<KeepAliveClient>> =
+        (0..inner.nodes.len()).map(|_| None).collect();
+    loop {
+        if inner.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match read_request(&mut reader) {
+            Ok(ReadOutcome::Idle) => continue,
+            Ok(ReadOutcome::Eof) => return,
+            Ok(ReadOutcome::TooLarge) => {
+                write_response(&mut writer, 413, "application/json", &err_body("body too large"), false)
+                    .ok();
+                return;
+            }
+            Ok(ReadOutcome::Req(req)) => {
+                let (code, ctype, body) = dispatch(&inner, &mut conns, &req);
+                if write_response(&mut writer, code, ctype, &body, req.keep_alive).is_err() {
+                    return;
+                }
+                if !req.keep_alive {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster handle
+// ---------------------------------------------------------------------------
+
+/// Aggregate proxy counters, for reports and gates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterCounters {
+    pub requests: u64,
+    pub replays: u64,
+    pub backpressure: u64,
+    pub shed: u64,
+}
+
+/// A running cluster: N backend stacks plus the fronting proxy.
+/// Dropping the handle tears everything down; [`Cluster::stop`] is the
+/// explicit path.
+pub struct Cluster {
+    inner: Arc<Inner>,
+    /// The proxy's bound address (`host:port`).
+    pub addr: String,
+    accept: Option<JoinHandle<()>>,
+    health: Option<JoinHandle<()>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Cluster {
+    pub fn start(cfg: ClusterConfig) -> Result<Cluster> {
+        let mut nodes = Vec::new();
+        let mut registry = None;
+        if cfg.addrs.is_empty() {
+            if cfg.nodes == 0 {
+                bail!("cluster needs at least one node");
+            }
+            let reg = Arc::new(Registry::load_or_reference(cfg.artifacts.as_str())?);
+            for _ in 0..cfg.nodes {
+                let router = Arc::new(Router::new(reg.clone(), cfg.router.clone())?);
+                let server =
+                    Server::start_with(router.clone(), "127.0.0.1:0", cfg.server.clone())?;
+                let addr = server.addr.clone();
+                nodes.push(Node::new(addr, Some(NodeStack { server, router })));
+            }
+            registry = Some(reg);
+        } else {
+            for a in &cfg.addrs {
+                nodes.push(Node::new(a.clone(), None));
+            }
+        }
+        let listener = TcpListener::bind(cfg.bind.as_str())?;
+        let addr = listener.local_addr()?.to_string();
+        let spawned = cfg.addrs.is_empty();
+        let inner = Arc::new(Inner {
+            cfg,
+            nodes,
+            metrics: ClusterMetrics::default(),
+            admin_log: Mutex::new(Vec::new()),
+            fleet_gate: RwLock::new(()),
+            stop: AtomicBool::new(false),
+            saturated_streak: AtomicU32::new(0),
+            registry,
+        });
+        // Spawned nodes boot Healthy (they just bound and share our
+        // epoch-1 view); attached nodes stay Down until probes vouch.
+        if spawned {
+            for i in 0..inner.nodes.len() {
+                inner.set_state(i, NodeState::Healthy);
+            }
+        }
+        let conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let inner = inner.clone();
+            let conn_threads = conn_threads.clone();
+            thread::Builder::new().name("ipr-cluster-accept".into()).spawn(move || {
+                for stream in listener.incoming() {
+                    if inner.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let inner = inner.clone();
+                    if let Ok(h) = thread::Builder::new()
+                        .name("ipr-cluster-conn".into())
+                        .spawn(move || conn_loop(inner, stream))
+                    {
+                        conn_threads.lock().unwrap().push(h);
+                    }
+                }
+            })?
+        };
+        let health = {
+            let inner = inner.clone();
+            thread::Builder::new().name("ipr-cluster-health".into()).spawn(move || {
+                while !inner.stop.load(Ordering::SeqCst) {
+                    inner.probe_round();
+                    thread::sleep(inner.cfg.probe_interval);
+                }
+            })?
+        };
+        Ok(Cluster {
+            inner,
+            addr,
+            accept: Some(accept),
+            health: Some(health),
+            conn_threads,
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inner.nodes.len()
+    }
+
+    pub fn node_state(&self, i: usize) -> NodeState {
+        self.inner.state(i)
+    }
+
+    pub fn node_addr(&self, i: usize) -> &str {
+        &self.inner.nodes[i].addr
+    }
+
+    /// The router behind node `i`, when spawned and currently alive —
+    /// tests use it for cache/decision introspection.
+    pub fn router(&self, i: usize) -> Option<Arc<Router>> {
+        self.inner.nodes[i].stack.lock().unwrap().as_ref().map(|s| s.router.clone())
+    }
+
+    /// Cluster target epoch (`1 + admin mutations applied`).
+    pub fn target_epoch(&self) -> u64 {
+        self.inner.target_epoch()
+    }
+
+    /// Live-scraped `/admin/v1/fleet` epoch per node (None = node not
+    /// answering) — the barrier assertion in the node_kill scenario.
+    pub fn epochs(&self) -> Vec<Option<u64>> {
+        self.inner
+            .nodes
+            .iter()
+            .map(|n| {
+                HttpClient::new(&n.addr)
+                    .get("/admin/v1/fleet")
+                    .ok()
+                    .filter(|(code, _)| *code == 200)
+                    .and_then(|(_, body)| parse(&body).ok())
+                    .and_then(|j| j.get("epoch").and_then(|v| v.as_f64().ok()))
+                    .map(|f| f as u64)
+            })
+            .collect()
+    }
+
+    /// Simulated `kill -9`: drop the node's server (force-closing its
+    /// connections) and its engine, with NO proxy-side state change —
+    /// detection must happen the honest way, via data-path errors and
+    /// failed probes.
+    pub fn kill_node(&self, i: usize) -> Result<()> {
+        let node = self.inner.nodes.get(i).ok_or_else(|| anyhow!("no node {i}"))?;
+        let stack = node.stack.lock().unwrap().take();
+        match stack {
+            Some(s) => {
+                drop(s.server);
+                s.router.qe.shutdown();
+                Ok(())
+            }
+            None => bail!("node {i} has no local stack to kill (attached or already dead)"),
+        }
+    }
+
+    /// Rebuild and rebind a killed node on its ORIGINAL address. The
+    /// node restarts at boot epoch 1 and stays out of placement until
+    /// the probe loop walks it through Recovering (admin-log catch-up)
+    /// back to Healthy.
+    pub fn restart_node(&self, i: usize) -> Result<()> {
+        let node = self.inner.nodes.get(i).ok_or_else(|| anyhow!("no node {i}"))?;
+        let reg = self
+            .inner
+            .registry
+            .clone()
+            .ok_or_else(|| anyhow!("attached clusters cannot restart nodes"))?;
+        let mut guard = node.stack.lock().unwrap();
+        if guard.is_some() {
+            bail!("node {i} is already running");
+        }
+        let router = Arc::new(Router::new(reg, self.inner.cfg.router.clone())?);
+        let server = Server::start_with(router.clone(), node.addr.as_str(), self.inner.cfg.server.clone())?;
+        node.epoch.store(1, Ordering::SeqCst);
+        node.probe_fails.store(0, Ordering::SeqCst);
+        *guard = Some(NodeStack { server, router });
+        Ok(())
+    }
+
+    /// Poll until node `i` reaches `want` (5ms cadence). Returns false
+    /// on timeout.
+    pub fn wait_state(&self, i: usize, want: NodeState, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.inner.state(i) == want {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    pub fn counters(&self) -> ClusterCounters {
+        let m = &self.inner.metrics;
+        ClusterCounters {
+            requests: m.requests.load(Ordering::SeqCst),
+            replays: m.replays.load(Ordering::SeqCst),
+            backpressure: m.backpressure.load(Ordering::SeqCst),
+            shed: m.shed.lock().unwrap().values().sum(),
+        }
+    }
+
+    /// The proxy's own metrics text (also served at `GET /metrics`).
+    pub fn metrics_text(&self) -> String {
+        self.inner.render_metrics()
+    }
+
+    /// Graceful teardown: flip the stop flag, wake the accept loop,
+    /// join every thread, then stop surviving backends.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if self.inner.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        TcpStream::connect(self.addr.as_str()).ok(); // wake accept
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+        if let Some(h) = self.health.take() {
+            h.join().ok();
+        }
+        let handles = std::mem::take(&mut *self.conn_threads.lock().unwrap());
+        for h in handles {
+            h.join().ok();
+        }
+        for node in &self.inner.nodes {
+            if let Some(stack) = node.stack.lock().unwrap().take() {
+                stack.server.stop();
+                stack.router.qe.shutdown();
+            }
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// First value of a bare (label-free) series in metrics text.
+fn scrape_u64(text: &str, series: &str) -> Option<u64> {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(series) {
+            if let Some(value) = rest.strip_prefix(' ') {
+                return value.trim().parse::<f64>().ok().map(|f| f as u64);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_tier_quartiles() {
+        assert_eq!(shed_tier(0.0), 0);
+        assert_eq!(shed_tier(0.24), 0);
+        assert_eq!(shed_tier(0.25), 1);
+        assert_eq!(shed_tier(0.5), 2);
+        assert_eq!(shed_tier(0.75), 3);
+        assert_eq!(shed_tier(1.0), 3);
+        assert_eq!(shed_tier(7.0), 3); // clamped
+        assert_eq!(shed_tier(-1.0), 0);
+    }
+
+    #[test]
+    fn parse_tau_defaults_to_most_sheddable() {
+        assert_eq!(parse_tau("{\"tau\":0.7}"), 0.7);
+        assert_eq!(parse_tau("{}"), 0.0);
+        assert_eq!(parse_tau("not json"), 0.0);
+        assert_eq!(parse_tau("{\"tau\":\"high\"}"), 0.0);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let cfg = ClusterConfig { retry_base_ms: 2, retry_cap_ms: 50, ..Default::default() };
+        assert_eq!(backoff_ms(&cfg, 1), 2);
+        assert_eq!(backoff_ms(&cfg, 2), 4);
+        assert_eq!(backoff_ms(&cfg, 3), 8);
+        assert_eq!(backoff_ms(&cfg, 6), 50); // capped
+        assert_eq!(backoff_ms(&cfg, 33), 50); // shift-safe far past the cap
+        // Deterministic: same inputs, same schedule.
+        assert_eq!(backoff_ms(&cfg, 4), backoff_ms(&cfg, 4));
+    }
+
+    #[test]
+    fn admin_mutation_classifier() {
+        assert!(is_admin_mutation("POST", "/admin/v1/candidates"));
+        assert!(is_admin_mutation("POST", "/admin/v1/candidates/x/promote"));
+        assert!(is_admin_mutation("DELETE", "/admin/v1/candidates/x"));
+        assert!(!is_admin_mutation("GET", "/admin/v1/fleet"));
+        assert!(!is_admin_mutation("GET", "/admin/v1/candidates"));
+        assert!(!is_admin_mutation("POST", "/v1/route"));
+        assert!(!is_admin_mutation("DELETE", "/admin/v1/candidates")); // no name
+    }
+
+    #[test]
+    fn status_lines_cover_proxy_codes() {
+        assert_eq!(status_line_for(200), "200 OK");
+        assert_eq!(status_line_for(429), "429 Too Many Requests");
+        assert_eq!(status_line_for(502), "502 Bad Gateway");
+        assert_eq!(status_line_for(503), "503 Service Unavailable");
+        assert_eq!(status_line_for(299), "299 Status");
+    }
+
+    #[test]
+    fn state_machine_transitions_and_counts() {
+        let inner = Inner::for_test(2);
+        assert_eq!(inner.state(0), NodeState::Down);
+        inner.set_state(0, NodeState::Healthy);
+        inner.set_state(0, NodeState::Healthy); // no-op: not recounted
+        inner.set_state(0, NodeState::Suspect);
+        inner.set_state(0, NodeState::Healthy);
+        let t = inner.metrics.transitions.lock().unwrap();
+        assert_eq!(t.get(&(0, "healthy")), Some(&2));
+        assert_eq!(t.get(&(0, "suspect")), Some(&1));
+        assert_eq!(t.get(&(1, "healthy")), None);
+    }
+
+    #[test]
+    fn probe_failures_walk_suspect_then_down() {
+        let inner = Inner::for_test(1);
+        inner.set_state(0, NodeState::Healthy);
+        inner.note_probe_failure(0); // suspect_after = 1
+        assert_eq!(inner.state(0), NodeState::Suspect);
+        inner.note_probe_failure(0);
+        assert_eq!(inner.state(0), NodeState::Suspect);
+        inner.note_probe_failure(0); // down_after = 3
+        assert_eq!(inner.state(0), NodeState::Down);
+    }
+
+    #[test]
+    fn data_failure_demotes_healthy_only() {
+        let inner = Inner::for_test(1);
+        inner.set_state(0, NodeState::Healthy);
+        inner.note_data_failure(0);
+        assert_eq!(inner.state(0), NodeState::Suspect);
+        inner.set_state(0, NodeState::Recovering);
+        inner.note_data_failure(0);
+        assert_eq!(inner.state(0), NodeState::Recovering);
+    }
+
+    #[test]
+    fn pick_prefers_least_effective_load() {
+        let inner = Inner::for_test(3);
+        for i in 0..3 {
+            inner.set_state(i, NodeState::Healthy);
+        }
+        inner.nodes[0].inflight.store(2, Ordering::SeqCst); // load 4
+        inner.nodes[1].depth.store(3, Ordering::SeqCst); // load 3
+        inner.nodes[2].inflight.store(1, Ordering::SeqCst);
+        inner.nodes[2].depth.store(2, Ordering::SeqCst); // load 4
+        match inner.pick_node(&[]) {
+            Pick::Node(1) => {}
+            _ => panic!("expected node 1"),
+        }
+        // Tried nodes are skipped; ties break to the lowest index.
+        match inner.pick_node(&[1]) {
+            Pick::Node(0) => {}
+            _ => panic!("expected node 0 on tie"),
+        }
+    }
+
+    #[test]
+    fn pick_classifies_saturation_and_outage() {
+        let inner = Inner::for_test(2);
+        match inner.pick_node(&[]) {
+            Pick::NoHealthy => {}
+            _ => panic!("all nodes Down"),
+        }
+        inner.set_state(0, NodeState::Healthy);
+        inner.nodes[0].inflight.store(inner.cfg.max_inflight, Ordering::SeqCst);
+        match inner.pick_node(&[]) {
+            Pick::Saturated => {}
+            _ => panic!("only healthy node is at max_inflight"),
+        }
+        inner.nodes[0].inflight.store(0, Ordering::SeqCst);
+        match inner.pick_node(&[0]) {
+            Pick::AllTried => {}
+            _ => panic!("free capacity exists but all tried"),
+        }
+    }
+
+    #[test]
+    fn epoch_arithmetic_matches_contract() {
+        let inner = Inner::for_test(1);
+        assert_eq!(inner.target_epoch(), 1); // boot: zero mutations
+        inner.admin_log.lock().unwrap().push(Mutation {
+            method: "POST".into(),
+            path: "/admin/v1/candidates".into(),
+            body: "{}".into(),
+        });
+        assert_eq!(inner.target_epoch(), 2);
+    }
+
+    #[test]
+    fn metrics_render_catalog() {
+        let inner = Inner::for_test(2);
+        inner.set_state(0, NodeState::Healthy);
+        inner.metrics.requests.fetch_add(7, Ordering::SeqCst);
+        inner.metrics.count_shed(2);
+        let text = inner.render_metrics();
+        assert!(text.contains("ipr_cluster_nodes 2\n"), "{text}");
+        assert!(text.contains("ipr_cluster_epoch 1\n"), "{text}");
+        assert!(text.contains("ipr_cluster_requests_total 7\n"), "{text}");
+        assert!(text.contains("ipr_cluster_shed_total{tier=\"0\"} 0\n"), "{text}");
+        assert!(text.contains("ipr_cluster_shed_total{tier=\"2\"} 1\n"), "{text}");
+        assert!(
+            text.contains("ipr_cluster_node_state{node=\"0\",state=\"healthy\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("ipr_cluster_node_state_current{node=\"0\"} 0\n"), "{text}");
+        assert!(text.contains("ipr_cluster_node_state_current{node=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("ipr_cluster_node_epoch{node=\"0\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn scrape_requires_exact_series_name() {
+        let text = "ipr_connections_open_total 9\nipr_connections_open 4\nipr_fleet_epoch 2\n";
+        assert_eq!(scrape_u64(text, "ipr_connections_open"), Some(4));
+        assert_eq!(scrape_u64(text, "ipr_fleet_epoch"), Some(2));
+        assert_eq!(scrape_u64(text, "ipr_missing"), None);
+    }
+}

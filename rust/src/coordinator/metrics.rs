@@ -40,6 +40,9 @@ pub struct Metrics {
     pub total: Mutex<Histogram>,
     /// Route mix: candidate name -> count.
     pub routes: Mutex<BTreeMap<String, u64>>,
+    /// HTTP responses by status code (both backends, every write site,
+    /// including `503` refusals at the `max_connections` cap).
+    pub http_responses: Mutex<BTreeMap<u16, u64>>,
     /// Accumulated simulated spend (USD) and the spend an always-strongest
     /// policy would have incurred (for live CSR).
     pub spend_microusd: AtomicU64,
@@ -79,6 +82,12 @@ impl Metrics {
     pub fn record_route(&self, model: &str) {
         let mut m = self.routes.lock().unwrap();
         *m.entry(model.to_string()).or_insert(0) += 1;
+    }
+
+    /// One HTTP response written with the given status code.
+    pub fn http_response(&self, code: u16) {
+        let mut m = self.http_responses.lock().unwrap();
+        *m.entry(code).or_insert(0) += 1;
     }
 
     /// Attach the router's score cache for rendering.
@@ -175,6 +184,11 @@ impl Metrics {
         }
         for (model, count) in self.routes.lock().unwrap().iter() {
             out.push_str(&format!("ipr_routed_total{{model=\"{model}\"}} {count}\n"));
+        }
+        for (code, count) in self.http_responses.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "ipr_http_responses_total{{code=\"{code}\"}} {count}\n"
+            ));
         }
         if let Some(cache) = self.score_cache.lock().unwrap().as_ref() {
             let s = cache.stats();
@@ -313,6 +327,19 @@ mod tests {
         assert!(text.contains("ipr_connections_accepted_total 2"), "{text}");
         assert!(text.contains("ipr_connections_max 2"), "{text}");
         assert!(text.contains("ipr_reactor_wakeups_total 0"), "{text}");
+    }
+
+    #[test]
+    fn render_counts_http_responses_by_code() {
+        let m = Metrics::default();
+        m.http_response(200);
+        m.http_response(200);
+        m.http_response(429);
+        m.http_response(503);
+        let text = m.render();
+        assert!(text.contains("ipr_http_responses_total{code=\"200\"} 2"), "{text}");
+        assert!(text.contains("ipr_http_responses_total{code=\"429\"} 1"), "{text}");
+        assert!(text.contains("ipr_http_responses_total{code=\"503\"} 1"), "{text}");
     }
 
     #[test]

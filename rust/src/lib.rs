@@ -42,6 +42,10 @@
 //!   `/admin/v1/*` surface behind `ipr admin`.
 //! * [`backends`] — simulated candidate LLM endpoints (latency, output
 //!   length, realized quality, Eq. 11 cost metering).
+//! * [`cluster`] — multi-node tier: a queue-depth-aware proxy fronting N
+//!   serve backends with health states, backpressure/τ-tier shedding,
+//!   idempotent replay on node death, and epoch-gated fleet fan-out
+//!   (DESIGN.md §17).
 //! * [`server`] — HTTP/1.1 front end (`/v1/route`, `/v1/invoke`,
 //!   `/metrics`, `/admin/v1/*`): on Linux an epoll-driven reactor with a
 //!   zero-copy request path (DESIGN.md §16), elsewhere a blocking
@@ -72,6 +76,7 @@
 )]
 
 pub mod backends;
+pub mod cluster;
 pub mod control;
 pub mod coordinator;
 pub mod eval;

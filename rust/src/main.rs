@@ -37,10 +37,11 @@ use ipr::util::cli::Args;
 use ipr::util::bench::Table;
 use ipr::util::error::{Context, Result};
 use ipr::util::json::Json;
+use ipr::cluster::{Cluster, ClusterConfig};
 use ipr::workload;
 use ipr::workload::loadgen::{
     check_workloads_regression, run_scenario, run_scenario_c10k, run_scenario_churn,
-    run_scenario_sla, workloads_json, LoadgenOptions,
+    run_scenario_node_kill, run_scenario_sla, workloads_json, LoadgenOptions,
 };
 use ipr::{anyhow, bail};
 
@@ -72,12 +73,17 @@ USAGE:
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
   ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|fleet_churn|
-               latency_sla|c10k|all]
+               latency_sla|c10k|node_kill|all]
               [--seed 7] [--requests N] [--clients N] [--smoke] [--hedge]
               [--time-scale 0] [--reactor-threads 4]
               [--out BENCH_workloads.json] [--artifacts DIR]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
+  ipr cluster [--nodes 3] [--attach ADDR,ADDR,...] [--bind 127.0.0.1:8090]
+              [--artifacts DIR] [--family claude] [--tau 0.0] [--hedge]
+              [--time-scale 0] [--workers 4] [--max-inflight 64]
+              [--probe-ms 50] [--suspect-after 1] [--down-after 3]
+              [--shed-after 8] [--shed-tau 0.5] [--retry-max 3]
   ipr admin   fleet              [--addr 127.0.0.1:8080]
   ipr admin   add     --name X   [--weights BANK.npz] [--addr ...]
   ipr admin   promote --name X   [--force] [--addr ...]
@@ -92,6 +98,7 @@ fn run() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "route" => cmd_route(&args),
         "eval" => cmd_eval(&args),
         "bench" => cmd_bench(&args),
@@ -185,6 +192,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// `ipr cluster`: spawn N serve backends (or attach to running ones)
+/// behind the queue-depth-aware proxy (DESIGN.md §17, OPERATIONS.md
+/// "Running a cluster").
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let attach: Vec<String> = args
+        .get("attach")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).filter(|a| !a.is_empty()).collect())
+        .unwrap_or_default();
+    let cfg = ClusterConfig {
+        nodes: args.usize_or("nodes", 3)?,
+        addrs: attach,
+        artifacts: artifacts_dir(args),
+        router: RouterConfig {
+            family: args.get_or("family", "claude").to_string(),
+            tau_default: args.f64_or("tau", 0.0)?,
+            time_scale: args.f64_or("time-scale", 0.0)?,
+            hedge: args.flag("hedge"),
+            ..RouterConfig::default()
+        },
+        server: ServerConfig {
+            workers: args.usize_or("workers", 4)?,
+            ..ServerConfig::default()
+        },
+        bind: args.get_or("bind", "127.0.0.1:8090").to_string(),
+        max_inflight: args.usize_or("max-inflight", 64)?,
+        probe_interval: std::time::Duration::from_millis(args.usize_or("probe-ms", 50)? as u64),
+        suspect_after: args.usize_or("suspect-after", 1)? as u32,
+        down_after: args.usize_or("down-after", 3)? as u32,
+        shed_after: args.usize_or("shed-after", 8)? as u32,
+        shed_tau: args.f64_or("shed-tau", 0.5)?,
+        retry_max: args.usize_or("retry-max", 3)? as u32,
+        ..ClusterConfig::default()
+    };
+    let cluster = Cluster::start(cfg)?;
+    println!("ipr cluster proxy on http://{}  (Ctrl-C to stop)", cluster.addr);
+    for i in 0..cluster.nodes() {
+        println!(
+            "  node {i}: {} ({})",
+            cluster.node_addr(i),
+            cluster.node_state(i).name()
+        );
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 /// `ipr bench`: run the batched-QE throughput bench and the routing
 /// latency bench, write `BENCH_batched.json` / `BENCH_routing.json`, and
 /// optionally gate against a checked-in baseline (CI bench-regression).
@@ -251,7 +305,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 && k != "encode_ns_per_row"
                 && k != "min_cache_hit_speedup"
         });
-        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v5")));
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v6")));
         pairs.push(("routing_p50_us".to_string(), Json::Num(p50)));
         pairs.push((
             "encode_ns_per_row".to_string(),
@@ -326,12 +380,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     } else {
         vec![workload::preset(&which, requests).ok_or_else(|| {
             anyhow!(
-                "unknown scenario '{which}' (have: {}, {}, {}, {} or 'all'; c10k never \
-                 rides along with 'all' — it holds 10k connections and must be asked for)",
+                "unknown scenario '{which}' (have: {}, {}, {}, {}, {} or 'all'; c10k and \
+                 node_kill never ride along with 'all' — one holds 10k connections, the \
+                 other spawns a 3-node cluster, so each must be asked for)",
                 workload::PRESET_NAMES.join(", "),
                 workload::FLEET_CHURN,
                 workload::LATENCY_SLA,
-                workload::C10K
+                workload::C10K,
+                workload::NODE_KILL
             )
         })?]
     };
@@ -380,6 +436,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 );
             }
             run_scenario_c10k(&opts, sc)?
+        } else if sc.name == workload::NODE_KILL {
+            if sc.requests < workload::NODE_KILL_MIN_REQUESTS {
+                bail!(
+                    "node_kill needs --requests >= {} (each of the five plan segments \
+                     needs traffic on both sides of its barrier), got {}",
+                    workload::NODE_KILL_MIN_REQUESTS,
+                    sc.requests
+                );
+            }
+            run_scenario_node_kill(&opts, sc, &workload::node_kill_plan(sc.requests))?
         } else {
             run_scenario(&opts, sc)?
         };
@@ -418,17 +484,19 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         // must be measured from a full run — a partial run (e.g. uniform
         // only) would record an unrepresentatively low p95 and fail the
         // next full CI run spuriously. The c10k fields are owned by a
-        // c10k-only run instead (c10k never rides along with 'all').
-        if which != "all" && which != workload::C10K {
+        // c10k-only run and the cluster fields by a node_kill-only run
+        // (neither rides along with 'all').
+        if which != "all" && which != workload::C10K && which != workload::NODE_KILL {
             bail!(
                 "--write-baseline requires a full run: the p95 ceiling gates every \
                  scenario, but only '{which}' ran (drop --scenario, or use --scenario \
-                 c10k to refresh just the c10k fields)"
+                 c10k / node_kill to refresh just that scenario's own fields)"
             );
         }
         // Merge into the existing baseline (the bench subcommand owns the
-        // routing/kernel fields, a c10k run owns the c10k fields, a full
-        // run owns the rest) rather than clobbering it.
+        // routing/kernel fields, a c10k run owns the c10k fields, a
+        // node_kill run owns the cluster fields, a full run owns the
+        // rest) rather than clobbering it.
         let mut pairs: Vec<(String, Json)> = match std::fs::read_to_string(bp) {
             Ok(text) => ipr::util::json::parse(&text)?
                 .as_obj()?
@@ -447,6 +515,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 Json::Num(workload::C10K_CONNECTIONS as f64),
             ));
             println!("refreshing baseline {bp} (c10k_routed_p99_us {p99:.1})");
+        } else if which == workload::NODE_KILL {
+            let p99 = reports.iter().map(|r| r.p99_us).fold(0.0f64, f64::max);
+            // Like the SLA violation ceiling, the shed-rate ceiling
+            // keeps a 10% floor: a clean run would otherwise record 0.0
+            // and make ANY future shed a hard CI failure.
+            let shed_rate = reports
+                .iter()
+                .filter(|r| r.requests > 0)
+                .map(|r| r.shed as f64 / r.requests as f64)
+                .fold(0.10f64, f64::max);
+            pairs.retain(|(k, _)| k != "cluster_routed_p99_us" && k != "cluster_max_shed_rate");
+            pairs.push(("cluster_routed_p99_us".to_string(), Json::Num(p99)));
+            pairs.push(("cluster_max_shed_rate".to_string(), Json::Num(shed_rate)));
+            println!(
+                "refreshing baseline {bp} (cluster_routed_p99_us {p99:.1}, \
+                 cluster_max_shed_rate {shed_rate:.3})"
+            );
         } else {
             let worst_p95 = reports.iter().map(|r| r.p95_us).fold(0.0f64, f64::max);
             // The violation-rate ceiling keeps a 5% floor: a clean run
@@ -467,7 +552,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                  latency_sla_violation_rate {sla_rate:.3})"
             );
         }
-        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v5")));
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v6")));
         let base_doc = Json::Obj(pairs.into_iter().collect());
         std::fs::write(bp, base_doc.to_string()).with_context(|| format!("writing {bp}"))?;
         println!("wrote baseline {bp}");

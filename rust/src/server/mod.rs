@@ -320,6 +320,13 @@ struct ServerShared {
     router: Arc<Router>,
     batcher: Arc<MicroBatcher>,
     stop: Arc<AtomicBool>,
+    /// Readiness: flipped the moment drain begins — before the listener
+    /// closes — so `GET /healthz` answers `503` while the process is
+    /// still alive and finishing in-flight work. Health-checkers (the
+    /// cluster proxy, external LBs) key off this to stop sending traffic
+    /// to a draining node. `stop` implies `draining`; `begin_drain` sets
+    /// only this flag, leaving the listener serving.
+    draining: AtomicBool,
     /// Requests currently between full parse and response write.
     active: AtomicUsize,
     /// Blocking backend: open connections by id, force-closable at
@@ -386,6 +393,7 @@ impl Server {
             router,
             batcher,
             stop: Arc::new(AtomicBool::new(false)),
+            draining: AtomicBool::new(false),
             active: AtomicUsize::new(0),
             conns: Mutex::new(HashMap::new()),
             next_conn: AtomicU64::new(0),
@@ -431,6 +439,17 @@ impl Server {
         }
     }
 
+    /// Flip readiness only: `GET /healthz` starts answering `503
+    /// draining` while the listener keeps serving and in-flight (and
+    /// even new) requests still complete. This is the first phase of a
+    /// graceful drain — give load balancers and the cluster
+    /// health-checker time to route away, then call [`Server::stop`].
+    /// `stop()` itself also sets this, so a direct stop still flips
+    /// readiness before the listener closes.
+    pub fn begin_drain(&self) {
+        self.shared().draining.store(true, Ordering::SeqCst);
+    }
+
     /// Which backend this server actually runs (after `Auto` resolution).
     pub fn backend(&self) -> Backend {
         match &self.inner {
@@ -463,16 +482,22 @@ fn wake_accept(addr: &str) {
 }
 
 /// Answer-and-close for connections over [`ServerConfig::max_connections`]
-/// (both backends).
-fn refuse_over_capacity(mut stream: TcpStream) {
+/// (both backends). Carries `Retry-After` so well-behaved clients (and
+/// the cluster proxy) back off instead of hammering the cap.
+fn refuse_over_capacity(mut stream: TcpStream, m: &crate::coordinator::metrics::Metrics) {
+    m.http_response(503);
     let msg = err_json("server at max_connections");
     let _ = write!(
         stream,
-        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{msg}",
+        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\nContent-Length: {}\r\nRetry-After: {RETRY_AFTER_SECS}\r\nConnection: close\r\n\r\n{msg}",
         msg.len(),
     );
     let _ = stream.flush();
 }
+
+/// `Retry-After` value (seconds) attached to every `429`/`503` this
+/// server emits — the contract backoff-aware clients key off.
+pub const RETRY_AFTER_SECS: u32 = 1;
 
 impl BlockingServer {
     fn start(
@@ -503,7 +528,7 @@ impl BlockingServer {
                                 break; // the wake-up connect itself
                             }
                             if shared.conns.lock().unwrap().len() >= max_conns {
-                                refuse_over_capacity(stream);
+                                refuse_over_capacity(stream, metrics);
                                 continue;
                             }
                             metrics.conn_opened();
@@ -528,6 +553,10 @@ impl BlockingServer {
     }
 
     fn stop_graceful(&mut self) {
+        // Readiness goes 503 first (the listener is still open for one
+        // more accept round, so probes racing the stop see "draining",
+        // not a refused connect).
+        self.shared.draining.store(true, Ordering::SeqCst);
         self.shared.stop.store(true, Ordering::SeqCst);
         wake_accept(&self.addr);
         if let Some(t) = self.accept_thread.take() {
@@ -564,6 +593,7 @@ fn fail_leftover_queue(shared: &ServerShared) {
 
 impl Drop for BlockingServer {
     fn drop(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
         self.shared.stop.store(true, Ordering::SeqCst);
         wake_accept(&self.addr);
         self.shared.batcher.signal_stop();
@@ -624,15 +654,15 @@ fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
         // body would desynchronize the connection, so this response
         // always closes it.
         if content_len > MAX_BODY_BYTES {
+            sh.router.metrics.http_response(413);
             let msg = format!(
                 "{{\"error\": \"body of {content_len} bytes exceeds the {MAX_BODY_BYTES}-byte limit\"}}"
             );
             let mut out = stream.try_clone()?;
-            write!(
-                out,
-                "HTTP/1.1 413 Payload Too Large\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{msg}",
-                msg.len(),
-            )?;
+            let mut head = Vec::new();
+            finish_http_head(&mut head, "413 Payload Too Large", "application/json", msg.len(), false);
+            out.write_all(&head)?;
+            out.write_all(msg.as_bytes())?;
             out.flush()?;
             return Ok(());
         }
@@ -644,14 +674,12 @@ fn handle_conn(stream: TcpStream, sh: &ServerShared) -> Result<()> {
         // this window before force-closing connections.
         sh.active.fetch_add(1, Ordering::SeqCst);
         let (status, ctype, resp) = dispatch(sh, &method, &path, &body, &mut tok_buf);
+        sh.router.metrics.http_response(status_code(status));
         let write_res = (|| -> Result<()> {
             let mut out = stream.try_clone()?;
-            write!(
-                out,
-                "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-                resp.len(),
-                if keep_alive { "keep-alive" } else { "close" },
-            )?;
+            let mut head = Vec::new();
+            finish_http_head(&mut head, status, ctype, resp.len(), keep_alive);
+            out.write_all(&head)?;
             out.write_all(resp.as_bytes())?;
             out.flush()?;
             Ok(())
@@ -668,8 +696,11 @@ fn err_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
 
-/// Serialize a response head into a byte buffer (shared with the
-/// reactor, which writes from a retained per-connection `Vec<u8>`).
+/// Serialize a response head into a byte buffer (shared by both
+/// backends; the reactor writes from a retained per-connection
+/// `Vec<u8>`). Backoff-worthy statuses (`429`, `503`) always carry
+/// `Retry-After: `[`RETRY_AFTER_SECS`] — capacity refusals must tell
+/// well-behaved clients when to come back, not just slam the door.
 pub(crate) fn finish_http_head(
     out: &mut Vec<u8>,
     status: &str,
@@ -677,11 +708,22 @@ pub(crate) fn finish_http_head(
     body_len: usize,
     keep_alive: bool,
 ) {
+    let code = status_code(status);
+    let retry_after = if code == 429 || code == 503 {
+        format!("Retry-After: {RETRY_AFTER_SECS}\r\n")
+    } else {
+        String::new()
+    };
     let head = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {body_len}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {body_len}\r\n{retry_after}Connection: {}\r\n\r\n",
         if keep_alive { "keep-alive" } else { "close" },
     );
     out.extend_from_slice(head.as_bytes());
+}
+
+/// Numeric code of a `"503 Service Unavailable"`-style status string.
+pub(crate) fn status_code(status: &str) -> u16 {
+    status.split_whitespace().next().and_then(|s| s.parse().ok()).unwrap_or(0)
 }
 
 /// True for the two endpoints that go through the routing pipeline
@@ -700,6 +742,9 @@ fn dispatch(
     body: &str,
     tok_buf: &mut Vec<u32>,
 ) -> (&'static str, &'static str, String) {
+    if method == "GET" && path == "/healthz" {
+        return healthz_response(sh);
+    }
     if is_route_path(method, path) {
         let force_invoke = path == "/v1/invoke";
         return match route_stage(&sh.router, body, force_invoke, tok_buf) {
@@ -720,14 +765,38 @@ fn dispatch(
         .expect("dispatch_control handles every non-route request")
 }
 
+/// `GET /healthz`: readiness. `200 ready` while serving; `503 draining`
+/// (with `Retry-After`, via [`finish_http_head`]) the moment drain
+/// begins — before the listener closes — so health-checkers route away
+/// from a node that is still finishing in-flight work. Liveness stays on
+/// `GET /health` (always `200` while the process runs).
+pub(crate) fn healthz_response(sh: &ServerShared) -> (&'static str, &'static str, String) {
+    if sh.draining.load(Ordering::SeqCst) || sh.stop.load(Ordering::SeqCst) {
+        ("503 Service Unavailable", "text/plain", "draining\n".into())
+    } else {
+        ("200 OK", "text/plain", "ready\n".into())
+    }
+}
+
 /// Map a routing result to its HTTP response. An unsatisfiable latency
 /// budget is a well-formed request the fleet cannot serve: 422, distinct
-/// from caller-error 400s (the client can retry with a looser budget).
+/// from caller-error 400s (the client can retry with a looser budget). A
+/// request refused because the micro-batcher is shutting down is a 503
+/// (with `Retry-After`): the request was well-formed, the server just
+/// cannot take it — exactly what a backoff-aware client should replay.
 pub(crate) fn route_http(res: Result<String>) -> (&'static str, &'static str, String) {
     match res {
         Ok(j) => ("200 OK", "application/json", j),
         Err(e) if format!("{e:#}").contains(INFEASIBLE_BUDGET_MARKER) => {
             ("422 Unprocessable Entity", "application/json", err_json(&e.to_string()))
+        }
+        Err(e)
+            if {
+                let chain = format!("{e:#}");
+                chain.contains("server is stopping") || chain.contains("server stopped")
+            } =>
+        {
+            ("503 Service Unavailable", "application/json", err_json(&e.to_string()))
         }
         Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
     }
@@ -757,6 +826,10 @@ fn dispatch_control_inner(
 ) -> (&'static str, &'static str, String) {
     match (method, path) {
         ("GET", "/health") => ("200 OK", "text/plain", "ok\n".into()),
+        // Drain-aware callers (both backends' connection layers, which
+        // hold `ServerShared`) intercept `/healthz` before this table;
+        // this arm is the no-drain-state fallback.
+        ("GET", "/healthz") => ("200 OK", "text/plain", "ready\n".into()),
         ("GET", "/metrics") => ("200 OK", "text/plain", router.metrics.render()),
         ("GET", "/v1/registry") => ("200 OK", "application/json", registry_json(router)),
         ("GET", "/admin/v1/fleet") => ("200 OK", "application/json", fleet_json(router)),
@@ -771,7 +844,9 @@ fn dispatch_control_inner(
         // 404 — both with JSON error bodies like the rest of the surface.
         _ => {
             let (known, allow) = match path {
-                "/health" | "/metrics" | "/v1/registry" | "/admin/v1/fleet" => (true, "GET"),
+                "/health" | "/healthz" | "/metrics" | "/v1/registry" | "/admin/v1/fleet" => {
+                    (true, "GET")
+                }
                 "/v1/route" | "/v1/invoke" | "/admin/v1/candidates" => (true, "POST"),
                 _ => (false, ""),
             };
@@ -1212,16 +1287,75 @@ pub struct KeepAliveClient {
     addr: String,
     conn: Option<(TcpStream, BufReader<TcpStream>)>,
     reconnects: usize,
+    retry: Option<(RetryPolicy, crate::util::rng::Rng)>,
+    retries: usize,
+    shed: usize,
+}
+
+/// Bounded-retry policy for [`KeepAliveClient`]: capped exponential
+/// backoff with deterministic seeded jitter (`util::rng`), engaged on
+/// connect failures (ECONNREFUSED), torn connections (ECONNRESET /
+/// broken pipe) and backoff-worthy statuses (`429`/`503`, the ones the
+/// server stamps with `Retry-After`). Off by default — the plain client
+/// keeps the conservative replay-once-if-unsent rule — because blind
+/// replay of `/v1/invoke` double-meters spend; the workload harness
+/// turns it on for cluster scenarios where requests are idempotent by
+/// the determinism contract.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Extra attempts after the first (0 = the default single-shot).
+    pub max_retries: u32,
+    /// First backoff sleep; doubles per attempt.
+    pub base_ms: u64,
+    /// Backoff ceiling.
+    pub cap_ms: u64,
+    /// Also replay attempts that were fully written before the error.
+    /// Only sound for idempotent traffic (deterministic routing makes
+    /// `/v1/route` and simulated `/v1/invoke` replays bit-identical).
+    pub replay_delivered: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 4, base_ms: 5, cap_ms: 80, replay_delivered: false }
+    }
 }
 
 impl KeepAliveClient {
     pub fn new(addr: &str) -> KeepAliveClient {
-        KeepAliveClient { addr: addr.to_string(), conn: None, reconnects: 0 }
+        KeepAliveClient {
+            addr: addr.to_string(),
+            conn: None,
+            reconnects: 0,
+            retry: None,
+            retries: 0,
+            shed: 0,
+        }
+    }
+
+    /// A client with bounded backoff-retry enabled. `seed` drives the
+    /// jitter deterministically (same seed ⇒ same sleep schedule).
+    pub fn with_retry(addr: &str, policy: RetryPolicy, seed: u64) -> KeepAliveClient {
+        let mut c = KeepAliveClient::new(addr);
+        c.retry = Some((policy, crate::util::rng::Rng::new(seed)));
+        c
     }
 
     /// Times the connection was (re-)established after the first.
     pub fn reconnects(&self) -> usize {
         self.reconnects
+    }
+
+    /// Attempts replayed after a transport error (absorbed, not surfaced).
+    pub fn retries(&self) -> usize {
+        self.retries
+    }
+
+    /// `429`/`503` responses absorbed by backoff-and-retry. Reported
+    /// separately from errors so a load-shedding gate can distinguish
+    /// "shed then absorbed" from "lost".
+    pub fn shed(&self) -> usize {
+        self.shed
     }
 
     pub fn post(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
@@ -1233,18 +1367,58 @@ impl KeepAliveClient {
     }
 
     fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
-        let had_conn = self.conn.is_some();
-        let (delivered, res) = self.try_request(method, path, body);
-        match res {
-            Ok(out) => Ok(out),
-            // Safe retry: the pooled connection died before the request
-            // was flushed, so the server cannot have processed it.
-            Err(_) if had_conn && !delivered => {
-                self.reconnects += 1;
-                self.try_request(method, path, body).1
+        let Some((policy, _)) = self.retry else {
+            let had_conn = self.conn.is_some();
+            let (delivered, res) = self.try_request(method, path, body);
+            return match res {
+                Ok(out) => Ok(out),
+                // Safe retry: the pooled connection died before the
+                // request was flushed, so the server cannot have
+                // processed it.
+                Err(_) if had_conn && !delivered => {
+                    self.reconnects += 1;
+                    self.try_request(method, path, body).1
+                }
+                Err(e) => Err(e),
+            };
+        };
+        let mut attempt = 0u32;
+        loop {
+            let (delivered, res) = self.try_request(method, path, body);
+            let retryable = match &res {
+                Ok((status, _)) => *status == 429 || *status == 503,
+                // Connect refused / reset / broken pipe all land here; a
+                // flushed-but-unanswered request is replayable only under
+                // the idempotent-traffic opt-in.
+                Err(_) => !delivered || policy.replay_delivered,
+            };
+            if !retryable || attempt >= policy.max_retries {
+                return res;
             }
-            Err(e) => Err(e),
+            match &res {
+                Ok(_) => self.shed += 1,
+                Err(_) => {
+                    self.retries += 1;
+                    self.reconnects += 1;
+                }
+            }
+            attempt += 1;
+            let sleep_ms = self.backoff_ms(&policy, attempt);
+            std::thread::sleep(Duration::from_millis(sleep_ms));
         }
+    }
+
+    /// Capped exponential backoff with deterministic jitter in
+    /// `[ceil/2, ceil]` — decorrelates a client pool without wall-clock
+    /// or entropy inputs.
+    fn backoff_ms(&mut self, policy: &RetryPolicy, attempt: u32) -> u64 {
+        let ceil = policy
+            .base_ms
+            .saturating_mul(1u64 << (attempt - 1).min(16))
+            .min(policy.cap_ms)
+            .max(1);
+        let rng = &mut self.retry.as_mut().expect("retry policy present").1;
+        ceil / 2 + rng.next_range(ceil / 2 + 1)
     }
 
     fn connect(&mut self) -> Result<()> {

@@ -42,9 +42,9 @@ use crate::util::epoll::{Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN
 use crate::util::error::Result;
 
 use super::{
-    dispatch_control, err_json, fail_leftover_queue, finish_http_head, is_route_path,
-    outcome_json, refuse_over_capacity, route_http, route_stage, RouteStage, ServerConfig,
-    ServerShared, MAX_BODY_BYTES, MAX_HEAD_BYTES,
+    dispatch_control, err_json, fail_leftover_queue, finish_http_head, healthz_response,
+    is_route_path, outcome_json, refuse_over_capacity, route_http, route_stage, RouteStage,
+    ServerConfig, ServerShared, MAX_BODY_BYTES, MAX_HEAD_BYTES,
 };
 
 /// Token for a reactor's own eventfd doorbell.
@@ -349,7 +349,7 @@ fn run(ctx: RunCtx, mut listener: Option<TcpListener>) {
                 continue; // stale completion for a token in a new life
             }
             let (status, ctype, body) = route_http(res);
-            finish_response(conn, status, ctype, &body);
+            finish_response(ctx.metrics(), conn, status, ctype, &body);
             if matches!(pump(&ctx, tok, conn), Flow::Drop) {
                 if let Some(c) = conns.remove(&tok) {
                     teardown(&ctx, c);
@@ -389,7 +389,7 @@ fn do_accept(
                 let m = ctx.metrics();
                 m.conns_accepted.fetch_add(1, Ordering::Relaxed);
                 if m.conns_open.load(Ordering::Relaxed) >= ctx.max_conns as u64 {
-                    refuse_over_capacity(stream);
+                    refuse_over_capacity(stream, m);
                     continue;
                 }
                 m.conn_opened();
@@ -510,7 +510,7 @@ fn fill(conn: &mut Conn) -> Fill {
 
 fn advance(ctx: &RunCtx, tok: u64, conn: &mut Conn) -> Step {
     if matches!(conn.state, State::ReadHead) {
-        advance_head(conn)
+        advance_head(ctx.metrics(), conn)
     } else {
         advance_body(ctx, tok, conn)
     }
@@ -518,7 +518,7 @@ fn advance(ctx: &RunCtx, tok: u64, conn: &mut Conn) -> Step {
 
 /// Scan for the head terminator; on a full head, parse it and move to
 /// `ReadBody` (or answer 413/431 without reading further).
-fn advance_head(conn: &mut Conn) -> Step {
+fn advance_head(m: &Metrics, conn: &mut Conn) -> Step {
     let start = conn.scanned.saturating_sub(3);
     let Some(rel) = find_crlfcrlf(&conn.buf[start..conn.filled]) else {
         conn.scanned = conn.filled;
@@ -527,7 +527,7 @@ fn advance_head(conn: &mut Conn) -> Step {
             let msg = err_json(&format!(
                 "request head exceeds the {MAX_HEAD_BYTES}-byte limit"
             ));
-            finish_response(conn, "431 Request Header Fields Too Large", "application/json", &msg);
+            finish_response(m, conn, "431 Request Header Fields Too Large", "application/json", &msg);
             conn.filled = 0;
             conn.scanned = 0;
             return Step::Progressed;
@@ -548,7 +548,7 @@ fn advance_head(conn: &mut Conn) -> Step {
         let msg = format!(
             "{{\"error\": \"body of {content_len} bytes exceeds the {MAX_BODY_BYTES}-byte limit\"}}"
         );
-        finish_response(conn, "413 Payload Too Large", "application/json", &msg);
+        finish_response(m, conn, "413 Payload Too Large", "application/json", &msg);
         conn.filled = 0;
         conn.scanned = 0;
         return Step::Progressed;
@@ -592,7 +592,12 @@ fn process_request(
 ) {
     ctx.shared.active.fetch_add(1, Ordering::SeqCst);
     conn.active = true;
-    if is_route_path(method, path) {
+    if method == "GET" && path == "/healthz" {
+        // Readiness must reflect drain state, which only the shared
+        // handle knows; answer here instead of in dispatch_control.
+        let (status, ctype, body) = healthz_response(&ctx.shared);
+        finish_response(ctx.metrics(), conn, status, ctype, &body);
+    } else if is_route_path(method, path) {
         let force_invoke = path == "/v1/invoke";
         let stage = {
             let body = String::from_utf8_lossy(&conn.buf[head_end..req_end]);
@@ -601,7 +606,7 @@ fn process_request(
         match stage {
             RouteStage::Done(res) => {
                 let (status, ctype, body) = route_http(res);
-                finish_response(conn, status, ctype, &body);
+                finish_response(ctx.metrics(), conn, status, ctype, &body);
             }
             RouteStage::Miss(item) => {
                 conn.state = State::Routing;
@@ -624,13 +629,15 @@ fn process_request(
             dispatch_control(&ctx.shared.router, method, path, &body)
                 .expect("dispatch_control handles every non-route request")
         };
-        finish_response(conn, status, ctype, &body);
+        finish_response(ctx.metrics(), conn, status, ctype, &body);
     }
 }
 
 /// Serialize a response into the connection's retained write buffer and
-/// move to `Write` (the caller pumps it).
-fn finish_response(conn: &mut Conn, status: &str, ctype: &str, body: &str) {
+/// move to `Write` (the caller pumps it). Counts the response code
+/// (`ipr_http_responses_total`), mirroring the blocking write site.
+fn finish_response(m: &Metrics, conn: &mut Conn, status: &str, ctype: &str, body: &str) {
+    m.http_response(super::status_code(status));
     if !conn.keep_alive {
         conn.close_after = true;
     }

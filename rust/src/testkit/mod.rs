@@ -187,6 +187,14 @@ impl ServerFixture {
         self.server.as_ref().expect("fixture is running").backend()
     }
 
+    /// Flip readiness (`GET /healthz` → `503 draining`) without stopping:
+    /// phase one of a graceful drain (see `Server::begin_drain`).
+    pub fn begin_drain(&self) {
+        if let Some(s) = self.server.as_ref() {
+            s.begin_drain();
+        }
+    }
+
     /// Write raw bytes to a fresh connection and read one HTTP response —
     /// the escape hatch for protocol-level tests (malformed framing,
     /// hostile headers) that no well-formed client can express.

@@ -20,17 +20,23 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::anyhow;
+use crate::cluster::{Cluster, ClusterConfig, NodeState};
 use crate::coordinator::{Router, RouterConfig};
 use crate::registry::Registry;
-use crate::server::{HttpClient, KeepAliveClient, Server, ServerConfig};
+use crate::server::{HttpClient, KeepAliveClient, RetryPolicy, Server, ServerConfig};
 use crate::synth::{SynthWorld, SPLIT_LIVE};
 use crate::util::error::{Context, Result};
 use crate::util::hist::Histogram;
 use crate::util::json::{parse, Json};
+use crate::util::rng::substream;
 use crate::workload::{
-    fold, generate, stream_digest, tokens_text, ChurnAction, ChurnOp, GenRequest, Scenario,
-    SpikeAction, SpikeOp, C10K,
+    fold, generate, stream_digest, tokens_text, ChurnAction, ChurnOp, GenRequest, NodeKillAction,
+    NodeKillOp, Scenario, SpikeAction, SpikeOp, C10K, NODE_KILL, NODE_KILL_NODES,
 };
+
+/// RNG substream for per-client retry-backoff jitter (siblings: the
+/// arrival and request substreams in `workload::mod`).
+const CLIENT_RETRY_STREAM: u64 = 103;
 
 /// Knobs shared by every scenario of one `ipr loadgen` run.
 #[derive(Clone, Debug)]
@@ -115,6 +121,16 @@ pub struct ScenarioReport {
     /// run (`ipr_connections_max`); 0 for scenarios that don't scrape it.
     /// The c10k CI gate requires this to clear `c10k_min_connections`.
     pub peak_connections: u64,
+    /// Requests the cluster tier refused under saturation (proxy
+    /// backpressure + τ-tier sheds + client-observed 429/503 absorbed
+    /// by retry). 0 for single-node scenarios. Distinct from `errors`:
+    /// shed traffic was *refused deliberately and retried*, not lost.
+    pub shed: u64,
+    /// Replay/retry attempts absorbed below the error line (cluster
+    /// proxy replays + client retry attempts). 0 for single-node
+    /// scenarios. The node_kill gate uses this to prove the kill was
+    /// absorbed rather than surfaced.
+    pub retried: u64,
 }
 
 /// One parsed per-request observation, tagged with its stream index.
@@ -218,7 +234,12 @@ fn prepare(reqs: &[GenRequest]) -> Vec<Prepared> {
 /// Drive requests `[lo, hi)` of the stream through a fresh client pool
 /// (client `cid` owns indices `lo+cid, lo+cid+clients, …`) and append
 /// the observations. Returns once EVERY request of the segment has a
-/// response — the phase barrier the churn driver relies on.
+/// response — the phase barrier the churn driver relies on. With
+/// `retry` set, each client gets a [`RetryPolicy`]-hardened
+/// [`KeepAliveClient`] (jitter seeded per client from
+/// [`CLIENT_RETRY_STREAM`], so double runs replay the same backoff
+/// schedule); the return value is the segment's total (retries, shed)
+/// absorbed below the error line.
 #[allow(clippy::too_many_arguments)]
 fn run_segment(
     lo: usize,
@@ -229,18 +250,26 @@ fn run_segment(
     reqs: &[GenRequest],
     prepared: &[Prepared],
     start: Instant,
+    retry: Option<(RetryPolicy, u64)>,
     out: &mut Vec<Obs>,
-) {
+) -> (u64, u64) {
     if lo >= hi {
-        return;
+        return (0, 0);
     }
-    let mut per_client: Vec<Vec<Obs>> = Vec::with_capacity(clients);
+    let mut per_client: Vec<(Vec<Obs>, u64, u64)> = Vec::with_capacity(clients);
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|cid| {
                 let addr = addr.to_string();
                 s.spawn(move || {
-                    let mut kc = KeepAliveClient::new(&addr);
+                    let mut kc = match retry {
+                        Some((policy, seed)) => KeepAliveClient::with_retry(
+                            &addr,
+                            policy,
+                            substream(seed, CLIENT_RETRY_STREAM, cid as u64),
+                        ),
+                        None => KeepAliveClient::new(&addr),
+                    };
                     let mut seg = Vec::with_capacity((hi - lo) / clients + 1);
                     let mut i = lo + cid;
                     while i < hi {
@@ -260,7 +289,7 @@ fn run_segment(
                         });
                         i += clients;
                     }
-                    seg
+                    (seg, kc.retries(), kc.shed())
                 })
             })
             .collect();
@@ -268,7 +297,13 @@ fn run_segment(
             per_client.push(h.join().unwrap_or_default());
         }
     });
-    out.extend(per_client.into_iter().flatten());
+    let (mut retries, mut shed) = (0u64, 0u64);
+    for (seg, r, sh) in per_client {
+        retries += r;
+        shed += sh;
+        out.extend(seg);
+    }
+    (retries, shed)
 }
 
 /// Run one scenario end to end: fresh router + server, client pool over
@@ -557,6 +592,157 @@ fn run_c10k_linux(opts: &LoadgenOptions, sc: &Scenario) -> Result<ScenarioReport
         clients: conns,
         sdigest,
         peak_connections: peak,
+        shed: 0,
+        retried: 0,
+    })
+}
+
+/// Run the cluster-survival [`NODE_KILL`] scenario: spawn a
+/// [`NODE_KILL_NODES`]-node [`Cluster`] and drive the stream through
+/// its proxy while the plan's actions fire at phase barriers — an admin
+/// mutation (epoch fan-out), a simulated `kill -9`, a pure checkpoint,
+/// and a restart that must walk back to Healthy before run end. At
+/// EVERY barrier the driver asserts each answering node's
+/// `/admin/v1/fleet` epoch equals the cluster target (the torn-fleet
+/// contract). Clients run retry-hardened ([`RetryPolicy`] with
+/// idempotent replay, sound under the determinism contract), so a kill
+/// is absorbed, never surfaced: `errors` must stay 0 while `retried`
+/// and `shed` count what the absorption cost.
+pub fn run_scenario_node_kill(
+    opts: &LoadgenOptions,
+    sc: &Scenario,
+    plan: &[NodeKillAction],
+) -> Result<ScenarioReport> {
+    let cluster = Cluster::start(ClusterConfig {
+        nodes: NODE_KILL_NODES,
+        artifacts: opts.artifacts.clone(),
+        router: RouterConfig {
+            time_scale: opts.time_scale,
+            hedge: opts.hedge,
+            ..RouterConfig::default()
+        },
+        server: ServerConfig { workers: 2, ..ServerConfig::default() },
+        probe_interval: Duration::from_millis(10),
+        ..ClusterConfig::default()
+    })?;
+    // Node 0 is never killed by the canonical plan; its router stands in
+    // for the fleet view / cache stats in the report (all nodes share
+    // the same artifacts, so the views agree at every barrier).
+    let router0 =
+        cluster.router(0).ok_or_else(|| anyhow!("node 0 must be alive at start"))?;
+    let world = SynthWorld::new(router0.registry.world_seed);
+    let reqs = generate(&world, sc, opts.seed);
+    let sdigest = stream_digest(sc.name, opts.seed, &reqs);
+    let prepared = prepare(&reqs);
+    let want = if opts.clients > 0 { opts.clients } else { sc.clients };
+    let clients = want.max(1).min(reqs.len().max(1));
+    let n = reqs.len();
+    let mut actions: Vec<(usize, NodeKillOp)> = plan.iter().map(|a| (a.at, a.op)).collect();
+    actions.sort_by_key(|&(at, _)| at);
+    let addr = cluster.addr.clone();
+    let admin = HttpClient::new(&addr);
+    let retry = Some((
+        RetryPolicy { max_retries: 6, base_ms: 2, cap_ms: 50, replay_delivered: true },
+        opts.seed,
+    ));
+
+    let start = Instant::now();
+    let mut obs: Vec<Obs> = Vec::with_capacity(n);
+    let (mut client_retries, mut client_shed) = (0u64, 0u64);
+    let (mut fleet_actions, mut fault_actions) = (0usize, 0usize);
+    let drive = (|| -> Result<()> {
+        // The torn-fleet assertion: every node that answers must agree
+        // with the cluster target epoch (a killed node answers nothing
+        // and is exempt until it rejoins).
+        let check_epochs = |barrier: usize| -> Result<()> {
+            let target = cluster.target_epoch();
+            for (i, e) in cluster.epochs().iter().enumerate() {
+                if let Some(e) = e {
+                    if *e != target {
+                        return Err(anyhow!(
+                            "torn fleet at barrier {barrier}: node {i} at epoch {e}, \
+                             cluster target {target}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        };
+        let mut seg_start = 0usize;
+        for &(action_at, op) in &actions {
+            let at = action_at.min(n);
+            let (r, sh) = run_segment(
+                seg_start, at, clients, &addr, sc.open_loop, &reqs, &prepared, start, retry,
+                &mut obs,
+            );
+            client_retries += r;
+            client_shed += sh;
+            seg_start = at;
+            check_epochs(at)?;
+            match op {
+                NodeKillOp::AdminAdd(name) => {
+                    fleet_actions += 1;
+                    let (code, body) = admin
+                        .post("/admin/v1/candidates", &format!("{{\"name\": \"{name}\"}}"))?;
+                    if code != 200 {
+                        return Err(anyhow!(
+                            "cluster admin add '{name}' at barrier {at} failed ({code}): {body}"
+                        ));
+                    }
+                    check_epochs(at)?; // fan-out must land atomically
+                }
+                NodeKillOp::Kill(i) => {
+                    fault_actions += 1;
+                    cluster.kill_node(i)?;
+                }
+                NodeKillOp::Checkpoint => {}
+                NodeKillOp::Restart(i) => {
+                    fault_actions += 1;
+                    cluster.restart_node(i)?;
+                    if !cluster.wait_state(i, NodeState::Healthy, Duration::from_secs(10)) {
+                        return Err(anyhow!(
+                            "node {i} did not return to Healthy within 10s of restart \
+                             (state: {:?})",
+                            cluster.node_state(i)
+                        ));
+                    }
+                    check_epochs(at)?; // the rejoined node must agree too
+                }
+            }
+        }
+        let (r, sh) = run_segment(
+            seg_start, n, clients, &addr, sc.open_loop, &reqs, &prepared, start, retry, &mut obs,
+        );
+        client_retries += r;
+        client_shed += sh;
+        check_epochs(n)
+    })();
+
+    let wall_s = start.elapsed().as_secs_f64();
+    let counters = cluster.counters();
+    let fleet_epoch = cluster.target_epoch();
+    cluster.stop();
+    drive?;
+
+    aggregate_report(AggregateInput {
+        sc,
+        seed: opts.seed,
+        world: &world,
+        reqs: &reqs,
+        obs,
+        wall_s,
+        router: &router0,
+        fleet_epoch,
+        fleet_actions,
+        fault_actions,
+        clients,
+        sdigest,
+        peak_connections: 0,
+        // Proxy-issued 429s and client-absorbed ones are the same
+        // events seen from two sides; counting both sides would double
+        // books, so shed = proxy refusals, retried = all replay work.
+        shed: counters.shed + counters.backpressure,
+        retried: counters.replays + client_retries + client_shed,
     })
 }
 
@@ -630,6 +816,7 @@ fn run_scenario_plan(
                 &reqs,
                 &prepared,
                 start,
+                None,
                 &mut obs,
             );
             shadow_violations += check_segment(&obs, check_from, &shadow_now);
@@ -681,7 +868,9 @@ fn run_scenario_plan(
                 }
             }
         }
-        run_segment(seg_start, n, clients, &addr, sc.open_loop, &reqs, &prepared, start, &mut obs);
+        run_segment(
+            seg_start, n, clients, &addr, sc.open_loop, &reqs, &prepared, start, None, &mut obs,
+        );
         shadow_violations += check_segment(&obs, check_from, &shadow_now);
         Ok(())
     })();
@@ -711,6 +900,8 @@ fn run_scenario_plan(
         clients,
         sdigest,
         peak_connections: 0,
+        shed: 0,
+        retried: 0,
     })
 }
 
@@ -731,6 +922,8 @@ struct AggregateInput<'a> {
     clients: usize,
     sdigest: u64,
     peak_connections: u64,
+    shed: u64,
+    retried: u64,
 }
 
 fn aggregate_report(input: AggregateInput<'_>) -> Result<ScenarioReport> {
@@ -748,6 +941,8 @@ fn aggregate_report(input: AggregateInput<'_>) -> Result<ScenarioReport> {
         clients,
         sdigest,
         peak_connections,
+        shed,
+        retried,
     } = input;
     let n = reqs.len();
     let (cache_hits, cache_misses) = router.qe.cache_stats();
@@ -868,6 +1063,8 @@ fn aggregate_report(input: AggregateInput<'_>) -> Result<ScenarioReport> {
         stream_digest: sdigest,
         decision_digest: ddigest,
         peak_connections,
+        shed,
+        retried,
     })
 }
 
@@ -931,6 +1128,16 @@ impl ScenarioReport {
             ),
             ("sla_p99_ms", self.sla_p99_ms.map(Json::Num).unwrap_or(Json::Null)),
             ("peak_connections", Json::Num(self.peak_connections as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("retried", Json::Num(self.retried as f64)),
+            (
+                "shed_rate",
+                Json::Num(if self.requests > 0 {
+                    self.shed as f64 / self.requests as f64
+                } else {
+                    0.0
+                }),
+            ),
             // u64 digests as hex strings: Json::Num is f64 and would lose
             // the low bits.
             ("stream_digest", Json::str(&format!("{:#018x}", self.stream_digest))),
@@ -1026,6 +1233,40 @@ pub fn check_workloads_regression(
             }
         }
     }
+    // node_kill gates its own fields: the shed-rate ceiling is what the
+    // scenario exists to bound, and its p99 is measured through the
+    // cluster proxy (an extra hop plus deliberate kill-window retries),
+    // so the generic single-node p95 ceiling would be unrepresentative.
+    for s in scenarios {
+        if s.req("name")?.as_str()? != NODE_KILL {
+            continue;
+        }
+        if let Some(bs) = base.get("cluster_max_shed_rate") {
+            let slimit = bs.as_f64()? * max_ratio;
+            let rate = s.get("shed_rate").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            if rate > slimit {
+                return Err(anyhow!(
+                    "cluster shed regression: node_kill shed {:.2}% of requests > {:.2}% \
+                     ceiling (baseline {:.2}% x {max_ratio})",
+                    rate * 100.0,
+                    slimit * 100.0,
+                    bs.as_f64()? * 100.0
+                ));
+            }
+        }
+        if let Some(bc) = base.get("cluster_routed_p99_us") {
+            let climit = bc.as_f64()? * max_ratio;
+            let p99 = s.req("p99_us")?.as_f64()?;
+            if p99 > climit {
+                return Err(anyhow!(
+                    "cluster p99 regression: routed p99 {p99:.1}us > {climit:.1}us (baseline \
+                     {:.1}us x {max_ratio}); refresh with `ipr loadgen --scenario node_kill \
+                     --smoke --write-baseline ci/bench_baseline.json` if intended",
+                    bc.as_f64()?
+                ));
+            }
+        }
+    }
     let Some(b) = base.get("loadgen_routed_p95_us") else {
         return Ok("workloads gate skipped: baseline has no loadgen fields".to_string());
     };
@@ -1033,7 +1274,7 @@ pub fn check_workloads_regression(
     let mut worst = ("", 0.0f64);
     for s in scenarios {
         let name = s.req("name")?.as_str()?;
-        if name == C10K {
+        if name == C10K || name == NODE_KILL {
             continue;
         }
         let p95 = s.req("p95_us")?.as_f64()?;
@@ -1116,6 +1357,44 @@ mod tests {
         // Baselines without the c10k fields skip both gates.
         std::fs::write(&file, "{\"loadgen_routed_p95_us\": 1e9}").unwrap();
         assert!(check_workloads_regression(&doc(0.0, 9e9), path, 1.25).is_ok());
+        let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn workloads_gate_cluster_shed_rate_and_p99() {
+        let file = std::env::temp_dir().join(format!("ipr-nk-baseline-{}", std::process::id()));
+        std::fs::write(
+            &file,
+            "{\"loadgen_routed_p95_us\": 1000.0, \"cluster_max_shed_rate\": 0.10, \
+             \"cluster_routed_p99_us\": 2000.0}",
+        )
+        .unwrap();
+        let path = file.to_str().unwrap();
+        let doc = |shed_rate: f64, p99: f64| {
+            Json::obj(vec![(
+                "scenarios",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("node_kill")),
+                    // Far over the generic p95 ceiling: node_kill must
+                    // be exempt (its p99 rides through the proxy hop
+                    // and the deliberate kill window).
+                    ("p95_us", Json::Num(50_000.0)),
+                    ("p99_us", Json::Num(p99)),
+                    ("errors", Json::Num(0.0)),
+                    ("shed_rate", Json::Num(shed_rate)),
+                ])]),
+            )])
+        };
+        assert!(check_workloads_regression(&doc(0.0, 100.0), path, 1.25).is_ok());
+        assert!(check_workloads_regression(&doc(0.12, 100.0), path, 1.25).is_ok());
+        let err = check_workloads_regression(&doc(0.13, 100.0), path, 1.25).unwrap_err();
+        assert!(format!("{err:#}").contains("cluster shed regression"), "{err:#}");
+        let err = check_workloads_regression(&doc(0.0, 2600.0), path, 1.25).unwrap_err();
+        assert!(format!("{err:#}").contains("cluster p99 regression"), "{err:#}");
+        // Baselines without the cluster fields skip both gates (errors
+        // still gate).
+        std::fs::write(&file, "{\"loadgen_routed_p95_us\": 1e9}").unwrap();
+        assert!(check_workloads_regression(&doc(1.0, 9e9), path, 1.25).is_ok());
         let _ = std::fs::remove_file(&file);
     }
 

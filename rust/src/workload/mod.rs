@@ -256,6 +256,66 @@ pub const C10K_CONNECTIONS: usize = 10_000;
 /// statistic rather than the max of a handful of requests.
 pub const C10K_MIN_REQUESTS: usize = 1_000;
 
+/// Name of the cluster-survival scenario (`ipr loadgen --scenario
+/// node_kill`): closed-loop mixed-τ traffic against a 3-node
+/// [`crate::cluster`] proxy while [`node_kill_plan`] kills one backend
+/// at a phase barrier and restarts it two barriers later. Rust-only
+/// (like [`LATENCY_SLA`]/[`C10K`] it exercises rust-side machinery, not
+/// the generator contract, so it never joins [`PRESET_NAMES`] or the
+/// python golden mirror).
+pub const NODE_KILL: &str = "node_kill";
+
+/// Backends the canonical [`NODE_KILL`] scenario spawns.
+pub const NODE_KILL_NODES: usize = 3;
+
+/// Smallest stream the canonical [`node_kill_plan`] works for: five
+/// segments need a few requests each so every barrier actually has
+/// traffic on both sides of it.
+pub const NODE_KILL_MIN_REQUESTS: usize = 60;
+
+/// One fault/admin action of the [`NODE_KILL`] scenario, pinned to a
+/// request index exactly like [`ChurnAction`]: the driver completes all
+/// earlier requests, applies the op at the barrier, then continues — so
+/// double runs replay the identical schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeKillAction {
+    /// Apply after this many requests have completed.
+    pub at: usize,
+    pub op: NodeKillOp,
+}
+
+/// Cluster fault/admin operations (`node` is a cluster node index).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodeKillOp {
+    /// Hot-add a shadow candidate through the proxy's admin fan-out.
+    /// Shadow adds never change routing (DESIGN.md §15), so the epoch
+    /// machinery is exercised while decisions stay bit-identical to a
+    /// churn-free run.
+    AdminAdd(&'static str),
+    /// Simulated `kill -9` of one backend.
+    Kill(usize),
+    /// Pure barrier: no op, just the fleet-epoch equality assertion.
+    Checkpoint,
+    /// Rebind the killed backend on its original address; it must walk
+    /// Recovering → Healthy (epoch catch-up) before run end.
+    Restart(usize),
+}
+
+/// The canonical fault plan for [`NODE_KILL`], scaled to the stream
+/// length (≥ [`NODE_KILL_MIN_REQUESTS`]): an admin mutation at 20%
+/// (proving fan-out moves every node to epoch 2), node 1 killed at 40%,
+/// a pure checkpoint at 60% (the degraded fleet must still agree on the
+/// epoch), and the node restarted at 80% — leaving the tail of the run
+/// to prove it returns to Healthy and serves traffic.
+pub fn node_kill_plan(requests: usize) -> Vec<NodeKillAction> {
+    vec![
+        NodeKillAction { at: requests / 5, op: NodeKillOp::AdminAdd("nova-pro") },
+        NodeKillAction { at: requests * 2 / 5, op: NodeKillOp::Kill(1) },
+        NodeKillAction { at: requests * 3 / 5, op: NodeKillOp::Checkpoint },
+        NodeKillAction { at: requests * 4 / 5, op: NodeKillOp::Restart(1) },
+    ]
+}
+
 /// Look up a preset by name, scaled to `requests` requests.
 pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
     let one = |lo: f64, hi: f64| {
@@ -421,6 +481,32 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
             stretch_target: 0,
             tenants: one(0.1, 0.6),
             invoke_frac: 0.05,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
+        }),
+        // Cluster survival: the same steady closed-loop mixed-τ traffic
+        // shape as FLEET_CHURN (the point is the fault schedule in
+        // `node_kill_plan`, not the arrival process). The τ population
+        // spans all shed tiers so the shed-ordering contract is
+        // observable if the run ever saturates.
+        NODE_KILL => Some(Scenario {
+            name: NODE_KILL,
+            requests,
+            clients: 6,
+            open_loop: false,
+            base_rps: 500.0,
+            burst_rps: 500.0,
+            burst_len: 0,
+            hot_set: 8,
+            hot_frac: 0.3,
+            stretch_frac: 0.0,
+            stretch_target: 0,
+            tenants: vec![
+                Tenant { name: "quality", weight: 0.3, tau_lo: 0.0, tau_hi: 0.15 },
+                Tenant { name: "balanced", weight: 0.4, tau_lo: 0.25, tau_hi: 0.55 },
+                Tenant { name: "saver", weight: 0.3, tau_lo: 0.7, tau_hi: 1.0 },
+            ],
+            invoke_frac: 0.35,
             budget_lo_ms: 0.0,
             budget_hi_ms: 0.0,
         }),
@@ -640,6 +726,41 @@ mod tests {
         let hot = reqs.iter().filter(|q| q.index < sc.hot_set).count();
         assert!(hot * 10 > reqs.len() * 8, "c10k traffic must be cache-dominated");
         assert_eq!(generate(&world, &sc, 7), reqs);
+    }
+
+    #[test]
+    fn node_kill_plan_is_sorted_and_rust_only() {
+        let sc = preset(NODE_KILL, NODE_KILL_MIN_REQUESTS).expect("node_kill preset exists");
+        assert!(
+            !PRESET_NAMES.contains(&NODE_KILL),
+            "rust-only scenario stays out of the mirrored preset table"
+        );
+        assert_eq!(sc.budget_hi_ms, 0.0, "node_kill stays budget-free");
+        assert!(!sc.open_loop);
+        // τ population must span every shed tier so shed ordering is
+        // observable under saturation.
+        assert!(sc.tenants.iter().any(|t| t.tau_lo < 0.25));
+        assert!(sc.tenants.iter().any(|t| t.tau_hi > 0.75));
+        let plan = node_kill_plan(sc.requests);
+        assert_eq!(plan.len(), 4);
+        assert!(plan.windows(2).all(|w| w[0].at < w[1].at), "barriers strictly ordered");
+        assert!(plan.iter().all(|a| a.at > 0 && a.at < sc.requests));
+        // Kill before restart, of the same (non-zero) node.
+        let killed = plan.iter().find_map(|a| match a.op {
+            NodeKillOp::Kill(i) => Some(i),
+            _ => None,
+        });
+        let restarted = plan.iter().find_map(|a| match a.op {
+            NodeKillOp::Restart(i) => Some(i),
+            _ => None,
+        });
+        assert_eq!(killed, restarted);
+        assert!(killed.unwrap() > 0, "node 0 stays alive (tests introspect its router)");
+        assert!(killed.unwrap() < NODE_KILL_NODES);
+        // Same stream shape as fleet_churn: the generator contract is
+        // untouched (preset digests stay pinned).
+        let world = SynthWorld::default();
+        assert_eq!(generate(&world, &sc, 7), generate(&world, &sc, 7));
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Cluster-tier e2e tests (DESIGN.md §17): node-kill survival with
+//! bit-identical double runs, single-node/cluster decision parity, and
+//! the saturation surface (backpressure vs τ-tier shedding, with
+//! `Retry-After` on every refusal).
+//!
+//! These are the acceptance tests for the `ipr cluster` proxy: a kill
+//! mid-workload must be *absorbed* (replayed, never surfaced), the
+//! fleet must never be torn across an admin fan-out, and the proxy must
+//! add placement — not routing — so decisions cannot depend on which
+//! node served them.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use ipr::cluster::{Cluster, ClusterConfig};
+use ipr::workload::loadgen::{run_scenario, run_scenario_node_kill, LoadgenOptions};
+use ipr::workload::{node_kill_plan, preset, NODE_KILL};
+
+/// Raw one-shot HTTP exchange against the proxy, returning the FULL
+/// response text (status line + headers + body) — the well-formed
+/// clients hide headers, and these tests assert on `Retry-After`.
+fn raw_http(addr: &str, method: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("proxy must accept");
+    s.set_nodelay(true).ok();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: cluster\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("request write");
+    let mut text = String::new();
+    s.read_to_string(&mut text).expect("response read");
+    text
+}
+
+/// The tentpole acceptance test: kill one of three backends at a phase
+/// barrier mid-workload, restart it two barriers later, and require
+/// (a) zero client-visible failures — the kill is absorbed by proxy
+/// replay + client retry, visible only in `retried`; (b) a bounded
+/// shed rate (the CI gate's 0.10 budget); (c) bit-identical decision
+/// digests across a double run — placement noise (which node died,
+/// when probes noticed, how many replays) must never leak into routing;
+/// and (d) an untorn fleet: the run itself asserts epoch agreement at
+/// every barrier and that the restarted node walks back to Healthy.
+#[test]
+fn node_kill_is_absorbed_and_bit_deterministic() {
+    let opts = LoadgenOptions { seed: 11, ..LoadgenOptions::default() };
+    let sc = preset(NODE_KILL, 60).expect("node_kill preset exists");
+    let plan = node_kill_plan(60);
+    let a = run_scenario_node_kill(&opts, &sc, &plan).expect("run A survives the kill");
+    let b = run_scenario_node_kill(&opts, &sc, &plan).expect("run B survives the kill");
+    assert_eq!(a.errors, 0, "run A surfaced client-visible failures");
+    assert_eq!(b.errors, 0, "run B surfaced client-visible failures");
+    assert_eq!(a.requests, 60);
+    assert_eq!(a.stream_digest, b.stream_digest, "request streams diverged");
+    assert_eq!(a.decision_digest, b.decision_digest, "kill leaked into routing decisions");
+    assert_eq!(a.route_mix, b.route_mix);
+    // One admin mutation fanned out (epoch 1 → 2), kill + restart faults.
+    assert_eq!(a.fleet_epoch, 2, "admin fan-out must move the cluster to epoch 2");
+    assert_eq!(a.fleet_actions, 1);
+    assert_eq!(a.fault_actions, 2);
+    // Bounded shed: a 3-node fleet absorbing one kill must not melt down.
+    let shed_rate = a.shed as f64 / a.requests as f64;
+    assert!(shed_rate <= 0.10, "shed rate {shed_rate} above the 0.10 CI budget");
+}
+
+/// With all nodes healthy, cluster-routed decisions are bit-identical
+/// to single-node routing: same stream, same decision digest, same
+/// route mix. The proxy adds placement, never the route.
+#[test]
+fn healthy_cluster_routes_bit_identical_to_single_node() {
+    let opts = LoadgenOptions { seed: 7, ..LoadgenOptions::default() };
+    let sc = preset("uniform", 48).expect("uniform preset exists");
+    let single = run_scenario(&opts, &sc).expect("single-node run");
+    let clustered = run_scenario_node_kill(&opts, &sc, &[]).expect("healthy cluster run");
+    assert_eq!(clustered.errors, 0, "healthy cluster surfaced failures");
+    assert_eq!(clustered.stream_digest, single.stream_digest);
+    assert_eq!(
+        clustered.decision_digest, single.decision_digest,
+        "cluster placement changed routing decisions"
+    );
+    assert_eq!(clustered.route_mix, single.route_mix);
+    assert_eq!(clustered.shed, 0, "a healthy, unsaturated cluster must not shed");
+    assert_eq!(clustered.fleet_epoch, 1, "no admin actions ran");
+}
+
+/// The saturation surface, pinned at the protocol level: with every
+/// healthy node at its in-flight cap, low-τ traffic is shed by tier
+/// while τ ≥ `shed_tau` traffic only ever sees plain backpressure —
+/// and both refusals carry `Retry-After` so well-behaved clients back
+/// off instead of hammering.
+#[test]
+fn saturated_cluster_backpressures_and_sheds_by_tau_tier() {
+    let cluster = Cluster::start(ClusterConfig {
+        nodes: 1,
+        max_inflight: 0, // every pick is saturated
+        shed_after: 0,   // τ-tier shedding kicks in immediately
+        probe_interval: Duration::from_millis(10),
+        ..ClusterConfig::default()
+    })
+    .expect("cluster starts");
+
+    // The proxy's own readiness probe answers before any backend work.
+    let hz = raw_http(&cluster.addr, "GET", "/healthz", "");
+    assert!(hz.starts_with("HTTP/1.1 200"), "{hz}");
+    assert!(hz.contains("ready"), "{hz}");
+
+    // τ below shed_tau: refused as a τ-tier shed (tier 0 for τ=0.1).
+    let shed = raw_http(&cluster.addr, "POST", "/v1/route", "{\"tau\": 0.1}");
+    assert!(shed.starts_with("HTTP/1.1 429"), "{shed}");
+    assert!(shed.contains("Retry-After: 1"), "shed refusal must carry Retry-After: {shed}");
+    assert!(shed.contains("shed: cluster saturated"), "{shed}");
+
+    // τ ≥ shed_tau is NEVER shed: plain backpressure instead.
+    let bp = raw_http(&cluster.addr, "POST", "/v1/route", "{\"tau\": 0.9}");
+    assert!(bp.starts_with("HTTP/1.1 429"), "{bp}");
+    assert!(bp.contains("Retry-After: 1"), "backpressure must carry Retry-After: {bp}");
+    assert!(bp.contains("all healthy backends saturated"), "{bp}");
+
+    let c = cluster.counters();
+    assert_eq!((c.shed, c.backpressure), (1, 1), "one shed + one backpressure refusal");
+    let m = cluster.metrics_text();
+    assert!(m.contains("ipr_cluster_shed_total{tier=\"0\"} 1"), "{m}");
+    assert!(m.contains("ipr_cluster_backpressure_total 1"), "{m}");
+    cluster.stop();
+}

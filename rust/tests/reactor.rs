@@ -343,3 +343,62 @@ fn reactor_stop_drains_promptly_with_idle_conn() {
     );
     drop(idle);
 }
+
+/// Read the FULL response text (status line + headers + body) over a
+/// fresh connection — the well-formed clients strip headers, and the
+/// drain test below asserts `Retry-After` is on the wire.
+fn raw_text(addr: &str, req: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).ok();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut text = String::new();
+    s.read_to_string(&mut text).unwrap();
+    text
+}
+
+/// Graceful-drain ordering on every backend: `/healthz` answers `200
+/// ready` while serving; `begin_drain()` flips it to `503 draining`
+/// (with `Retry-After`, counted in `ipr_http_responses_total`) on a
+/// FRESH connection while the listener keeps serving — liveness
+/// (`/health`) and even new route traffic still answer `200` — and only
+/// then does `stop()` close the listener. This is the contract the
+/// cluster health-checker keys off to route away before a restart.
+#[test]
+fn drain_flips_readiness_before_the_listener_closes() {
+    for backend in backends() {
+        let fx = fixture(backend);
+        let hz = raw_text(&fx.addr, "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(hz.starts_with("HTTP/1.1 200"), "[{backend:?}] {hz}");
+        assert!(hz.contains("ready"), "[{backend:?}] {hz}");
+
+        fx.begin_drain();
+
+        // Readiness flips on a fresh connection, with backoff guidance.
+        let hz = raw_text(&fx.addr, "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(hz.starts_with("HTTP/1.1 503"), "[{backend:?}] {hz}");
+        assert!(hz.contains("draining"), "[{backend:?}] {hz}");
+        assert!(
+            hz.contains("Retry-After: 1"),
+            "[{backend:?}] draining healthz must carry Retry-After: {hz}"
+        );
+        // ... and the refusal is visible to operators by status code.
+        let n = scrape(&fx, "ipr_http_responses_total{code=\"503\"}");
+        assert!(n >= 1, "[{backend:?}] 503 must be counted, got {n}");
+
+        // Liveness and in-flight traffic are NOT drained yet: the
+        // listener keeps serving until stop().
+        let (st, _) = fx.client().get("/health").unwrap();
+        assert_eq!(st, 200, "[{backend:?}] liveness must survive drain");
+        let (st, resp) =
+            fx.client().post("/v1/route", "{\"prompt\": \"w5 w6 w7\", \"tau\": 0.2}").unwrap();
+        assert_eq!(st, 200, "[{backend:?}] route traffic must survive drain: {resp}");
+
+        let t0 = Instant::now();
+        fx.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "[{backend:?}] stop() exceeded the drain deadline: {:?}",
+            t0.elapsed()
+        );
+    }
+}
