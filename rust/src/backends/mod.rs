@@ -91,6 +91,40 @@ impl LatencyModel {
     }
 }
 
+/// Runtime TRUE-QUALITY state of the simulated fleet: a multiplicative
+/// per-candidate factor on the reward oracle (1.0 = the SynthWorld
+/// baseline). The quality analog of [`LatencyModel`]'s fault factor —
+/// shifting it mid-run models a candidate silently degrading (or
+/// improving) after deployment while the frozen QP heads keep predicting
+/// the OLD quality. The online-calibration layer exists to detect and
+/// correct exactly this. Only mutated at deterministic workload barriers.
+#[derive(Debug)]
+pub struct QualityDriftModel {
+    factor_micro: [AtomicU64; N_CANDIDATES],
+}
+
+impl Default for QualityDriftModel {
+    fn default() -> QualityDriftModel {
+        QualityDriftModel {
+            factor_micro: std::array::from_fn(|_| AtomicU64::new(FACTOR_ONE_MICRO)),
+        }
+    }
+}
+
+impl QualityDriftModel {
+    /// Set candidate `idx`'s true-quality multiplier (what its realized
+    /// rewards do from now on; predictions are untouched).
+    pub fn shift(&self, idx: usize, factor: f64) {
+        self.factor_micro[idx]
+            .store((factor.max(0.0) * FACTOR_ONE_MICRO as f64) as u64, Ordering::SeqCst);
+    }
+
+    /// Current true-quality multiplier of candidate `idx`.
+    pub fn factor(&self, idx: usize) -> f64 {
+        self.factor_micro[idx].load(Ordering::SeqCst) as f64 / FACTOR_ONE_MICRO as f64
+    }
+}
+
 /// Result of invoking one simulated endpoint.
 #[derive(Clone, Debug)]
 pub struct InvokeResult {
@@ -115,11 +149,36 @@ pub struct Backend {
     pub time_scale: f64,
     /// Runtime fault/published latency factors (latency-aware routing).
     pub latency: LatencyModel,
+    /// Runtime true-quality drift factors (online calibration).
+    pub drift: QualityDriftModel,
 }
 
 impl Backend {
     pub fn new(world: SynthWorld, time_scale: f64) -> Backend {
-        Backend { world, time_scale, latency: LatencyModel::default() }
+        Backend {
+            world,
+            time_scale,
+            latency: LatencyModel::default(),
+            drift: QualityDriftModel::default(),
+        }
+    }
+
+    /// The reward oracle AS THE WORLD CURRENTLY IS: the SynthWorld reward
+    /// times the candidate's drift factor, clamped to [0, 1]. This is the
+    /// single source of realized quality — invoke results and the
+    /// shadow/calibration comparison signal both read it, so the
+    /// calibration layer learns exactly what responses deliver. The
+    /// factor-1.0 path returns the raw oracle bit-for-bit (no multiply,
+    /// no clamp), keeping every no-drift digest and oracle-equality test
+    /// byte-identical.
+    pub fn oracle_reward(&self, p: &Prompt, idx: usize) -> f64 {
+        let r = self.world.reward(p, idx);
+        let f = self.drift.factor(idx);
+        if f == 1.0 {
+            r
+        } else {
+            (r * f).clamp(0.0, 1.0)
+        }
     }
 
     /// Deterministic out-token estimate shared by cost, latency and
@@ -177,7 +236,7 @@ impl Backend {
     pub fn invoke(&self, idx: usize, tokens: &[u32], identity: Option<&Prompt>) -> InvokeResult {
         let c = &CANDIDATES[idx];
         let out_tokens = self.out_tokens_est(idx, tokens, identity);
-        let reward = identity.map(|p| self.world.reward(p, idx));
+        let reward = identity.map(|p| self.oracle_reward(p, idx));
         let (ttft, tps) = LATENCY_PROFILES[idx];
         let decode_ms = out_tokens as f64 / tps * 1000.0 * self.world.latency_scale(idx);
         let latency_ms = (ttft + decode_ms) * self.latency.fault(idx);
@@ -264,6 +323,28 @@ mod tests {
         b.latency.publish(1, 1.0);
         assert_eq!(b.invoke(1, &p.tokens, Some(&p)).latency_ms, base_real);
         assert_eq!(b.predicted_ms(1, &p.tokens, Some(&p)), base_pred);
+    }
+
+    /// A quality-drift shift scales realized rewards (clamped) without
+    /// touching other candidates; the neutral factor is bit-exact.
+    #[test]
+    fn quality_drift_scales_realized_rewards() {
+        let w = SynthWorld::default();
+        let b = Backend::new(w, 0.0);
+        let p = w.sample_prompt(SPLIT_TEST, 3);
+        let base = w.reward(&p, 0);
+        assert_eq!(b.oracle_reward(&p, 0), base, "neutral factor must be bit-exact");
+        b.drift.shift(0, 0.45);
+        assert_eq!(b.drift.factor(0), 0.45);
+        assert!((b.oracle_reward(&p, 0) - base * 0.45).abs() < 1e-12);
+        assert_eq!(b.invoke(0, &p.tokens, Some(&p)).reward.unwrap(), b.oracle_reward(&p, 0));
+        // other candidates untouched
+        assert_eq!(b.oracle_reward(&p, 2), w.reward(&p, 2));
+        // an amplifying factor clamps at 1.0
+        b.drift.shift(0, 100.0);
+        assert_eq!(b.oracle_reward(&p, 0), 1.0_f64.min(base * 100.0));
+        b.drift.shift(0, 1.0);
+        assert_eq!(b.oracle_reward(&p, 0), base, "recovery restores bit-exactness");
     }
 
     #[test]

@@ -45,7 +45,7 @@ use crate::coordinator::{Router, RouterConfig};
 use crate::registry::Registry;
 use crate::server::{HttpClient, KeepAliveClient, Server, ServerConfig, RETRY_AFTER_SECS};
 use crate::util::error::Result;
-use crate::util::json::parse;
+use crate::util::json::{parse, Json};
 use crate::{anyhow, bail};
 
 /// Per-node health state. The numeric codes are stable (exported as
@@ -339,14 +339,22 @@ impl Inner {
         let client = HttpClient::new(&node.addr);
         let ok = match client.get("/healthz") {
             Ok((200, _)) => match client.get("/metrics") {
+                // BOTH series must scrape cleanly, or the whole probe
+                // fails: a partial/truncated body (mid-write scrape)
+                // must demote through the normal failure walk, never
+                // half-update placement state with garbage.
                 Ok((200, text)) => {
-                    if let Some(d) = scrape_u64(&text, "ipr_connections_open") {
-                        node.depth.store(d, Ordering::SeqCst);
+                    match (
+                        scrape_u64(&text, "ipr_connections_open"),
+                        scrape_u64(&text, "ipr_fleet_epoch"),
+                    ) {
+                        (Some(d), Some(e)) => {
+                            node.depth.store(d, Ordering::SeqCst);
+                            node.epoch.store(e, Ordering::SeqCst);
+                            true
+                        }
+                        _ => false,
                     }
-                    if let Some(e) = scrape_u64(&text, "ipr_fleet_epoch") {
-                        node.epoch.store(e, Ordering::SeqCst);
-                    }
-                    true
                 }
                 _ => false,
             },
@@ -635,6 +643,7 @@ fn err_body(msg: &str) -> String {
 fn is_admin_mutation(method: &str, path: &str) -> bool {
     (method == "POST" && path.starts_with("/admin/v1/candidates"))
         || (method == "DELETE" && path.starts_with("/admin/v1/candidates/"))
+        || (method == "POST" && path == "/admin/v1/calibration")
 }
 
 /// τ of a route/invoke body, for shed-tier classification. Absent or
@@ -769,6 +778,17 @@ fn admin_fanout(inner: &Inner, req: &ProxyReq) -> (u16, String) {
     inner.metrics.admin_fanout.fetch_add(1, Ordering::SeqCst);
     let mut relay: Option<(u16, String)> = None;
     let mut accepted = 0usize;
+    // Calibration FIT requests (POST /admin/v1/calibration with no
+    // explicit "maps") must be CANONICALIZED: each node would otherwise
+    // fit maps from its own local traffic sample, and a fleet whose
+    // members serve different corrections for the same candidate is the
+    // torn-calibration state this machinery exists to prevent. The first
+    // accepting node fits; its response's maps become the explicit body
+    // every later node — and the admin-log entry replayed to recovering
+    // nodes — applies verbatim.
+    let needs_canonical = req.path == "/admin/v1/calibration"
+        && !matches!(parse(&req.body), Ok(j) if j.get("maps").is_some());
+    let mut body = req.body.clone();
     for i in 0..inner.nodes.len() {
         if inner.state(i) != NodeState::Healthy {
             continue;
@@ -776,7 +796,7 @@ fn admin_fanout(inner: &Inner, req: &ProxyReq) -> (u16, String) {
         let client = HttpClient::new(&inner.nodes[i].addr);
         let res = match req.method.as_str() {
             "DELETE" => client.delete(&req.path),
-            _ => client.post(&req.path, &req.body),
+            _ => client.post(&req.path, &body),
         };
         match res {
             Ok((code, resp)) if code < 300 => {
@@ -787,6 +807,17 @@ fn admin_fanout(inner: &Inner, req: &ProxyReq) -> (u16, String) {
                 if ep == Some(expected) {
                     inner.nodes[i].epoch.store(expected, Ordering::SeqCst);
                     accepted += 1;
+                    if accepted == 1 && needs_canonical {
+                        // Our own calibration responses always carry
+                        // "maps"; if a foreign/partial response somehow
+                        // lacks them, fall back to fanning the original
+                        // fit request out (documented degraded mode:
+                        // better per-node fits than a stalled fan-out).
+                        if let Some(maps) = parse(&resp).ok().and_then(|j| j.get("maps").cloned())
+                        {
+                            body = Json::obj(vec![("maps", maps)]).to_string();
+                        }
+                    }
                     if relay.is_none() {
                         relay = Some((code, resp));
                     }
@@ -807,11 +838,9 @@ fn admin_fanout(inner: &Inner, req: &ProxyReq) -> (u16, String) {
         }
     }
     if accepted > 0 {
-        log.push(Mutation {
-            method: req.method.clone(),
-            path: req.path.clone(),
-            body: req.body.clone(),
-        });
+        // The log records the CANONICAL body: catch-up replays install
+        // the same maps every live node serves, bit for bit.
+        log.push(Mutation { method: req.method.clone(), path: req.path.clone(), body });
     }
     relay.unwrap_or((503, err_body("no healthy backend for admin mutation")))
 }
@@ -1130,11 +1159,30 @@ impl Drop for Cluster {
 }
 
 /// First value of a bare (label-free) series in metrics text.
+///
+/// Hardened against partial bodies: a probe can catch a node mid-write
+/// (or mid-death), truncating the response anywhere. Only lines with a
+/// terminating `\n` are trusted — a truncated tail like
+/// `ipr_connections_open 4` (really 42) would otherwise parse as a
+/// confidently wrong number and steer placement at it. Values must also
+/// be finite and non-negative (the series scraped here are gauges of
+/// counts); anything else reads as "not scraped", which the caller
+/// classifies as a probe failure.
 fn scrape_u64(text: &str, series: &str) -> Option<u64> {
-    for line in text.lines() {
+    for line in text.split_inclusive('\n') {
+        // A line without its newline is the truncated tail — skip it.
+        let Some(line) = line.strip_suffix('\n') else {
+            continue;
+        };
+        let line = line.strip_suffix('\r').unwrap_or(line);
         if let Some(rest) = line.strip_prefix(series) {
             if let Some(value) = rest.strip_prefix(' ') {
-                return value.trim().parse::<f64>().ok().map(|f| f as u64);
+                return value
+                    .trim()
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|f| f.is_finite() && *f >= 0.0)
+                    .map(|f| f as u64);
             }
         }
     }
@@ -1186,6 +1234,40 @@ mod tests {
         assert!(!is_admin_mutation("GET", "/admin/v1/candidates"));
         assert!(!is_admin_mutation("POST", "/v1/route"));
         assert!(!is_admin_mutation("DELETE", "/admin/v1/candidates")); // no name
+        assert!(is_admin_mutation("POST", "/admin/v1/calibration"));
+        assert!(!is_admin_mutation("GET", "/admin/v1/calibration"));
+    }
+
+    #[test]
+    fn scrape_ignores_truncated_tail_lines() {
+        // A complete line parses.
+        assert_eq!(scrape_u64("ipr_connections_open 42\n", "ipr_connections_open"), Some(42));
+        // The same bytes without the trailing newline are a body cut
+        // mid-write: "42" could really be "420". Must not parse.
+        assert_eq!(scrape_u64("ipr_connections_open 42", "ipr_connections_open"), None);
+        // A truncated tail must not mask an earlier complete line either.
+        let text = "ipr_fleet_epoch 3\nipr_connections_open 4";
+        assert_eq!(scrape_u64(text, "ipr_fleet_epoch"), Some(3));
+        assert_eq!(scrape_u64(text, "ipr_connections_open"), None);
+        // CRLF bodies parse.
+        assert_eq!(scrape_u64("ipr_fleet_epoch 7\r\n", "ipr_fleet_epoch"), Some(7));
+    }
+
+    #[test]
+    fn scrape_rejects_malformed_and_interleaved_values() {
+        // Garbage, non-finite, and negative values all read as
+        // "not scraped" — the caller demotes on that, never routes on it.
+        assert_eq!(scrape_u64("ipr_fleet_epoch garbage\n", "ipr_fleet_epoch"), None);
+        assert_eq!(scrape_u64("ipr_fleet_epoch NaN\n", "ipr_fleet_epoch"), None);
+        assert_eq!(scrape_u64("ipr_fleet_epoch inf\n", "ipr_fleet_epoch"), None);
+        assert_eq!(scrape_u64("ipr_fleet_epoch -1\n", "ipr_fleet_epoch"), None);
+        // Two responses interleaved mid-line: the mangled line fails to
+        // parse instead of yielding a spliced number.
+        let text = "ipr_fleet_epoch 1ipr_connections_open 9\n";
+        assert_eq!(scrape_u64(text, "ipr_fleet_epoch"), None);
+        // A longer series name must not satisfy a prefix-matching scrape.
+        assert_eq!(scrape_u64("ipr_fleet_epoch_total 5\n", "ipr_fleet_epoch"), None);
+        assert_eq!(scrape_u64("", "ipr_fleet_epoch"), None);
     }
 
     #[test]

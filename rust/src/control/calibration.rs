@@ -1,0 +1,383 @@
+//! Online QE calibration from shadow traffic (DESIGN.md §18).
+//!
+//! PR 5's shadow pipeline already accumulates predicted-vs-oracle error,
+//! but only consults it once, as a promotion gate — when a candidate's
+//! true quality shifts *after* deployment the router keeps trusting stale
+//! predictions and routed quality-parity silently degrades. This module
+//! closes that loop (ROADMAP "Online QE calibration"; RouteLLM's
+//! learn-from-preference-data framing, arXiv:2406.18665): every ACTIVE
+//! candidate keeps a running predicted-vs-oracle accumulator, and a
+//! periodic refresh fits a monotone correction map per candidate that the
+//! router applies on top of the frozen QP-head scores.
+//!
+//! Determinism contract (the part that makes `quality_drift` double runs
+//! bit-identical):
+//!
+//! * [`CalibrationStats`] folds observations into INTEGER micro-unit
+//!   atomics per predicted-score bin. Integer addition is commutative, so
+//!   the accumulated state at a workload barrier is independent of the
+//!   order concurrent recorders ran in — the same request set always
+//!   yields the same fit input.
+//! * [`fit`] is a pure function of that state: weighted PAVA (pool
+//!   adjacent violators) isotonic regression over the non-empty bin
+//!   means. Same input, same map.
+//! * The fitted [`CorrectionMap`] is piecewise-linear and WEAKLY
+//!   MONOTONE: `s1 <= s2 ⇒ eval(s1) <= eval(s2)`. Order preservation is
+//!   what keeps the τ feasible-set nesting and two-axis τ×budget
+//!   monotonicity invariants (`gating`) intact under recalibration —
+//!   the property tests pin it.
+//!
+//! The maps live on the epoch-pinned [`super::FleetView`] inside a
+//! [`CalibrationState`] whose epoch is folded into the score-cache key
+//! seed: publishing a refresh rotates the cache, so no cached score ever
+//! crosses a calibration boundary.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Router-side calibration knobs (CLI: `--calibration-interval`,
+/// `--calibration-min-samples`, `--no-calibration`).
+///
+/// `enabled` gates FEEDING (accumulating predicted-vs-oracle pairs on the
+/// hot path) and the count-based auto-refresh. Correction maps already
+/// published on the fleet view are applied regardless — a map can only
+/// exist after an explicit admin calibration or an enabled auto-refresh,
+/// so the default-off path routes bit-identically to a build without this
+/// layer.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibrationConfig {
+    pub enabled: bool,
+    /// Auto-refresh every N oracle-comparable requests (0 = never —
+    /// refreshes then only happen via `POST /admin/v1/calibration`).
+    pub interval: u64,
+    /// Minimum accumulated window samples per candidate before its map
+    /// is refitted; smaller windows are carried into the next refresh.
+    pub min_samples: u64,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig { enabled: false, interval: 0, min_samples: 64 }
+    }
+}
+
+/// Predicted-score bins over [0, 1]. 16 bins keeps the accumulator small
+/// (three cache lines of atomics) while resolving the score range finer
+/// than the gating thresholds move under a realistic drift.
+pub const CAL_BINS: usize = 16;
+
+/// Running predicted-vs-oracle accumulators for ONE candidate, binned by
+/// predicted score. Lock-free (hot-path: fed from `Router::finish`) and
+/// shared across view republishes via `Arc`, like
+/// [`super::ShadowStats`] / [`super::LatencyStats`]. All sums are
+/// micro-units (`round`, not floor — see the `ShadowStats` MAE fix) so
+/// the state at a barrier is an order-independent integer.
+#[derive(Default)]
+pub struct CalibrationStats {
+    counts: [AtomicU64; CAL_BINS],
+    sum_pred_micro: [AtomicU64; CAL_BINS],
+    sum_oracle_micro: [AtomicU64; CAL_BINS],
+}
+
+impl CalibrationStats {
+    /// Fold one (predicted, oracle) observation in. `predicted` is the
+    /// RAW head score (corrections are fitted raw → oracle, never
+    /// composed on top of themselves).
+    pub fn record(&self, predicted: f32, oracle: f64) {
+        let p = (predicted as f64).clamp(0.0, 1.0);
+        let bin = ((p * CAL_BINS as f64) as usize).min(CAL_BINS - 1);
+        self.counts[bin].fetch_add(1, Ordering::Relaxed);
+        self.sum_pred_micro[bin].fetch_add((p * 1e6).round() as u64, Ordering::Relaxed);
+        self.sum_oracle_micro[bin]
+            .fetch_add((oracle.clamp(0.0, 1.0) * 1e6).round() as u64, Ordering::Relaxed);
+    }
+
+    /// Observations accumulated since the last [`CalibrationStats::take`].
+    pub fn samples(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Drain the window: return the binned state and reset to zero.
+    /// Called only at refresh barriers (no scoring in flight), so the
+    /// per-bin swaps need no cross-bin atomicity.
+    #[allow(clippy::type_complexity)]
+    pub fn take(&self) -> ([u64; CAL_BINS], [u64; CAL_BINS], [u64; CAL_BINS]) {
+        let mut counts = [0u64; CAL_BINS];
+        let mut pred = [0u64; CAL_BINS];
+        let mut oracle = [0u64; CAL_BINS];
+        for b in 0..CAL_BINS {
+            counts[b] = self.counts[b].swap(0, Ordering::Relaxed);
+            pred[b] = self.sum_pred_micro[b].swap(0, Ordering::Relaxed);
+            oracle[b] = self.sum_oracle_micro[b].swap(0, Ordering::Relaxed);
+        }
+        (counts, pred, oracle)
+    }
+}
+
+/// A fitted monotone correction map: piecewise-linear through the
+/// isotonic-regressed bin means, constant beyond the observed range.
+/// `xs` is strictly increasing, `ys` non-decreasing — so
+/// [`CorrectionMap::eval`] is weakly monotone by construction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CorrectionMap {
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl CorrectionMap {
+    /// Corrected score for raw score `s` (weakly monotone in `s`).
+    pub fn eval(&self, s: f32) -> f32 {
+        let n = self.xs.len();
+        if n == 0 {
+            return s;
+        }
+        let x = s as f64;
+        if x <= self.xs[0] {
+            return self.ys[0] as f32;
+        }
+        if x >= self.xs[n - 1] {
+            return self.ys[n - 1] as f32;
+        }
+        // xs[i-1] < x < xs[i] for the partition point i ∈ [1, n-1].
+        let i = self.xs.partition_point(|&v| v < x).min(n - 1).max(1);
+        let (x0, x1) = (self.xs[i - 1], self.xs[i]);
+        let (y0, y1) = (self.ys[i - 1], self.ys[i]);
+        let t = (x - x0) / (x1 - x0);
+        (y0 + t * (y1 - y0)) as f32
+    }
+}
+
+/// Fit one candidate's correction map from a drained accumulator window.
+/// Returns `None` when the window is empty; otherwise the map plus the
+/// window's (mae_before, mae_after) — mean |predicted − oracle| over the
+/// bin means before and after correction, count-weighted.
+#[allow(clippy::type_complexity)]
+pub fn fit(
+    counts: &[u64; CAL_BINS],
+    sum_pred_micro: &[u64; CAL_BINS],
+    sum_oracle_micro: &[u64; CAL_BINS],
+) -> Option<(CorrectionMap, f64, f64)> {
+    let mut xs: Vec<f64> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut ws: Vec<f64> = Vec::new();
+    for b in 0..CAL_BINS {
+        if counts[b] == 0 {
+            continue;
+        }
+        let n = counts[b] as f64;
+        let x = sum_pred_micro[b] as f64 / 1e6 / n;
+        let y = sum_oracle_micro[b] as f64 / 1e6 / n;
+        // Bin means of adjacent bins can collide at a shared boundary;
+        // merge so `xs` stays strictly increasing (eval needs x1 > x0).
+        if let Some(&last) = xs.last() {
+            if x - last < 1e-9 {
+                let w0 = *ws.last().unwrap();
+                *ys.last_mut().unwrap() = (ys.last().unwrap() * w0 + y * n) / (w0 + n);
+                *ws.last_mut().unwrap() = w0 + n;
+                continue;
+            }
+        }
+        xs.push(x);
+        ys.push(y);
+        ws.push(n);
+    }
+    if xs.is_empty() {
+        return None;
+    }
+    // Weighted PAVA: pool adjacent violators until the block means are
+    // non-decreasing; each input point takes its block's pooled mean.
+    let mut blocks: Vec<(f64, f64, usize)> = Vec::with_capacity(ys.len()); // (Σwy, Σw, points)
+    for i in 0..ys.len() {
+        blocks.push((ws[i] * ys[i], ws[i], 1));
+        while blocks.len() >= 2 {
+            let b = blocks[blocks.len() - 1];
+            let a = blocks[blocks.len() - 2];
+            if a.0 / a.1 <= b.0 / b.1 {
+                break;
+            }
+            blocks.truncate(blocks.len() - 2);
+            blocks.push((a.0 + b.0, a.1 + b.1, a.2 + b.2));
+        }
+    }
+    let mut fitted = Vec::with_capacity(ys.len());
+    for &(sy, sw, cnt) in &blocks {
+        for _ in 0..cnt {
+            fitted.push(sy / sw);
+        }
+    }
+    let map = CorrectionMap { xs: xs.clone(), ys: fitted };
+    let wsum: f64 = ws.iter().sum();
+    let mae_before: f64 =
+        xs.iter().zip(&ys).zip(&ws).map(|((&x, &y), &w)| (x - y).abs() * w).sum::<f64>() / wsum;
+    let mae_after: f64 = xs
+        .iter()
+        .zip(&ys)
+        .zip(&ws)
+        .map(|((&x, &y), &w)| (map.eval(x as f32) as f64 - y).abs() * w)
+        .sum::<f64>()
+        / wsum;
+    Some((map, mae_before, mae_after))
+}
+
+/// The calibration layer of one published fleet view: an epoch-numbered
+/// immutable set of per-candidate correction maps. Epoch 0 = never
+/// calibrated (no maps, exact no-op). The epoch is folded into the
+/// view's score-cache key seed, so every refresh rotates the cache.
+#[derive(Clone)]
+pub struct CalibrationState {
+    /// Calibration epoch (bumps on every refresh/apply, independent of
+    /// the fleet epoch). Exported as `ipr_calibration_epoch`.
+    pub epoch: u64,
+    /// Total per-candidate map updates applied so far
+    /// (`ipr_calibration_updates_total`).
+    pub updates: u64,
+    /// Correction maps by candidate name. Absent name = identity.
+    pub maps: std::collections::BTreeMap<String, Arc<CorrectionMap>>,
+    /// Count-weighted MAE over the last refresh window, before/after
+    /// correction (NaN until the first fit).
+    pub mae_before: f64,
+    pub mae_after: f64,
+}
+
+impl Default for CalibrationState {
+    fn default() -> Self {
+        CalibrationState {
+            epoch: 0,
+            updates: 0,
+            maps: std::collections::BTreeMap::new(),
+            mae_before: f64::NAN,
+            mae_after: f64::NAN,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn accumulate(pairs: &[(f32, f64)]) -> CalibrationStats {
+        let s = CalibrationStats::default();
+        for &(p, o) in pairs {
+            s.record(p, o);
+        }
+        s
+    }
+
+    #[test]
+    fn take_drains_and_resets() {
+        let s = accumulate(&[(0.1, 0.2), (0.9, 0.8), (0.55, 0.5)]);
+        assert_eq!(s.samples(), 3);
+        let (counts, pred, oracle) = s.take();
+        assert_eq!(counts.iter().sum::<u64>(), 3);
+        assert!(pred.iter().sum::<u64>() > 0);
+        assert!(oracle.iter().sum::<u64>() > 0);
+        assert_eq!(s.samples(), 0, "take must reset the window");
+        let (c2, _, _) = s.take();
+        assert_eq!(c2.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn fit_of_empty_window_is_none() {
+        let s = CalibrationStats::default();
+        let (c, p, o) = s.take();
+        assert!(fit(&c, &p, &o).is_none());
+    }
+
+    #[test]
+    fn well_calibrated_scores_fit_a_near_identity_map() {
+        let mut rng = Rng::new(11);
+        let s = CalibrationStats::default();
+        for _ in 0..4000 {
+            let p = rng.next_f64();
+            s.record(p as f32, p);
+        }
+        let (c, sp, so) = s.take();
+        let (map, before, after) = fit(&c, &sp, &so).unwrap();
+        assert!(before < 1e-3, "{before}");
+        assert!(after <= before + 1e-12);
+        for s in [0.05f32, 0.3, 0.5, 0.77, 0.95] {
+            assert!((map.eval(s) - s).abs() < 0.05, "eval({s}) = {}", map.eval(s));
+        }
+    }
+
+    #[test]
+    fn drifted_oracle_fits_a_shrinking_map_and_reduces_mae() {
+        // Predictions say p, the world now delivers 0.5·p: the fitted map
+        // must pull scores down toward the truth.
+        let mut rng = Rng::new(7);
+        let s = CalibrationStats::default();
+        for _ in 0..4000 {
+            let p = rng.next_f64();
+            s.record(p as f32, 0.5 * p);
+        }
+        let (c, sp, so) = s.take();
+        let (map, before, after) = fit(&c, &sp, &so).unwrap();
+        assert!(before > 0.1, "uncorrected MAE must show the drift: {before}");
+        assert!(after < before * 0.2, "correction must fix most of it: {after} vs {before}");
+        assert!((map.eval(0.8) - 0.4).abs() < 0.05, "{}", map.eval(0.8));
+    }
+
+    #[test]
+    fn pava_pools_violators_into_a_monotone_fit() {
+        // Hand-build a violating profile: bin means 0.8, 0.2 (descending)
+        // must pool to their weighted mean.
+        let mut counts = [0u64; CAL_BINS];
+        let mut sp = [0u64; CAL_BINS];
+        let mut so = [0u64; CAL_BINS];
+        counts[2] = 2;
+        sp[2] = 2 * 150_000; // mean pred 0.15
+        so[2] = 2 * 800_000; // mean oracle 0.8
+        counts[10] = 2;
+        sp[10] = 2 * 650_000; // mean pred 0.65
+        so[10] = 2 * 200_000; // mean oracle 0.2  ← violator
+        let (map, _, _) = fit(&counts, &sp, &so).unwrap();
+        assert_eq!(map.ys[0], map.ys[1], "violators must pool");
+        assert!((map.ys[0] - 0.5).abs() < 1e-9, "{}", map.ys[0]);
+    }
+
+    /// The satellite property: a fitted correction map NEVER reorders
+    /// scores. This is what keeps the τ feasible-set nesting and τ×budget
+    /// monotonicity invariants true under recalibration.
+    #[test]
+    fn correction_map_preserves_score_ordering() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(0x5EED ^ seed);
+            let s = CalibrationStats::default();
+            // Arbitrary, noisy, partly anti-correlated oracle.
+            for _ in 0..500 {
+                let p = rng.next_f64();
+                let o = (0.3 + 0.9 * (1.0 - p) * rng.next_f64()).clamp(0.0, 1.0);
+                s.record(p as f32, o);
+            }
+            let (c, sp, so) = s.take();
+            let (map, _, _) = fit(&c, &sp, &so).unwrap();
+            for y in map.ys.windows(2) {
+                assert!(y[0] <= y[1], "fitted ys must be non-decreasing: {:?}", map.ys);
+            }
+            let mut probes: Vec<f32> =
+                (0..200).map(|_| rng.next_f64() as f32 * 1.4 - 0.2).collect();
+            probes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for w in probes.windows(2) {
+                assert!(
+                    map.eval(w[0]) <= map.eval(w[1]),
+                    "eval must be weakly monotone: eval({}) = {} > eval({}) = {}",
+                    w[0],
+                    map.eval(w[0]),
+                    w[1],
+                    map.eval(w[1])
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_is_identity_shaped_at_the_edges() {
+        let map = CorrectionMap { xs: vec![0.2, 0.6], ys: vec![0.3, 0.5] };
+        assert_eq!(map.eval(0.0), 0.3, "constant below the observed range");
+        assert_eq!(map.eval(1.0), 0.5, "constant above the observed range");
+        assert!((map.eval(0.4) - 0.4).abs() < 1e-6, "midpoint interpolates");
+        let empty = CorrectionMap { xs: vec![], ys: vec![] };
+        assert_eq!(empty.eval(0.37), 0.37, "empty map is identity");
+    }
+}

@@ -35,8 +35,12 @@
 //!   pinned on the old view reads a well-formed vector to the end.
 //! * **promote**: a pure view flip — no model change at all.
 
+pub mod calibration;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+pub use calibration::{CalibrationConfig, CalibrationState, CalibrationStats, CorrectionMap};
 
 use crate::qe::QeService;
 use crate::registry::Registry;
@@ -83,11 +87,14 @@ pub struct ShadowStats {
 }
 
 impl ShadowStats {
-    /// Fold one predicted-vs-oracle observation in.
+    /// Fold one predicted-vs-oracle observation in. The micro-unit
+    /// conversion ROUNDS: truncation would floor every sample, biasing
+    /// the accumulated MAE low by up to 1e-6 per sample — enough to slip
+    /// a candidate past a promotion gate it sits right on.
     pub fn record(&self, predicted: f32, oracle: f64) {
         self.calibrated.fetch_add(1, Ordering::Relaxed);
         let err = (predicted as f64 - oracle).abs();
-        self.abs_err_micro.fetch_add((err * 1e6) as u64, Ordering::Relaxed);
+        self.abs_err_micro.fetch_add((err * 1e6).round() as u64, Ordering::Relaxed);
     }
 
     /// Mean absolute predicted-vs-oracle error so far (∞ with no samples,
@@ -115,39 +122,57 @@ pub const LATENCY_BUCKETS: usize = 16;
 /// published latency factors (updated at deterministic barriers), never
 /// on these concurrently-ordered observations — that is the determinism
 /// contract (DESIGN.md §15).
-#[derive(Default)]
 pub struct LatencyStats {
     /// Observations folded in so far.
     pub samples: AtomicU64,
     /// EWMA of realized latency, stored in micro-ms (integer atomics).
+    /// Starts at [`Self::UNSEEDED`]; the first observation seeds it.
     ewma_micro_ms: AtomicU64,
     /// Log₂-ms histogram counts.
     buckets: [AtomicU64; LATENCY_BUCKETS],
 }
 
+impl Default for LatencyStats {
+    fn default() -> Self {
+        LatencyStats {
+            samples: AtomicU64::new(0),
+            ewma_micro_ms: AtomicU64::new(Self::UNSEEDED),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
 impl LatencyStats {
+    /// Sentinel for "no observation yet". Seeding is decided INSIDE the
+    /// `fetch_update` closure on this value, not by a separate
+    /// samples-counter check: a counter read plus a later store can
+    /// interleave under two concurrent first recorders (both see n == 0,
+    /// the slower plain store overwrites the faster thread's EWMA fold,
+    /// dropping its sample). One CAS loop over the sentinel cannot.
+    const UNSEEDED: u64 = u64::MAX;
+
     /// Fold one realized latency in with smoothing factor `alpha`
     /// (`--latency-ewma-alpha`); the first observation seeds the EWMA.
     pub fn record(&self, ms: f64, alpha: f64) {
-        let n = self.samples.fetch_add(1, Ordering::Relaxed);
+        self.samples.fetch_add(1, Ordering::Relaxed);
         self.buckets[Self::bucket_of(ms)].fetch_add(1, Ordering::Relaxed);
-        if n == 0 {
-            self.ewma_micro_ms.store((ms.max(0.0) * 1e6) as u64, Ordering::Relaxed);
-        } else {
-            let _ = self.ewma_micro_ms.fetch_update(
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-                |old| {
-                    let cur = old as f64 / 1e6;
-                    Some((((1.0 - alpha) * cur + alpha * ms.max(0.0)) * 1e6) as u64)
-                },
-            );
-        }
+        let sample_micro = ((ms.max(0.0) * 1e6) as u64).min(Self::UNSEEDED - 1);
+        let _ = self.ewma_micro_ms.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+            if old == Self::UNSEEDED {
+                Some(sample_micro)
+            } else {
+                let cur = old as f64 / 1e6;
+                Some((((1.0 - alpha) * cur + alpha * ms.max(0.0)) * 1e6) as u64)
+            }
+        });
     }
 
     /// Current EWMA in ms (0.0 before the first observation).
     pub fn ewma_ms(&self) -> f64 {
-        self.ewma_micro_ms.load(Ordering::Relaxed) as f64 / 1e6
+        match self.ewma_micro_ms.load(Ordering::Relaxed) {
+            Self::UNSEEDED => 0.0,
+            v => v as f64 / 1e6,
+        }
     }
 
     /// Count in histogram bucket `i` ∈ [0, [`LATENCY_BUCKETS`]).
@@ -212,6 +237,10 @@ pub struct FleetCandidate {
     /// Realized-latency accumulators (EWMA + histogram); shared across
     /// republishes like `stats`, observability-only (never routing input).
     pub latency: Arc<LatencyStats>,
+    /// Online-calibration accumulators (predicted-vs-oracle, binned by
+    /// predicted score) while ACTIVE; drained at each calibration
+    /// refresh. Shared across republishes like `latency`.
+    pub cal: Arc<CalibrationStats>,
 }
 
 impl FleetCandidate {
@@ -240,9 +269,17 @@ pub struct FleetView {
     /// Index (into the active arrays) of the most expensive active
     /// candidate — the "always-strongest" counterfactual for live CSR.
     pub strongest_active: usize,
+    /// The calibration layer this view serves: epoch-numbered correction
+    /// maps, folded into `key_seed` (a refresh rotates the cache).
+    pub calibration: Arc<CalibrationState>,
+    /// Correction map per ACTIVE candidate (parallel to `active_heads`);
+    /// `None` = identity. Applied to raw scores in `Router::finish`.
+    pub active_corrections: Vec<Option<Arc<CorrectionMap>>>,
+    /// Calibration accumulators per ACTIVE candidate (parallel arrays).
+    pub active_cal: Vec<Arc<CalibrationStats>>,
     /// Score-cache key seed for THIS epoch (model identity + kind +
-    /// membership + epoch): rotated into the cache at publication so no
-    /// hit can cross epochs.
+    /// membership + epoch + calibration epoch): rotated into the cache at
+    /// publication so no hit can cross epochs or calibration boundaries.
     pub key_seed: u64,
 }
 
@@ -256,17 +293,22 @@ impl FleetView {
         model_id: String,
         kind: String,
         candidates: Vec<FleetCandidate>,
+        calibration: Arc<CalibrationState>,
     ) -> FleetView {
         let mut active_heads = Vec::new();
         let mut active_global = Vec::new();
         let mut active_costs = Vec::new();
         let mut active_names = Vec::new();
+        let mut active_corrections = Vec::new();
+        let mut active_cal = Vec::new();
         for c in &candidates {
             if c.state == Lifecycle::Active {
                 active_heads.push(c.head);
                 active_global.push(c.global);
                 active_costs.push(c.unit_cost());
                 active_names.push(c.name.clone());
+                active_corrections.push(calibration.maps.get(&c.name).cloned());
+                active_cal.push(c.cal.clone());
             }
         }
         let strongest_active = (0..active_costs.len())
@@ -274,6 +316,7 @@ impl FleetView {
             .unwrap_or(0);
         let mut seed = key_seed(&model_id, &kind, &[]);
         seed = mix64(seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        seed = mix64(seed ^ calibration.epoch.wrapping_mul(0xA076_1D64_78BD_642F));
         for c in &candidates {
             for b in c.name.bytes() {
                 seed = mix64(seed ^ b as u64);
@@ -291,6 +334,9 @@ impl FleetView {
             active_costs,
             active_names,
             strongest_active,
+            calibration,
+            active_corrections,
+            active_cal,
             key_seed: seed,
         }
     }
@@ -369,10 +415,17 @@ impl FleetController {
                     dynamic: false,
                     stats: None,
                     latency: Arc::new(LatencyStats::default()),
+                    cal: Arc::new(CalibrationStats::default()),
                 }
             })
             .collect();
-        let view = Arc::new(FleetView::build(1, entry.id.clone(), qe.cfg.kind.clone(), candidates));
+        let view = Arc::new(FleetView::build(
+            1,
+            entry.id.clone(),
+            qe.cfg.kind.clone(),
+            candidates,
+            Arc::new(CalibrationState::default()),
+        ));
         qe.cache().rotate_seed(view.key_seed);
         Arc::new(FleetController {
             registry,
@@ -398,11 +451,24 @@ impl FleetController {
     /// under the new seed was computed by the live model, whose column
     /// set is always a superset of what the pinned views index.
     fn publish(&self, old: &FleetView, candidates: Vec<FleetCandidate>) -> Arc<FleetView> {
+        self.publish_with(old, candidates, old.calibration.clone())
+    }
+
+    /// [`Self::publish`], with a (possibly new) calibration layer. A
+    /// changed calibration epoch changes the key seed exactly like a
+    /// fleet mutation does, so no cached score crosses the boundary.
+    fn publish_with(
+        &self,
+        old: &FleetView,
+        candidates: Vec<FleetCandidate>,
+        calibration: Arc<CalibrationState>,
+    ) -> Arc<FleetView> {
         let v = Arc::new(FleetView::build(
             old.epoch + 1,
             old.model_id.clone(),
             old.kind.clone(),
             candidates,
+            calibration,
         ));
         self.qe.cache().rotate_seed(v.key_seed);
         self.view.store(v.clone());
@@ -458,6 +524,7 @@ impl FleetController {
             dynamic: true,
             stats: Some(Arc::new(ShadowStats::default())),
             latency: Arc::new(LatencyStats::default()),
+            cal: Arc::new(CalibrationStats::default()),
         });
         Ok(self.publish(&old, candidates))
     }
@@ -521,7 +588,17 @@ impl FleetController {
         }
         let candidates: Vec<FleetCandidate> =
             old.candidates.iter().filter(|c| c.name != name).cloned().collect();
-        let view = self.publish(&old, candidates);
+        // A retired member's calibration state goes with it: keeping the
+        // map would silently re-apply a stale correction if the name is
+        // ever re-added as a fresh bank.
+        let calibration = if old.calibration.maps.contains_key(name) {
+            let mut st = (*old.calibration).clone();
+            st.maps.remove(name);
+            Arc::new(st)
+        } else {
+            old.calibration.clone()
+        };
+        let view = self.publish_with(&old, candidates, calibration);
         if target.dynamic {
             // The publish above IS the retire — the candidate is out of
             // every new view and the cache is re-keyed. Tombstoning the
@@ -535,6 +612,86 @@ impl FleetController {
         }
         Ok(view)
     }
+
+    /// Refit correction maps from every active candidate's accumulated
+    /// window and publish them as a new calibration epoch.
+    ///
+    /// Sequencing: admin lock → QE control-message barrier (every batch
+    /// scored under the OLD calibration has drained through the engine,
+    /// so the drained accumulators describe a closed window) → drain +
+    /// fit per candidate with ≥ `min_samples` observations → publish
+    /// (cache rotates onto the new seed before the view lands).
+    ///
+    /// A refresh with nothing to fit still publishes an epoch: callers
+    /// (and the cluster tier's +1-per-accepted-mutation arithmetic) rely
+    /// on every accepted refresh bumping the fleet epoch exactly once.
+    pub fn refresh_calibration(&self, min_samples: u64) -> Result<CalibrationRefresh> {
+        let _g = self.admin.lock().unwrap_or_else(|e| e.into_inner());
+        self.qe.barrier()?;
+        let old = self.view();
+        let mut st = (*old.calibration).clone();
+        let mut fitted = 0u64;
+        let mut w_before = 0.0f64;
+        let mut w_after = 0.0f64;
+        let mut weight = 0.0f64;
+        for (i, name) in old.active_names.iter().enumerate() {
+            let cal = &old.active_cal[i];
+            if cal.samples() < min_samples.max(1) {
+                continue;
+            }
+            let (counts, pred, oracle) = cal.take();
+            let n: u64 = counts.iter().sum();
+            if let Some((map, before, after)) = calibration::fit(&counts, &pred, &oracle) {
+                st.maps.insert(name.clone(), Arc::new(map));
+                w_before += before * n as f64;
+                w_after += after * n as f64;
+                weight += n as f64;
+                fitted += 1;
+            }
+        }
+        if weight > 0.0 {
+            st.mae_before = w_before / weight;
+            st.mae_after = w_after / weight;
+        }
+        st.epoch += 1;
+        st.updates += fitted;
+        let view = self.publish_with(&old, old.candidates.clone(), Arc::new(st));
+        Ok(CalibrationRefresh { view, fitted })
+    }
+
+    /// Install an EXPLICIT set of correction maps (the cluster tier's
+    /// canonical-calibration replay path): replaces the full map set,
+    /// filtered to current fleet members, drains every active
+    /// accumulator (those observations described the pre-apply maps'
+    /// window), and publishes a new calibration epoch.
+    pub fn apply_calibration(
+        &self,
+        maps: std::collections::BTreeMap<String, Arc<CorrectionMap>>,
+    ) -> Result<CalibrationRefresh> {
+        let _g = self.admin.lock().unwrap_or_else(|e| e.into_inner());
+        self.qe.barrier()?;
+        let old = self.view();
+        let mut st = (*old.calibration).clone();
+        st.maps = maps
+            .into_iter()
+            .filter(|(name, _)| old.candidate(name).is_some())
+            .collect();
+        let applied = st.maps.len() as u64;
+        for cal in &old.active_cal {
+            let _ = cal.take();
+        }
+        st.epoch += 1;
+        st.updates += applied;
+        let view = self.publish_with(&old, old.candidates.clone(), Arc::new(st));
+        Ok(CalibrationRefresh { view, fitted: applied })
+    }
+}
+
+/// Result of a calibration refresh/apply, for the admin surface.
+pub struct CalibrationRefresh {
+    pub view: Arc<FleetView>,
+    /// Candidates whose correction map was (re)fitted or installed.
+    pub fitted: u64,
 }
 
 #[cfg(test)]
@@ -656,6 +813,148 @@ mod tests {
         assert_eq!(v2.epoch, 2);
         assert_eq!(v2.candidates[0].latency.samples.load(Ordering::Relaxed), 1);
         assert!((v2.candidates[0].latency.ewma_ms() - 42.0).abs() < 1e-6);
+        qe.shutdown();
+    }
+
+    /// Satellite: micro-unit accumulation must ROUND, not floor. With
+    /// truncation every sample biases low by up to 1e-6 (≈5e-7 expected),
+    /// so 10k samples drift the MAE visibly away from the f64 reference;
+    /// with rounding the residual is the unbiased ±0.5 micro-unit noise,
+    /// orders of magnitude smaller.
+    #[test]
+    fn shadow_mae_accumulation_matches_f64_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xCAFE);
+        let s = ShadowStats::default();
+        let mut reference = 0.0f64;
+        let n = 10_000;
+        for _ in 0..n {
+            let predicted = rng.next_f64() as f32;
+            let oracle = rng.next_f64();
+            s.record(predicted, oracle);
+            reference += (predicted as f64 - oracle).abs();
+        }
+        let reference_mae = reference / n as f64;
+        let got = s.mae();
+        // Floor bias would be ≈ -5e-7 here; rounding keeps the residual
+        // around 1e-9. The threshold separates the two by ~5x.
+        assert!(
+            (got - reference_mae).abs() < 1e-7,
+            "accumulated MAE {got} drifted from f64 reference {reference_mae}"
+        );
+    }
+
+    /// Satellite: two concurrent FIRST recorders must both land. The old
+    /// two-step init (read samples counter, then plain store) could let
+    /// a slow seeder overwrite the other thread's EWMA fold — with both
+    /// threads recording the same value v, any interleaving of the fixed
+    /// single-CAS path yields exactly v, while the racy path could yield
+    /// αv. Loom-style: many iterations, barrier-aligned starts.
+    #[test]
+    fn latency_ewma_first_sample_race() {
+        use std::sync::Barrier;
+        for _ in 0..200 {
+            let s = Arc::new(LatencyStats::default());
+            let gate = Arc::new(Barrier::new(2));
+            let threads: Vec<_> = (0..2)
+                .map(|_| {
+                    let s = s.clone();
+                    let gate = gate.clone();
+                    std::thread::spawn(move || {
+                        gate.wait();
+                        s.record(100.0, 0.2);
+                    })
+                })
+                .collect();
+            for t in threads {
+                t.join().unwrap();
+            }
+            assert_eq!(s.samples.load(Ordering::Relaxed), 2);
+            assert!(
+                (s.ewma_ms() - 100.0).abs() < 1e-6,
+                "a first-sample interleaving corrupted the EWMA: {}",
+                s.ewma_ms()
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_refresh_fits_and_rotates_epoch_and_seed() {
+        let (fleet, qe) = controller();
+        let v1 = fleet.view();
+        assert_eq!(v1.calibration.epoch, 0);
+        assert!(v1.active_corrections.iter().all(|m| m.is_none()));
+        // Feed a drifted window into candidate 0 only.
+        for i in 0..200 {
+            let p = (i % 100) as f32 / 100.0;
+            v1.active_cal[0].record(p, (p as f64) * 0.5);
+        }
+        let r = fleet.refresh_calibration(8).unwrap();
+        assert_eq!(r.fitted, 1);
+        assert_eq!(r.view.epoch, 2);
+        assert_eq!(r.view.calibration.epoch, 1);
+        assert_eq!(r.view.calibration.updates, 1);
+        assert!(r.view.calibration.mae_before > 0.1);
+        assert!(r.view.calibration.mae_after < r.view.calibration.mae_before);
+        assert_ne!(r.view.key_seed, v1.key_seed, "refresh must rotate the cache seed");
+        assert_eq!(qe.cache().seed(), r.view.key_seed);
+        let name = &r.view.active_names[0];
+        assert!(r.view.calibration.maps.contains_key(name));
+        assert!(r.view.active_corrections[0].is_some());
+        assert!(r.view.active_corrections[1].is_none(), "unfed candidates stay identity");
+        // The correction actually shrinks a drifted score.
+        let corrected = r.view.active_corrections[0].as_ref().unwrap().eval(0.8);
+        assert!(corrected < 0.6, "{corrected}");
+        // The window drained: an immediate second refresh fits nothing…
+        let r2 = fleet.refresh_calibration(8).unwrap();
+        assert_eq!(r2.fitted, 0);
+        // …but still publishes an epoch (the cluster tier counts on it).
+        assert_eq!(r2.view.epoch, 3);
+        assert_eq!(r2.view.calibration.epoch, 2);
+        assert!(
+            r2.view.active_corrections[0].is_some(),
+            "an empty refresh must keep the existing maps"
+        );
+        qe.shutdown();
+    }
+
+    /// Satellite: retiring a candidate drops its calibration state.
+    #[test]
+    fn retire_drops_calibration_state() {
+        let (fleet, qe) = controller();
+        let v = fleet.view();
+        let name = v.active_names[0].clone();
+        for i in 0..100 {
+            v.active_cal[0].record(i as f32 / 100.0, 0.3);
+        }
+        let r = fleet.refresh_calibration(8).unwrap();
+        assert!(r.view.calibration.maps.contains_key(&name));
+        let v = fleet.retire_candidate(&name).unwrap();
+        assert!(
+            !v.calibration.maps.contains_key(&name),
+            "retire must drop the retired member's correction map"
+        );
+        qe.shutdown();
+    }
+
+    #[test]
+    fn apply_calibration_installs_explicit_maps() {
+        let (fleet, qe) = controller();
+        let mut maps = std::collections::BTreeMap::new();
+        maps.insert(
+            "claude-3-haiku".to_string(),
+            Arc::new(CorrectionMap { xs: vec![0.0, 1.0], ys: vec![0.0, 0.5] }),
+        );
+        maps.insert(
+            "not-a-member".to_string(),
+            Arc::new(CorrectionMap { xs: vec![0.0, 1.0], ys: vec![0.0, 1.0] }),
+        );
+        let r = fleet.apply_calibration(maps).unwrap();
+        assert_eq!(r.fitted, 1, "non-members must be filtered out");
+        assert_eq!(r.view.calibration.epoch, 1);
+        assert!(r.view.calibration.maps.contains_key("claude-3-haiku"));
+        assert!(!r.view.calibration.maps.contains_key("not-a-member"));
+        assert!((r.view.active_corrections[0].as_ref().unwrap().eval(1.0) - 0.5).abs() < 1e-6);
         qe.shutdown();
     }
 

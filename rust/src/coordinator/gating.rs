@@ -1,6 +1,25 @@
 //! Tolerance gating + feasible-set selection (paper Eq. 3-4, Algorithm 1,
 //! App. H Table 12).
 
+use std::sync::Arc;
+
+use crate::control::CorrectionMap;
+
+/// Apply the fleet's per-candidate calibration corrections to a raw
+/// active-score vector IN PLACE, before `route_decision*` sees it.
+/// `maps` is the view's `active_corrections` (parallel to the scores);
+/// `None` = identity. Each map is weakly monotone, so corrected scores
+/// preserve each candidate's ordering across prompts — the τ feasible-set
+/// nesting and τ×budget monotonicity invariants survive recalibration
+/// (pinned by the tests below and `tests/proptests.rs`).
+pub fn apply_corrections(scores: &mut [f32], maps: &[Option<Arc<CorrectionMap>>]) {
+    for (s, m) in scores.iter_mut().zip(maps) {
+        if let Some(m) = m {
+            *s = m.eval(*s);
+        }
+    }
+}
+
 /// Threshold strategy: how (r_min, r_max) of Eq. 4 are chosen.
 ///
 /// Paper Table 12:
@@ -565,5 +584,88 @@ mod tests {
         let s = GatingStrategy::Static { static_min: 0.3, static_max: 0.7 };
         assert!((s.threshold(&scores, 0.0) - 0.7).abs() < 1e-6);
         assert!((s.threshold(&scores, 1.0) - 0.3).abs() < 1e-6);
+    }
+
+    // -- calibration corrections ------------------------------------------
+
+    /// A shrinking map (drifted candidate) pulls that candidate out of
+    /// the feasible set; identity maps leave everything untouched.
+    #[test]
+    fn corrections_apply_per_candidate() {
+        let shrink = Arc::new(CorrectionMap { xs: vec![0.0, 1.0], ys: vec![0.0, 0.5] });
+        let mut scores = [0.8f32, 0.7, 0.8, 0.85];
+        apply_corrections(&mut scores, &[Some(shrink), None, None, None]);
+        assert!((scores[0] - 0.4).abs() < 1e-6);
+        assert_eq!(&scores[1..], &[0.7, 0.8, 0.85]);
+        // no maps at all (off path): nothing changes
+        let mut raw = [0.8f32, 0.7];
+        apply_corrections(&mut raw, &[None, None]);
+        assert_eq!(raw, [0.8, 0.7]);
+    }
+
+    /// Satellite invariant 1: τ feasible-set nesting survives
+    /// recalibration — for corrected scores exactly like raw ones, a
+    /// larger τ admits a superset.
+    #[test]
+    fn tau_nesting_survives_recalibration() {
+        let maps: Vec<Option<Arc<CorrectionMap>>> = vec![
+            Some(Arc::new(CorrectionMap { xs: vec![0.0, 1.0], ys: vec![0.0, 0.45] })),
+            None,
+            Some(Arc::new(CorrectionMap { xs: vec![0.2, 0.6], ys: vec![0.3, 0.9] })),
+            Some(Arc::new(CorrectionMap { xs: vec![0.0, 0.5, 1.0], ys: vec![0.1, 0.1, 0.8] })),
+        ];
+        let mut scores = [0.62f32, 0.74, 0.81, 0.86];
+        apply_corrections(&mut scores, &maps);
+        let mut prev: Option<Vec<usize>> = None;
+        for i in 0..=20 {
+            let tau = i as f64 / 20.0;
+            let d = route_decision(&scores, &COSTS, tau, GatingStrategy::DynamicMax, 0.0);
+            if let Some(p) = &prev {
+                assert!(
+                    p.iter().all(|i| d.feasible.contains(i)),
+                    "larger τ must admit a superset: {:?} ⊄ {:?}",
+                    p,
+                    d.feasible
+                );
+            }
+            prev = Some(d.feasible);
+        }
+    }
+
+    /// Satellite invariant 2: the two-axis τ×budget monotonicity
+    /// (tightening budget nests feasible sets at fixed τ) survives
+    /// recalibration.
+    #[test]
+    fn budget_nesting_survives_recalibration() {
+        let maps: Vec<Option<Arc<CorrectionMap>>> = vec![
+            Some(Arc::new(CorrectionMap { xs: vec![0.0, 1.0], ys: vec![0.0, 0.5] })),
+            None,
+            Some(Arc::new(CorrectionMap { xs: vec![0.3, 0.9], ys: vec![0.4, 0.85] })),
+            None,
+        ];
+        let mut scores = [0.5f32, 0.7, 0.8, 0.85];
+        apply_corrections(&mut scores, &maps);
+        let mut prev: Option<Vec<usize>> = None;
+        for budget in [3000.0, 1900.0, 900.0, 600.0] {
+            let b = route_decision_budgeted(
+                &scores,
+                &COSTS,
+                &PRED_MS,
+                Some(budget),
+                0.9,
+                GatingStrategy::DynamicMax,
+                0.0,
+            )
+            .unwrap();
+            if let Some(p) = &prev {
+                assert!(
+                    b.decision.feasible.iter().all(|i| p.contains(i)),
+                    "feasible sets must nest under corrected scores: {:?} ⊄ {:?}",
+                    b.decision.feasible,
+                    p
+                );
+            }
+            prev = Some(b.decision.feasible);
+        }
     }
 }

@@ -220,6 +220,21 @@ impl Metrics {
                 "ipr_fleet_swaps_total {}\n",
                 fleet.swaps.load(Ordering::Relaxed)
             ));
+            // Online QE calibration (DESIGN.md §18): the epoch gauge is
+            // the staleness signal (flat under drift = recalibration has
+            // stopped firing); the MAE pair is the health signal (a
+            // growing mae_before with a small mae_after means drift is
+            // arriving AND being corrected; both growing means the
+            // monotone family can no longer express the correction).
+            let cal = &v.calibration;
+            out.push_str(&format!("ipr_calibration_epoch {}\n", cal.epoch));
+            out.push_str(&format!("ipr_calibration_updates_total {}\n", cal.updates));
+            if cal.mae_before.is_finite() {
+                out.push_str(&format!("ipr_calibration_mae_before {:.4}\n", cal.mae_before));
+            }
+            if cal.mae_after.is_finite() {
+                out.push_str(&format!("ipr_calibration_mae_after {:.4}\n", cal.mae_after));
+            }
             for c in v.shadows() {
                 let Some(s) = &c.stats else { continue };
                 out.push_str(&format!(

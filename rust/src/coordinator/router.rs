@@ -5,15 +5,16 @@
 //! invoke → metering. Everything below the HTTP layer lives here.
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backends::{Backend, InvokeResult};
-use crate::control::{FleetController, FleetView, Lifecycle, PromotionGate};
+use crate::control::{CalibrationConfig, FleetController, FleetView, Lifecycle, PromotionGate};
 use crate::{anyhow, bail};
 use crate::util::error::Result;
 use crate::coordinator::gating::{
-    route_decision, route_decision_budgeted, GatingStrategy, RouteDecision,
+    apply_corrections, route_decision, route_decision_budgeted, GatingStrategy, RouteDecision,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::qe::{BatcherConfig, QeService};
@@ -46,6 +47,10 @@ pub struct RouterConfig {
     /// EWMA smoothing factor for the per-candidate realized-latency
     /// accumulators (`--latency-ewma-alpha`); observability-only.
     pub latency_ewma_alpha: f64,
+    /// Online QE calibration (`--calibration-*`): feed predicted-vs-oracle
+    /// accumulators on oracle-comparable traffic and periodically refit
+    /// per-candidate correction maps (DESIGN.md §18). Off by default.
+    pub calibration: CalibrationConfig,
 }
 
 impl Default for RouterConfig {
@@ -61,6 +66,7 @@ impl Default for RouterConfig {
             gate: PromotionGate::default(),
             hedge: false,
             latency_ewma_alpha: 0.2,
+            calibration: CalibrationConfig::default(),
         }
     }
 }
@@ -182,6 +188,9 @@ pub struct Router {
     pub cfg: RouterConfig,
     /// Candidate-lifecycle control plane (admin API + `ipr admin`).
     pub fleet: Arc<FleetController>,
+    /// Oracle-comparable requests seen since boot — drives the
+    /// count-based calibration auto-refresh (`--calibration-interval`).
+    cal_seen: AtomicU64,
 }
 
 impl Router {
@@ -205,6 +214,7 @@ impl Router {
             metrics,
             cfg,
             fleet,
+            cal_seen: AtomicU64::new(0),
         })
     }
 
@@ -479,7 +489,7 @@ impl Router {
             };
             stats.scored.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             if let Some(p) = identity {
-                stats.record(s, self.backend.world().reward(p, c.global));
+                stats.record(s, self.backend.oracle_reward(p, c.global));
             }
         }
 
@@ -493,11 +503,40 @@ impl Router {
         // cache fast path) — read 0.0 there: routed around, never a panic.
         let is_identity = view.active_heads.len() == scores.len()
             && view.active_heads.iter().enumerate().all(|(i, &h)| h == i);
-        let active_scores: Vec<f32> = if is_identity {
+        let mut active_scores: Vec<f32> = if is_identity {
             scores
         } else {
             view.active_heads.iter().map(|&h| scores.get(h).copied().unwrap_or(0.0)).collect()
         };
+
+        // Online calibration (DESIGN.md §18). Feed the RAW active scores
+        // into the per-candidate predicted-vs-oracle accumulators (maps
+        // are always fitted raw → oracle, never composed on top of a
+        // previous correction), then apply the pinned view's correction
+        // maps before Decision Optimization sees the vector. Feeding and
+        // auto-refresh are gated on `--calibration-interval`; published
+        // maps apply regardless (they only exist after an explicit admin
+        // calibration or an enabled refresh, so the default-off path is
+        // bit-identical).
+        if self.cfg.calibration.enabled {
+            if let Some(p) = identity {
+                for (i, &g) in view.active_global.iter().enumerate() {
+                    view.active_cal[i].record(active_scores[i], self.backend.oracle_reward(p, g));
+                }
+                if self.cfg.calibration.interval > 0 {
+                    let seen =
+                        self.cal_seen.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+                    if seen % self.cfg.calibration.interval == 0 {
+                        if let Err(e) =
+                            self.fleet.refresh_calibration(self.cfg.calibration.min_samples)
+                        {
+                            eprintln!("warn: calibration auto-refresh failed: {e}");
+                        }
+                    }
+                }
+            }
+        }
+        apply_corrections(&mut active_scores, &view.active_corrections);
         let m = &self.metrics;
         // Budgeted path when the request carries a budget or hedged
         // dispatch is on (the hedge chain comes from the budgeted

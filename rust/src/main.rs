@@ -41,7 +41,7 @@ use ipr::cluster::{Cluster, ClusterConfig};
 use ipr::workload;
 use ipr::workload::loadgen::{
     check_workloads_regression, run_scenario, run_scenario_c10k, run_scenario_churn,
-    run_scenario_node_kill, run_scenario_sla, workloads_json, LoadgenOptions,
+    run_scenario_drift, run_scenario_node_kill, run_scenario_sla, workloads_json, LoadgenOptions,
 };
 use ipr::{anyhow, bail};
 
@@ -64,6 +64,8 @@ USAGE:
               [--no-score-cache] [--shadow-min-samples 32]
               [--shadow-max-mae 0.15] [--hedge]
               [--latency-ewma-alpha 0.2]
+              [--calibration-interval 0] [--calibration-min-samples 64]
+              [--no-calibration]
               [--backend auto|epoll|blocking] [--reactor-threads 4]
               [--max-connections 16384]
   ipr route   --prompt \"...\" [--tau 0.3] [--family claude] [--invoke]
@@ -73,7 +75,7 @@ USAGE:
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
               [--write-baseline PATH]
   ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|fleet_churn|
-               latency_sla|c10k|node_kill|all]
+               latency_sla|c10k|node_kill|quality_drift|all]
               [--seed 7] [--requests N] [--clients N] [--smoke] [--hedge]
               [--time-scale 0] [--reactor-threads 4]
               [--out BENCH_workloads.json] [--artifacts DIR]
@@ -88,13 +90,22 @@ USAGE:
   ipr admin   add     --name X   [--weights BANK.npz] [--addr ...]
   ipr admin   promote --name X   [--force] [--addr ...]
   ipr admin   retire  --name X   [--addr ...]
+  ipr admin   calibrate          [--addr ...]
   ipr registry [--artifacts DIR]
   ipr parity  [--artifacts DIR]
   ipr gen-workload [--n 10]
 ";
 
 fn run() -> Result<()> {
-    let args = Args::parse(&["invoke", "help", "smoke", "no-score-cache", "force", "hedge"]);
+    let args = Args::parse(&[
+        "invoke",
+        "help",
+        "smoke",
+        "no-score-cache",
+        "force",
+        "hedge",
+        "no-calibration",
+    ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
@@ -155,6 +166,19 @@ fn build_router(args: &Args) -> Result<Arc<Router>> {
         gate: ipr::control::PromotionGate {
             min_samples: args.usize_or("shadow-min-samples", 32)? as u64,
             max_mae: args.f64_or("shadow-max-mae", 0.15)?,
+        },
+        calibration: {
+            // --calibration-interval N arms online recalibration: every N
+            // identity-carrying requests the router refits the correction
+            // maps from the shadow window. 0 (the default) keeps the
+            // calibration layer dormant; --no-calibration is an explicit
+            // operator override on top of a configured interval.
+            let interval = args.usize_or("calibration-interval", 0)? as u64;
+            ipr::control::CalibrationConfig {
+                enabled: interval > 0 && !args.flag("no-calibration"),
+                interval,
+                min_samples: args.usize_or("calibration-min-samples", 64)? as u64,
+            }
         },
     };
     println!(
@@ -305,7 +329,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 && k != "encode_ns_per_row"
                 && k != "min_cache_hit_speedup"
         });
-        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v6")));
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v7")));
         pairs.push(("routing_p50_us".to_string(), Json::Num(p50)));
         pairs.push((
             "encode_ns_per_row".to_string(),
@@ -380,14 +404,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     } else {
         vec![workload::preset(&which, requests).ok_or_else(|| {
             anyhow!(
-                "unknown scenario '{which}' (have: {}, {}, {}, {}, {} or 'all'; c10k and \
-                 node_kill never ride along with 'all' — one holds 10k connections, the \
-                 other spawns a 3-node cluster, so each must be asked for)",
+                "unknown scenario '{which}' (have: {}, {}, {}, {}, {}, {} or 'all'; c10k, \
+                 node_kill and quality_drift never ride along with 'all' — one holds 10k \
+                 connections, one spawns a 3-node cluster, one owns the parity-recovery \
+                 baseline field, so each must be asked for)",
                 workload::PRESET_NAMES.join(", "),
                 workload::FLEET_CHURN,
                 workload::LATENCY_SLA,
                 workload::C10K,
-                workload::NODE_KILL
+                workload::NODE_KILL,
+                workload::QUALITY_DRIFT
             )
         })?]
     };
@@ -446,9 +472,29 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 );
             }
             run_scenario_node_kill(&opts, sc, &workload::node_kill_plan(sc.requests))?
+        } else if sc.name == workload::QUALITY_DRIFT {
+            if sc.requests < workload::QUALITY_DRIFT_MIN_REQUESTS {
+                bail!(
+                    "quality_drift needs --requests >= {} (the drift→recalibration window \
+                     must accumulate the fit gate, and each parity segment needs real \
+                     traffic), got {}",
+                    workload::QUALITY_DRIFT_MIN_REQUESTS,
+                    sc.requests
+                );
+            }
+            run_scenario_drift(&opts, sc, &workload::drift_plan(sc.requests))?
         } else {
             run_scenario(&opts, sc)?
         };
+        if let (Some(pre), Some(tr), Some(rec)) =
+            (r.parity_pre, r.parity_trough, r.parity_recovered)
+        {
+            println!(
+                "{}: parity pre {pre:.4} -> trough {tr:.4} -> recovered {rec:.4} \
+                 (calibration epoch {}, {} maps fitted)",
+                r.name, r.calibration_epoch, r.calibration_updates
+            );
+        }
         println!(
             "{}: stream {:#018x}  decisions {:#018x}  (fleet epoch {}, {} admin actions, \
              {} fault actions)",
@@ -486,11 +532,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         // next full CI run spuriously. The c10k fields are owned by a
         // c10k-only run and the cluster fields by a node_kill-only run
         // (neither rides along with 'all').
-        if which != "all" && which != workload::C10K && which != workload::NODE_KILL {
+        if which != "all"
+            && which != workload::C10K
+            && which != workload::NODE_KILL
+            && which != workload::QUALITY_DRIFT
+        {
             bail!(
                 "--write-baseline requires a full run: the p95 ceiling gates every \
                  scenario, but only '{which}' ran (drop --scenario, or use --scenario \
-                 c10k / node_kill to refresh just that scenario's own fields)"
+                 c10k / node_kill / quality_drift to refresh just that scenario's own \
+                 fields)"
             );
         }
         // Merge into the existing baseline (the bench subcommand owns the
@@ -532,6 +583,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 "refreshing baseline {bp} (cluster_routed_p99_us {p99:.1}, \
                  cluster_max_shed_rate {shed_rate:.3})"
             );
+        } else if which == workload::QUALITY_DRIFT {
+            // The recovery floor is a pinned contract, not a measured
+            // ceiling: a lucky run would measure ~full recovery and turn
+            // every benign gap into a hard CI failure. 0.9 means
+            // "post-drift parity must return to >= 90% of pre-drift".
+            pairs.retain(|(k, _)| k != "calibration_min_parity_recovery");
+            pairs.push(("calibration_min_parity_recovery".to_string(), Json::Num(0.9)));
+            println!("refreshing baseline {bp} (calibration_min_parity_recovery 0.90)");
         } else {
             let worst_p95 = reports.iter().map(|r| r.p95_us).fold(0.0f64, f64::max);
             // The violation-rate ceiling keeps a 5% floor: a clean run
@@ -552,7 +611,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                  latency_sla_violation_rate {sla_rate:.3})"
             );
         }
-        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v6")));
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v7")));
         let base_doc = Json::Obj(pairs.into_iter().collect());
         std::fs::write(bp, base_doc.to_string()).with_context(|| format!("writing {bp}"))?;
         println!("wrote baseline {bp}");
@@ -573,7 +632,9 @@ fn cmd_admin(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .context("usage: ipr admin {fleet|add|promote|retire} [--name X] [--addr HOST:PORT]")?;
+        .context(
+            "usage: ipr admin {fleet|add|promote|retire|calibrate} [--name X] [--addr HOST:PORT]",
+        )?;
     let client = ipr::server::HttpClient::new(addr);
     let name_of = || args.get("name").context("--name required");
     let (status, body) = match action {
@@ -597,7 +658,12 @@ fn cmd_admin(args: &Args) -> Result<()> {
             let name = name_of()?;
             client.delete(&format!("/admin/v1/candidates/{name}"))?
         }
-        other => bail!("unknown admin action '{other}' (fleet | add | promote | retire)"),
+        // Fit-and-publish recalibration from the accumulated shadow
+        // window (empty body = fit on the server from its accumulators).
+        "calibrate" => client.post("/admin/v1/calibration", "{}")?,
+        other => {
+            bail!("unknown admin action '{other}' (fleet | add | promote | retire | calibrate)")
+        }
     };
     println!("{body}");
     if status != 200 {

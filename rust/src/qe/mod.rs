@@ -72,6 +72,11 @@ struct Pending {
 enum Control {
     AddHead { name: String, tensors: Vec<(String, Tensor)>, reply: mpsc::Sender<Result<usize>> },
     RetireHead { name: String, reply: mpsc::Sender<Result<()>> },
+    /// No model mutation at all — a pure barrier. The reply fires once
+    /// every job enqueued before it has been served (controls are batch
+    /// barriers, so nothing scored under the pre-barrier state is still
+    /// in flight when the caller unblocks).
+    Sync { reply: mpsc::Sender<()> },
 }
 
 enum Job {
@@ -311,6 +316,21 @@ impl QeService {
         rx.recv().map_err(|_| anyhow!("QE engine dropped the retire-head control request"))?
     }
 
+    /// Control-message barrier (blocking): returns once every score job
+    /// enqueued BEFORE this call has been served by the engine thread.
+    /// The calibration refresh uses it to close an accumulator window —
+    /// after the barrier, no batch scored under the old calibration is
+    /// still feeding the accumulators.
+    pub fn barrier(&self) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        {
+            let mut q = self.queue.q.lock().unwrap();
+            q.push_back(Job::Control(Control::Sync { reply }));
+        }
+        self.queue.cv.notify_all();
+        rx.recv().map_err(|_| anyhow!("QE engine dropped the sync control request"))
+    }
+
     pub fn shutdown(&self) {
         self.queue.shutdown.store(true, Ordering::SeqCst);
         self.queue.cv.notify_all();
@@ -464,6 +484,9 @@ fn apply_control(model: &mut dyn QeModel, control: Control) {
         }
         Control::RetireHead { name, reply } => {
             let _ = reply.send(model.retire_dynamic_head(&name));
+        }
+        Control::Sync { reply } => {
+            let _ = reply.send(());
         }
     }
 }

@@ -837,6 +837,13 @@ fn dispatch_control_inner(
             Ok(j) => ("200 OK", "application/json", j),
             Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
         },
+        ("GET", "/admin/v1/calibration") => {
+            ("200 OK", "application/json", calibration_json(router))
+        }
+        ("POST", "/admin/v1/calibration") => match admin_calibrate(router, body) {
+            Ok(j) => ("200 OK", "application/json", j),
+            Err(e) => ("400 Bad Request", "application/json", err_json(&e.to_string())),
+        },
         _ if path.starts_with("/admin/v1/candidates/") => {
             admin_candidate(router, method, path, body)
         }
@@ -848,6 +855,7 @@ fn dispatch_control_inner(
                     (true, "GET")
                 }
                 "/v1/route" | "/v1/invoke" | "/admin/v1/candidates" => (true, "POST"),
+                "/admin/v1/calibration" => (true, "GET or POST"),
                 _ => (false, ""),
             };
             if known {
@@ -959,6 +967,97 @@ fn admin_promote(router: &Router, name: &str, body: &str) -> Result<String> {
 fn admin_retire(router: &Router, name: &str) -> Result<String> {
     let view = router.fleet.retire_candidate(name)?;
     Ok(fleet_view_doc(&view, &router.fleet.gate).to_string())
+}
+
+/// The calibration layer of one fleet view, as a JSON document. The
+/// top-level `epoch` is the FLEET epoch — the cluster tier's fan-out
+/// checks it against its expected-epoch arithmetic on every accepted
+/// mutation, calibration refreshes included.
+fn calibration_doc(view: &crate::control::FleetView, extra: Vec<(&str, Json)>) -> Json {
+    let st = &view.calibration;
+    let maps: std::collections::BTreeMap<String, Json> = st
+        .maps
+        .iter()
+        .map(|(name, m)| {
+            (
+                name.clone(),
+                Json::obj(vec![("xs", Json::arr_f64(&m.xs)), ("ys", Json::arr_f64(&m.ys))]),
+            )
+        })
+        .collect();
+    let mut fields = vec![
+        ("epoch", Json::Num(view.epoch as f64)),
+        ("calibration_epoch", Json::Num(st.epoch as f64)),
+        ("updates", Json::Num(st.updates as f64)),
+    ];
+    fields.extend(extra);
+    if st.mae_before.is_finite() {
+        fields.push(("mae_before", Json::Num(st.mae_before)));
+    }
+    if st.mae_after.is_finite() {
+        fields.push(("mae_after", Json::Num(st.mae_after)));
+    }
+    fields.push(("maps", Json::Obj(maps)));
+    Json::obj(fields)
+}
+
+/// `GET /admin/v1/calibration`: the current calibration state.
+fn calibration_json(router: &Router) -> String {
+    calibration_doc(&router.fleet.view(), Vec::new()).to_string()
+}
+
+/// `POST /admin/v1/calibration`: an empty (or maps-free) body refits
+/// correction maps from the accumulated shadow-traffic windows; a body
+/// carrying `{"maps": {name: {xs, ys}}}` installs those exact maps
+/// instead (the cluster tier's canonical replay path — every node of a
+/// fleet must serve the SAME correction, not a fit of its own local
+/// sample). Either way a new calibration epoch publishes and the score
+/// cache rotates.
+fn admin_calibrate(router: &Router, body: &str) -> Result<String> {
+    let explicit = if body.trim().is_empty() {
+        None
+    } else {
+        let j = parse(body).context("request body must be JSON")?;
+        match j.get("maps") {
+            Some(m) => Some(parse_calibration_maps(m)?),
+            None => None,
+        }
+    };
+    let r = match explicit {
+        Some(maps) => router.fleet.apply_calibration(maps)?,
+        None => router.fleet.refresh_calibration(router.cfg.calibration.min_samples)?,
+    };
+    Ok(calibration_doc(&r.view, vec![("fitted", Json::Num(r.fitted as f64))]).to_string())
+}
+
+/// Parse and VALIDATE an explicit correction-map set: a malformed or
+/// non-monotone map must 400, never install — a torn map would silently
+/// reorder scores on every request.
+fn parse_calibration_maps(
+    j: &Json,
+) -> Result<std::collections::BTreeMap<String, Arc<crate::control::CorrectionMap>>> {
+    let mut maps = std::collections::BTreeMap::new();
+    for (name, m) in j.as_obj()? {
+        let xs = m.req("xs")?.f64s()?;
+        let ys = m.req("ys")?.f64s()?;
+        if xs.len() != ys.len() {
+            bail!("calibration map for '{name}': xs and ys lengths differ");
+        }
+        if xs.iter().any(|v| !v.is_finite()) || ys.iter().any(|v| !v.is_finite()) {
+            bail!("calibration map for '{name}': non-finite values");
+        }
+        if xs.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("calibration map for '{name}': xs must be strictly increasing");
+        }
+        if ys.windows(2).any(|w| w[0] > w[1]) {
+            bail!("calibration map for '{name}': ys must be non-decreasing (monotone maps only)");
+        }
+        maps.insert(
+            name.clone(),
+            Arc::new(crate::control::CorrectionMap { xs, ys }),
+        );
+    }
+    Ok(maps)
 }
 
 /// Outcome of the synchronous half of the route path: either a finished

@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::cluster::{Cluster, ClusterConfig, NodeState};
+use crate::control::CalibrationConfig;
 use crate::coordinator::{Router, RouterConfig};
 use crate::registry::Registry;
 use crate::server::{HttpClient, KeepAliveClient, RetryPolicy, Server, ServerConfig};
@@ -30,8 +31,9 @@ use crate::util::hist::Histogram;
 use crate::util::json::{parse, Json};
 use crate::util::rng::substream;
 use crate::workload::{
-    fold, generate, stream_digest, tokens_text, ChurnAction, ChurnOp, GenRequest, NodeKillAction,
-    NodeKillOp, Scenario, SpikeAction, SpikeOp, C10K, NODE_KILL, NODE_KILL_NODES,
+    fold, generate, stream_digest, tokens_text, ChurnAction, ChurnOp, DriftAction, DriftOp,
+    GenRequest, NodeKillAction, NodeKillOp, Scenario, SpikeAction, SpikeOp, C10K, NODE_KILL,
+    NODE_KILL_NODES, QUALITY_DRIFT,
 };
 
 /// RNG substream for per-client retry-backoff jitter (siblings: the
@@ -131,6 +133,20 @@ pub struct ScenarioReport {
     /// scenarios. The node_kill gate uses this to prove the kill was
     /// absorbed rather than surfaced.
     pub retried: u64,
+    /// Quality parity over the pre-drift segment of a quality_drift run
+    /// (the baseline band recovery is measured against); None elsewhere.
+    pub parity_pre: Option<f64>,
+    /// Quality parity over [drift, first recalibration) — the silent
+    /// damage window the scenario exists to bound.
+    pub parity_trough: Option<f64>,
+    /// Quality parity over [last recalibration, end) — must climb back
+    /// into the pre-drift band (the CI gate's
+    /// `calibration_min_parity_recovery` floor).
+    pub parity_recovered: Option<f64>,
+    /// Calibration epoch at end of run (0 = never recalibrated).
+    pub calibration_epoch: u64,
+    /// Total correction maps fitted across all recalibrations.
+    pub calibration_updates: u64,
 }
 
 /// One parsed per-request observation, tagged with its stream index.
@@ -340,6 +356,163 @@ pub fn run_scenario_sla(
     plan: &[SpikeAction],
 ) -> Result<ScenarioReport> {
     run_scenario_plan(opts, sc, &[], plan)
+}
+
+/// Run the quality-drift [`QUALITY_DRIFT`] scenario: drive the stream
+/// against a router whose calibration layer is armed (`enabled`, fit
+/// gate 8 samples) but whose auto-refresh interval is 0 — recalibration
+/// fires ONLY at the plan's phase barriers, through the live
+/// `POST /admin/v1/calibration` surface, exactly as an operator (or a
+/// control-loop cron) would. [`DriftOp::Drift`] hits the backend's
+/// drift model directly — silent environment change, no operator
+/// surface — while the frozen QP heads keep predicting stale quality.
+///
+/// Segment parities are measured around the plan: `parity_pre` before
+/// the drift, `parity_trough` between the drift and the first
+/// recalibration (the damage window), `parity_recovered` after the
+/// last. The driver fails the run outright if the drift didn't
+/// depress the trough below 0.97 x pre — a plan that doesn't bite
+/// would make the recovery gate vacuous. Determinism: barriers close
+/// the accumulator window (all earlier requests complete through the
+/// QE batch barrier), so two runs fit bit-identical correction maps
+/// and the decision digest is bit-stable (`rust/tests/quality_drift.rs`).
+pub fn run_scenario_drift(
+    opts: &LoadgenOptions,
+    sc: &Scenario,
+    plan: &[DriftAction],
+) -> Result<ScenarioReport> {
+    let reg = Arc::new(Registry::load_or_reference(opts.artifacts.as_str())?);
+    let world = SynthWorld::new(reg.world_seed);
+    let reqs = generate(&world, sc, opts.seed);
+    let sdigest = stream_digest(sc.name, opts.seed, &reqs);
+    let prepared = prepare(&reqs);
+    let want = if opts.clients > 0 { opts.clients } else { sc.clients };
+    let clients = want.max(1).min(reqs.len().max(1));
+
+    let router_cfg = RouterConfig {
+        time_scale: opts.time_scale,
+        hedge: opts.hedge,
+        // interval 0: no count-based auto-refresh — recalibration fires
+        // only at the plan's barriers, keeping the window deterministic.
+        calibration: CalibrationConfig { enabled: true, interval: 0, min_samples: 8 },
+        ..RouterConfig::default()
+    };
+    let router = Arc::new(Router::new(reg, router_cfg)?);
+    let server = Server::start_with(
+        router.clone(),
+        "127.0.0.1:0",
+        ServerConfig { workers: clients, ..ServerConfig::default() },
+    )?;
+    let addr = server.addr.clone();
+    let admin = HttpClient::new(&addr);
+
+    let n = reqs.len();
+    let mut actions: Vec<(usize, DriftOp)> = plan.iter().map(|a| (a.at, a.op)).collect();
+    actions.sort_by_key(|&(at, _)| at);
+
+    let start = Instant::now();
+    let mut obs: Vec<Obs> = Vec::with_capacity(n);
+    let drive = (|| -> Result<()> {
+        let mut seg_start = 0usize;
+        for &(action_at, op) in &actions {
+            let at = action_at.min(n);
+            run_segment(
+                seg_start, at, clients, &addr, sc.open_loop, &reqs, &prepared, start, None,
+                &mut obs,
+            );
+            seg_start = at;
+            match op {
+                DriftOp::Drift { global, factor } => {
+                    router.backend.drift.shift(global, factor);
+                }
+                DriftOp::Calibrate => {
+                    let (code, body) = admin.post("/admin/v1/calibration", "{}")?;
+                    if code != 200 {
+                        return Err(anyhow!(
+                            "recalibration before request {at} failed ({code}): {body}"
+                        ));
+                    }
+                }
+            }
+        }
+        run_segment(
+            seg_start, n, clients, &addr, sc.open_loop, &reqs, &prepared, start, None, &mut obs,
+        );
+        Ok(())
+    })();
+
+    let wall_s = start.elapsed().as_secs_f64();
+    let view = router.fleet.view();
+    let fleet_epoch = view.epoch;
+    let (cal_epoch, cal_updates) = (view.calibration.epoch, view.calibration.updates);
+    server.stop();
+    router.qe.shutdown();
+    drive?;
+
+    // Segment parity: same estimator as aggregate_report's run-level
+    // parity (realized reward over the strongest candidate's TRUE
+    // pre-drift reward), windowed by stream index around the plan.
+    let strongest_global = view.active_global[view.strongest_active];
+    let seg_parity = |lo: usize, hi: usize| -> Option<f64> {
+        let (mut realized, mut strongest, mut m) = (0.0f64, 0.0f64, 0usize);
+        for o in obs.iter().filter(|o| o.idx >= lo && o.idx < hi) {
+            if let Some(r) = o.reward {
+                let p = world.sample_prompt(SPLIT_LIVE, reqs[o.idx].index);
+                realized += r;
+                strongest += world.reward(&p, strongest_global);
+                m += 1;
+            }
+        }
+        (m > 0 && strongest > 0.0).then(|| (realized / m as f64) / (strongest / m as f64))
+    };
+    let drift_at = actions.iter().find_map(|&(at, op)| match op {
+        DriftOp::Drift { .. } => Some(at.min(n)),
+        _ => None,
+    });
+    let cal_ats: Vec<usize> = actions
+        .iter()
+        .filter_map(|&(at, op)| matches!(op, DriftOp::Calibrate).then_some(at.min(n)))
+        .collect();
+    let (mut parity_pre, mut parity_trough, mut parity_recovered) = (None, None, None);
+    if let (Some(drift_at), Some(&first_cal), Some(&last_cal)) =
+        (drift_at, cal_ats.first(), cal_ats.last())
+    {
+        parity_pre = seg_parity(0, drift_at);
+        parity_trough = seg_parity(drift_at, first_cal);
+        parity_recovered = seg_parity(last_cal, n);
+        if let (Some(pre), Some(trough)) = (parity_pre, parity_trough) {
+            if trough > pre * 0.97 {
+                return Err(anyhow!(
+                    "quality_drift plan did not bite: trough parity {trough:.4} is not below \
+                     0.97 x pre-drift parity {pre:.4} — the recovery gate would be vacuous"
+                ));
+            }
+        }
+    }
+
+    let mut report = aggregate_report(AggregateInput {
+        sc,
+        seed: opts.seed,
+        world: &world,
+        reqs: &reqs,
+        obs,
+        wall_s,
+        router: &router,
+        fleet_epoch,
+        fleet_actions: cal_ats.len(),
+        fault_actions: actions.len() - cal_ats.len(),
+        clients,
+        sdigest,
+        peak_connections: 0,
+        shed: 0,
+        retried: 0,
+    })?;
+    report.parity_pre = parity_pre;
+    report.parity_trough = parity_trough;
+    report.parity_recovered = parity_recovered;
+    report.calibration_epoch = cal_epoch;
+    report.calibration_updates = cal_updates;
+    Ok(report)
 }
 
 /// Run the connection-scale [`super::C10K`] scenario: hold the
@@ -1065,12 +1238,20 @@ fn aggregate_report(input: AggregateInput<'_>) -> Result<ScenarioReport> {
         peak_connections,
         shed,
         retried,
+        // Drift-segment parity and calibration counters are stamped by
+        // run_scenario_drift after aggregation; every other driver
+        // leaves them at their "not a drift run" defaults.
+        parity_pre: None,
+        parity_trough: None,
+        parity_recovered: None,
+        calibration_epoch: 0,
+        calibration_updates: 0,
     })
 }
 
 impl ScenarioReport {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("seed", Json::Num(self.seed as f64)),
             ("requests", Json::Num(self.requests as f64)),
@@ -1142,7 +1323,24 @@ impl ScenarioReport {
             // the low bits.
             ("stream_digest", Json::str(&format!("{:#018x}", self.stream_digest))),
             ("decision_digest", Json::str(&format!("{:#018x}", self.decision_digest))),
-        ])
+        ];
+        // Drift-run fields appear only when the run measured them, so
+        // every other scenario's document is byte-identical to before
+        // calibration existed.
+        if let Some(p) = self.parity_pre {
+            fields.push(("parity_pre", Json::Num(p)));
+        }
+        if let Some(p) = self.parity_trough {
+            fields.push(("parity_trough", Json::Num(p)));
+        }
+        if let Some(p) = self.parity_recovered {
+            fields.push(("parity_recovered", Json::Num(p)));
+        }
+        if self.calibration_epoch > 0 {
+            fields.push(("calibration_epoch", Json::Num(self.calibration_epoch as f64)));
+            fields.push(("calibration_updates", Json::Num(self.calibration_updates as f64)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -1265,6 +1463,37 @@ pub fn check_workloads_regression(
                     bc.as_f64()?
                 ));
             }
+        }
+    }
+    // quality_drift gates its own field: parity must RECOVER after the
+    // drift — that recovery is the whole point of recalibration. The
+    // generic p95 ceiling below still applies (single-node run at
+    // ordinary client counts, like fleet_churn/latency_sla).
+    for s in scenarios {
+        if s.req("name")?.as_str()? != QUALITY_DRIFT {
+            continue;
+        }
+        let Some(bf) = base.get("calibration_min_parity_recovery") else {
+            continue;
+        };
+        let floor = bf.as_f64()?;
+        let pre = s.get("parity_pre").and_then(|v| v.as_f64().ok());
+        let rec = s.get("parity_recovered").and_then(|v| v.as_f64().ok());
+        let (Some(pre), Some(rec)) = (pre, rec) else {
+            return Err(anyhow!(
+                "quality_drift report lacks parity segments (parity_pre / parity_recovered): \
+                 the run measured nothing the recovery gate can check"
+            ));
+        };
+        if pre <= 0.0 || rec < pre * floor {
+            return Err(anyhow!(
+                "calibration regression: post-drift parity {rec:.4} recovered only {:.1}% of \
+                 the pre-drift {pre:.4}, below the {:.0}% floor \
+                 (`calibration_min_parity_recovery` in {baseline_path}); recalibration is no \
+                 longer pulling quality back after drift",
+                if pre > 0.0 { rec / pre * 100.0 } else { 0.0 },
+                floor * 100.0
+            ));
         }
     }
     let Some(b) = base.get("loadgen_routed_p95_us") else {
@@ -1395,6 +1624,44 @@ mod tests {
         // still gate).
         std::fs::write(&file, "{\"loadgen_routed_p95_us\": 1e9}").unwrap();
         assert!(check_workloads_regression(&doc(1.0, 9e9), path, 1.25).is_ok());
+        let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn workloads_gate_calibration_parity_recovery() {
+        let file = std::env::temp_dir().join(format!("ipr-qd-baseline-{}", std::process::id()));
+        std::fs::write(
+            &file,
+            "{\"loadgen_routed_p95_us\": 1e9, \"calibration_min_parity_recovery\": 0.9}",
+        )
+        .unwrap();
+        let path = file.to_str().unwrap();
+        let doc = |pre: Option<f64>, rec: Option<f64>| {
+            let mut fields = vec![
+                ("name", Json::str("quality_drift")),
+                ("p95_us", Json::Num(100.0)),
+                ("errors", Json::Num(0.0)),
+            ];
+            if let Some(p) = pre {
+                fields.push(("parity_pre", Json::Num(p)));
+            }
+            if let Some(r) = rec {
+                fields.push(("parity_recovered", Json::Num(r)));
+            }
+            Json::obj(vec![("scenarios", Json::Arr(vec![Json::obj(fields)]))])
+        };
+        // Full recovery and in-band recovery pass; below-floor fails.
+        assert!(check_workloads_regression(&doc(Some(0.98), Some(0.98)), path, 1.25).is_ok());
+        assert!(check_workloads_regression(&doc(Some(0.98), Some(0.90)), path, 1.25).is_ok());
+        let err =
+            check_workloads_regression(&doc(Some(0.98), Some(0.80)), path, 1.25).unwrap_err();
+        assert!(format!("{err:#}").contains("calibration regression"), "{err:#}");
+        // A drift run that measured no parity segments cannot pass.
+        let err = check_workloads_regression(&doc(None, None), path, 1.25).unwrap_err();
+        assert!(format!("{err:#}").contains("lacks parity segments"), "{err:#}");
+        // Baselines without the floor skip the gate entirely.
+        std::fs::write(&file, "{\"loadgen_routed_p95_us\": 1e9}").unwrap();
+        assert!(check_workloads_regression(&doc(Some(1.0), Some(0.0)), path, 1.25).is_ok());
         let _ = std::fs::remove_file(&file);
     }
 

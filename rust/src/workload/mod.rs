@@ -316,6 +316,72 @@ pub fn node_kill_plan(requests: usize) -> Vec<NodeKillAction> {
     ]
 }
 
+/// Name of the quality-drift scenario (`ipr loadgen --scenario
+/// quality_drift`): steady closed-loop mixed-τ traffic with identity on
+/// EVERY request (the calibration accumulators need the oracle), while
+/// [`drift_plan`] silently degrades one candidate's true quality mid-run
+/// and then fires epoch-versioned recalibrations that must pull routed
+/// quality parity back to its pre-drift band — without a restart.
+/// Rust-only (the python mirror has no drift or calibration concept);
+/// determinism is pinned by the double-run digest test in
+/// `rust/tests/quality_drift.rs`.
+pub const QUALITY_DRIFT: &str = "quality_drift";
+
+/// Smallest stream the canonical [`drift_plan`] works for: the
+/// drift→first-recalibration window spans 15% of the stream and every
+/// request feeds the accumulators, so the scenario's 8-sample fit gate
+/// needs ≥ ⌈8 / 0.15⌉ = 54 requests — rounded up with slack so each of
+/// the pre/trough/recovered parity segments holds enough invocations to
+/// be a real average rather than noise.
+pub const QUALITY_DRIFT_MIN_REQUESTS: usize = 100;
+
+/// One drift/recalibration action of the [`QUALITY_DRIFT`] scenario,
+/// pinned to a request index exactly like [`ChurnAction`]: the driver
+/// completes all earlier requests, applies the op at the barrier, then
+/// continues — so double runs replay the identical schedule (and the
+/// recalibration fit sees a bit-identical accumulator window).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftAction {
+    /// Apply after this many requests have completed.
+    pub at: usize,
+    pub op: DriftOp,
+}
+
+/// Quality-drift operations. `Drift` changes only the REALIZED oracle
+/// reward (what the backend's true quality is); the router's frozen QP
+/// heads keep predicting the stale pre-drift quality — exactly the
+/// silent-drift failure mode. `Calibrate` is the operator response:
+/// `POST /admin/v1/calibration` fits monotone correction maps from the
+/// shadow accumulators at a batch barrier and publishes a new
+/// calibration epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftOp {
+    /// Scale candidate `global`'s true quality by `factor` (SynthWorld
+    /// global index; 1.0 restores neutrality).
+    Drift { global: usize, factor: f64 },
+    /// Fit-and-publish recalibration from the accumulated window.
+    Calibrate,
+}
+
+/// The canonical drift plan for [`QUALITY_DRIFT`], scaled to the stream
+/// length (≥ [`QUALITY_DRIFT_MIN_REQUESTS`]): at 40% the strongest boot
+/// candidate (global 3, claude-3.5-sonnet-v2 — the fleet's quality
+/// anchor) silently drops to 45% of its true quality. The stale QP
+/// heads keep sending quality-tenant traffic to it, so parity craters.
+/// Recalibrations at 55%, 70%, and 85% fit the predicted-vs-oracle gap
+/// out of the shadow window: the first pulls the corrected score below
+/// the healthy candidates' so routing shifts off the drifted anchor,
+/// the later two prove refreshes converge (and that refreshes of an
+/// already-corrected window still publish an epoch).
+pub fn drift_plan(requests: usize) -> Vec<DriftAction> {
+    vec![
+        DriftAction { at: requests * 2 / 5, op: DriftOp::Drift { global: 3, factor: 0.45 } },
+        DriftAction { at: requests * 11 / 20, op: DriftOp::Calibrate },
+        DriftAction { at: requests * 7 / 10, op: DriftOp::Calibrate },
+        DriftAction { at: requests * 17 / 20, op: DriftOp::Calibrate },
+    ]
+}
+
 /// Look up a preset by name, scaled to `requests` requests.
 pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
     let one = |lo: f64, hi: f64| {
@@ -507,6 +573,33 @@ pub fn preset(name: &str, requests: usize) -> Option<Scenario> {
                 Tenant { name: "saver", weight: 0.3, tau_lo: 0.7, tau_hi: 1.0 },
             ],
             invoke_frac: 0.35,
+            budget_lo_ms: 0.0,
+            budget_hi_ms: 0.0,
+        }),
+        // Quality drift: the FLEET_CHURN traffic shape (the point is the
+        // drift/recalibration schedule in `drift_plan`, not the arrival
+        // process) but with identity — and therefore an oracle reward —
+        // on EVERY request: the calibration accumulators only learn from
+        // invocations that carry a SynthWorld identity, and the parity
+        // segments need realized rewards on both sides of each barrier.
+        QUALITY_DRIFT => Some(Scenario {
+            name: QUALITY_DRIFT,
+            requests,
+            clients: 6,
+            open_loop: false,
+            base_rps: 500.0,
+            burst_rps: 500.0,
+            burst_len: 0,
+            hot_set: 8,
+            hot_frac: 0.3,
+            stretch_frac: 0.0,
+            stretch_target: 0,
+            tenants: vec![
+                Tenant { name: "quality", weight: 0.3, tau_lo: 0.0, tau_hi: 0.15 },
+                Tenant { name: "balanced", weight: 0.4, tau_lo: 0.25, tau_hi: 0.55 },
+                Tenant { name: "saver", weight: 0.3, tau_lo: 0.7, tau_hi: 1.0 },
+            ],
+            invoke_frac: 1.0,
             budget_lo_ms: 0.0,
             budget_hi_ms: 0.0,
         }),
@@ -757,6 +850,44 @@ mod tests {
         assert_eq!(killed, restarted);
         assert!(killed.unwrap() > 0, "node 0 stays alive (tests introspect its router)");
         assert!(killed.unwrap() < NODE_KILL_NODES);
+        // Same stream shape as fleet_churn: the generator contract is
+        // untouched (preset digests stay pinned).
+        let world = SynthWorld::default();
+        assert_eq!(generate(&world, &sc, 7), generate(&world, &sc, 7));
+    }
+
+    #[test]
+    fn quality_drift_plan_is_sorted_and_rust_only() {
+        let sc = preset(QUALITY_DRIFT, QUALITY_DRIFT_MIN_REQUESTS)
+            .expect("quality_drift preset exists");
+        assert!(
+            !PRESET_NAMES.contains(&QUALITY_DRIFT),
+            "rust-only scenario stays out of the mirrored preset table"
+        );
+        assert_eq!(sc.budget_hi_ms, 0.0, "quality_drift stays budget-free");
+        assert!(!sc.open_loop);
+        assert_eq!(sc.invoke_frac, 1.0, "every request must feed the accumulators");
+        let plan = drift_plan(sc.requests);
+        assert_eq!(plan.len(), 4);
+        assert!(plan.windows(2).all(|w| w[0].at < w[1].at), "barriers strictly ordered");
+        assert!(plan.iter().all(|a| a.at > 0 && a.at < sc.requests));
+        // Exactly one drift, degrading (not boosting) one candidate, and
+        // it precedes every recalibration — parity has a trough to
+        // recover from.
+        let drifts: Vec<_> = plan
+            .iter()
+            .filter_map(|a| match a.op {
+                DriftOp::Drift { global, factor } => Some((a.at, global, factor)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(drifts.len(), 1);
+        let (drift_at, _, factor) = drifts[0];
+        assert!(factor > 0.0 && factor < 1.0, "drift must degrade quality");
+        assert!(plan
+            .iter()
+            .filter(|a| a.op == DriftOp::Calibrate)
+            .all(|a| a.at > drift_at));
         // Same stream shape as fleet_churn: the generator contract is
         // untouched (preset digests stay pinned).
         let world = SynthWorld::default();

@@ -6,7 +6,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use ipr::control::{AddCandidate, Lifecycle, PromotionGate};
+use ipr::control::{AddCandidate, CalibrationConfig, Lifecycle, PromotionGate};
 use ipr::coordinator::{BatchItem, Router, RouterConfig};
 use ipr::testkit::{registry, FixtureBuilder};
 use ipr::util::json::parse;
@@ -125,6 +125,93 @@ fn admin_lifecycle_end_to_end() {
     assert!(m.contains("ipr_fleet_epoch 5"), "{m}");
     assert!(m.contains("ipr_fleet_swaps_total 4"), "{m}");
     assert!(m.contains("ipr_fleet_candidates{state=\"active\"} 3"), "{m}");
+    fx.stop();
+}
+
+/// Online QE calibration end to end (DESIGN.md §18) over the live HTTP
+/// surface: drift the strongest candidate's true quality, feed identity
+/// traffic, fire `POST /admin/v1/calibration`, and the published
+/// correction must (a) bump the fleet AND calibration epochs, (b) steer
+/// quality-tenant traffic off the drifted candidate without a restart,
+/// and (c) surface through `GET /admin/v1/calibration` and `/metrics`.
+#[test]
+fn admin_calibration_end_to_end() {
+    let fx = FixtureBuilder::new()
+        .router(|c| {
+            c.calibration = CalibrationConfig { enabled: true, interval: 0, min_samples: 8 }
+        })
+        .start();
+    let client = fx.client();
+    let world = fx.world();
+
+    // Boot: calibration epoch 0, no maps, nothing fitted.
+    let (st, body) = client.get("/admin/v1/calibration").unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = parse(&body).unwrap();
+    assert_eq!(j.req("calibration_epoch").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(j.req("updates").unwrap().as_usize().unwrap(), 0);
+    assert!(j.req("maps").unwrap().as_obj().unwrap().is_empty(), "{body}");
+
+    // τ≈0 traffic routes to the strongest prediction — which is about to
+    // go stale. Global 3 (claude-3.5-sonnet-v2) silently drops to 40%.
+    fx.router.backend.drift.shift(3, 0.4);
+    let drifted = "claude-3.5-sonnet-v2";
+    let route = |i: u64| -> String {
+        let p = world.sample_prompt(2, i);
+        let body = format!(
+            "{{\"prompt\": \"{}\", \"tau\": 0.05, \"split\": 2, \"index\": {i}}}",
+            p.text()
+        );
+        let (st, resp) = client.post("/v1/route", &body).unwrap();
+        assert_eq!(st, 200, "{resp}");
+        parse(&resp).unwrap().req("model").unwrap().as_str().unwrap().to_string()
+    };
+    let mut pre_hits = 0usize;
+    for i in 0..40u64 {
+        pre_hits += usize::from(route(i) == drifted);
+    }
+    assert!(
+        pre_hits > 25,
+        "stale QP heads must keep routing quality traffic to the drifted anchor \
+         (got {pre_hits}/40)"
+    );
+
+    // Operator recalibration: fit from the accumulated window.
+    let (st, body) = client.post("/admin/v1/calibration", "{}").unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = parse(&body).unwrap();
+    assert_eq!(j.req("epoch").unwrap().as_usize().unwrap(), 2, "fleet epoch bumps");
+    assert_eq!(j.req("calibration_epoch").unwrap().as_usize().unwrap(), 1);
+    assert!(j.req("fitted").unwrap().as_usize().unwrap() >= 1, "{body}");
+    assert!(!j.req("maps").unwrap().as_obj().unwrap().is_empty(), "{body}");
+    assert!(
+        j.req("mae_before").unwrap().as_f64().unwrap()
+            > j.req("mae_after").unwrap().as_f64().unwrap(),
+        "the fit must explain some of the drift: {body}"
+    );
+
+    // Same traffic, new epoch: the corrected score shifts routing off
+    // the drifted candidate — no restart, no weight change.
+    let mut post_hits = 0usize;
+    for i in 0..40u64 {
+        post_hits += usize::from(route(i) == drifted);
+    }
+    assert!(
+        post_hits < pre_hits / 4,
+        "recalibration must steer quality traffic off the drifted candidate \
+         ({pre_hits}/40 before, {post_hits}/40 after)"
+    );
+
+    // Observability: the calibration gauges render.
+    let (_, m) = client.get("/metrics").unwrap();
+    assert!(m.contains("ipr_calibration_epoch 1"), "{m}");
+    assert!(m.contains("ipr_calibration_updates_total"), "{m}");
+    assert!(m.contains("ipr_calibration_mae_before"), "{m}");
+    assert!(m.contains("ipr_calibration_mae_after"), "{m}");
+
+    // Wrong method is a clean 405 that names the allowed ones.
+    let (st, body) = client.delete("/admin/v1/calibration").unwrap();
+    assert_eq!(st, 405, "{body}");
     fx.stop();
 }
 

@@ -432,6 +432,73 @@ fn prop_score_batch_matches_single() {
     );
 }
 
+/// Calibration (DESIGN.md §18): any correction map fitted from the real
+/// accumulator — random (predicted, oracle) streams through
+/// `CalibrationStats::record` → `take` → PAVA `fit` — is weakly monotone
+/// over the whole score range, never worsens the window MAE, and, applied
+/// per-candidate to a fuzzed score table, leaves the τ-monotone cost
+/// contract of `route_decision` intact. This is the property that makes
+/// recalibration safe to publish mid-flight: a weakly monotone per-
+/// candidate map cannot invert any ordering the gating proofs rely on.
+/// (No MAE-improvement assertion here: the L2-isotonic fit is not the
+/// L1 minimizer, so a pooled block can lose to identity on a fuzzed
+/// window — the drift e2e tests pin MAE improvement where it is real.)
+#[test]
+fn prop_fitted_maps_monotone_and_nesting_safe() {
+    use ipr::control::calibration::{fit, CalibrationStats};
+    check(
+        47,
+        400,
+        |r, _| {
+            // Random drift shape: oracle = predicted scaled by a per-run
+            // factor plus noise, the exact family the fitter must undo.
+            let stats = CalibrationStats::default();
+            let factor = 0.3 + 0.7 * r.next_f64();
+            let n = 16 + r.next_range(200) as usize;
+            for _ in 0..n {
+                let p = r.next_f64() as f32;
+                let o = (p as f64 * factor + 0.05 * (r.next_f64() - 0.5)).clamp(0.0, 1.0);
+                stats.record(p, o);
+            }
+            let (counts, pred, oracle) = stats.take();
+            let m = 2 + r.next_range(6) as usize;
+            (counts, pred, oracle, gen_scores(r, m), gen_costs(r, m))
+        },
+        |(counts, pred, oracle, scores, costs)| {
+            let Some((map, mae_before, mae_after)) = fit(counts, pred, oracle) else {
+                // Empty window: nothing fitted, nothing to violate.
+                return true;
+            };
+            if !mae_before.is_finite() || !mae_after.is_finite() {
+                return false;
+            }
+            // Weak monotonicity of eval over a dense sweep incl. the
+            // constant-extension tails.
+            let mut prev = f32::MIN;
+            for i in -8i32..=72 {
+                let v = map.eval(i as f32 / 64.0);
+                if v < prev {
+                    return false;
+                }
+                prev = v;
+            }
+            // Same map applied to every candidate preserves score order,
+            // so τ-monotone cost must survive recalibration.
+            let corrected: Vec<f32> = scores.iter().map(|&s| map.eval(s)).collect();
+            let mut prev_cost = f64::MAX;
+            for i in 0..=20 {
+                let tau = i as f64 / 20.0;
+                let d = route_decision(&corrected, costs, tau, GatingStrategy::DynamicMax, 0.0);
+                if costs[d.chosen] > prev_cost + 1e-12 {
+                    return false;
+                }
+                prev_cost = costs[d.chosen];
+            }
+            true
+        },
+    );
+}
+
 /// SynthWorld reward bounds under fuzzed (split, index, candidate).
 #[test]
 fn prop_world_rewards_bounded() {
