@@ -286,6 +286,21 @@ impl Metrics {
                 }
             }
         }
+        // Kernel execution tier (DESIGN.md §19): an info gauge naming the
+        // tier this process runs with, plus cumulative planned-GEMM FLOP
+        // counters per tier (rate(ipr_kernel_flops_total) is the live
+        // GFLOP/s the QE engine is sustaining).
+        out.push_str(&format!(
+            "ipr_kernel_tier{{tier=\"{}\"}} 1\n",
+            crate::kernels::active_tier().name()
+        ));
+        for tier in [crate::kernels::Tier::Scalar, crate::kernels::Tier::Simd] {
+            out.push_str(&format!(
+                "ipr_kernel_flops_total{{tier=\"{}\"}} {}\n",
+                tier.name(),
+                crate::kernels::flops_total(tier)
+            ));
+        }
         // Accumulated simulated spend vs the always-strongest
         // counterfactual — the numbers behind ipr_live_csr, needed by
         // workload drivers (ipr loadgen) metering cost externally.
@@ -355,6 +370,16 @@ mod tests {
         assert!(text.contains("ipr_http_responses_total{code=\"200\"} 2"), "{text}");
         assert!(text.contains("ipr_http_responses_total{code=\"429\"} 1"), "{text}");
         assert!(text.contains("ipr_http_responses_total{code=\"503\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn render_contains_kernel_tier_and_flops() {
+        let m = Metrics::default();
+        let text = m.render();
+        let tier = crate::kernels::active_tier().name();
+        assert!(text.contains(&format!("ipr_kernel_tier{{tier=\"{tier}\"}} 1")), "{text}");
+        assert!(text.contains("ipr_kernel_flops_total{tier=\"scalar\"}"), "{text}");
+        assert!(text.contains("ipr_kernel_flops_total{tier=\"simd\"}"), "{text}");
     }
 
     #[test]

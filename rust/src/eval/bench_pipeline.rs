@@ -17,9 +17,11 @@ use std::time::Instant;
 
 use crate::anyhow;
 use crate::coordinator::{Router, RouterConfig};
+use crate::kernels::{
+    active_tier, matmul, simd_supported, AccumMode, Epilogue, PackedGemm, Tier,
+};
 use crate::qe::BatcherConfig;
 use crate::registry::Registry;
-use crate::runtime::reference::{matmul, Epilogue, PackedGemm};
 use crate::runtime::{create_engine, Engine as _, QeModel as _};
 use crate::testkit::live_prompts;
 use crate::util::bench::Table;
@@ -180,13 +182,120 @@ pub fn routing_bench(artifacts: &str, n_requests: usize) -> Result<Json> {
     ]))
 }
 
-/// Kernel micro-bench (DESIGN.md §12): the planned GEMM's GFLOP/s on a
-/// model-shaped dense matrix (vs the naive reference kernel), batched
-/// encode ns/row through the real engine, raw sharded-cache hit latency,
-/// and the router-level cache-hit vs cache-miss p50 — the "hit ≥10x
-/// cheaper than a forward" serving contract. Emits `BENCH_kernels.json`.
+/// Measured inputs to the kernels report, separated from the timing code
+/// so the emitted document shape is unit-testable without running a
+/// bench. `gemm_simd_gflops` / `gemm_simd_relaxed_gflops` are `None` on
+/// hosts without AVX2 and their keys are omitted from the document.
+pub struct KernelsReport {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub density: f64,
+    pub sparse_kind: bool,
+    /// Name of the tier the process would run with (`active_tier()`).
+    pub kernel_tier: &'static str,
+    pub simd_supported: bool,
+    pub gemm_scalar_gflops: f64,
+    pub gemm_simd_gflops: Option<f64>,
+    pub gemm_simd_relaxed_gflops: Option<f64>,
+    pub gemm_naive_gflops: f64,
+    /// Microkernel roof: best tier on an L2-resident long-k shape. A
+    /// measured achievable peak, not a hardware datasheet number.
+    pub peak_gflops_est: f64,
+    pub encode_ns_per_row: f64,
+    pub cache_hit_ns: f64,
+    pub route_hit_p50_us: f64,
+    pub route_miss_p50_us: f64,
+    pub cache_hit_speedup: f64,
+}
+
+impl KernelsReport {
+    /// GFLOP/s of the tier this process actually runs with.
+    fn active_gflops(&self) -> f64 {
+        match self.gemm_simd_gflops {
+            Some(g) if self.kernel_tier == "simd" => g,
+            _ => self.gemm_scalar_gflops,
+        }
+    }
+
+    /// Build the `BENCH_kernels.json` document (`ipr-bench-kernels/v2`).
+    ///
+    /// v2 renames the v1 speedup field to `gemm_speedup_vs_scalar_plan`
+    /// (active tier over the scalar plan); the old `gemm_speedup_vs_naive`
+    /// key is still emitted for this one schema version so downstream
+    /// dashboards migrate without a flag day.
+    pub fn to_json(&self) -> Json {
+        let active = self.active_gflops();
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("schema", Json::str("ipr-bench-kernels/v2")),
+            ("gemm_m", Json::Num(self.m as f64)),
+            ("gemm_k", Json::Num(self.k as f64)),
+            ("gemm_n", Json::Num(self.n as f64)),
+            ("gemm_density", Json::Num(self.density)),
+            ("gemm_sparse_kind", Json::Bool(self.sparse_kind)),
+            ("kernel_tier", Json::str(self.kernel_tier)),
+            ("simd_supported", Json::Bool(self.simd_supported)),
+            ("gemm_gflops", Json::Num(active)),
+            ("gemm_scalar_gflops", Json::Num(self.gemm_scalar_gflops)),
+        ];
+        if let Some(g) = self.gemm_simd_gflops {
+            fields.push(("gemm_simd_gflops", Json::Num(g)));
+        }
+        if let Some(g) = self.gemm_simd_relaxed_gflops {
+            fields.push(("gemm_simd_relaxed_gflops", Json::Num(g)));
+        }
+        fields.push(("gemm_naive_gflops", Json::Num(self.gemm_naive_gflops)));
+        fields.push((
+            "gemm_speedup_vs_scalar_plan",
+            Json::Num(active / self.gemm_scalar_gflops.max(1e-9)),
+        ));
+        // Deprecated in v2, dropped in v3.
+        fields.push((
+            "gemm_speedup_vs_naive",
+            Json::Num(active / self.gemm_naive_gflops.max(1e-9)),
+        ));
+        fields.push(("peak_gflops_est", Json::Num(self.peak_gflops_est)));
+        fields.push((
+            "peak_utilization",
+            Json::Num(active / self.peak_gflops_est.max(1e-9)),
+        ));
+        fields.push(("encode_ns_per_row", Json::Num(self.encode_ns_per_row)));
+        fields.push(("cache_hit_ns", Json::Num(self.cache_hit_ns)));
+        fields.push(("route_hit_p50_us", Json::Num(self.route_hit_p50_us)));
+        fields.push(("route_miss_p50_us", Json::Num(self.route_miss_p50_us)));
+        fields.push(("cache_hit_speedup", Json::Num(self.cache_hit_speedup)));
+        Json::obj(fields)
+    }
+}
+
+/// Time `reps` planned-GEMM calls on an explicit tier and return GFLOP/s.
+fn time_gemm(
+    pg: &PackedGemm,
+    tier: Tier,
+    accum: AccumMode,
+    a: &[f32],
+    m: usize,
+    out: &mut [f32],
+    tmp: &mut Vec<f32>,
+    reps: usize,
+    flops: f64,
+) -> f64 {
+    pg.gemm_tiered(tier, accum, a, m, out, Epilogue::Store, tmp); // warm
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        pg.gemm_tiered(tier, accum, a, m, black_box(&mut *out), Epilogue::Store, tmp);
+    }
+    flops * reps as f64 / t0.elapsed().as_secs_f64() / 1e9
+}
+
+/// Kernel micro-bench (DESIGN.md §12, §19): the planned GEMM's GFLOP/s
+/// per kernel tier on a model-shaped dense matrix (plus the naive
+/// reference kernel and a measured peak-FLOPS estimate), batched encode
+/// ns/row through the real engine, raw sharded-cache hit latency, and
+/// the router-level cache-hit vs cache-miss p50 — the "hit ≥10x cheaper
+/// than a forward" serving contract. Emits `BENCH_kernels.json`.
 pub fn kernels_bench(artifacts: &str, smoke: bool) -> Result<Json> {
-    // --- 1. GEMM GFLOP/s, packed tiled kernel vs naive ---
+    // --- 1. GEMM GFLOP/s per tier on the dense panel ---
     let (m, k, n) = (if smoke { 256 } else { 512 }, 64usize, 256usize);
     let mut rng = Rng::new(5);
     let a: Vec<f32> = (0..m * k).map(|_| (rng.next_f64() as f32) - 0.5).collect();
@@ -194,20 +303,42 @@ pub fn kernels_bench(artifacts: &str, smoke: bool) -> Result<Json> {
     let pg = PackedGemm::pack(&b, k, n);
     let mut out = vec![0f32; m * n];
     let mut tmp = Vec::new();
-    pg.gemm(&a, m, &mut out, Epilogue::Store, &mut tmp); // warm
     let reps = if smoke { 25 } else { 100 };
-    let t0 = Instant::now();
-    for _ in 0..reps {
-        pg.gemm(&a, m, black_box(&mut out), Epilogue::Store, &mut tmp);
-    }
     let flops = 2.0 * m as f64 * k as f64 * n as f64;
-    let gflops = flops * reps as f64 / t0.elapsed().as_secs_f64() / 1e9;
+    let scalar_gflops =
+        time_gemm(&pg, Tier::Scalar, AccumMode::Strict, &a, m, &mut out, &mut tmp, reps, flops);
+    let simd_ok = simd_supported();
+    let simd_gflops = simd_ok.then(|| {
+        time_gemm(&pg, Tier::Simd, AccumMode::Strict, &a, m, &mut out, &mut tmp, reps, flops)
+    });
+    let simd_relaxed_gflops = simd_ok.then(|| {
+        time_gemm(&pg, Tier::Simd, AccumMode::Relaxed, &a, m, &mut out, &mut tmp, reps, flops)
+    });
     let naive_reps = reps.min(25);
     let t0 = Instant::now();
     for _ in 0..naive_reps {
         black_box(matmul(&a, &b, m, k, n));
     }
     let naive_gflops = flops * naive_reps as f64 / t0.elapsed().as_secs_f64() / 1e9;
+
+    // Peak-FLOPS estimate: the best tier on a long-k cache-resident
+    // shape, where the register microkernel dominates and the epilogue
+    // and memory traffic amortize away.
+    let (pm, pk, pn) = (64usize, 256usize, 64usize);
+    let pa: Vec<f32> = (0..pm * pk).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+    let pb: Vec<f32> = (0..pk * pn).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+    let peak_pg = PackedGemm::pack(&pb, pk, pn);
+    let mut peak_out = vec![0f32; pm * pn];
+    let (peak_tier, peak_accum) = if simd_ok {
+        (Tier::Simd, AccumMode::Relaxed)
+    } else {
+        (Tier::Scalar, AccumMode::Strict)
+    };
+    let peak_reps = if smoke { 100 } else { 400 };
+    let peak_flops = 2.0 * pm as f64 * pk as f64 * pn as f64;
+    let peak_gflops_est = time_gemm(
+        &peak_pg, peak_tier, peak_accum, &pa, pm, &mut peak_out, &mut tmp, peak_reps, peak_flops,
+    );
 
     // --- 2. batched encode ns/row through this build's engine ---
     let reg = Registry::load_or_reference(artifacts)?;
@@ -263,29 +394,35 @@ pub fn kernels_bench(artifacts: &str, smoke: bool) -> Result<Json> {
     let miss_p50_us = miss_hist.quantile_ns(0.5) as f64 / 1e3;
     let speedup = if hit_p50_us > 0.0 { miss_p50_us / hit_p50_us } else { f64::INFINITY };
 
-    Ok(Json::obj(vec![
-        ("schema", Json::str("ipr-bench-kernels/v1")),
-        ("gemm_m", Json::Num(m as f64)),
-        ("gemm_k", Json::Num(k as f64)),
-        ("gemm_n", Json::Num(n as f64)),
-        ("gemm_density", Json::Num(pg.density)),
-        ("gemm_sparse_kind", Json::Bool(pg.is_sparse())),
-        ("gemm_gflops", Json::Num(gflops)),
-        ("gemm_naive_gflops", Json::Num(naive_gflops)),
-        ("gemm_speedup_vs_naive", Json::Num(gflops / naive_gflops.max(1e-9))),
-        ("encode_ns_per_row", Json::Num(encode_ns_per_row)),
-        ("cache_hit_ns", Json::Num(cache_hit_ns)),
-        ("route_hit_p50_us", Json::Num(hit_p50_us)),
-        ("route_miss_p50_us", Json::Num(miss_p50_us)),
-        ("cache_hit_speedup", Json::Num(speedup)),
-    ]))
+    let report = KernelsReport {
+        m,
+        k,
+        n,
+        density: pg.density(),
+        sparse_kind: pg.is_sparse(),
+        kernel_tier: active_tier().name(),
+        simd_supported: simd_ok,
+        gemm_scalar_gflops: scalar_gflops,
+        gemm_simd_gflops: simd_gflops,
+        gemm_simd_relaxed_gflops: simd_relaxed_gflops,
+        gemm_naive_gflops: naive_gflops,
+        peak_gflops_est,
+        encode_ns_per_row,
+        cache_hit_ns,
+        route_hit_p50_us: hit_p50_us,
+        route_miss_p50_us: miss_p50_us,
+        cache_hit_speedup: speedup,
+    };
+    Ok(report.to_json())
 }
 
 /// Gate the kernel micro-bench against the baseline: `encode_ns_per_row`
-/// may not regress past `baseline * max_ratio`, and the router-level
-/// cache-hit speedup may not fall below the baseline's floor (both
-/// checks are skipped when the baseline lacks the field — pre-§12
-/// baselines stay valid).
+/// may not regress past `baseline * max_ratio`, the router-level
+/// cache-hit speedup may not fall below the baseline's floor, and the
+/// SIMD tier must stay at least `min_simd_gemm_speedup`x the scalar plan
+/// on the dense panel (skipped on hosts without AVX2). Every check is
+/// skipped when the baseline lacks its field — older baselines stay
+/// valid.
 pub fn check_kernels_regression(
     current: &Json,
     baseline_path: &str,
@@ -318,6 +455,28 @@ pub fn check_kernels_regression(
             ));
         }
         msgs.push(format!("cache-hit speedup {cur:.1}x >= {floor:.1}x"));
+    }
+    if let Some(b) = base.get("min_simd_gemm_speedup") {
+        let floor = b.as_f64()?;
+        let supported = match current.get("simd_supported") {
+            Some(j) => j.as_bool()?,
+            None => false,
+        };
+        if supported {
+            let scalar = current.req("gemm_scalar_gflops")?.as_f64()?;
+            let simd = current.req("gemm_simd_gflops")?.as_f64()?;
+            let ratio = simd / scalar.max(1e-9);
+            if ratio < floor {
+                return Err(anyhow!(
+                    "simd gemm speedup {ratio:.2}x below the {floor:.1}x floor on the dense \
+                     panel (simd {simd:.2} vs scalar {scalar:.2} GFLOP/s); refresh with \
+                     `ipr bench --write-baseline ci/bench_baseline.json` if intended"
+                ));
+            }
+            msgs.push(format!("simd gemm {ratio:.2}x >= {floor:.1}x scalar"));
+        } else {
+            msgs.push("simd gate skipped (no AVX2 on this host)".to_string());
+        }
     }
     if msgs.is_empty() {
         return Ok("kernels gate skipped: baseline has no kernel fields".to_string());
@@ -366,5 +525,86 @@ mod tests {
         let bad = Json::obj(vec![("p50_us", Json::Num(130.0))]);
         assert!(check_routing_regression(&bad, path, 1.25).is_err());
         let _ = std::fs::remove_file(&file);
+    }
+
+    /// Kernels gate: encode ratio, cache-hit floor, and the SIMD-vs-scalar
+    /// dense-panel floor (including the no-AVX2 skip path).
+    #[test]
+    fn kernels_gate_logic() {
+        let file =
+            std::env::temp_dir().join(format!("ipr-kernels-baseline-{}", std::process::id()));
+        std::fs::write(
+            &file,
+            "{\"encode_ns_per_row\": 1000.0, \"min_cache_hit_speedup\": 10.0, \
+             \"min_simd_gemm_speedup\": 1.5}",
+        )
+        .unwrap();
+        let path = file.to_str().unwrap();
+        let doc = |encode: f64, hit: f64, scalar: f64, simd: f64, supported: bool| {
+            Json::obj(vec![
+                ("encode_ns_per_row", Json::Num(encode)),
+                ("cache_hit_speedup", Json::Num(hit)),
+                ("gemm_scalar_gflops", Json::Num(scalar)),
+                ("gemm_simd_gflops", Json::Num(simd)),
+                ("simd_supported", Json::Bool(supported)),
+            ])
+        };
+        assert!(check_kernels_regression(&doc(1100.0, 20.0, 2.0, 4.0, true), path, 1.25).is_ok());
+        // SIMD below the 1.5x floor fails...
+        assert!(check_kernels_regression(&doc(1100.0, 20.0, 2.0, 2.4, true), path, 1.25).is_err());
+        // ...unless the host has no AVX2, in which case the gate skips.
+        let ok = check_kernels_regression(&doc(1100.0, 20.0, 2.0, 0.0, false), path, 1.25);
+        assert!(ok.unwrap().contains("simd gate skipped"));
+        assert!(check_kernels_regression(&doc(2000.0, 20.0, 2.0, 4.0, true), path, 1.25).is_err());
+        assert!(check_kernels_regression(&doc(1100.0, 5.0, 2.0, 4.0, true), path, 1.25).is_err());
+        let _ = std::fs::remove_file(&file);
+    }
+
+    /// The v2 kernels report shape: per-tier GFLOP/s keys, the renamed
+    /// speedup field plus the legacy key, and omission of the SIMD keys
+    /// when the host has no AVX2.
+    #[test]
+    fn kernels_report_shape() {
+        let mut r = KernelsReport {
+            m: 256,
+            k: 64,
+            n: 256,
+            density: 1.0,
+            sparse_kind: false,
+            kernel_tier: "simd",
+            simd_supported: true,
+            gemm_scalar_gflops: 2.0,
+            gemm_simd_gflops: Some(5.0),
+            gemm_simd_relaxed_gflops: Some(6.0),
+            gemm_naive_gflops: 1.0,
+            peak_gflops_est: 10.0,
+            encode_ns_per_row: 1000.0,
+            cache_hit_ns: 50.0,
+            route_hit_p50_us: 10.0,
+            route_miss_p50_us: 200.0,
+            cache_hit_speedup: 20.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.req("schema").unwrap().as_str().unwrap(), "ipr-bench-kernels/v2");
+        assert_eq!(j.req("kernel_tier").unwrap().as_str().unwrap(), "simd");
+        assert!(j.req("simd_supported").unwrap().as_bool().unwrap());
+        assert_eq!(j.req("gemm_gflops").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.req("gemm_scalar_gflops").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.req("gemm_simd_gflops").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.req("gemm_simd_relaxed_gflops").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(j.req("gemm_speedup_vs_scalar_plan").unwrap().as_f64().unwrap(), 2.5);
+        assert_eq!(j.req("gemm_speedup_vs_naive").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.req("peak_utilization").unwrap().as_f64().unwrap(), 0.5);
+        // Scalar-only host: SIMD keys omitted, active tier falls back to
+        // the scalar plan numbers.
+        r.kernel_tier = "scalar";
+        r.simd_supported = false;
+        r.gemm_simd_gflops = None;
+        r.gemm_simd_relaxed_gflops = None;
+        let j = r.to_json();
+        assert!(j.get("gemm_simd_gflops").is_none());
+        assert!(j.get("gemm_simd_relaxed_gflops").is_none());
+        assert_eq!(j.req("gemm_gflops").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.req("gemm_speedup_vs_scalar_plan").unwrap().as_f64().unwrap(), 1.0);
     }
 }

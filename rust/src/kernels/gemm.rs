@@ -1,0 +1,718 @@
+//! The planned GEMM (load-time weight packing + fused epilogues) and the
+//! scalar f32 reference primitives, moved here from `runtime::reference`
+//! so both kernel tiers share one weight layout and one epilogue
+//! implementation (DESIGN.md §19).
+//!
+//! Loop order is the contract: every kernel accumulates each output
+//! element in strictly ascending k order from 0.0, exactly like the
+//! naive reference loops. Register tiling (and the simd tier's 8-lane
+//! vectorization of those tiles) only reorders *which* elements are in
+//! flight, never the per-element contraction order.
+
+use crate::util::arena::slot;
+
+use super::{count_flops, AccumMode, Tier};
+
+/// Column-panel width of the dense kernel (8 accumulators live in
+/// registers per A-row — one AVX2 `f32x8` lane group on the simd tier)
+/// and the row block (4 A-rows share each packed B-panel load).
+pub(crate) const NR: usize = 8;
+pub(crate) const MR: usize = 4;
+
+/// Below this weight density the load-time planner stores a GEMM weight
+/// as CSR and runs the sparse kernel; at or above it, packed dense
+/// panels. Decided once per weight from measured density — the old
+/// per-multiply `if av == 0.0 { continue }` branch is gone.
+const SPARSE_DENSITY_MAX: f64 = 0.30;
+/// Tiny weights always go dense (CSR bookkeeping would dominate).
+const SPARSE_MIN_ELEMS: usize = 512;
+
+/// What the GEMM output loop does with each finished accumulator tile —
+/// the bias/activation/residual epilogues fused into the store so the
+/// output buffer is touched exactly once.
+///
+/// Epilogue code is shared between tiers: [`PackedGemm::gemm_tiered`]
+/// matches the variant ONCE per call into a monomorphized closure that
+/// both the scalar and simd loops invoke per finished tile, so the
+/// tiers cannot drift epilogue-wise (and the per-tile re-dispatch the
+/// old kernel paid is gone from the scalar path too).
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// `out = acc`
+    Store,
+    /// `out += acc` (residual add, e.g. `x += o·Wo`)
+    AddTo,
+    /// `out = gelu(acc + b)` (FFN first linear)
+    BiasGelu(&'a [f32]),
+    /// `out += acc + b` (FFN second linear onto the residual stream)
+    AddBiasTo(&'a [f32]),
+    /// `out = max(acc + b, 0)` (adapter MLP)
+    BiasRelu(&'a [f32]),
+    /// `out = acc + (other_row + b)` (adapter residual: `p' = W2·h + p + b`)
+    StoreAddRowBias { other: &'a [f32], bias: &'a [f32] },
+}
+
+enum GemmKind {
+    /// B pre-packed into `ceil(n/8)` column panels, each `[k, 8]`
+    /// contiguous — the inner loop streams one cache line per k step.
+    Dense { panels: Vec<f32> },
+    /// CSR over B's k rows (chosen for low-density expert weights): for
+    /// each k, the (col, val) pairs of its non-zeros.
+    Sparse { row_ptr: Vec<u32>, cols: Vec<u32>, vals: Vec<f32> },
+}
+
+/// A weight matrix bound to its kernel at load time: `[k, n]`, packed
+/// dense or CSR by measured density. The packed layout is shared by
+/// both kernel tiers — tier selection happens per `gemm` call, not per
+/// weight, so a process never repacks on tier decisions.
+///
+/// ```
+/// use ipr::kernels::{Epilogue, PackedGemm};
+/// let b = vec![1.0f32; 8]; // [k=2, n=4]
+/// let pg = PackedGemm::pack(&b, 2, 4);
+/// let a = vec![1.0f32, 2.0];
+/// let mut out = vec![0f32; 4];
+/// pg.gemm(&a, 1, &mut out, Epilogue::Store, &mut Vec::new());
+/// assert_eq!(out, vec![3.0; 4]);
+/// ```
+pub struct PackedGemm {
+    k: usize,
+    n: usize,
+    /// Fraction of non-zero weights (observability / tests).
+    density: f64,
+    kind: GemmKind,
+}
+
+impl PackedGemm {
+    /// Pack `b` (`[k, n]`, C-order), choosing dense panels or CSR from
+    /// the measured density — the once-per-weight replacement for the old
+    /// per-element zero test in the matmul inner loop.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedGemm {
+        debug_assert!(b.len() >= k * n);
+        let nnz = b[..k * n].iter().filter(|&&v| v != 0.0).count();
+        let density = if k * n == 0 { 1.0 } else { nnz as f64 / (k * n) as f64 };
+        if density < SPARSE_DENSITY_MAX && k * n >= SPARSE_MIN_ELEMS {
+            PackedGemm::pack_sparse(b, k, n)
+        } else {
+            PackedGemm::pack_dense(b, k, n)
+        }
+    }
+
+    /// Force the dense panel layout (tests/benches).
+    pub fn pack_dense(b: &[f32], k: usize, n: usize) -> PackedGemm {
+        let nnz = b[..k * n].iter().filter(|&&v| v != 0.0).count();
+        let np = n.div_ceil(NR);
+        let mut panels = vec![0f32; np * k * NR];
+        for p in 0..np {
+            for kk in 0..k {
+                for l in 0..NR {
+                    let col = p * NR + l;
+                    if col < n {
+                        panels[(p * k + kk) * NR + l] = b[kk * n + col];
+                    }
+                }
+            }
+        }
+        PackedGemm {
+            k,
+            n,
+            density: if k * n == 0 { 1.0 } else { nnz as f64 / (k * n) as f64 },
+            kind: GemmKind::Dense { panels },
+        }
+    }
+
+    /// Force the CSR layout (tests/benches).
+    pub fn pack_sparse(b: &[f32], k: usize, n: usize) -> PackedGemm {
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0u32);
+        let mut nnz = 0usize;
+        for kk in 0..k {
+            for j in 0..n {
+                let v = b[kk * n + j];
+                if v != 0.0 {
+                    cols.push(j as u32);
+                    vals.push(v);
+                    nnz += 1;
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        PackedGemm {
+            k,
+            n,
+            density: if k * n == 0 { 1.0 } else { nnz as f64 / (k * n) as f64 },
+            kind: GemmKind::Sparse { row_ptr, cols, vals },
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.kind, GemmKind::Sparse { .. })
+    }
+
+    /// Measured fraction of non-zero weights.
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+
+    /// `(k, n)` — the packed weight's logical shape.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// `out[m, n] ⟵ epilogue(a[m, k] @ B)` on the process-wide active
+    /// tier and accumulation mode (what the execution plan's call sites
+    /// use). See [`PackedGemm::gemm_tiered`].
+    pub fn gemm(&self, a: &[f32], m: usize, out: &mut [f32], ep: Epilogue<'_>, tmp: &mut Vec<f32>) {
+        self.gemm_tiered(super::active_tier(), super::active_accum(), a, m, out, ep, tmp)
+    }
+
+    /// `out[m, n] ⟵ epilogue(a[m, k] @ B)` — register-tiled (4×8),
+    /// 8-wide-unrolled, branch-free inner loop, on an explicit tier.
+    /// In strict mode each output element's contraction runs in
+    /// ascending k order from 0.0 on BOTH tiers, identical to the naive
+    /// kernel (the parity invariant).
+    ///
+    /// `tmp` is the sparse kernel's per-row accumulation buffer (a
+    /// scratch-arena slot); the dense kernel ignores it.
+    pub fn gemm_tiered(
+        &self,
+        tier: Tier,
+        accum: AccumMode,
+        a: &[f32],
+        m: usize,
+        out: &mut [f32],
+        ep: Epilogue<'_>,
+        tmp: &mut Vec<f32>,
+    ) {
+        let (k, n) = (self.k, self.n);
+        debug_assert!(a.len() >= m * k && out.len() >= m * n);
+        // The epilogue dispatch happens ONCE here: each arm hands the
+        // tile loops a monomorphized closure instead of re-matching the
+        // enum per column tile (the old inner-loop cost on every row).
+        match ep {
+            Epilogue::Store => self.run(tier, accum, a, m, out, tmp, &mut |_i, orow, j0, w, acc| {
+                orow[j0..j0 + w].copy_from_slice(&acc[..w]);
+            }),
+            Epilogue::AddTo => self.run(tier, accum, a, m, out, tmp, &mut |_i, orow, j0, w, acc| {
+                for l in 0..w {
+                    orow[j0 + l] += acc[l];
+                }
+            }),
+            Epilogue::BiasGelu(b) => {
+                self.run(tier, accum, a, m, out, tmp, &mut |_i, orow, j0, w, acc| {
+                    for l in 0..w {
+                        orow[j0 + l] = gelu(acc[l] + b[j0 + l]);
+                    }
+                })
+            }
+            Epilogue::AddBiasTo(b) => {
+                self.run(tier, accum, a, m, out, tmp, &mut |_i, orow, j0, w, acc| {
+                    for l in 0..w {
+                        orow[j0 + l] += acc[l] + b[j0 + l];
+                    }
+                })
+            }
+            Epilogue::BiasRelu(b) => {
+                self.run(tier, accum, a, m, out, tmp, &mut |_i, orow, j0, w, acc| {
+                    for l in 0..w {
+                        orow[j0 + l] = (acc[l] + b[j0 + l]).max(0.0);
+                    }
+                })
+            }
+            Epilogue::StoreAddRowBias { other, bias } => {
+                self.run(tier, accum, a, m, out, tmp, &mut |i, orow, j0, w, acc| {
+                    for l in 0..w {
+                        orow[j0 + l] = acc[l] + (other[i * n + j0 + l] + bias[j0 + l]);
+                    }
+                })
+            }
+        }
+        count_flops(tier, self.flop_count(m));
+    }
+
+    /// FLOPs one `gemm` over `m` rows performs (the /metrics unit).
+    fn flop_count(&self, m: usize) -> u64 {
+        match &self.kind {
+            GemmKind::Dense { .. } => 2 * (m * self.k * self.n) as u64,
+            GemmKind::Sparse { vals, .. } => 2 * (m * vals.len()) as u64,
+        }
+    }
+
+    /// Shared tile-loop driver: kind × tier → loop implementation, with
+    /// the already-monomorphized epilogue closure threaded through.
+    fn run<F>(
+        &self,
+        tier: Tier,
+        accum: AccumMode,
+        a: &[f32],
+        m: usize,
+        out: &mut [f32],
+        tmp: &mut Vec<f32>,
+        apply: &mut F,
+    ) where
+        F: FnMut(usize, &mut [f32], usize, usize, &[f32; NR]),
+    {
+        match &self.kind {
+            GemmKind::Dense { panels } => match tier {
+                Tier::Scalar => dense_scalar(panels, self.k, self.n, a, m, out, apply),
+                Tier::Simd => super::simd::dense(panels, self.k, self.n, a, m, out, accum, apply),
+            },
+            // The CSR inner loop is a scatter (t[col] += av·val): AVX2
+            // has no scatter instruction, so both tiers run the same
+            // scalar loop — the simd dispatch covers CSR for
+            // correctness/accounting, the FLOPS win lives in the dense
+            // panels (DESIGN.md §19).
+            GemmKind::Sparse { row_ptr, cols, vals } => {
+                sparse_rows(row_ptr, cols, vals, self.k, self.n, a, m, out, tmp, apply)
+            }
+        }
+    }
+}
+
+/// The golden scalar dense loop: MR-row blocks against each packed
+/// 8-column panel, accumulators in registers, ascending-k per element.
+fn dense_scalar<F>(
+    panels: &[f32],
+    k: usize,
+    n: usize,
+    a: &[f32],
+    m: usize,
+    out: &mut [f32],
+    apply: &mut F,
+) where
+    F: FnMut(usize, &mut [f32], usize, usize, &[f32; NR]),
+{
+    let np = n.div_ceil(NR);
+    let mut i = 0usize;
+    while i + MR <= m {
+        for p in 0..np {
+            let panel = &panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [[0f32; NR]; MR];
+            for kk in 0..k {
+                let b8 = &panel[kk * NR..kk * NR + NR];
+                for r in 0..MR {
+                    let av = a[(i + r) * k + kk];
+                    let c = &mut acc[r];
+                    for l in 0..NR {
+                        c[l] += av * b8[l];
+                    }
+                }
+            }
+            let j0 = p * NR;
+            let w = (n - j0).min(NR);
+            for r in 0..MR {
+                let orow = &mut out[(i + r) * n..(i + r + 1) * n];
+                apply(i + r, orow, j0, w, &acc[r]);
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        for p in 0..np {
+            let panel = &panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [0f32; NR];
+            for (kk, &av) in arow.iter().enumerate() {
+                let b8 = &panel[kk * NR..kk * NR + NR];
+                for l in 0..NR {
+                    acc[l] += av * b8[l];
+                }
+            }
+            let j0 = p * NR;
+            let w = (n - j0).min(NR);
+            let orow = &mut out[i * n..(i + 1) * n];
+            apply(i, orow, j0, w, &acc);
+        }
+        i += 1;
+    }
+}
+
+/// CSR rows: per A-row scatter-accumulate into the `tmp` slot, then
+/// flush through the epilogue in 8-lane chunks.
+fn sparse_rows<F>(
+    row_ptr: &[u32],
+    cols: &[u32],
+    vals: &[f32],
+    k: usize,
+    n: usize,
+    a: &[f32],
+    m: usize,
+    out: &mut [f32],
+    tmp: &mut Vec<f32>,
+    apply: &mut F,
+) where
+    F: FnMut(usize, &mut [f32], usize, usize, &[f32; NR]),
+{
+    let t = slot(tmp, n);
+    for i in 0..m {
+        t.fill(0.0);
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // once per k row, amortized over its nnz
+            }
+            let s = row_ptr[kk] as usize;
+            let e = row_ptr[kk + 1] as usize;
+            for idx in s..e {
+                t[cols[idx] as usize] += av * vals[idx];
+            }
+        }
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0usize;
+        let mut acc = [0f32; NR];
+        while j0 < n {
+            let w = (n - j0).min(NR);
+            acc[..w].copy_from_slice(&t[j0..j0 + w]);
+            apply(i, orow, j0, w, &acc);
+            j0 += NR;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 math primitives (loop order fixed; f32 accumulation like XLA-CPU)
+// ---------------------------------------------------------------------------
+
+/// C-order matmul: a[m,k] @ b[k,n] -> [m,n]. The naive reference kernel —
+/// kept as the numerical ground truth for the tiled/sparse/simd kernels'
+/// equivalence tests and for load-time one-off products. Branch-free:
+/// dense/sparse is decided per weight at pack time, not per element here.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    matmul_into(a, b, &mut out, m, k, n);
+    out
+}
+
+/// `matmul` into a caller-provided (arena) buffer; zero-fills then
+/// accumulates in ascending k order per element. This is the scalar
+/// ground truth — the tier-dispatched attention form is
+/// [`super::attn_matmul_into`].
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    out[..m * n].fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Row-wise LayerNorm (eps 1e-6, matching model.py) in place.
+pub fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    for row in x.chunks_exact_mut(d) {
+        let mut mean = 0f32;
+        for &v in row.iter() {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0f32;
+        for &v in row.iter() {
+            let c = v - mean;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// Numerically stable softmax in place — the scalar ground truth (the
+/// tier-dispatched attention form is [`super::attn_softmax_in_place`]).
+pub fn softmax_in_place(row: &mut [f32]) {
+    let mut mx = f32::MIN;
+    for &v in row.iter() {
+        mx = mx.max(v);
+    }
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// GELU, tanh approximation (the `jax.nn.gelu` default used by ref.py).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{attn_matmul_into_tiered, attn_softmax_in_place_tiered};
+    use super::*;
+    use crate::runtime::reference::MASK_NEG;
+    use crate::util::minitest::check;
+
+    /// Both tiers in strict mode, for in-module equivalence tests. The
+    /// simd tier runs everywhere (portable wide-lane fallback on
+    /// non-AVX2 hosts), so this list never needs gating.
+    const TIERS: [Tier; 2] = [Tier::Scalar, Tier::Simd];
+
+    #[test]
+    fn primitives_sane() {
+        // matmul 2x2
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+        // softmax sums to 1 and is order-preserving
+        let mut r = [1.0f32, 2.0, 3.0];
+        softmax_in_place(&mut r);
+        let s: f32 = r.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(r[2] > r[1] && r[1] > r[0]);
+        // softmax with MASK_NEG zeroes masked entries
+        let mut r = [0.5f32, MASK_NEG, 0.5];
+        softmax_in_place(&mut r);
+        assert_eq!(r[1], 0.0);
+        assert!((r[0] - 0.5).abs() < 1e-6);
+        // gelu reference points
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        layer_norm(&mut x, &g, &b, 4);
+        let mean: f32 = x.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    fn gen_mat(r: &mut crate::util::rng::Rng, len: usize, zero_every: u64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if zero_every > 0 && r.next_range(zero_every) == 0 {
+                    0.0
+                } else {
+                    (r.next_f64() as f32 - 0.5) * 2.0
+                }
+            })
+            .collect()
+    }
+
+    /// Kernel equivalence: the tiled dense kernel AND the CSR kernel, on
+    /// BOTH tiers in strict mode, match the naive reference matmul to
+    /// ≤1e-6 over ragged shapes, including m/n/k that are not multiples
+    /// of the 4×8 tile. (The stronger bit-exact simd==scalar prop lives
+    /// in `rust/tests/kernels.rs`.)
+    #[test]
+    fn prop_packed_gemm_matches_naive() {
+        check(
+            47,
+            250,
+            |r, _| {
+                let m = 1 + r.next_range(13) as usize; // covers m % 4 != 0
+                let k = 1 + r.next_range(19) as usize;
+                let n = 1 + r.next_range(21) as usize; // covers n % 8 != 0
+                let a = gen_mat(r, m * k, 4);
+                let b = gen_mat(r, k * n, 2); // ~50% zeros: both kinds exercised
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let want = matmul(a, b, *m, *k, *n);
+                let mut tmp = Vec::new();
+                for pg in [PackedGemm::pack_dense(b, *k, *n), PackedGemm::pack_sparse(b, *k, *n)] {
+                    for tier in TIERS {
+                        let mut got = vec![f32::NAN; m * n];
+                        pg.gemm_tiered(
+                            tier,
+                            AccumMode::Strict,
+                            a,
+                            *m,
+                            &mut got,
+                            Epilogue::Store,
+                            &mut tmp,
+                        );
+                        for (w, g) in want.iter().zip(&got) {
+                            if (w - g).abs() > 1e-6 {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// Fused epilogues equal the unfused compute-then-postprocess
+    /// sequence on both kernels and both tiers.
+    #[test]
+    fn prop_gemm_epilogues_match_unfused() {
+        check(
+            53,
+            200,
+            |r, _| {
+                let m = 1 + r.next_range(9) as usize;
+                let k = 1 + r.next_range(11) as usize;
+                let n = 1 + r.next_range(17) as usize;
+                let a = gen_mat(r, m * k, 3);
+                let b = gen_mat(r, k * n, 2);
+                let bias = gen_mat(r, n, 0);
+                let init = gen_mat(r, m * n, 0);
+                let which = r.next_range(5) as usize;
+                (m, k, n, a, b, bias, init, which)
+            },
+            |(m, k, n, a, b, bias, init, which)| {
+                let (m, k, n, which) = (*m, *k, *n, *which);
+                let raw = matmul(a, b, m, k, n);
+                // expected per epilogue
+                let mut want = init.clone();
+                match which {
+                    0 => want.copy_from_slice(&raw), // Store
+                    1 => {
+                        for (w, r0) in want.iter_mut().zip(&raw) {
+                            *w += r0;
+                        }
+                    }
+                    2 => {
+                        for i in 0..m {
+                            for j in 0..n {
+                                want[i * n + j] = gelu(raw[i * n + j] + bias[j]);
+                            }
+                        }
+                    }
+                    3 => {
+                        for i in 0..m {
+                            for j in 0..n {
+                                want[i * n + j] += raw[i * n + j] + bias[j];
+                            }
+                        }
+                    }
+                    _ => {
+                        for i in 0..m {
+                            for j in 0..n {
+                                want[i * n + j] = (raw[i * n + j] + bias[j]).max(0.0);
+                            }
+                        }
+                    }
+                }
+                let mut tmp = Vec::new();
+                for pg in [PackedGemm::pack_dense(b, k, n), PackedGemm::pack_sparse(b, k, n)] {
+                    for tier in TIERS {
+                        let ep = match which {
+                            0 => Epilogue::Store,
+                            1 => Epilogue::AddTo,
+                            2 => Epilogue::BiasGelu(bias),
+                            3 => Epilogue::AddBiasTo(bias),
+                            _ => Epilogue::BiasRelu(bias),
+                        };
+                        let mut got = init.clone();
+                        pg.gemm_tiered(tier, AccumMode::Strict, a, m, &mut got, ep, &mut tmp);
+                        for (w, g) in want.iter().zip(&got) {
+                            if (w - g).abs() > 1e-6 {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_row_bias_epilogue_matches_unfused() {
+        let (m, k, n) = (3usize, 5usize, 7usize);
+        let mut r = crate::util::rng::Rng::new(9);
+        let a = gen_mat(&mut r, m * k, 0);
+        let b = gen_mat(&mut r, k * n, 3);
+        let other = gen_mat(&mut r, m * n, 0);
+        let bias = gen_mat(&mut r, n, 0);
+        let raw = matmul(&a, &b, m, k, n);
+        let mut tmp = Vec::new();
+        for pg in [PackedGemm::pack_dense(&b, k, n), PackedGemm::pack_sparse(&b, k, n)] {
+            for tier in TIERS {
+                let mut got = vec![0f32; m * n];
+                pg.gemm_tiered(
+                    tier,
+                    AccumMode::Strict,
+                    &a,
+                    m,
+                    &mut got,
+                    Epilogue::StoreAddRowBias { other: &other, bias: &bias },
+                    &mut tmp,
+                );
+                for i in 0..m {
+                    for j in 0..n {
+                        let want = raw[i * n + j] + (other[i * n + j] + bias[j]);
+                        assert!((got[i * n + j] - want).abs() < 1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_picks_kind_by_density() {
+        // 64x64 identity: density 1/64 << 0.30 and 4096 elems >= 512
+        let n = 64usize;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        assert!(PackedGemm::pack(&eye, n, n).is_sparse());
+        let dense: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 + 1.0).collect();
+        assert!(!PackedGemm::pack(&dense, n, n).is_sparse());
+        // tiny matrices stay dense regardless of density
+        let tiny = vec![0f32, 1.0, 0.0, 0.0];
+        assert!(!PackedGemm::pack(&tiny, 2, 2).is_sparse());
+    }
+
+    /// The attention kernels are bit-identical across tiers in every
+    /// mode: the simd matmul vectorizes lanes (per-element contraction
+    /// order unchanged) and the simd softmax only vectorizes the max
+    /// reduction and the final scale (both exact).
+    #[test]
+    fn prop_attn_kernels_bit_identical_across_tiers() {
+        check(
+            61,
+            150,
+            |r, _| {
+                let m = 1 + r.next_range(7) as usize;
+                let k = 1 + r.next_range(9) as usize;
+                let n = 1 + r.next_range(19) as usize; // covers n % 8 != 0
+                let a = gen_mat(r, m * k, 3);
+                let b = gen_mat(r, k * n, 3);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                let mut want = vec![0f32; m * n];
+                attn_matmul_into_tiered(Tier::Scalar, a, b, &mut want, *m, *k, *n);
+                let mut got = vec![f32::NAN; m * n];
+                attn_matmul_into_tiered(Tier::Simd, a, b, &mut got, *m, *k, *n);
+                if want.iter().zip(&got).any(|(w, g)| w.to_bits() != g.to_bits()) {
+                    return false;
+                }
+                // softmax over the first output row, both tiers
+                let mut srow = want[..*n].to_vec();
+                attn_softmax_in_place_tiered(Tier::Scalar, &mut srow);
+                let mut grow = got[..*n].to_vec();
+                attn_softmax_in_place_tiered(Tier::Simd, &mut grow);
+                srow.iter().zip(&grow).all(|(w, g)| w.to_bits() == g.to_bits())
+            },
+        );
+    }
+}

@@ -1,0 +1,336 @@
+//! Vectorized kernel tier (DESIGN.md §19): the PackedGemm / attention
+//! hot loops lifted out of [`crate::runtime::reference`] into an
+//! explicitly vectorized subsystem behind runtime CPU-feature dispatch.
+//!
+//! Two tiers execute the same planned kernels:
+//!
+//! * **scalar** — the golden reference path: the exact register-tiled
+//!   loops the reference engine has always run. Every output element
+//!   accumulates in strictly ascending k order from 0.0 (the
+//!   accumulation-order invariant), so the JAX parity fixtures and the
+//!   frozen preset digests are defined against this tier.
+//! * **simd** — 8-lane vectorized kernels. On x86_64 with AVX2 these are
+//!   `core::arch` intrinsics behind `is_x86_feature_detected!`; on every
+//!   other target (and on x86_64 without AVX2 under `--kernel-tier
+//!   auto`) a portable wide-lane fallback written in stable Rust runs
+//!   the same 8-lane schedule. In the default **strict** accumulation
+//!   mode the simd tier is *bit-identical* to scalar: each lane performs
+//!   the same IEEE-754 f32 multiply-then-add per k step that the scalar
+//!   loop performs per element, and rustc never contracts a separate
+//!   mul+add into an FMA, so the f32 results agree bit for bit. The
+//!   opt-in **relaxed** mode (`--relaxed-accum`) enables FMA and split
+//!   accumulators — faster, but only ≤1e-4 close to the scalar plan
+//!   (the same tolerance as the JAX parity fixture), asserted by
+//!   property tests over ragged non-tile-multiple shapes.
+//!
+//! Tier selection: `--kernel-tier {auto,simd,scalar}` on every `ipr`
+//! subcommand, or the `IPR_KERNEL_TIER` environment variable for
+//! library/test entry points (the CI matrix runs the whole suite under
+//! both values). `auto` picks simd when the CPU supports it and scalar
+//! otherwise; an explicit `simd` on unsupported hardware is a clean
+//! error, never UB. The resolved tier is pinned process-wide on first
+//! use ([`configure`] / [`active_tier`]) because the packed-weight plans
+//! cache nothing tier-specific — both tiers read the same panels — but
+//! mid-flight switches would tear the FLOP accounting.
+//!
+//! Coverage: the dense register-tiled GEMM (all six fused
+//! [`Epilogue`]s), the CSR GEMM, and the attention score/AV matmuls and
+//! softmax ([`attn_matmul_into`], [`attn_softmax_in_place`]). The CSR
+//! inner loop is a scatter (`t[cols[idx]] += av·vals[idx]`) with no AVX2
+//! scatter instruction to lean on, so both tiers share its scalar loop —
+//! the simd dispatch still covers it for correctness/accounting, but the
+//! FLOPS win lives in the dense panels (DESIGN.md §19 has the argument).
+//!
+//! Observability: per-tier FLOP counters ([`flops_total`]) rendered by
+//! `GET /metrics` as `ipr_kernel_flops_total{tier=...}` next to the
+//! `ipr_kernel_tier` info gauge; `ipr bench` reports measured GFLOP/s
+//! per tier plus a peak-FLOPS utilization estimate in
+//! `BENCH_kernels.json`, and CI gates simd ≥ 1.5× scalar on the dense
+//! 256×256 panel (`ci/bench_baseline.json: min_simd_gemm_speedup`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::anyhow;
+use crate::util::error::Result;
+
+mod gemm;
+mod simd;
+
+pub use gemm::{gelu, layer_norm, matmul, matmul_into, sigmoid, softmax_in_place};
+pub use gemm::{Epilogue, PackedGemm};
+
+/// What the operator asked for (`--kernel-tier` / `IPR_KERNEL_TIER`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TierChoice {
+    /// simd when the CPU supports it, scalar otherwise (the default).
+    Auto,
+    /// Require the vectorized tier; clean error if unsupported.
+    Simd,
+    /// Force the golden scalar reference path.
+    Scalar,
+}
+
+impl TierChoice {
+    pub fn parse(s: &str) -> Result<TierChoice> {
+        match s {
+            "auto" => Ok(TierChoice::Auto),
+            "simd" => Ok(TierChoice::Simd),
+            "scalar" => Ok(TierChoice::Scalar),
+            other => Err(anyhow!(
+                "unknown kernel tier '{other}' (expected auto, simd or scalar)"
+            )),
+        }
+    }
+}
+
+/// A resolved execution tier — what the kernels actually run.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tier {
+    Scalar,
+    Simd,
+}
+
+impl Tier {
+    /// Stable label used in /metrics, bench JSON and file names.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Simd => "simd",
+        }
+    }
+}
+
+/// f32 accumulation contract for the simd tier (no effect on scalar).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AccumMode {
+    /// Per-element ascending-k mul-then-add — bit-identical to the
+    /// scalar plan (the default; frozen digests assume it).
+    Strict,
+    /// FMA + split accumulators (`--relaxed-accum`): faster, ≤1e-4 from
+    /// the scalar plan. Falls back to strict kernels when the CPU has
+    /// AVX2 but not FMA.
+    Relaxed,
+}
+
+/// Whether this host can run the intrinsic simd kernels (x86_64 with
+/// AVX2). The portable wide-lane fallback needs no support — it is what
+/// `auto` degrades to *through the scalar tier* on other hardware; an
+/// explicit `--kernel-tier simd` insists on the intrinsics and errors
+/// here instead of silently benchmarking the wrong thing.
+pub fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Pure tier-resolution rule, unit-testable without real hardware:
+/// `Auto` degrades to scalar when simd is unavailable; an explicit
+/// `Simd` on unsupported hardware is a clean error (never UB — the
+/// intrinsic kernels are only ever entered behind this check plus the
+/// per-call `is_x86_feature_detected!`).
+pub fn resolve(choice: TierChoice, simd_available: bool) -> Result<Tier> {
+    match choice {
+        TierChoice::Scalar => Ok(Tier::Scalar),
+        TierChoice::Auto => Ok(if simd_available { Tier::Simd } else { Tier::Scalar }),
+        TierChoice::Simd => {
+            if simd_available {
+                Ok(Tier::Simd)
+            } else {
+                Err(anyhow!(
+                    "kernel tier 'simd' requires x86_64 AVX2, which this host lacks; \
+                     use --kernel-tier auto (falls back to scalar) or --kernel-tier scalar"
+                ))
+            }
+        }
+    }
+}
+
+static TIER: OnceLock<Tier> = OnceLock::new();
+static ACCUM: OnceLock<AccumMode> = OnceLock::new();
+
+/// Resolve and pin the process-wide tier + accumulation mode. CLI entry
+/// points call this before any model load so an impossible request
+/// (`--kernel-tier simd` without AVX2) surfaces as a normal error.
+/// Idempotent for the same resolved values; a conflicting re-configure
+/// (tests sharing a process, say) is an error rather than a silent
+/// mid-flight switch.
+pub fn configure(choice: TierChoice, relaxed: bool) -> Result<Tier> {
+    let want = resolve(choice, simd_supported())?;
+    let got = *TIER.get_or_init(|| want);
+    if got != want {
+        return Err(anyhow!(
+            "kernel tier already pinned to '{}' in this process (asked for '{}')",
+            got.name(),
+            want.name()
+        ));
+    }
+    let want_accum = if relaxed { AccumMode::Relaxed } else { AccumMode::Strict };
+    let got_accum = *ACCUM.get_or_init(|| want_accum);
+    if got_accum != want_accum {
+        return Err(anyhow!(
+            "accumulation mode already pinned to {:?} in this process (asked for {:?})",
+            got_accum,
+            want_accum
+        ));
+    }
+    Ok(got)
+}
+
+/// The pinned tier, initializing from `IPR_KERNEL_TIER` (default auto)
+/// on first use. Library/test/bench entry points land here without a
+/// CLI; a malformed or unsupported env value panics with the resolver's
+/// message — fail-fast is right for an env override, and the CLI path
+/// goes through [`configure`] first and reports the same condition as a
+/// clean error.
+pub fn active_tier() -> Tier {
+    *TIER.get_or_init(|| {
+        let choice = match std::env::var("IPR_KERNEL_TIER") {
+            Ok(v) => TierChoice::parse(&v).unwrap_or_else(|e| panic!("IPR_KERNEL_TIER: {e}")),
+            Err(_) => TierChoice::Auto,
+        };
+        resolve(choice, simd_supported()).unwrap_or_else(|e| panic!("IPR_KERNEL_TIER: {e}"))
+    })
+}
+
+/// The pinned accumulation mode (`IPR_RELAXED_ACCUM=1` or
+/// `--relaxed-accum`; strict otherwise).
+pub fn active_accum() -> AccumMode {
+    *ACCUM.get_or_init(|| match std::env::var("IPR_RELAXED_ACCUM") {
+        Ok(v) if v == "1" || v == "true" => AccumMode::Relaxed,
+        _ => AccumMode::Strict,
+    })
+}
+
+// Per-tier FLOP accounting, counted once per PackedGemm::gemm call (2mkn
+// dense / 2·m·nnz CSR). The per-row attention matmuls are deliberately
+// NOT counted: they would add thousands of contended fetch_adds per
+// batch across the worker pool for a rounding-error share of the FLOPs.
+static FLOPS_SCALAR: AtomicU64 = AtomicU64::new(0);
+static FLOPS_SIMD: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn count_flops(tier: Tier, flops: u64) {
+    match tier {
+        Tier::Scalar => FLOPS_SCALAR.fetch_add(flops, Ordering::Relaxed),
+        Tier::Simd => FLOPS_SIMD.fetch_add(flops, Ordering::Relaxed),
+    };
+}
+
+/// Cumulative planned-GEMM FLOPs executed on `tier` since process start
+/// (rendered as `ipr_kernel_flops_total{tier=...}` in /metrics).
+pub fn flops_total(tier: Tier) -> u64 {
+    match tier {
+        Tier::Scalar => FLOPS_SCALAR.load(Ordering::Relaxed),
+        Tier::Simd => FLOPS_SIMD.load(Ordering::Relaxed),
+    }
+}
+
+/// Tier-dispatched attention matmul (`attend_row`'s Q·Kᵀ and scores·V):
+/// zero-fills `out[m, n]` then accumulates `a[m, k] @ b[k, n]` in
+/// ascending k order per element. The simd tier vectorizes the j
+/// (lane) dimension of the axpy inner loop, which preserves per-element
+/// contraction order — bit-identical to the scalar kernel in every
+/// accumulation mode, so the parity fixtures see one attention answer.
+pub fn attn_matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    attn_matmul_into_tiered(active_tier(), a, b, out, m, k, n)
+}
+
+/// [`attn_matmul_into`] with an explicit tier (tests and benches).
+pub fn attn_matmul_into_tiered(
+    tier: Tier,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match tier {
+        Tier::Scalar => matmul_into(a, b, out, m, k, n),
+        Tier::Simd => simd::matmul_into(a, b, out, m, k, n),
+    }
+}
+
+/// Tier-dispatched numerically-stable softmax. The simd tier vectorizes
+/// the max reduction (f32 max is associative over non-NaN inputs, so
+/// the lane-wise max + horizontal fold equals the sequential fold) and
+/// the final scale multiply (independent per element); the exp +
+/// running sum stays a sequential scalar loop to preserve the summation
+/// order. Bit-identical to the scalar kernel by construction.
+pub fn attn_softmax_in_place(row: &mut [f32]) {
+    attn_softmax_in_place_tiered(active_tier(), row)
+}
+
+/// [`attn_softmax_in_place`] with an explicit tier (tests and benches).
+pub fn attn_softmax_in_place_tiered(tier: Tier, row: &mut [f32]) {
+    match tier {
+        Tier::Scalar => softmax_in_place(row),
+        Tier::Simd => simd::softmax_in_place(row),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The dispatch rule of record: `auto` degrades to scalar without
+    /// intrinsics, explicit `simd` on unsupported hardware is a clean
+    /// error (the satellite-3 contract).
+    #[test]
+    fn resolve_matrix() {
+        assert_eq!(resolve(TierChoice::Auto, true).unwrap(), Tier::Simd);
+        assert_eq!(resolve(TierChoice::Auto, false).unwrap(), Tier::Scalar);
+        assert_eq!(resolve(TierChoice::Scalar, true).unwrap(), Tier::Scalar);
+        assert_eq!(resolve(TierChoice::Scalar, false).unwrap(), Tier::Scalar);
+        assert_eq!(resolve(TierChoice::Simd, true).unwrap(), Tier::Simd);
+        let err = resolve(TierChoice::Simd, false).unwrap_err().to_string();
+        assert!(err.contains("AVX2"), "{err}");
+    }
+
+    #[test]
+    fn tier_choice_parses() {
+        assert_eq!(TierChoice::parse("auto").unwrap(), TierChoice::Auto);
+        assert_eq!(TierChoice::parse("simd").unwrap(), TierChoice::Simd);
+        assert_eq!(TierChoice::parse("scalar").unwrap(), TierChoice::Scalar);
+        assert!(TierChoice::parse("avx512").is_err());
+    }
+
+    /// The active tier always agrees with the pure resolver given this
+    /// host's support + env — whichever CI matrix leg we are on.
+    #[test]
+    fn active_tier_matches_env_resolution() {
+        let choice = match std::env::var("IPR_KERNEL_TIER") {
+            Ok(v) => TierChoice::parse(&v).unwrap(),
+            Err(_) => TierChoice::Auto,
+        };
+        // Under IPR_KERNEL_TIER=simd on a non-AVX2 host the suite cannot
+        // run at all (active_tier panics with the resolver's message),
+        // so reaching this assert implies resolve() succeeded too.
+        assert_eq!(active_tier(), resolve(choice, simd_supported()).unwrap());
+    }
+
+    #[test]
+    fn flop_counters_accumulate_per_tier() {
+        let before = flops_total(Tier::Scalar);
+        let b: Vec<f32> = (0..32 * 16).map(|i| (i % 5) as f32 - 2.0).collect();
+        let pg = PackedGemm::pack_dense(&b, 32, 16);
+        let a = vec![1.0f32; 4 * 32];
+        let mut out = vec![0f32; 4 * 16];
+        pg.gemm_tiered(
+            Tier::Scalar,
+            AccumMode::Strict,
+            &a,
+            4,
+            &mut out,
+            Epilogue::Store,
+            &mut Vec::new(),
+        );
+        let delta = flops_total(Tier::Scalar) - before;
+        assert_eq!(delta, 2 * 4 * 32 * 16);
+    }
+}

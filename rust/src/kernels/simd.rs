@@ -1,0 +1,697 @@
+//! The vectorized (simd) kernel tier: 8-lane implementations of the
+//! dense GEMM microkernel, the attention axpy matmul and the softmax
+//! reductions (DESIGN.md §19).
+//!
+//! Two implementations share every loop schedule:
+//!
+//! * [`avx2`] — x86_64 `core::arch` intrinsics, compiled with
+//!   `#[target_feature]` and only ever entered behind
+//!   `is_x86_feature_detected!` (so the binary stays runnable on any
+//!   x86_64, and an unsupported request fails at tier resolution, not
+//!   with an illegal instruction);
+//! * [`portable`] — the same 8-lane schedule in stable Rust array code,
+//!   the compile target on non-x86_64 and the runtime fallback when
+//!   AVX2 is undetected. LLVM autovectorizes the fixed-width lane loops
+//!   where profitable; correctness never depends on it.
+//!
+//! Strict-mode bit-exactness argument (why the frozen digests hold):
+//! the scalar microkernel computes `acc[l] += av * b8[l]` per lane — an
+//! IEEE-754 f32 multiply, then an f32 add. The AVX2 strict kernel
+//! computes `_mm256_add_ps(c, _mm256_mul_ps(set1(av), b))` — the same
+//! two operations on eight lanes at once. Rustc does not contract a
+//! separate mul+add into an FMA (contraction is only ever opt-in), so
+//! every lane sees the identical rounding sequence and the results are
+//! bit-for-bit equal. The relaxed kernels break exactly this — FMA
+//! (single rounding) and even/odd split accumulators — which is why
+//! they sit behind `--relaxed-accum` with a ≤1e-4 contract.
+
+use super::gemm::{MR, NR};
+use super::AccumMode;
+
+/// Dense tile loop on the simd tier: identical block structure to the
+/// scalar loop (MR-row blocks against each packed 8-column panel, then
+/// a single-row tail), with the per-panel accumulation routed to the
+/// AVX2 or portable 8-lane microkernel.
+pub(crate) fn dense<F>(
+    panels: &[f32],
+    k: usize,
+    n: usize,
+    a: &[f32],
+    m: usize,
+    out: &mut [f32],
+    accum: AccumMode,
+    apply: &mut F,
+) where
+    F: FnMut(usize, &mut [f32], usize, usize, &[f32; NR]),
+{
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // Relaxed mode needs FMA on top of AVX2; without it the strict
+        // kernel runs (strict is always a valid answer for relaxed).
+        let fma = accum == AccumMode::Relaxed && std::arch::is_x86_feature_detected!("fma");
+        dense_avx2(panels, k, n, a, m, out, fma, apply);
+        return;
+    }
+    dense_portable(panels, k, n, a, m, out, accum, apply);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dense_avx2<F>(
+    panels: &[f32],
+    k: usize,
+    n: usize,
+    a: &[f32],
+    m: usize,
+    out: &mut [f32],
+    fma: bool,
+    apply: &mut F,
+) where
+    F: FnMut(usize, &mut [f32], usize, usize, &[f32; NR]),
+{
+    let np = n.div_ceil(NR);
+    let mut i = 0usize;
+    while i + MR <= m {
+        let rows = [
+            &a[i * k..(i + 1) * k],
+            &a[(i + 1) * k..(i + 2) * k],
+            &a[(i + 2) * k..(i + 3) * k],
+            &a[(i + 3) * k..(i + 4) * k],
+        ];
+        for p in 0..np {
+            let panel = &panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [[0f32; NR]; MR];
+            // SAFETY: avx2 (and fma when `fma` is set) verified by the
+            // caller's is_x86_feature_detected!; `panel` holds exactly
+            // k 8-lane groups and every row slice has length k.
+            unsafe {
+                if fma {
+                    avx2::accum4_relaxed(&rows, k, panel, &mut acc);
+                } else {
+                    avx2::accum4_strict(&rows, k, panel, &mut acc);
+                }
+            }
+            let j0 = p * NR;
+            let w = (n - j0).min(NR);
+            for r in 0..MR {
+                let orow = &mut out[(i + r) * n..(i + r + 1) * n];
+                apply(i + r, orow, j0, w, &acc[r]);
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        for p in 0..np {
+            let panel = &panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [0f32; NR];
+            // SAFETY: as above.
+            unsafe {
+                if fma {
+                    avx2::accum1_relaxed(arow, k, panel, &mut acc);
+                } else {
+                    avx2::accum1_strict(arow, k, panel, &mut acc);
+                }
+            }
+            let j0 = p * NR;
+            let w = (n - j0).min(NR);
+            let orow = &mut out[i * n..(i + 1) * n];
+            apply(i, orow, j0, w, &acc);
+        }
+        i += 1;
+    }
+}
+
+fn dense_portable<F>(
+    panels: &[f32],
+    k: usize,
+    n: usize,
+    a: &[f32],
+    m: usize,
+    out: &mut [f32],
+    accum: AccumMode,
+    apply: &mut F,
+) where
+    F: FnMut(usize, &mut [f32], usize, usize, &[f32; NR]),
+{
+    let np = n.div_ceil(NR);
+    let mut i = 0usize;
+    while i + MR <= m {
+        let rows = [
+            &a[i * k..(i + 1) * k],
+            &a[(i + 1) * k..(i + 2) * k],
+            &a[(i + 2) * k..(i + 3) * k],
+            &a[(i + 3) * k..(i + 4) * k],
+        ];
+        for p in 0..np {
+            let panel = &panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [[0f32; NR]; MR];
+            portable::accum4(&rows, k, panel, &mut acc, accum);
+            let j0 = p * NR;
+            let w = (n - j0).min(NR);
+            for r in 0..MR {
+                let orow = &mut out[(i + r) * n..(i + r + 1) * n];
+                apply(i + r, orow, j0, w, &acc[r]);
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        for p in 0..np {
+            let panel = &panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [0f32; NR];
+            portable::accum1(arow, k, panel, &mut acc, accum);
+            let j0 = p * NR;
+            let w = (n - j0).min(NR);
+            let orow = &mut out[i * n..(i + 1) * n];
+            apply(i, orow, j0, w, &acc);
+        }
+        i += 1;
+    }
+}
+
+/// Attention matmul on the simd tier: same zero-fill + ascending-k axpy
+/// schedule as the scalar `matmul_into`, with the j (lane) loop run 8
+/// wide. Per-element contraction order is unchanged, so this is
+/// bit-identical to the scalar kernel regardless of accumulation mode.
+pub(crate) fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    out[..m * n].fill(0.0);
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                // SAFETY: avx2 detected above.
+                unsafe { avx2::axpy(av, &b[kk * n..(kk + 1) * n], orow) };
+            }
+        }
+        return;
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            portable::axpy(av, &b[kk * n..(kk + 1) * n], orow);
+        }
+    }
+}
+
+/// Softmax on the simd tier: vectorized max reduction (f32 max is
+/// associative over non-NaN inputs, so lane-max + horizontal fold
+/// equals the scalar sequential fold bit for bit), scalar exp + running
+/// sum (summation order is the contract), vectorized final scale
+/// (independent per element). Bit-identical to the scalar kernel.
+pub(crate) fn softmax_in_place(row: &mut [f32]) {
+    let mx = max_of(row);
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    scale(row, inv);
+}
+
+fn max_of(row: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: avx2 detected above.
+        return unsafe { avx2::max_of(row) };
+    }
+    portable::max_of(row)
+}
+
+fn scale(row: &mut [f32], by: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: avx2 detected above.
+        unsafe { avx2::scale(row, by) };
+        return;
+    }
+    portable::scale(row, by);
+}
+
+/// Portable wide-lane kernels: the 8-lane schedule written as
+/// fixed-width array loops in stable Rust. Always compiled (every
+/// target), reachable at runtime whenever AVX2 is undetected — which is
+/// also what makes the simd tier testable on any hardware.
+mod portable {
+    use super::{AccumMode, MR, NR};
+
+    #[inline(always)]
+    fn load8(s: &[f32]) -> [f32; NR] {
+        let mut v = [0f32; NR];
+        v.copy_from_slice(&s[..NR]);
+        v
+    }
+
+    /// 4×8 tile accumulation over k. `acc` must arrive zeroed. Strict:
+    /// one mul-then-add per lane per k, ascending — the scalar order.
+    /// Relaxed: even/odd split accumulators, combined at the end.
+    pub(super) fn accum4(
+        rows: &[&[f32]; MR],
+        k: usize,
+        panel: &[f32],
+        acc: &mut [[f32; NR]; MR],
+        accum: AccumMode,
+    ) {
+        match accum {
+            AccumMode::Strict => {
+                for kk in 0..k {
+                    let b8 = load8(&panel[kk * NR..]);
+                    for r in 0..MR {
+                        let av = rows[r][kk];
+                        for l in 0..NR {
+                            acc[r][l] += av * b8[l];
+                        }
+                    }
+                }
+            }
+            AccumMode::Relaxed => {
+                let mut odd = [[0f32; NR]; MR];
+                let mut kk = 0usize;
+                while kk + 2 <= k {
+                    let b0 = load8(&panel[kk * NR..]);
+                    let b1 = load8(&panel[(kk + 1) * NR..]);
+                    for r in 0..MR {
+                        let (a0, a1) = (rows[r][kk], rows[r][kk + 1]);
+                        for l in 0..NR {
+                            acc[r][l] += a0 * b0[l];
+                            odd[r][l] += a1 * b1[l];
+                        }
+                    }
+                    kk += 2;
+                }
+                if kk < k {
+                    let b0 = load8(&panel[kk * NR..]);
+                    for r in 0..MR {
+                        let a0 = rows[r][kk];
+                        for l in 0..NR {
+                            acc[r][l] += a0 * b0[l];
+                        }
+                    }
+                }
+                for r in 0..MR {
+                    for l in 0..NR {
+                        acc[r][l] += odd[r][l];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Single-row variant of [`accum4`] for the m % 4 tail.
+    pub(super) fn accum1(
+        arow: &[f32],
+        k: usize,
+        panel: &[f32],
+        acc: &mut [f32; NR],
+        accum: AccumMode,
+    ) {
+        match accum {
+            AccumMode::Strict => {
+                for kk in 0..k {
+                    let b8 = load8(&panel[kk * NR..]);
+                    let av = arow[kk];
+                    for l in 0..NR {
+                        acc[l] += av * b8[l];
+                    }
+                }
+            }
+            AccumMode::Relaxed => {
+                let mut odd = [0f32; NR];
+                let mut kk = 0usize;
+                while kk + 2 <= k {
+                    let b0 = load8(&panel[kk * NR..]);
+                    let b1 = load8(&panel[(kk + 1) * NR..]);
+                    let (a0, a1) = (arow[kk], arow[kk + 1]);
+                    for l in 0..NR {
+                        acc[l] += a0 * b0[l];
+                        odd[l] += a1 * b1[l];
+                    }
+                    kk += 2;
+                }
+                if kk < k {
+                    let b0 = load8(&panel[kk * NR..]);
+                    let a0 = arow[kk];
+                    for l in 0..NR {
+                        acc[l] += a0 * b0[l];
+                    }
+                }
+                for l in 0..NR {
+                    acc[l] += odd[l];
+                }
+            }
+        }
+    }
+
+    /// `y[j] += av * x[j]`, 8-lane blocks then a scalar tail — the same
+    /// mul-then-add per element as the scalar axpy.
+    pub(super) fn axpy(av: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len().min(x.len());
+        let mut j = 0usize;
+        while j + NR <= n {
+            for l in 0..NR {
+                y[j + l] += av * x[j + l];
+            }
+            j += NR;
+        }
+        while j < n {
+            y[j] += av * x[j];
+            j += 1;
+        }
+    }
+
+    /// Max reduction from the scalar fold's f32::MIN start.
+    pub(super) fn max_of(row: &[f32]) -> f32 {
+        let mut mx = f32::MIN;
+        let mut j = 0usize;
+        if row.len() >= NR {
+            let mut lanes = [f32::MIN; NR];
+            while j + NR <= row.len() {
+                for l in 0..NR {
+                    lanes[l] = lanes[l].max(row[j + l]);
+                }
+                j += NR;
+            }
+            for l in lanes {
+                mx = mx.max(l);
+            }
+        }
+        while j < row.len() {
+            mx = mx.max(row[j]);
+            j += 1;
+        }
+        mx
+    }
+
+    pub(super) fn scale(row: &mut [f32], by: f32) {
+        for v in row.iter_mut() {
+            *v *= by;
+        }
+    }
+}
+
+/// AVX2/FMA intrinsic kernels. Every function here is `unsafe` with a
+/// `#[target_feature]` gate; callers must verify support via
+/// `is_x86_feature_detected!` first — the tier resolver guarantees an
+/// explicit `--kernel-tier simd` never reaches these on a host without
+/// AVX2 (it errors at configure time instead).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// Strict 4×8 tile: per k step, broadcast each row's a-value and do
+    /// a separate 8-lane mul then add — the scalar rounding sequence on
+    /// eight lanes, hence bit-identical accumulation.
+    ///
+    /// # Safety
+    /// Requires AVX2 (caller-detected); `panel.len() >= k * NR` and
+    /// every slice in `rows` has length >= k.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum4_strict(
+        rows: &[&[f32]; MR],
+        k: usize,
+        panel: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(panel.len() >= k * NR);
+        let pp = panel.as_ptr();
+        let mut c0 = _mm256_setzero_ps();
+        let mut c1 = _mm256_setzero_ps();
+        let mut c2 = _mm256_setzero_ps();
+        let mut c3 = _mm256_setzero_ps();
+        for kk in 0..k {
+            let b = _mm256_loadu_ps(pp.add(kk * NR));
+            c0 = _mm256_add_ps(c0, _mm256_mul_ps(_mm256_set1_ps(*rows[0].get_unchecked(kk)), b));
+            c1 = _mm256_add_ps(c1, _mm256_mul_ps(_mm256_set1_ps(*rows[1].get_unchecked(kk)), b));
+            c2 = _mm256_add_ps(c2, _mm256_mul_ps(_mm256_set1_ps(*rows[2].get_unchecked(kk)), b));
+            c3 = _mm256_add_ps(c3, _mm256_mul_ps(_mm256_set1_ps(*rows[3].get_unchecked(kk)), b));
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+
+    /// Strict single-row tail of [`accum4_strict`].
+    ///
+    /// # Safety
+    /// Requires AVX2; `panel.len() >= k * NR`, `arow.len() >= k`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum1_strict(arow: &[f32], k: usize, panel: &[f32], acc: &mut [f32; NR]) {
+        debug_assert!(panel.len() >= k * NR);
+        let pp = panel.as_ptr();
+        let mut c = _mm256_setzero_ps();
+        for kk in 0..k {
+            let b = _mm256_loadu_ps(pp.add(kk * NR));
+            c = _mm256_add_ps(c, _mm256_mul_ps(_mm256_set1_ps(*arow.get_unchecked(kk)), b));
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), c);
+    }
+
+    /// Relaxed 4×8 tile: FMA with even/odd split accumulators (2-deep
+    /// k unroll) — different rounding than strict, ≤1e-4 contract.
+    ///
+    /// # Safety
+    /// Requires AVX2 *and* FMA; bounds as in [`accum4_strict`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn accum4_relaxed(
+        rows: &[&[f32]; MR],
+        k: usize,
+        panel: &[f32],
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(panel.len() >= k * NR);
+        let pp = panel.as_ptr();
+        let mut even = [_mm256_setzero_ps(); MR];
+        let mut odd = [_mm256_setzero_ps(); MR];
+        let mut kk = 0usize;
+        while kk + 2 <= k {
+            let b0 = _mm256_loadu_ps(pp.add(kk * NR));
+            let b1 = _mm256_loadu_ps(pp.add((kk + 1) * NR));
+            for r in 0..MR {
+                even[r] = _mm256_fmadd_ps(_mm256_set1_ps(*rows[r].get_unchecked(kk)), b0, even[r]);
+                odd[r] =
+                    _mm256_fmadd_ps(_mm256_set1_ps(*rows[r].get_unchecked(kk + 1)), b1, odd[r]);
+            }
+            kk += 2;
+        }
+        if kk < k {
+            let b0 = _mm256_loadu_ps(pp.add(kk * NR));
+            for r in 0..MR {
+                even[r] = _mm256_fmadd_ps(_mm256_set1_ps(*rows[r].get_unchecked(kk)), b0, even[r]);
+            }
+        }
+        for r in 0..MR {
+            _mm256_storeu_ps(acc[r].as_mut_ptr(), _mm256_add_ps(even[r], odd[r]));
+        }
+    }
+
+    /// Relaxed single-row tail of [`accum4_relaxed`].
+    ///
+    /// # Safety
+    /// Requires AVX2 and FMA; bounds as in [`accum1_strict`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn accum1_relaxed(
+        arow: &[f32],
+        k: usize,
+        panel: &[f32],
+        acc: &mut [f32; NR],
+    ) {
+        debug_assert!(panel.len() >= k * NR);
+        let pp = panel.as_ptr();
+        let mut even = _mm256_setzero_ps();
+        let mut odd = _mm256_setzero_ps();
+        let mut kk = 0usize;
+        while kk + 2 <= k {
+            let b0 = _mm256_loadu_ps(pp.add(kk * NR));
+            let b1 = _mm256_loadu_ps(pp.add((kk + 1) * NR));
+            even = _mm256_fmadd_ps(_mm256_set1_ps(*arow.get_unchecked(kk)), b0, even);
+            odd = _mm256_fmadd_ps(_mm256_set1_ps(*arow.get_unchecked(kk + 1)), b1, odd);
+            kk += 2;
+        }
+        if kk < k {
+            let b0 = _mm256_loadu_ps(pp.add(kk * NR));
+            even = _mm256_fmadd_ps(_mm256_set1_ps(*arow.get_unchecked(kk)), b0, even);
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), _mm256_add_ps(even, odd));
+    }
+
+    /// `y[j] += av * x[j]` — separate mul and add per lane (strict
+    /// rounding), 8-lane blocks then a scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(av: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len().min(x.len());
+        let va = _mm256_set1_ps(av);
+        let mut j = 0usize;
+        while j + NR <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(yv, _mm256_mul_ps(va, xv)));
+            j += NR;
+        }
+        while j < n {
+            *y.get_unchecked_mut(j) += av * *x.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    /// Max over `row` from the f32::MIN start (equals the scalar fold
+    /// for non-NaN inputs — max is associative there).
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn max_of(row: &[f32]) -> f32 {
+        let mut mx = f32::MIN;
+        let p = row.as_ptr();
+        let mut j = 0usize;
+        if row.len() >= NR {
+            let mut v = _mm256_loadu_ps(p);
+            j = NR;
+            while j + NR <= row.len() {
+                v = _mm256_max_ps(v, _mm256_loadu_ps(p.add(j)));
+                j += NR;
+            }
+            let mut lanes = [0f32; NR];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+            for l in lanes {
+                mx = mx.max(l);
+            }
+        }
+        while j < row.len() {
+            mx = mx.max(*p.add(j));
+            j += 1;
+        }
+        mx
+    }
+
+    /// `row[j] *= by` — one multiply per element, exact per lane.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale(row: &mut [f32], by: f32) {
+        let vb = _mm256_set1_ps(by);
+        let n = row.len();
+        let mut j = 0usize;
+        while j + NR <= n {
+            let v = _mm256_loadu_ps(row.as_ptr().add(j));
+            _mm256_storeu_ps(row.as_mut_ptr().add(j), _mm256_mul_ps(v, vb));
+            j += NR;
+        }
+        while j < n {
+            *row.get_unchecked_mut(j) *= by;
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The portable kernels ARE the simd tier on non-AVX2 hosts, so
+    /// they get direct coverage regardless of what hardware CI runs on:
+    /// strict accum must equal the scalar schedule exactly.
+    #[test]
+    fn portable_strict_accum_matches_scalar_schedule() {
+        let k = 11usize; // odd: exercises the relaxed tail too
+        let panel: Vec<f32> = (0..k * NR).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let rows_flat: Vec<f32> = (0..MR * k).map(|i| 0.5 - (i as f32) * 0.125).collect();
+        let rows = [
+            &rows_flat[0..k],
+            &rows_flat[k..2 * k],
+            &rows_flat[2 * k..3 * k],
+            &rows_flat[3 * k..4 * k],
+        ];
+        // scalar schedule, by hand
+        let mut want = [[0f32; NR]; MR];
+        for kk in 0..k {
+            for r in 0..MR {
+                let av = rows[r][kk];
+                for l in 0..NR {
+                    want[r][l] += av * panel[kk * NR + l];
+                }
+            }
+        }
+        let mut got = [[0f32; NR]; MR];
+        portable::accum4(&rows, k, &panel, &mut got, AccumMode::Strict);
+        for r in 0..MR {
+            for l in 0..NR {
+                assert_eq!(want[r][l].to_bits(), got[r][l].to_bits(), "r={r} l={l}");
+            }
+        }
+        // relaxed: same values to within the 1e-4 contract
+        let mut relaxed = [[0f32; NR]; MR];
+        portable::accum4(&rows, k, &panel, &mut relaxed, AccumMode::Relaxed);
+        for r in 0..MR {
+            for l in 0..NR {
+                assert!((want[r][l] - relaxed[r][l]).abs() <= 1e-4);
+            }
+        }
+        // single-row tail agrees with row 0 of the tile
+        let mut one = [0f32; NR];
+        portable::accum1(rows[0], k, &panel, &mut one, AccumMode::Strict);
+        for l in 0..NR {
+            assert_eq!(one[l].to_bits(), want[0][l].to_bits());
+        }
+    }
+
+    #[test]
+    fn portable_max_and_scale_match_scalar() {
+        let row: Vec<f32> = (0..21).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+        let want = row.iter().fold(f32::MIN, |m, &v| m.max(v));
+        assert_eq!(portable::max_of(&row).to_bits(), want.to_bits());
+        let mut a = row.clone();
+        portable::scale(&mut a, 0.125);
+        for (x, y) in a.iter().zip(&row) {
+            assert_eq!(x.to_bits(), (y * 0.125).to_bits());
+        }
+    }
+
+    /// On AVX2 hosts, the intrinsic strict kernels must be bit-identical
+    /// to the portable ones (which are bit-identical to scalar) — the
+    /// heart of the frozen-digest guarantee. Skips silently elsewhere.
+    #[test]
+    fn avx2_strict_matches_portable_bitwise() {
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            let k = 13usize;
+            let panel: Vec<f32> = (0..k * NR).map(|i| ((i * 31) % 17) as f32 * 0.3 - 2.0).collect();
+            let rows_flat: Vec<f32> =
+                (0..MR * k).map(|i| ((i * 11) % 19) as f32 * 0.2 - 1.5).collect();
+            let rows = [
+                &rows_flat[0..k],
+                &rows_flat[k..2 * k],
+                &rows_flat[2 * k..3 * k],
+                &rows_flat[3 * k..4 * k],
+            ];
+            let mut want = [[0f32; NR]; MR];
+            portable::accum4(&rows, k, &panel, &mut want, AccumMode::Strict);
+            let mut got = [[0f32; NR]; MR];
+            // SAFETY: avx2 detected above.
+            unsafe { avx2::accum4_strict(&rows, k, &panel, &mut got) };
+            for r in 0..MR {
+                for l in 0..NR {
+                    assert_eq!(want[r][l].to_bits(), got[r][l].to_bits(), "r={r} l={l}");
+                }
+            }
+            let mut one_want = [0f32; NR];
+            portable::accum1(rows[2], k, &panel, &mut one_want, AccumMode::Strict);
+            let mut one_got = [0f32; NR];
+            // SAFETY: avx2 detected above.
+            unsafe { avx2::accum1_strict(rows[2], k, &panel, &mut one_got) };
+            for l in 0..NR {
+                assert_eq!(one_want[l].to_bits(), one_got[l].to_bits());
+            }
+        }
+    }
+}

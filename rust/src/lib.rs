@@ -30,6 +30,11 @@
 //!   reward model; see DESIGN.md §2).
 //! * [`registry`] — the paper's Model Registry: candidates, prices,
 //!   artifact manifest, and the reference-artifact generator.
+//! * [`kernels`] — the numeric kernel subsystem (DESIGN.md §19): the
+//!   planned GEMM (packed dense panels / CSR, six fused epilogues), the
+//!   attention matmul/softmax primitives, and the runtime-dispatched
+//!   scalar vs SIMD (AVX2/FMA + portable wide-lane) execution tiers
+//!   behind `--kernel-tier` / `IPR_KERNEL_TIER`.
 //! * [`runtime`] — the [`runtime::Engine`] abstraction and its reference /
 //!   PJRT implementations; bucket selection; `predict` hot path.
 //! * [`qe`] — Quality Estimator service: tokenize → bucket → dynamic
@@ -80,6 +85,7 @@ pub mod cluster;
 pub mod control;
 pub mod coordinator;
 pub mod eval;
+pub mod kernels;
 pub mod qe;
 pub mod registry;
 pub mod runtime;

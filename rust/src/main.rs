@@ -55,6 +55,12 @@ fn main() {
 const USAGE: &str = "\
 ipr — Intelligent Prompt Routing (EMNLP 2025 industry-track reproduction)
 
+GLOBAL (every subcommand):
+  --kernel-tier auto|simd|scalar   numeric kernel execution tier
+                                   (or IPR_KERNEL_TIER; default auto)
+  --relaxed-accum                  allow FMA accumulation, |Δ| <= 1e-4 vs
+                                   strict (or IPR_RELAXED_ACCUM=1)
+
 USAGE:
   ipr serve   [--artifacts DIR] [--family claude] [--backbone stella_sim]
               [--bind 127.0.0.1:8080] [--workers 4] [--tau 0.0]
@@ -73,7 +79,7 @@ USAGE:
   ipr bench   [--artifacts DIR] [--out-dir .] [--smoke] [--batch-sizes 1,8,64]
               [--prompts N] [--repeats N] [--route-requests N]
               [--baseline ci/bench_baseline.json] [--max-regress 1.25]
-              [--write-baseline PATH]
+              [--write-baseline PATH] [--kernels-only]
   ipr loadgen [--scenario uniform|bursty|hot_keys|mixed_tau|fleet_churn|
                latency_sla|c10k|node_kill|quality_drift|all]
               [--seed 7] [--requests N] [--clients N] [--smoke] [--hedge]
@@ -105,7 +111,24 @@ fn run() -> Result<()> {
         "force",
         "hedge",
         "no-calibration",
+        "relaxed-accum",
+        "kernels-only",
     ]);
+    // Pin the kernel execution tier process-wide before any subcommand
+    // packs a plan (DESIGN.md §19): --kernel-tier / --relaxed-accum win
+    // over the IPR_KERNEL_TIER / IPR_RELAXED_ACCUM environment knobs, and
+    // a bad value (flag or env) is a clean CLI error here instead of a
+    // panic at first kernel use.
+    let choice = match args.get("kernel-tier") {
+        Some(s) => ipr::kernels::TierChoice::parse(s)?,
+        None => match std::env::var("IPR_KERNEL_TIER") {
+            Ok(v) => ipr::kernels::TierChoice::parse(&v).context("IPR_KERNEL_TIER")?,
+            Err(_) => ipr::kernels::TierChoice::Auto,
+        },
+    };
+    let relaxed = args.flag("relaxed-accum")
+        || matches!(std::env::var("IPR_RELAXED_ACCUM").as_deref(), Ok("1") | Ok("true"));
+    ipr::kernels::configure(choice, relaxed)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => cmd_serve(&args),
@@ -270,6 +293,25 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let smoke = args.flag("smoke");
     let out_dir = args.get_or("out-dir", ".").to_string();
+
+    // --kernels-only: just the kernel micro-bench, written to a per-tier
+    // filename so the CI matrix can upload BENCH_kernels_<tier>.json
+    // artifacts from one job without them clobbering each other.
+    if args.flag("kernels-only") {
+        let kernels = kernels_bench(&dir, smoke)?;
+        let tier = kernels.req("kernel_tier")?.as_str()?.to_string();
+        println!(
+            "kernels [{tier}]: GEMM {:.2} GFLOP/s ({:.2}x vs scalar plan, {:.1}% of peak est)",
+            kernels.req("gemm_gflops")?.as_f64()?,
+            kernels.req("gemm_speedup_vs_scalar_plan")?.as_f64()?,
+            kernels.req("peak_utilization")?.as_f64()? * 100.0,
+        );
+        let path = format!("{out_dir}/BENCH_kernels_{tier}.json");
+        std::fs::write(&path, kernels.to_string()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+        return Ok(());
+    }
+
     let sizes: Vec<usize> = args
         .get_or("batch-sizes", "1,8,64")
         .split(',')
@@ -299,10 +341,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     let kernels = kernels_bench(&dir, smoke)?;
     println!(
-        "kernels: GEMM {:.2} GFLOP/s ({:.2}x vs naive)  encode {:.0} ns/row  \
+        "kernels [{}]: GEMM {:.2} GFLOP/s ({:.2}x vs scalar plan, {:.1}% of peak est)  \
+         encode {:.0} ns/row  \
          cache hit {:.0}ns raw / p50 {:.1}us routed ({:.0}x cheaper than a miss forward)",
+        kernels.req("kernel_tier")?.as_str()?,
         kernels.req("gemm_gflops")?.as_f64()?,
-        kernels.req("gemm_speedup_vs_naive")?.as_f64()?,
+        kernels.req("gemm_speedup_vs_scalar_plan")?.as_f64()?,
+        kernels.req("peak_utilization")?.as_f64()? * 100.0,
         kernels.req("encode_ns_per_row")?.as_f64()?,
         kernels.req("cache_hit_ns")?.as_f64()?,
         kernels.req("route_hit_p50_us")?.as_f64()?,
@@ -328,14 +373,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 && k != "routing_p50_us"
                 && k != "encode_ns_per_row"
                 && k != "min_cache_hit_speedup"
+                && k != "min_simd_gemm_speedup"
         });
-        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v7")));
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v8")));
         pairs.push(("routing_p50_us".to_string(), Json::Num(p50)));
         pairs.push((
             "encode_ns_per_row".to_string(),
             Json::Num(kernels.req("encode_ns_per_row")?.as_f64()?),
         ));
         pairs.push(("min_cache_hit_speedup".to_string(), Json::Num(10.0)));
+        // Pinned contract, not a measured ceiling: the SIMD tier must
+        // beat the scalar plan by >= 1.5x on the dense panel (skipped on
+        // hosts without AVX2 — see check_kernels_regression).
+        pairs.push(("min_simd_gemm_speedup".to_string(), Json::Num(1.5)));
         let doc = Json::Obj(pairs.into_iter().collect());
         std::fs::write(bp, doc.to_string()).with_context(|| format!("writing {bp}"))?;
         println!("wrote baseline {bp}");
@@ -611,7 +661,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                  latency_sla_violation_rate {sla_rate:.3})"
             );
         }
-        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v7")));
+        pairs.insert(0, ("schema".to_string(), Json::str("ipr-bench-baseline/v8")));
         let base_doc = Json::Obj(pairs.into_iter().collect());
         std::fs::write(bp, base_doc.to_string()).with_context(|| format!("writing {bp}"))?;
         println!("wrote baseline {bp}");

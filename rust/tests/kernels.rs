@@ -1,0 +1,211 @@
+//! Kernel-tier dispatch + equivalence contract through the public API
+//! (DESIGN.md §19):
+//!
+//! * `resolve` picks `scalar` under `auto` when SIMD intrinsics are
+//!   unavailable, and an explicit `simd` request on unsupported hardware
+//!   is a clean error, never UB;
+//! * in strict accumulation mode the simd tier is BIT-IDENTICAL
+//!   (`f32::to_bits`) to the scalar plan — every epilogue, dense and
+//!   CSR, over ragged non-tile-multiple shapes;
+//! * in relaxed mode (FMA allowed) the divergence stays within the JAX
+//!   parity tolerance (≤1e-4 elementwise);
+//! * the ambient `PackedGemm::gemm` entry point equals an explicit
+//!   `gemm_tiered` call at the process's resolved tier.
+
+use ipr::kernels::{
+    active_accum, active_tier, resolve, simd_supported, AccumMode, Epilogue, PackedGemm, Tier,
+    TierChoice,
+};
+use ipr::util::minitest::{check, Size};
+use ipr::util::rng::Rng;
+
+#[test]
+fn auto_resolves_scalar_without_intrinsics() {
+    assert_eq!(resolve(TierChoice::Auto, false).unwrap(), Tier::Scalar);
+    assert_eq!(resolve(TierChoice::Auto, true).unwrap(), Tier::Simd);
+    assert_eq!(resolve(TierChoice::Scalar, false).unwrap(), Tier::Scalar);
+    assert_eq!(resolve(TierChoice::Scalar, true).unwrap(), Tier::Scalar);
+    assert_eq!(resolve(TierChoice::Simd, true).unwrap(), Tier::Simd);
+}
+
+#[test]
+fn explicit_simd_on_unsupported_hardware_is_a_clean_error() {
+    let err = resolve(TierChoice::Simd, false).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("AVX2"), "error should name the missing feature: {msg}");
+}
+
+#[test]
+fn tier_choice_parse_rejects_junk_with_expected_values() {
+    assert!(TierChoice::parse("auto").is_ok());
+    assert!(TierChoice::parse("simd").is_ok());
+    assert!(TierChoice::parse("scalar").is_ok());
+    let msg = format!("{:#}", TierChoice::parse("avx512").unwrap_err());
+    assert!(msg.contains("auto") && msg.contains("simd") && msg.contains("scalar"), "{msg}");
+}
+
+fn gen_mat(r: &mut Rng, len: usize, zero_every: u64) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if zero_every > 0 && r.next_range(zero_every) == 0 {
+                0.0
+            } else {
+                (r.next_f64() as f32 - 0.5) * 2.0
+            }
+        })
+        .collect()
+}
+
+/// Shape + operand generator shared by the strict and relaxed props:
+/// ragged m/k/n that straddle the 4×8 register tile, ~50%-zero weights
+/// so `pack` would go either way — we force both kinds explicitly.
+#[allow(clippy::type_complexity)]
+fn gen_case(
+    r: &mut Rng,
+) -> (usize, usize, usize, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, usize) {
+    let m = 1 + r.next_range(13) as usize;
+    let k = 1 + r.next_range(19) as usize;
+    let n = 1 + r.next_range(21) as usize;
+    let a = gen_mat(r, m * k, 4);
+    let b = gen_mat(r, k * n, 2);
+    let bias = gen_mat(r, n, 0);
+    let other = gen_mat(r, m * n, 0);
+    let init = gen_mat(r, m * n, 0);
+    let which = r.next_range(6) as usize;
+    (m, k, n, a, b, bias, other, init, which)
+}
+
+fn epilogue_of<'a>(which: usize, bias: &'a [f32], other: &'a [f32]) -> Epilogue<'a> {
+    match which {
+        0 => Epilogue::Store,
+        1 => Epilogue::AddTo,
+        2 => Epilogue::BiasGelu(bias),
+        3 => Epilogue::AddBiasTo(bias),
+        4 => Epilogue::BiasRelu(bias),
+        _ => Epilogue::StoreAddRowBias { other, bias },
+    }
+}
+
+/// Strict mode: simd output is bit-identical to the scalar plan for all
+/// six epilogues on both the dense-panel and CSR kernels. The simd tier
+/// always runs (portable wide-lane fallback on non-AVX2 hosts), so this
+/// holds on every machine — no feature gating.
+#[test]
+fn prop_simd_bit_identical_to_scalar_in_strict_mode() {
+    check(
+        101,
+        300,
+        |r, _s: Size| gen_case(r),
+        |(m, k, n, a, b, bias, other, init, which)| {
+            let (m, k, n) = (*m, *k, *n);
+            let mut tmp = Vec::new();
+            for pg in [PackedGemm::pack_dense(b, k, n), PackedGemm::pack_sparse(b, k, n)] {
+                let mut scalar_out = init.clone();
+                pg.gemm_tiered(
+                    Tier::Scalar,
+                    AccumMode::Strict,
+                    a,
+                    m,
+                    &mut scalar_out,
+                    epilogue_of(*which, bias, other),
+                    &mut tmp,
+                );
+                let mut simd_out = init.clone();
+                pg.gemm_tiered(
+                    Tier::Simd,
+                    AccumMode::Strict,
+                    a,
+                    m,
+                    &mut simd_out,
+                    epilogue_of(*which, bias, other),
+                    &mut tmp,
+                );
+                for (s, v) in scalar_out.iter().zip(&simd_out) {
+                    if s.to_bits() != v.to_bits() {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Relaxed mode may reassociate (FMA + split accumulators) but must stay
+/// within the JAX-fixture parity tolerance vs the strict scalar plan.
+#[test]
+fn prop_relaxed_accum_within_parity_tolerance() {
+    check(
+        103,
+        300,
+        |r, _s: Size| gen_case(r),
+        |(m, k, n, a, b, bias, other, init, which)| {
+            let (m, k, n) = (*m, *k, *n);
+            let mut tmp = Vec::new();
+            for pg in [PackedGemm::pack_dense(b, k, n), PackedGemm::pack_sparse(b, k, n)] {
+                let mut strict_out = init.clone();
+                pg.gemm_tiered(
+                    Tier::Scalar,
+                    AccumMode::Strict,
+                    a,
+                    m,
+                    &mut strict_out,
+                    epilogue_of(*which, bias, other),
+                    &mut tmp,
+                );
+                let mut relaxed_out = init.clone();
+                pg.gemm_tiered(
+                    Tier::Simd,
+                    AccumMode::Relaxed,
+                    a,
+                    m,
+                    &mut relaxed_out,
+                    epilogue_of(*which, bias, other),
+                    &mut tmp,
+                );
+                for (s, v) in strict_out.iter().zip(&relaxed_out) {
+                    if (s - v).abs() > 1e-4 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// The ambient entry point (`PackedGemm::gemm`, what the execution plan
+/// calls) equals an explicit `gemm_tiered` at the resolved process tier
+/// and accumulation mode — i.e. dispatch adds no numeric surprises.
+/// Under the CI matrix this runs once with IPR_KERNEL_TIER=scalar and
+/// once with =simd.
+#[test]
+fn ambient_gemm_matches_explicit_tier() {
+    let mut r = Rng::new(7);
+    let (m, k, n) = (11usize, 17usize, 23usize);
+    let a = gen_mat(&mut r, m * k, 4);
+    let b = gen_mat(&mut r, k * n, 2);
+    let mut tmp = Vec::new();
+    for pg in [PackedGemm::pack_dense(&b, k, n), PackedGemm::pack_sparse(&b, k, n)] {
+        let mut ambient = vec![f32::NAN; m * n];
+        pg.gemm(&a, m, &mut ambient, Epilogue::Store, &mut tmp);
+        let mut explicit = vec![f32::NAN; m * n];
+        pg.gemm_tiered(
+            active_tier(),
+            active_accum(),
+            &a,
+            m,
+            &mut explicit,
+            Epilogue::Store,
+            &mut tmp,
+        );
+        for (x, y) in ambient.iter().zip(&explicit) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    // Sanity: whatever tier the environment resolved must be a legal
+    // resolution for this host.
+    if active_tier() == Tier::Simd {
+        assert!(resolve(TierChoice::Simd, simd_supported()).is_ok());
+    }
+}
